@@ -1,0 +1,165 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + manifest.json.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 Rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+Incremental: entries are re-lowered only if missing or --force.
+
+The manifest records everything the Rust side needs to be self-contained:
+batch/tensor shapes, flat-parameter layouts with init specs (Rust
+re-initializes parameters itself), per-entry argument/result signatures,
+and the paper's exact parameter counts (cross-checked here at build time).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, models
+
+# Entries that do not depend on the auxiliary architecture: lowered once
+# per dataset (from the first aux config) instead of once per aux variant.
+SHARED_ENTRIES = (
+    "client_fwd",
+    "server_train_step",
+    "server_fwd_bwd",
+    "client_bwd",
+    "eval_step",
+)
+AUX_ENTRIES = ("client_train_step", "aux_eval_step")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    return [{"shape": list(a.shape), "dtype": a.dtype.name} for a in args]
+
+
+def _result_sig(fn, args):
+    out = jax.eval_shape(fn, *args)
+    if not isinstance(out, tuple):
+        out = (out,)
+    return [{"shape": list(o.shape), "dtype": o.dtype.name} for o in out]
+
+
+def lower_entry(fn, args, path, force):
+    if os.path.exists(path) and not force:
+        return False
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return True
+
+
+def check_paper_counts(dataset, meta, aux_arch):
+    """Fail the build if any layout diverges from the paper's counts."""
+    want = models.PAPER_COUNTS[dataset]
+    got_c, got_s = meta["client_size"], meta["server_size"]
+    got_a = meta["aux_size"]
+    if got_c != want["client"]:
+        raise AssertionError(f"{dataset} client params {got_c} != paper {want['client']}")
+    if got_s != want["server"]:
+        raise AssertionError(f"{dataset} server params {got_s} != paper {want['server']}")
+    if got_a != want["aux"][aux_arch]:
+        raise AssertionError(
+            f"{dataset}/{aux_arch} aux params {got_a} != paper {want['aux'][aux_arch]}"
+        )
+
+
+def build(out_dir, datasets=None, force=False, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "configs": {}}
+    datasets = datasets or list(models.CONFIGS)
+    n_lowered = 0
+    for ds in datasets:
+        cfg = models.CONFIGS[ds]
+        ds_dir = os.path.join(out_dir, ds)
+        os.makedirs(ds_dir, exist_ok=True)
+        ds_manifest = {
+            "batch": cfg["batch"],
+            "input": cfg["input"],
+            "classes": cfg["classes"],
+            "smashed": cfg["smashed"],
+            "entries": {},
+            "aux": {},
+        }
+        first_aux = cfg["aux_archs"][0]
+        for aux_arch in cfg["aux_archs"]:
+            entries, meta = model.make_entries(ds, aux_arch)
+            check_paper_counts(ds, meta, aux_arch)
+            if aux_arch == first_aux:
+                ds_manifest["client_layout"] = meta["client_layout"]
+                ds_manifest["client_size"] = meta["client_size"]
+                ds_manifest["server_layout"] = meta["server_layout"]
+                ds_manifest["server_size"] = meta["server_size"]
+                ds_manifest["smashed_size"] = meta["smashed_size"]
+                for name in SHARED_ENTRIES:
+                    fn, args = entries[name]
+                    rel = f"{ds}/{name}.hlo.txt"
+                    did = lower_entry(fn, args, os.path.join(out_dir, rel), force)
+                    n_lowered += did
+                    if verbose and did:
+                        print(f"  lowered {rel}", file=sys.stderr)
+                    ds_manifest["entries"][name] = {
+                        "file": rel,
+                        "args": _sig(args),
+                        "results": _result_sig(fn, args),
+                    }
+            aux_m = {
+                "layout": meta["aux_layout"],
+                "size": meta["aux_size"],
+                "entries": {},
+            }
+            for name in AUX_ENTRIES:
+                fn, args = entries[name]
+                rel = f"{ds}/{name}_{aux_arch}.hlo.txt"
+                did = lower_entry(fn, args, os.path.join(out_dir, rel), force)
+                n_lowered += did
+                if verbose and did:
+                    print(f"  lowered {rel}", file=sys.stderr)
+                aux_m["entries"][name] = {
+                    "file": rel,
+                    "args": _sig(args),
+                    "results": _result_sig(fn, args),
+                }
+            ds_manifest["aux"][aux_arch] = aux_m
+        manifest["configs"][ds] = ds_manifest
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {path} ({n_lowered} entries lowered)", file=sys.stderr)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", nargs="*", default=None,
+                    help="subset of configs (default: all)")
+    ap.add_argument("--force", action="store_true", help="re-lower everything")
+    args = ap.parse_args()
+    build(args.out, args.datasets, args.force)
+
+
+if __name__ == "__main__":
+    main()

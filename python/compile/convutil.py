@@ -1,0 +1,67 @@
+"""Convolution expressed as im2col + the Pallas matmul kernel.
+
+This is the TPU-shaped formulation (DESIGN.md SSHardware-Adaptation): instead
+of a direct sliding-window kernel (the GPU/threadblock idiom), the input is
+unfolded into patch rows and the contraction runs on the MXU-targeted tiled
+matmul. Gradients flow through the unfold (pure slicing/concat, which XLA
+transposes for free) and the matmul's custom Pallas VJP.
+
+Only stride-1 convolutions appear in the paper's models; spatial reduction
+is done by the pooling kernel.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matmul
+
+
+def conv2d(x, w, b=None, padding="VALID"):
+    """2-D convolution, NHWC x HWIO -> NHWC, stride 1.
+
+    Args:
+      x: f32[B, H, W, Cin]
+      w: f32[KH, KW, Cin, Cout]
+      b: optional f32[Cout] bias (added by the caller's activation kernel
+         when fused; provided here only for standalone use/tests).
+      padding: "SAME" or "VALID".
+    """
+    kh, kw, cin, cout = w.shape
+    if x.shape[-1] != cin:
+        raise ValueError(f"channel mismatch: x {x.shape} vs w {w.shape}")
+    if padding == "SAME":
+        ph0, ph1 = (kh - 1) // 2, kh // 2
+        pw0, pw1 = (kw - 1) // 2, kw // 2
+        x = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(f"bad padding {padding!r}")
+    bsz, hp, wp, _ = x.shape
+    oh, ow = hp - kh + 1, wp - kw + 1
+    patches = im2col(x, kh, kw)  # [B, OH, OW, KH*KW*Cin]
+    out = matmul(
+        patches.reshape(bsz * oh * ow, kh * kw * cin),
+        w.reshape(kh * kw * cin, cout),
+    ).reshape(bsz, oh, ow, cout)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def im2col(x, kh, kw):
+    """Unfold stride-1 patches: f32[B,H,W,C] -> f32[B,OH,OW,KH*KW*C].
+
+    Patch layout is (kh, kw) major / channel minor, matching
+    ``w.reshape(kh*kw*cin, cout)`` for HWIO weights.
+    """
+    _, h, w_, _ = x.shape
+    oh, ow = h - kh + 1, w_ - kw + 1
+    slices = [
+        x[:, i : i + oh, j : j + ow, :] for i in range(kh) for j in range(kw)
+    ]
+    return jnp.concatenate(slices, axis=-1)
+
+
+def conv1x1(x, w):
+    """Pointwise convolution f32[B,H,W,Cin] x f32[Cin,Cout] via matmul."""
+    bsz, h, w_, cin = x.shape
+    cout = w.shape[1]
+    return matmul(x.reshape(bsz * h * w_, cin), w).reshape(bsz, h, w_, cout)

@@ -1,0 +1,29 @@
+"""L1 Pallas kernels for CSE-FSL.
+
+Every kernel is written with ``pallas_call(..., interpret=True)`` so it
+lowers to plain HLO executable by the CPU PJRT plugin (real-TPU Mosaic
+lowering is a compile-only target on this box; see DESIGN.md
+SSHardware-Adaptation).
+
+Kernels on the training path are wrapped in ``jax.custom_vjp`` with Pallas
+kernels on *both* forward and backward passes, so the L2 graphs in
+``compile.model`` differentiate through them without falling back to
+XLA-generated gradients.
+"""
+
+from .matmul import matmul, matmul_nograd
+from .softmax_xent import softmax_xent, softmax_logits
+from .elementwise import bias_relu, bias_add
+from .pool import maxpool2x2
+from .lrn import lrn
+
+__all__ = [
+    "matmul",
+    "matmul_nograd",
+    "softmax_xent",
+    "softmax_logits",
+    "bias_relu",
+    "bias_add",
+    "maxpool2x2",
+    "lrn",
+]

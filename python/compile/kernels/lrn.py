@@ -1,0 +1,97 @@
+"""Local response normalization (across channels) Pallas kernel.
+
+The paper's CIFAR-10 client stack follows the classic TF CIFAR tutorial:
+``lrn(x, depth_radius=4, bias=1.0, alpha=0.001/9, beta=0.75)``:
+
+    s_i = bias + alpha * sum_{|j-i| <= r} x_j^2
+    y_i = x_i * s_i^{-beta}
+
+The channel-windowed sum is a static unrolled sum of 2r+1 shifted slices
+(r is a compile-time constant), so the kernel stays a single VMEM pass.
+
+Backward (analytic, also a Pallas kernel):
+
+    dx_i = g_i * s_i^{-beta}
+           - 2*alpha*beta * x_i * sum_{|j-i| <= r} g_j x_j s_j^{-beta-1}
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RADIUS = 4
+BIAS = 1.0
+ALPHA = 0.001 / 9.0
+BETA = 0.75
+
+
+def _win_sum(x, radius):
+    """Sum over a (2r+1)-wide channel window, zero padded at the edges."""
+    c = x.shape[-1]
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(radius, radius)])
+    acc = jnp.zeros_like(x)
+    for d in range(2 * radius + 1):
+        acc = acc + xp[..., d : d + c]
+    return acc
+
+
+def _lrn_fwd_kernel(x_ref, y_ref, s_ref, *, radius, bias, alpha, beta):
+    x = x_ref[...]
+    s = bias + alpha * _win_sum(x * x, radius)
+    s_ref[...] = s
+    y_ref[...] = x * s ** (-beta)
+
+
+def _lrn_bwd_kernel(x_ref, s_ref, g_ref, dx_ref, *, radius, bias, alpha, beta):
+    x = x_ref[...]
+    s = s_ref[...]
+    g = g_ref[...]
+    inner = g * x * s ** (-beta - 1.0)
+    dx_ref[...] = g * s ** (-beta) - 2.0 * alpha * beta * x * _win_sum(inner, radius)
+
+
+def _as2d(x):
+    return x.reshape(-1, x.shape[-1])
+
+
+@jax.custom_vjp
+def lrn(x):
+    """LRN over the channel (last) axis of f32[..., C]."""
+    y, _ = _lrn_fwd(x)
+    return y
+
+
+def _lrn_fwd(x):
+    shape = x.shape
+    x2 = _as2d(x).astype(jnp.float32)
+    kern = functools.partial(
+        _lrn_fwd_kernel, radius=RADIUS, bias=BIAS, alpha=ALPHA, beta=BETA
+    )
+    y, s = pl.pallas_call(
+        kern,
+        out_shape=(
+            jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+            jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        ),
+        interpret=True,
+    )(x2)
+    return y.reshape(shape), (x2, s, shape)
+
+
+def _lrn_bwd(res, g):
+    x2, s, shape = res
+    g2 = _as2d(g).astype(jnp.float32)
+    kern = functools.partial(
+        _lrn_bwd_kernel, radius=RADIUS, bias=BIAS, alpha=ALPHA, beta=BETA
+    )
+    dx = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(x2.shape, jnp.float32),
+        interpret=True,
+    )(x2, s, g2)
+    return (dx.reshape(shape),)
+
+
+lrn.defvjp(_lrn_fwd, _lrn_bwd)

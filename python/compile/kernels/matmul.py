@@ -1,0 +1,129 @@
+"""Tiled Pallas matmul with a custom VJP whose backward passes are also
+Pallas matmuls.
+
+This is the single compute hot-spot of CSE-FSL: every dense layer, the
+1x1-conv auxiliary heads, and the 5x5/3x3 convolutions (via im2col in
+``compile.convutil``) all reduce to this kernel.
+
+TPU-style structure (DESIGN.md SSHardware-Adaptation): the grid iterates
+over (M/bm, N/bn, K/bk) output/contraction tiles; each (bm, bk) x (bk, bn)
+tile product targets the MXU systolic array and accumulates in a VMEM-
+resident f32 output tile. Inputs whose dimensions are not multiples of the
+tile sizes are zero-padded outside the kernel (zero rows/cols contribute
+nothing to the contraction) and the result is sliced back.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size policy.
+#
+# On a real TPU the natural tile is 128x128x128 (MXU lane width); under
+# interpret=True on CPU every grid step costs a dynamic-slice round trip,
+# so we instead pick the largest tiles that keep the working set under a
+# "VMEM budget" — usually a 1x1x1 grid (single resident tile), splitting
+# the M axis only for very large im2col matmuls. Set CSE_FSL_TPU_TILES=1
+# at AOT time to force the 128-tile TPU-shaped schedule (what DESIGN.md
+# §Perf-estimates reasons about); numerics are identical either way and
+# the test suite exercises both paths.
+import os
+
+BM, BN, BK = 128, 128, 128
+
+# ~64 MB of f32 working set per grid step (a*b + out tiles).
+_ELEM_BUDGET = 16_000_000
+
+
+def _auto_blocks(m, k, n):
+    if os.environ.get("CSE_FSL_TPU_TILES") == "1":
+        return min(BM, m), min(BN, n), min(BK, k)
+    # Keep N and K whole (they are small in every model here: <= 9216),
+    # split M until the per-step working set fits the budget.
+    bm = m
+    while bm > 1 and bm * k + k * n + bm * n > _ELEM_BUDGET:
+        bm = (bm + 1) // 2
+    return bm, n, k
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o[i, j] (+)= a[i, l] @ b[l, j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x, m0, m1):
+    """Zero-pad a 2-D array so its dims are multiples of (m0, m1)."""
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_nograd(a, b, bm=None, bn=None, bk=None):
+    """Pallas tiled matmul, no custom gradient attached.
+
+    Used directly by the backward passes (to avoid recursive custom_vjp)
+    and exported for benchmarking against the jnp reference.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    auto_m, auto_n, auto_k = _auto_blocks(m, k, n)
+    bm_ = min(bm or auto_m, m)
+    bn_ = min(bn or auto_n, n)
+    bk_ = min(bk or auto_k, k)
+    ap = _pad_to(a.astype(jnp.float32), bm_, bk_)
+    bp = _pad_to(b.astype(jnp.float32), bk_, bn_)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm_, np_ // bn_, kp // bk_),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(ap, bp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """``a @ b`` through the Pallas kernel, differentiable.
+
+    Backward:  dA = g @ B^T,  dB = A^T @ g  — both again Pallas matmuls.
+    """
+    return matmul_nograd(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_nograd(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    da = matmul_nograd(g, b.T)
+    db = matmul_nograd(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,61 @@
+"""2x2 stride-2 max-pool Pallas kernel with mask backward.
+
+Both paper models pool with non-overlapping 2x2 windows, so the pool is a
+reshape + max over the two window axes — no sliding-window gather needed,
+which keeps the kernel a pure VMEM-resident reduction.
+
+Backward distributes the cotangent to every element that attained the
+window max (ties share the gradient, matching the ``ref.py`` oracle).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_fwd_kernel(x_ref, y_ref):
+    x = x_ref[...]
+    b, h, w, c = x.shape
+    xr = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    y_ref[...] = jnp.max(jnp.max(xr, axis=4), axis=2)
+
+
+def _pool_bwd_kernel(x_ref, y_ref, g_ref, dx_ref):
+    x = x_ref[...]
+    b, h, w, c = x.shape
+    # Broadcast the window max / cotangent back to input resolution.
+    yb = jnp.repeat(jnp.repeat(y_ref[...], 2, axis=1), 2, axis=2)
+    gb = jnp.repeat(jnp.repeat(g_ref[...], 2, axis=1), 2, axis=2)
+    dx_ref[...] = jnp.where(x == yb, gb, 0.0)
+
+
+@jax.custom_vjp
+def maxpool2x2(x):
+    """Max-pool f32[B,H,W,C] -> f32[B,H/2,W/2,C]; H, W must be even."""
+    y, _ = _pool_fwd(x)
+    return y
+
+
+def _pool_fwd(x):
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"maxpool2x2 needs even H, W; got {x.shape}")
+    y = pl.pallas_call(
+        _pool_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, h // 2, w // 2, c), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+    return y, (x, y)
+
+
+def _pool_bwd(res, g):
+    x, y = res
+    dx = pl.pallas_call(
+        _pool_bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), y, g.astype(jnp.float32))
+    return (dx,)
+
+
+maxpool2x2.defvjp(_pool_fwd, _pool_bwd)

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite compares the kernels against
+(values *and* gradients, via jax.grad through these definitions). They are
+also the "roofline reference" for the L1 performance comparison in
+EXPERIMENTS.md SSPerf.
+
+Conventions deliberately match the kernels:
+  * maxpool backward gives the full cotangent to every element attaining
+    the window max (tie duplication — measure-zero on continuous inputs);
+  * LRN uses the TF CIFAR-tutorial constants (r=4, bias=1, alpha=1e-3/9,
+    beta=0.75).
+"""
+
+import jax
+import jax.numpy as jnp
+
+# NB: `from . import lrn` would resolve to the *function* re-exported by
+# __init__.py, not the module — import the submodule explicitly.
+from .lrn import RADIUS as _LRN_R, BIAS as _LRN_BIAS, ALPHA as _LRN_ALPHA, BETA as _LRN_BETA
+
+
+def matmul(a, b):
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def softmax_xent(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def softmax_logits(logits):
+    return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def bias_relu(x, b):
+    return jax.nn.relu(x.astype(jnp.float32) + b.astype(jnp.float32))
+
+
+def bias_add(x, b):
+    return x.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def maxpool2x2(x):
+    b, h, w, c = x.shape
+    xr = x.reshape(b, h // 2, 2, w // 2, 2, c)
+    return jnp.max(xr, axis=(2, 4))
+
+
+def lrn(x):
+    x = x.astype(jnp.float32)
+    c = x.shape[-1]
+    r = _LRN_R
+    xp = jnp.pad(x * x, [(0, 0)] * (x.ndim - 1) + [(r, r)])
+    acc = sum(xp[..., d : d + c] for d in range(2 * r + 1))
+    s = _LRN_BIAS + _LRN_ALPHA * acc
+    return x * s ** (-_LRN_BETA)

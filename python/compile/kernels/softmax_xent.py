@@ -1,0 +1,97 @@
+"""Fused softmax + cross-entropy Pallas kernel with custom VJP.
+
+This is the local-loss head the paper's auxiliary network exists to feed
+(Eq. (5)) and the server-side loss (Eq. (7)). Fusing softmax with the
+cross-entropy keeps the logits row resident in VMEM: one pass computes the
+row max, the exponentials, the normalizer, and the per-row loss without
+materializing intermediate arrays in HBM.
+
+Backward is the classic closed form  dlogits = (softmax(z) - onehot(y)) * g
+(with the 1/B mean folding into ``g``), again as a Pallas kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(logits_ref, onehot_ref, loss_ref, probs_ref):
+    z = logits_ref[...]
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    ez = jnp.exp(z - zmax)
+    denom = jnp.sum(ez, axis=-1, keepdims=True)
+    probs = ez / denom
+    probs_ref[...] = probs
+    # loss_i = logsumexp(z_i) - z_i[y_i]
+    lse = jnp.log(denom[..., 0]) + zmax[..., 0]
+    picked = jnp.sum(z * onehot_ref[...], axis=-1)
+    loss_ref[...] = lse - picked
+
+
+def _bwd_kernel(probs_ref, onehot_ref, g_ref, dz_ref):
+    # g is the per-row upstream cotangent (the 1/B of the mean loss is
+    # already folded in by the caller).
+    dz_ref[...] = (probs_ref[...] - onehot_ref[...]) * g_ref[...][:, None]
+
+
+def _run_fwd(logits, onehot):
+    b, c = logits.shape
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, c), jnp.float32),
+        ),
+        interpret=True,
+    )(logits.astype(jnp.float32), onehot)
+
+
+def _run_bwd(probs, onehot, g_rows):
+    b, c = probs.shape
+    return pl.pallas_call(
+        _bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(probs, onehot, g_rows)
+
+
+def softmax_logits(logits):
+    """Softmax probabilities via the fused kernel (labels ignored)."""
+    b, c = logits.shape
+    dummy = jnp.zeros((b, c), jnp.float32)
+    _, probs = _run_fwd(logits, dummy)
+    return probs
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy.
+
+    Args:
+      logits: f32[B, C]
+      labels: i32[B] class indices in [0, C)
+    Returns:
+      scalar f32 mean loss over the batch.
+    """
+    c = logits.shape[1]
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    loss_rows, _ = _run_fwd(logits, onehot)
+    return jnp.mean(loss_rows)
+
+
+def _xent_fwd(logits, labels):
+    c = logits.shape[1]
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    loss_rows, probs = _run_fwd(logits, onehot)
+    return jnp.mean(loss_rows), (probs, onehot)
+
+
+def _xent_bwd(res, g):
+    probs, onehot = res
+    b = probs.shape[0]
+    g_rows = jnp.full((b,), g / b, jnp.float32)
+    dz = _run_bwd(probs, onehot, g_rows)
+    return dz, None
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)

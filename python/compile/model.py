@@ -1,0 +1,158 @@
+"""L2 training-step entry points — the functions AOT-lowered to HLO.
+
+Each entry is a pure function over flat parameter vectors, mini-batch
+tensors and scalar hyperparameters; `compile.aot` lowers every entry to HLO
+text that the Rust runtime (`rust/src/runtime/`) loads and executes. The
+mapping to the paper:
+
+  client_train_step  Eq. (8): one local SGD step on (x_c, a_c) using the
+                     auxiliary local loss  F_{c,i}(x_c, a_c)     [AN, CSE]
+  client_fwd         g_{x_c}(z): smashed data for upload         [all]
+  server_train_step  Eq. (11): event-triggered server update on
+                     arriving smashed data                       [AN, CSE]
+  server_fwd_bwd     SplitFed server step: update x_s AND return the
+                     cut-layer gradient (optionally clipped by global
+                     norm — the paper adds clipping to FSL_OC)   [MC, OC]
+  client_bwd         SplitFed client step from the upstream cut-layer
+                     gradient (dropout replayed via ``seed``)    [MC, OC]
+  eval_step          full-model logits, train=False              [all]
+
+All entries also return the pre-update gradient L2 norm where meaningful,
+so the Rust side can record the convergence traces of Propositions 1-2.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import models
+from .kernels import softmax_xent
+
+
+def _sgd(flat, grad, lr):
+    return flat - lr * grad
+
+
+def _anchor(x, *scalars):
+    """Add 0.0 * scalar to ``x`` so every entry parameter stays live.
+
+    XLA prunes unused parameters when lowering stablehlo -> HLO; the Rust
+    runtime supplies the full manifest signature, so a pruned parameter
+    (e.g. ``seed`` on the dropout-free CIFAR model) would make execution
+    fail with an argument-count mismatch. Multiplying by exact 0.0 is a
+    numeric no-op for finite inputs.
+    """
+    extra = sum(jnp.asarray(s, jnp.float32) * 0.0 for s in scalars)
+    return x + extra
+
+
+def _gnorm(*grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+
+
+def _clip_by_global_norm(g, clip):
+    """Scale g so its global norm is at most ``clip`` (clip<=0 disables)."""
+    norm = jnp.sqrt(jnp.sum(g * g))
+    do_clip = jnp.logical_and(clip > 0.0, norm > clip)
+    scale = jnp.where(do_clip, clip / jnp.maximum(norm, 1e-12), 1.0)
+    return g * scale
+
+
+def make_entries(dataset, aux_arch):
+    """Build the entry-point callables + example args for one config.
+
+    Returns dict: name -> (fn, example_args tuple of ShapeDtypeStructs).
+    """
+    cfg = models.CONFIGS[dataset]
+    b = cfg["batch"]
+    client_layout, client_n = cfg["client_layout"]()
+    server_layout, server_n = cfg["server_layout"]()
+    aux_layout, aux_n = cfg["aux_layout"](aux_arch)
+    cf, sf, af = cfg["client_forward"], cfg["server_forward"], cfg["aux_forward"]
+    smashed_shape = tuple([b] + cfg["smashed"])
+    smashed_n = int(jnp.prod(jnp.array(cfg["smashed"])))
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    S = jax.ShapeDtypeStruct
+    x_s = S(tuple([b] + cfg["input"]), f32)
+    y_s = S((b,), i32)
+    lr_s = S((), f32)
+    seed_s = S((), i32)
+    clip_s = S((), f32)
+    xc_s = S((client_n,), f32)
+    ac_s = S((aux_n,), f32)
+    xs_s = S((server_n,), f32)
+    sm_s = S(smashed_shape, f32)
+
+    def client_train_step(xc, ac, x, y, lr, seed):
+        def loss_fn(xc, ac):
+            smashed = cf(models.unpack(xc, client_layout), x, seed, train=True)
+            logits = af(models.unpack(ac, aux_layout), smashed, aux_arch)
+            return softmax_xent(logits, y)
+
+        loss, (gxc, gac) = jax.value_and_grad(loss_fn, argnums=(0, 1))(xc, ac)
+        loss = _anchor(loss, lr, seed)
+        return _sgd(xc, gxc, lr), _sgd(ac, gac, lr), loss, _gnorm(gxc, gac)
+
+    def client_fwd(xc, x, seed):
+        return _anchor(cf(models.unpack(xc, client_layout), x, seed, train=True), seed)
+
+    def server_train_step(xs, smashed, y, lr, seed):
+        def loss_fn(xs):
+            logits = sf(models.unpack(xs, server_layout), smashed, seed, train=True)
+            return softmax_xent(logits, y)
+
+        loss, gxs = jax.value_and_grad(loss_fn)(xs)
+        loss = _anchor(loss, lr, seed)
+        return _sgd(xs, gxs, lr), loss, _gnorm(gxs)
+
+    def server_fwd_bwd(xs, smashed, y, lr, seed, clip):
+        def loss_fn(xs, smashed):
+            logits = sf(models.unpack(xs, server_layout), smashed, seed, train=True)
+            return softmax_xent(logits, y)
+
+        loss, (gxs, gsm) = jax.value_and_grad(loss_fn, argnums=(0, 1))(xs, smashed)
+        gxs = _clip_by_global_norm(gxs, clip)
+        gsm_flat = _clip_by_global_norm(gsm.reshape(-1), clip)
+        gsm = gsm_flat.reshape(smashed.shape)
+        loss = _anchor(loss, lr, seed, clip)
+        return _sgd(xs, gxs, lr), gsm, loss, _gnorm(gxs)
+
+    def client_bwd(xc, x, gsm, lr, seed, clip):
+        def fwd(xc):
+            return cf(models.unpack(xc, client_layout), x, seed, train=True)
+
+        _, vjp = jax.vjp(fwd, xc)
+        (gxc,) = vjp(gsm)
+        gxc = _clip_by_global_norm(gxc, clip)
+        return _anchor(_sgd(xc, gxc, lr), seed, clip), _gnorm(gxc)
+
+    def eval_step(xc, xs, x):
+        smashed = cf(models.unpack(xc, client_layout), x, 0, train=False)
+        return sf(models.unpack(xs, server_layout), smashed, 0, train=False)
+
+    def aux_eval_step(xc, ac, x):
+        """Client-only inference through the auxiliary head (used by the
+        local-model ablation; not a paper figure but a natural probe)."""
+        smashed = cf(models.unpack(xc, client_layout), x, 0, train=False)
+        return af(models.unpack(ac, aux_layout), smashed, aux_arch)
+
+    entries = {
+        "client_train_step": (client_train_step, (xc_s, ac_s, x_s, y_s, lr_s, seed_s)),
+        "client_fwd": (client_fwd, (xc_s, x_s, seed_s)),
+        "server_train_step": (server_train_step, (xs_s, sm_s, y_s, lr_s, seed_s)),
+        "server_fwd_bwd": (server_fwd_bwd, (xs_s, sm_s, y_s, lr_s, seed_s, clip_s)),
+        "client_bwd": (client_bwd, (xc_s, x_s, sm_s, lr_s, seed_s, clip_s)),
+        "eval_step": (eval_step, (xc_s, xs_s, x_s)),
+        "aux_eval_step": (aux_eval_step, (xc_s, ac_s, x_s)),
+    }
+    meta = {
+        "client_layout": client_layout,
+        "client_size": client_n,
+        "server_layout": server_layout,
+        "server_size": server_n,
+        "aux_layout": aux_layout,
+        "aux_size": aux_n,
+        "smashed_size": smashed_n,
+    }
+    return entries, meta

@@ -1,0 +1,276 @@
+"""L2 split-model definitions over flat parameter vectors.
+
+The flat f32 parameter vector is the ABI between the JAX compute layer and
+the Rust coordinator: Rust initializes, aggregates (FedAvg, Eq. (14)),
+serializes, and byte-accounts parameter vectors; JAX only sees them as a
+single `f32[P]` input and unpacks with static slices (differentiable, so
+`jax.grad` w.r.t. the flat vector just works).
+
+Architectures reproduce the paper exactly (Section VI-A), validated against
+the printed parameter counts:
+
+CIFAR-10 (B=50, 32x32x3, 10 classes)
+  client : conv5x5 SAME 3->64 +ReLU, maxpool2x2, LRN,
+           conv5x5 VALID 64->64 +ReLU, LRN, maxpool2x2  -> smashed 6x6x64
+           params = 107,328                         (paper Table III text)
+  server : FC 2304->384 +ReLU, FC 384->192 +ReLU, FC 192->10
+           params = 960,970
+  aux    : MLP 2304->10 = 23,050; CNN(1x1 64->c)+MLP 36c->10:
+           c=54: 22,960  c=27: 11,485  c=14: 5,960  c=7: 2,985 (Table III)
+
+F-EMNIST (B=10, 28x28x1, 62 classes)
+  client : conv3x3 VALID 1->32 +ReLU, conv3x3 VALID 32->64 +ReLU,
+           maxpool2x2, dropout(0.25)                -> smashed 12x12x64
+           params = 18,816
+  server : FC 9216->128 +ReLU, dropout(0.5), FC 128->62
+           params = 1,187,774
+  aux    : MLP 9216->62 = 571,454; CNN(1x1 64->c)+MLP 144c->62:
+           c=64: 575,614  c=32: 287,838  c=8: 72,006  c=2: 18,048 (Table IV)
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .convutil import conv2d, conv1x1
+from .kernels import bias_relu, bias_add, maxpool2x2, lrn, matmul
+
+
+# --------------------------------------------------------------- layouts
+
+
+def _spec(name, shape, init, fan_in=None):
+    size = int(math.prod(shape))
+    if init == "he":
+        std = math.sqrt(2.0 / fan_in)
+        init_d = {"kind": "normal", "std": std}
+    elif init == "glorot":
+        # Output heads: smaller scale keeps the initial loss near ln(C)
+        # and matches the classic TF-CIFAR-tutorial small-std fc init.
+        std = math.sqrt(1.0 / fan_in)
+        init_d = {"kind": "normal", "std": std}
+    elif init == "zero":
+        init_d = {"kind": "zero"}
+    else:
+        raise ValueError(init)
+    return {"name": name, "shape": list(shape), "size": size, "init": init_d}
+
+
+def build_layout(specs):
+    """Assign offsets; returns (layout list, total size)."""
+    off = 0
+    out = []
+    for s in specs:
+        s = dict(s)
+        s["offset"] = off
+        off += s["size"]
+        out.append(s)
+    return out, off
+
+
+def layout_size(layout):
+    return sum(s["size"] for s in layout)
+
+
+def unpack(flat, layout):
+    """Split a flat f32[P] vector into named tensors (static slices)."""
+    out = {}
+    for s in layout:
+        off, size = s["offset"], s["size"]
+        out[s["name"]] = flat[off : off + size].reshape(s["shape"])
+    return out
+
+
+def cifar_client_layout():
+    return build_layout([
+        _spec("conv1_w", (5, 5, 3, 64), "he", fan_in=5 * 5 * 3),
+        _spec("conv1_b", (64,), "zero"),
+        _spec("conv2_w", (5, 5, 64, 64), "he", fan_in=5 * 5 * 64),
+        _spec("conv2_b", (64,), "zero"),
+    ])
+
+
+def cifar_server_layout():
+    return build_layout([
+        _spec("fc1_w", (2304, 384), "he", fan_in=2304),
+        _spec("fc1_b", (384,), "zero"),
+        _spec("fc2_w", (384, 192), "he", fan_in=384),
+        _spec("fc2_b", (192,), "zero"),
+        _spec("fc3_w", (192, 10), "glorot", fan_in=192),
+        _spec("fc3_b", (10,), "zero"),
+    ])
+
+
+def cifar_aux_layout(arch):
+    """arch: "mlp" or "cnn<channels>" (e.g. "cnn54")."""
+    if arch == "mlp":
+        return build_layout([
+            _spec("aux_fc_w", (2304, 10), "glorot", fan_in=2304),
+            _spec("aux_fc_b", (10,), "zero"),
+        ])
+    c = int(arch[3:])
+    return build_layout([
+        _spec("aux_conv_w", (64, c), "he", fan_in=64),
+        _spec("aux_conv_b", (c,), "zero"),
+        _spec("aux_fc_w", (36 * c, 10), "glorot", fan_in=36 * c),
+        _spec("aux_fc_b", (10,), "zero"),
+    ])
+
+
+def femnist_client_layout():
+    return build_layout([
+        _spec("conv1_w", (3, 3, 1, 32), "he", fan_in=3 * 3 * 1),
+        _spec("conv1_b", (32,), "zero"),
+        _spec("conv2_w", (3, 3, 32, 64), "he", fan_in=3 * 3 * 32),
+        _spec("conv2_b", (64,), "zero"),
+    ])
+
+
+def femnist_server_layout():
+    return build_layout([
+        _spec("fc1_w", (9216, 128), "he", fan_in=9216),
+        _spec("fc1_b", (128,), "zero"),
+        _spec("fc2_w", (128, 62), "glorot", fan_in=128),
+        _spec("fc2_b", (62,), "zero"),
+    ])
+
+
+def femnist_aux_layout(arch):
+    if arch == "mlp":
+        return build_layout([
+            _spec("aux_fc_w", (9216, 62), "glorot", fan_in=9216),
+            _spec("aux_fc_b", (62,), "zero"),
+        ])
+    c = int(arch[3:])
+    return build_layout([
+        _spec("aux_conv_w", (64, c), "he", fan_in=64),
+        _spec("aux_conv_b", (c,), "zero"),
+        _spec("aux_fc_w", (144 * c, 62), "glorot", fan_in=144 * c),
+        _spec("aux_fc_b", (62,), "zero"),
+    ])
+
+
+# ------------------------------------------------------------- forwards
+
+
+def _dropout(x, rate, seed, tag, train):
+    """Deterministic dropout from an i32 seed (replayable for client_bwd)."""
+    if not train or rate <= 0.0:
+        return x
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), tag)
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape).astype(jnp.float32)
+    return x * mask / keep
+
+
+def cifar_client_forward(params, x, seed, train):
+    """f32[B,32,32,3] -> smashed f32[B,6,6,64]. ``seed`` unused (no dropout)
+    but kept so every dataset has the same client entry signature."""
+    del seed, train
+    h = conv2d(x, params["conv1_w"], padding="SAME")
+    h = bias_relu(h, params["conv1_b"])
+    h = maxpool2x2(h)  # 32 -> 16
+    h = lrn(h)
+    h = conv2d(h, params["conv2_w"], padding="VALID")  # 16 -> 12
+    h = bias_relu(h, params["conv2_b"])
+    h = lrn(h)
+    h = maxpool2x2(h)  # 12 -> 6
+    return h
+
+
+def cifar_server_forward(params, smashed, seed, train):
+    del seed, train
+    b = smashed.shape[0]
+    h = smashed.reshape(b, 2304)
+    h = bias_relu(matmul(h, params["fc1_w"]), params["fc1_b"])
+    h = bias_relu(matmul(h, params["fc2_w"]), params["fc2_b"])
+    return bias_add(matmul(h, params["fc3_w"]), params["fc3_b"])
+
+
+def cifar_aux_forward(params, smashed, arch):
+    b = smashed.shape[0]
+    if arch == "mlp":
+        h = smashed.reshape(b, 2304)
+    else:
+        h = conv1x1(smashed, params["aux_conv_w"])
+        h = bias_relu(h, params["aux_conv_b"])
+        h = h.reshape(b, -1)
+    return bias_add(matmul(h, params["aux_fc_w"]), params["aux_fc_b"])
+
+
+def femnist_client_forward(params, x, seed, train):
+    h = conv2d(x, params["conv1_w"], padding="VALID")  # 28 -> 26
+    h = bias_relu(h, params["conv1_b"])
+    h = conv2d(h, params["conv2_w"], padding="VALID")  # 26 -> 24
+    h = bias_relu(h, params["conv2_b"])
+    h = maxpool2x2(h)  # 24 -> 12
+    h = _dropout(h, 0.25, seed, tag=1, train=train)
+    return h
+
+
+def femnist_server_forward(params, smashed, seed, train):
+    b = smashed.shape[0]
+    h = smashed.reshape(b, 9216)
+    h = bias_relu(matmul(h, params["fc1_w"]), params["fc1_b"])
+    h = _dropout(h, 0.5, seed, tag=2, train=train)
+    return bias_add(matmul(h, params["fc2_w"]), params["fc2_b"])
+
+
+def femnist_aux_forward(params, smashed, arch):
+    b = smashed.shape[0]
+    if arch == "mlp":
+        h = smashed.reshape(b, 9216)
+    else:
+        h = conv1x1(smashed, params["aux_conv_w"])
+        h = bias_relu(h, params["aux_conv_b"])
+        h = h.reshape(b, -1)
+    return bias_add(matmul(h, params["aux_fc_w"]), params["aux_fc_b"])
+
+
+# ------------------------------------------------------------- registry
+
+CONFIGS = {
+    "cifar": {
+        "batch": 50,
+        "input": [32, 32, 3],
+        "classes": 10,
+        "smashed": [6, 6, 64],
+        "aux_archs": ["mlp", "cnn54", "cnn27", "cnn14", "cnn7"],
+        "client_layout": cifar_client_layout,
+        "server_layout": cifar_server_layout,
+        "aux_layout": cifar_aux_layout,
+        "client_forward": cifar_client_forward,
+        "server_forward": cifar_server_forward,
+        "aux_forward": cifar_aux_forward,
+    },
+    "femnist": {
+        "batch": 10,
+        "input": [28, 28, 1],
+        "classes": 62,
+        "smashed": [12, 12, 64],
+        "aux_archs": ["mlp", "cnn64", "cnn32", "cnn8", "cnn2"],
+        "client_layout": femnist_client_layout,
+        "server_layout": femnist_server_layout,
+        "aux_layout": femnist_aux_layout,
+        "client_forward": femnist_client_forward,
+        "server_forward": femnist_server_forward,
+        "aux_forward": femnist_aux_forward,
+    },
+}
+
+# Paper-printed parameter counts, asserted in tests and at AOT time.
+PAPER_COUNTS = {
+    "cifar": {
+        "client": 107_328,
+        "server": 960_970,
+        "aux": {"mlp": 23_050, "cnn54": 22_960, "cnn27": 11_485,
+                "cnn14": 5_960, "cnn7": 2_985},
+    },
+    "femnist": {
+        "client": 18_816,
+        "server": 1_187_774,
+        "aux": {"mlp": 571_454, "cnn64": 575_614, "cnn32": 287_838,
+                "cnn8": 72_006, "cnn2": 18_048},
+    },
+}

@@ -1,0 +1,204 @@
+"""L2 model tests: exact paper parameter counts, shapes, training-step
+semantics (loss decreases, SGD algebra, dropout replay), split-vs-monolith
+gradient equivalence, and clipping behaviour.
+
+Small batches are used where the entry allows it — make_entries only fixes
+batch size at AOT time; here we call the python callables directly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, models
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def flat_init(layout, total, seed=0):
+    """He/zero init identical in spirit to rust/src/model/init.rs."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for spec in layout:
+        key, sub = jax.random.split(key)
+        if spec["init"]["kind"] == "zero":
+            parts.append(jnp.zeros((spec["size"],), jnp.float32))
+        else:
+            std = spec["init"]["std"]
+            parts.append(std * jax.random.normal(sub, (spec["size"],), jnp.float32))
+    flat = jnp.concatenate(parts)
+    assert flat.shape[0] == total
+    return flat
+
+
+@pytest.mark.parametrize("dataset", ["cifar", "femnist"])
+def test_paper_param_counts_exact(dataset):
+    cfg = models.CONFIGS[dataset]
+    want = models.PAPER_COUNTS[dataset]
+    _, client_n = cfg["client_layout"]()
+    _, server_n = cfg["server_layout"]()
+    assert client_n == want["client"]
+    assert server_n == want["server"]
+    for aux_arch, count in want["aux"].items():
+        _, aux_n = cfg["aux_layout"](aux_arch)
+        assert aux_n == count, f"{dataset}/{aux_arch}"
+
+
+@pytest.mark.parametrize("dataset", ["cifar", "femnist"])
+def test_layout_offsets_are_contiguous(dataset):
+    cfg = models.CONFIGS[dataset]
+    for layout, total in (cfg["client_layout"](), cfg["server_layout"](),
+                          cfg["aux_layout"](cfg["aux_archs"][1])):
+        off = 0
+        for spec in layout:
+            assert spec["offset"] == off
+            assert spec["size"] == int(np.prod(spec["shape"]))
+            off += spec["size"]
+        assert off == total
+
+
+@pytest.mark.parametrize("dataset,aux", [("cifar", "mlp"), ("cifar", "cnn27"),
+                                         ("femnist", "cnn8")])
+def test_smashed_and_logit_shapes(dataset, aux):
+    cfg = models.CONFIGS[dataset]
+    b = 4
+    entries, meta = model.make_entries(dataset, aux)
+    xc = flat_init(meta["client_layout"], meta["client_size"])
+    xs = flat_init(meta["server_layout"], meta["server_size"])
+    ac = flat_init(meta["aux_layout"], meta["aux_size"])
+    x = jax.random.normal(jax.random.PRNGKey(1), tuple([b] + cfg["input"]))
+    smashed = cfg["client_forward"](models.unpack(xc, meta["client_layout"]), x, 0, True)
+    assert smashed.shape == tuple([b] + cfg["smashed"])
+    logits = cfg["server_forward"](models.unpack(xs, meta["server_layout"]), smashed, 0, False)
+    assert logits.shape == (b, cfg["classes"])
+    alog = cfg["aux_forward"](models.unpack(ac, meta["aux_layout"]), smashed, aux)
+    assert alog.shape == (b, cfg["classes"])
+
+
+def _setup(dataset="cifar", aux="cnn27", b=None, seed=0):
+    cfg = models.CONFIGS[dataset]
+    entries, meta = model.make_entries(dataset, aux)
+    b = b or cfg["batch"]
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, tuple([b] + cfg["input"]), jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, cfg["classes"])
+    xc = flat_init(meta["client_layout"], meta["client_size"], seed + 2)
+    ac = flat_init(meta["aux_layout"], meta["aux_size"], seed + 3)
+    xs = flat_init(meta["server_layout"], meta["server_size"], seed + 4)
+    return cfg, entries, meta, x, y, xc, ac, xs
+
+
+def test_client_train_step_reduces_local_loss():
+    cfg, entries, meta, x, y, xc, ac, xs = _setup(b=8)
+    step = jax.jit(entries["client_train_step"][0])
+    lr = jnp.float32(0.01)
+    losses = []
+    for i in range(6):
+        xc, ac, loss, gnorm = step(xc, ac, x, y, lr, jnp.int32(i))
+        losses.append(float(loss))
+        assert float(gnorm) > 0.0
+    assert losses[-1] < losses[0], losses
+
+
+def test_server_train_step_reduces_server_loss():
+    cfg, entries, meta, x, y, xc, ac, xs = _setup(b=8)
+    sm = jax.jit(entries["client_fwd"][0])(xc, x, jnp.int32(0))
+    step = jax.jit(entries["server_train_step"][0])
+    losses = []
+    for i in range(10):
+        xs, loss, gnorm = step(xs, sm, y, jnp.float32(0.005), jnp.int32(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_sgd_update_algebra():
+    """x' = x - lr * g exactly: running with lr=0 must be an identity."""
+    cfg, entries, meta, x, y, xc, ac, xs = _setup(b=4)
+    xc2, ac2, _, _ = entries["client_train_step"][0](xc, ac, x, y, jnp.float32(0.0), jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(xc2), np.asarray(xc))
+    np.testing.assert_allclose(np.asarray(ac2), np.asarray(ac))
+
+
+def test_split_fwd_bwd_equals_monolithic_grad():
+    """FSL_MC decomposition check: client_fwd + server_fwd_bwd + client_bwd
+    must implement exactly one SGD step of the *joint* model."""
+    cfg, entries, meta, x, y, xc, ac, xs = _setup(dataset="cifar", b=4)
+    lr = jnp.float32(0.1)
+    seed = jnp.int32(7)
+    noclip = jnp.float32(0.0)
+
+    sm = entries["client_fwd"][0](xc, x, seed)
+    xs2, gsm, loss, _ = entries["server_fwd_bwd"][0](xs, sm, y, lr, seed, noclip)
+    xc2, _ = entries["client_bwd"][0](xc, x, gsm, lr, seed, noclip)
+
+    # Monolithic reference
+    cl, sl = meta["client_layout"], meta["server_layout"]
+
+    def joint_loss(xc, xs):
+        smashed = cfg["client_forward"](models.unpack(xc, cl), x, seed, True)
+        logits = cfg["server_forward"](models.unpack(xs, sl), smashed, seed, True)
+        from compile.kernels import softmax_xent
+        return softmax_xent(logits, y)
+
+    l, (gxc, gxs) = jax.value_and_grad(joint_loss, (0, 1))(xc, xs)
+    np.testing.assert_allclose(float(loss), float(l), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(xs2), np.asarray(xs - lr * gxs), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(xc2), np.asarray(xc - lr * gxc), atol=1e-6)
+
+
+def test_femnist_dropout_replay_is_deterministic():
+    """client_bwd must replay the same dropout mask as client_fwd (same
+    seed) — otherwise FSL_MC on F-EMNIST silently trains on wrong grads."""
+    cfg, entries, meta, x, y, xc, ac, xs = _setup("femnist", "mlp", b=4)
+    s1 = entries["client_fwd"][0](xc, x, jnp.int32(3))
+    s2 = entries["client_fwd"][0](xc, x, jnp.int32(3))
+    s3 = entries["client_fwd"][0](xc, x, jnp.int32(4))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert not np.allclose(np.asarray(s1), np.asarray(s3))
+    # dropout actually drops ~25% of activations
+    frac_zero = float(np.mean(np.asarray(s1) == 0.0))
+    assert 0.15 < frac_zero
+
+
+def test_eval_step_has_no_dropout_noise():
+    cfg, entries, meta, x, y, xc, ac, xs = _setup("femnist", "mlp", b=4)
+    l1 = entries["eval_step"][0](xc, xs, x)
+    l2 = entries["eval_step"][0](xc, xs, x)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_gradient_clipping_caps_global_norm():
+    cfg, entries, meta, x, y, xc, ac, xs = _setup(b=4)
+    lr = jnp.float32(1.0)
+    sm = entries["client_fwd"][0](xc, x, jnp.int32(0))
+    clip = jnp.float32(1e-3)
+    xs2, gsm, _, gnorm = entries["server_fwd_bwd"][0](xs, sm, y, lr, jnp.int32(0), clip)
+    # post-clip server grad = (xs - xs2) / lr has norm <= clip
+    g = np.asarray(xs - xs2)
+    assert np.linalg.norm(g) <= float(clip) * 1.001
+    gsm_norm = np.linalg.norm(np.asarray(gsm).ravel())
+    assert gsm_norm <= float(clip) * 1.001
+
+
+def test_clip_disabled_is_identity():
+    cfg, entries, meta, x, y, xc, ac, xs = _setup(b=4)
+    lr = jnp.float32(0.1)
+    sm = entries["client_fwd"][0](xc, x, jnp.int32(0))
+    a = entries["server_fwd_bwd"][0](xs, sm, y, lr, jnp.int32(0), jnp.float32(0.0))
+    b_ = entries["server_fwd_bwd"][0](xs, sm, y, lr, jnp.int32(0), jnp.float32(1e12))
+    np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b_[0]), atol=1e-7)
+
+
+def test_aux_eval_step_shapes():
+    cfg, entries, meta, x, y, xc, ac, xs = _setup("cifar", "cnn14", b=4)
+    logits = entries["aux_eval_step"][0](xc, ac, x)
+    assert logits.shape == (4, 10)
+
+
+def test_unpack_roundtrip():
+    layout, total = models.CONFIGS["cifar"]["client_layout"]()
+    flat = jnp.arange(total, dtype=jnp.float32)
+    tensors = models.unpack(flat, layout)
+    rebuilt = jnp.concatenate([tensors[s["name"]].reshape(-1) for s in layout])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))

@@ -1,0 +1,108 @@
+//! Coordinator-layer benchmarks (the L3 contribution must not be the
+//! bottleneck): full mock-engine rounds per method, FedAvg aggregation at
+//! paper model sizes, the event queue, and the accounting ledger.
+
+use std::time::Duration;
+
+use cse_fsl::comm::accounting::{table2, CommLedger, MsgKind, WireSizes};
+use cse_fsl::coordinator::config::TrainConfig;
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::model::aggregate::{fedavg, Accumulator};
+use cse_fsl::sim::event::EventQueue;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::util::bench::Bench;
+use cse_fsl::util::prng::Rng;
+
+fn main() {
+    // --- full coordinator rounds over the mock engine, per method
+    let spec = SyntheticSpec {
+        height: 2,
+        width: 2,
+        channels: 2,
+        classes: 3,
+        ..SyntheticSpec::cifar_like()
+    };
+    let train = generate(&spec, 256, 1);
+    let test = generate(&spec, 64, 2);
+    let mut bench = Bench::new("coordinator/rounds")
+        .with_times(Duration::from_millis(200), Duration::from_millis(800));
+    for method in Method::ALL {
+        bench.run(&format!("{method}_10rounds_4clients"), || {
+            let e = MockEngine::small(42);
+            let cfg = TrainConfig { eval_every: 0, ..TrainConfig::new(method) }.with_rounds(10);
+            let setup = TrainerSetup {
+                train: &train,
+                test: &test,
+                partition: iid(&train, 4, &mut Rng::new(7)),
+                net: NetModel::edge_default(),
+                client_layout: None,
+                server_layout: None,
+                aux_layout: None,
+                label: "bench".into(),
+            };
+            let mut tr = Trainer::new(&e, cfg, setup).unwrap();
+            tr.run().unwrap()
+        });
+    }
+    bench.report();
+
+    // --- FedAvg at the paper's exact model sizes (Table II aggregation)
+    let mut bench = Bench::new("coordinator/fedavg");
+    for (name, size) in [
+        ("cifar_client_107k", 107_328usize),
+        ("cifar_server_960k", 960_970),
+        ("femnist_server_1.19M", 1_187_774),
+    ] {
+        let mut rng = Rng::new(3);
+        let models: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..size).map(|_| rng.normal() as f32).collect()).collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        bench.run_with_items(&format!("{name}_5clients"), Some(size as f64), || {
+            fedavg(&refs)
+        });
+        let mut out = vec![0f32; size];
+        bench.run_with_items(
+            &format!("{name}_accumulator"),
+            Some(size as f64),
+            || {
+                let mut acc = Accumulator::new(size);
+                for m in &models {
+                    acc.add(m, 1.0);
+                }
+                acc.finish_into(&mut out);
+                out[0]
+            },
+        );
+    }
+    bench.report();
+
+    // --- event queue + ledger (the per-message coordination cost)
+    let mut bench = Bench::new("coordinator/plumbing");
+    bench.run_with_items("event_queue_push_pop_1k", Some(1000.0), || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.schedule_at((i % 37) as f64, i);
+        }
+        let mut sum = 0u64;
+        while let Some((_, e)) = q.pop() {
+            sum += e;
+        }
+        sum
+    });
+    bench.run_with_items("ledger_record_1k", Some(1000.0), || {
+        let mut l = CommLedger::new();
+        for i in 0..1000usize {
+            l.record(i % 8, MsgKind::SmashedUpload, 9216);
+        }
+        l.total_bytes()
+    });
+    bench.run("table2_closed_forms", || {
+        let w = WireSizes::new(2304, 107_328, 23_050);
+        (table2::fsl_mc(5, 10_000, &w), table2::cse_fsl(5, 10_000, 5, &w))
+    });
+    bench.report();
+}

@@ -1,0 +1,37 @@
+//! Data-substrate benchmarks: synthetic generation and partitioning at
+//! experiment scale (these run once per experiment; they must stay far
+//! below training cost).
+
+use cse_fsl::data::femnist::{self, FemnistSpec};
+use cse_fsl::data::partition::{by_writer, dirichlet, iid};
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::util::bench::Bench;
+use cse_fsl::util::prng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("data/generate");
+    bench.run_with_items("cifar_like_1000", Some(1000.0), || {
+        generate(&SyntheticSpec::cifar_like(), 1000, 1)
+    });
+    let fspec = FemnistSpec { writers: 25, samples_per_writer: 40, ..FemnistSpec::default_like() };
+    bench.run_with_items("femnist_like_1000", Some(1000.0), || femnist::generate(&fspec, 1));
+    bench.report();
+
+    let cifar = generate(&SyntheticSpec::cifar_like(), 2000, 2);
+    let fem = femnist::generate(&fspec, 3);
+    let mut bench = Bench::new("data/partition");
+    bench.run("iid_2000x10", || iid(&cifar, 10, &mut Rng::new(1)));
+    bench.run("dirichlet_2000x10", || dirichlet(&cifar, 10, 0.3, &mut Rng::new(2)));
+    bench.run("by_writer_1000x10", || by_writer(&fem, 10, &mut Rng::new(3)));
+    bench.report();
+
+    let mut bench = Bench::new("data/batching");
+    let mut imgs = Vec::new();
+    let mut labs = Vec::new();
+    let idx: Vec<usize> = (0..50).collect();
+    bench.run_with_items("gather_b50_cifar", Some(50.0), || {
+        cifar.gather(&idx, &mut imgs, &mut labs);
+        imgs.len()
+    });
+    bench.report();
+}

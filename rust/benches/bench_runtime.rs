@@ -1,0 +1,57 @@
+//! End-to-end hot-path benchmarks through the real PJRT engine: one
+//! bench per paper-table workload unit (the per-batch step costs that
+//! Table V's load/time trade-offs are built from).
+//!
+//! Run: `cargo bench --bench bench_runtime` (needs `make artifacts`).
+
+use std::time::Duration;
+
+use cse_fsl::model::init::init_flat;
+use cse_fsl::runtime::artifact::Manifest;
+use cse_fsl::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use cse_fsl::runtime::{artifacts_dir, SplitEngine};
+use cse_fsl::util::bench::Bench;
+use cse_fsl::util::prng::Rng;
+
+fn main() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = PjrtRuntime::new().expect("pjrt");
+
+    for (dataset, aux) in [("femnist", "cnn8"), ("cifar", "cnn27")] {
+        let engine = PjrtEngine::new(rt.clone(), &manifest, dataset, aux).expect("engine");
+        let cfg = manifest.config(dataset).unwrap();
+        let mut rng = Rng::new(1);
+        let xc = init_flat(&cfg.client_layout, &mut rng.split_str("c"));
+        let ac = init_flat(&cfg.aux(aux).unwrap().layout, &mut rng.split_str("a"));
+        let xs = init_flat(&cfg.server_layout, &mut rng.split_str("s"));
+        let b = engine.batch();
+        let x: Vec<f32> =
+            (0..b * engine.input_len()).map(|_| rng.normal() as f32 * 0.5).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.below(engine.classes() as u64) as i32).collect();
+        let sm = engine.client_fwd(&xc, &x, 0).expect("fwd");
+
+        let mut bench = Bench::new(&format!("runtime/{dataset}"))
+            .with_times(Duration::from_millis(300), Duration::from_millis(1500));
+        let items = Some(b as f64);
+        bench.run_with_items("client_train_step", items, || {
+            engine.client_train_step(&xc, &ac, &x, &y, 0.001, 7).unwrap()
+        });
+        bench.run_with_items("client_fwd", items, || engine.client_fwd(&xc, &x, 7).unwrap());
+        bench.run_with_items("server_train_step", items, || {
+            engine.server_train_step(&xs, &sm, &y, 0.001, 7).unwrap()
+        });
+        bench.run_with_items("server_fwd_bwd", items, || {
+            engine.server_fwd_bwd(&xs, &sm, &y, 0.001, 7, 0.0).unwrap()
+        });
+        bench.run_with_items("client_bwd", items, || {
+            engine.client_bwd(&xc, &x, &sm, 0.001, 7, 0.0).unwrap()
+        });
+        bench.run_with_items("eval_step", items, || engine.eval_step(&xc, &xs, &x).unwrap());
+        bench.report();
+    }
+}

@@ -1,0 +1,3 @@
+//! Communication accounting (measured ledger + Table II closed forms).
+
+pub mod accounting;

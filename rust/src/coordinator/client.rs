@@ -1,0 +1,119 @@
+//! Per-client state: model shards, local data stream, delay profile.
+
+use crate::data::batcher::Batcher;
+use crate::data::Dataset;
+use crate::sim::netmodel::ClientProfile;
+use crate::util::prng::Rng;
+
+/// One federated client (Algorithm 1 state).
+pub struct ClientState {
+    pub id: usize,
+    /// Client-side model x_{c,i}.
+    pub xc: Vec<f32>,
+    /// Auxiliary network a_{c,i} (empty when the method has none).
+    pub ac: Vec<f32>,
+    pub batcher: Batcher,
+    pub profile: ClientProfile,
+    /// Simulated time at which this client is free to start local work.
+    pub ready_at: f64,
+    rng: Rng,
+    seed_counter: i64,
+    // Reusable batch buffers (no allocation in the round loop).
+    pub idx_buf: Vec<usize>,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl ClientState {
+    pub fn new(
+        id: usize,
+        xc: Vec<f32>,
+        ac: Vec<f32>,
+        shard: Vec<usize>,
+        batch_size: usize,
+        profile: ClientProfile,
+        rng: Rng,
+    ) -> Self {
+        let batcher_rng = rng.split_str("batches");
+        ClientState {
+            id,
+            xc,
+            ac,
+            batcher: Batcher::new(shard, batch_size, batcher_rng),
+            profile,
+            ready_at: 0.0,
+            rng,
+            seed_counter: 0,
+            idx_buf: Vec::new(),
+            images: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Deterministic per-step dropout seed, never repeated for this
+    /// client (paired client_fwd/client_bwd calls reuse one value).
+    pub fn next_seed(&mut self) -> i32 {
+        self.seed_counter += 1;
+        // Mix with a client-specific stream so clients never share seeds.
+        let mixed = self.rng.split(self.seed_counter as u64).next_u64();
+        (mixed & 0x7FFF_FFFF) as i32
+    }
+
+    /// Load the next mini-batch into the internal buffers.
+    pub fn load_batch(&mut self, ds: &Dataset) {
+        self.batcher.next_batch(&mut self.idx_buf);
+        ds.gather(&self.idx_buf, &mut self.images, &mut self.labels);
+    }
+
+    pub fn shard_len(&self) -> usize {
+        self.batcher.batches_per_epoch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::sim::netmodel::NetModel;
+
+    fn mk() -> (ClientState, Dataset) {
+        let spec =
+            SyntheticSpec { height: 4, width: 4, channels: 1, classes: 2, ..SyntheticSpec::cifar_like() };
+        let ds = generate(&spec, 20, 1);
+        let mut rng = Rng::new(2);
+        let profile = NetModel::homogeneous().sample_profile(&mut rng);
+        let c = ClientState::new(
+            0,
+            vec![0.0; 8],
+            vec![0.0; 4],
+            (0..20).collect(),
+            5,
+            profile,
+            Rng::new(3),
+        );
+        (c, ds)
+    }
+
+    #[test]
+    fn seeds_unique_and_deterministic() {
+        let (mut c, _) = mk();
+        let s: Vec<i32> = (0..100).map(|_| c.next_seed()).collect();
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 100, "seed collision");
+        let (mut c2, _) = mk();
+        let s2: Vec<i32> = (0..100).map(|_| c2.next_seed()).collect();
+        assert_eq!(s, s2);
+        assert!(s.iter().all(|&x| x >= 0));
+    }
+
+    #[test]
+    fn batch_loading_fills_buffers() {
+        let (mut c, ds) = mk();
+        c.load_batch(&ds);
+        assert_eq!(c.idx_buf.len(), 5);
+        assert_eq!(c.images.len(), 5 * 16);
+        assert_eq!(c.labels.len(), 5);
+    }
+}

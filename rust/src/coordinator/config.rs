@@ -1,0 +1,162 @@
+//! Training-run configuration + validation.
+
+use super::methods::Method;
+
+/// Order in which the server consumes arriving smashed-data uploads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalOrder {
+    /// By simulated arrival time (heterogeneous delays — the realistic
+    /// asynchronous schedule of Fig. 3).
+    ByDelay,
+    /// Client index order (the "ordered" arm of Fig. 6).
+    ClientIndex,
+    /// A fresh random permutation every round (the "random" arm of
+    /// Fig. 6).
+    Shuffled,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub method: Method,
+    /// Batches of local training per smashed upload (CSE_FSL's h;
+    /// must be 1 for the other methods).
+    pub h: usize,
+    /// Communication rounds to run (one round = one upload wave).
+    pub rounds: usize,
+    /// Aggregate every k rounds (paper: once per epoch).
+    pub agg_every: usize,
+    /// Initial learning rate and decay schedule:
+    /// lr(t) = lr0 * decay_rate^(t / decay_every).
+    pub lr0: f64,
+    pub lr_decay_rate: f64,
+    pub lr_decay_every: usize,
+    /// Server-side learning-rate multiplier (the server head sees much
+    /// larger fan-in than the client stack; the paper uses one eta, but
+    /// stability on the synthetic tasks wants a cooler server step).
+    pub server_lr_scale: f64,
+    /// Gradient clip for the MC/OC grad path (0 = off).
+    pub clip: f32,
+    /// Clients sampled per round (k of n; n = partition size).
+    pub participation: usize,
+    pub seed: u64,
+    /// Evaluate accuracy every k rounds (0 = only at the end).
+    pub eval_every: usize,
+    /// Cap eval to k batches (0 = full test set).
+    pub eval_max_batches: usize,
+    pub arrival: ArrivalOrder,
+    /// Record gradient norms (Props 1-2 traces).
+    pub track_grad_norms: bool,
+}
+
+impl TrainConfig {
+    pub fn new(method: Method) -> Self {
+        TrainConfig {
+            method,
+            h: 1,
+            rounds: 40,
+            agg_every: 10,
+            lr0: 0.05,
+            lr_decay_rate: 0.99,
+            lr_decay_every: 10,
+            server_lr_scale: 0.25,
+            clip: method.default_clip(),
+            participation: 0, // 0 = all clients
+            seed: 1,
+            eval_every: 5,
+            eval_max_batches: 0,
+            arrival: ArrivalOrder::ByDelay,
+            track_grad_norms: false,
+        }
+    }
+
+    pub fn with_h(mut self, h: usize) -> Self {
+        self.h = h;
+        self
+    }
+
+    pub fn with_rounds(mut self, rounds: usize) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn lr_at(&self, round: usize) -> f64 {
+        let steps = if self.lr_decay_every == 0 { 0 } else { round / self.lr_decay_every };
+        self.lr0 * self.lr_decay_rate.powi(steps as i32)
+    }
+
+    pub fn validate(&self, n_clients: usize) -> Result<(), String> {
+        if self.h == 0 {
+            return Err("h must be >= 1".into());
+        }
+        if self.h > 1 && !self.method.supports_h() {
+            return Err(format!("{} does not support h > 1 (got {})", self.method, self.h));
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be >= 1".into());
+        }
+        if self.agg_every == 0 {
+            return Err("agg_every must be >= 1".into());
+        }
+        if self.participation > n_clients {
+            return Err(format!(
+                "participation {} exceeds client count {n_clients}",
+                self.participation
+            ));
+        }
+        if self.lr0 <= 0.0 || self.lr_decay_rate <= 0.0 || self.lr_decay_rate > 1.0 {
+            return Err("bad learning-rate schedule".into());
+        }
+        Ok(())
+    }
+
+    /// Number of clients active each round.
+    pub fn active_clients(&self, n_clients: usize) -> usize {
+        if self.participation == 0 {
+            n_clients
+        } else {
+            self.participation
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays() {
+        let c = TrainConfig::new(Method::CseFsl);
+        assert_eq!(c.lr_at(0), 0.05);
+        assert!(c.lr_at(10) < c.lr_at(9));
+        assert!((c.lr_at(10) - 0.05 * 0.99).abs() < 1e-12);
+        assert!((c.lr_at(25) - 0.05 * 0.99f64.powi(2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rules() {
+        let mut c = TrainConfig::new(Method::FslMc);
+        assert!(c.validate(5).is_ok());
+        c.h = 5;
+        assert!(c.validate(5).is_err(), "MC must reject h>1");
+        let mut c = TrainConfig::new(Method::CseFsl).with_h(5);
+        assert!(c.validate(5).is_ok());
+        c.participation = 9;
+        assert!(c.validate(5).is_err());
+        c.participation = 3;
+        assert!(c.validate(5).is_ok());
+        assert_eq!(c.active_clients(5), 3);
+        c.participation = 0;
+        assert_eq!(c.active_clients(5), 5);
+    }
+
+    #[test]
+    fn oc_gets_clip_by_default() {
+        assert!(TrainConfig::new(Method::FslOc).clip > 0.0);
+        assert_eq!(TrainConfig::new(Method::CseFsl).clip, 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! The four FSL methods the paper compares (Section VI-A).
+//!
+//! | method  | server copies | aux net | client update source   | uploads    |
+//! |---------|---------------|---------|------------------------|------------|
+//! | FSL_MC  | n             | no      | server grad downlink   | every batch|
+//! | FSL_OC  | 1             | no      | server grad (clipped)  | every batch|
+//! | FSL_AN  | n             | yes     | local auxiliary loss   | every batch|
+//! | CSE_FSL | 1             | yes     | local auxiliary loss   | every h    |
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Method {
+    FslMc,
+    FslOc,
+    FslAn,
+    CseFsl,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] = [Method::FslMc, Method::FslOc, Method::FslAn, Method::CseFsl];
+
+    /// Does the server keep one model copy per client?
+    pub fn per_client_server_model(self) -> bool {
+        matches!(self, Method::FslMc | Method::FslAn)
+    }
+
+    /// Does the client train an auxiliary network and update locally?
+    pub fn uses_aux(self) -> bool {
+        matches!(self, Method::FslAn | Method::CseFsl)
+    }
+
+    /// Does the server send cut-layer gradients back per batch?
+    pub fn grad_downlink(self) -> bool {
+        matches!(self, Method::FslMc | Method::FslOc)
+    }
+
+    /// Can h exceed 1 (periodic smashed upload)?
+    pub fn supports_h(self) -> bool {
+        matches!(self, Method::CseFsl)
+    }
+
+    /// Default gradient clip (the paper adds clipping to FSL_OC to fix
+    /// its gradient-explosion instability; 0 disables elsewhere).
+    pub fn default_clip(self) -> f32 {
+        if self == Method::FslOc {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "fsl_mc" | "mc" => Some(Method::FslMc),
+            "fsl_oc" | "oc" => Some(Method::FslOc),
+            "fsl_an" | "an" => Some(Method::FslAn),
+            "cse_fsl" | "cse" => Some(Method::CseFsl),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Method::FslMc => "FSL_MC",
+            Method::FslOc => "FSL_OC",
+            Method::FslAn => "FSL_AN",
+            Method::CseFsl => "CSE_FSL",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capability_matrix_matches_paper() {
+        assert!(Method::FslMc.per_client_server_model());
+        assert!(!Method::FslOc.per_client_server_model());
+        assert!(Method::FslAn.per_client_server_model());
+        assert!(!Method::CseFsl.per_client_server_model());
+
+        assert!(!Method::FslMc.uses_aux());
+        assert!(!Method::FslOc.uses_aux());
+        assert!(Method::FslAn.uses_aux());
+        assert!(Method::CseFsl.uses_aux());
+
+        assert!(Method::FslMc.grad_downlink());
+        assert!(Method::FslOc.grad_downlink());
+        assert!(!Method::FslAn.grad_downlink());
+        assert!(!Method::CseFsl.grad_downlink());
+
+        assert!(Method::CseFsl.supports_h());
+        assert!(!Method::FslAn.supports_h());
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(&m.to_string()), Some(m));
+        }
+        assert_eq!(Method::parse("cse"), Some(Method::CseFsl));
+        assert_eq!(Method::parse("bogus"), None);
+    }
+
+    #[test]
+    fn only_oc_clips_by_default() {
+        assert!(Method::FslOc.default_clip() > 0.0);
+        assert_eq!(Method::FslMc.default_clip(), 0.0);
+        assert_eq!(Method::CseFsl.default_clip(), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! [`methods`] defines the four compared FSL variants; [`config`] the run
+//! configuration; [`client`]/[`server`] the per-party state (including
+//! the event-triggered `dataQueue` of Algorithm 2); [`round`] the trainer
+//! that drives communication rounds, asynchronous server updates,
+//! aggregation, and all accounting.
+
+pub mod client;
+pub mod config;
+pub mod methods;
+pub mod round;
+pub mod server;

@@ -1,0 +1,533 @@
+//! The training loop: rounds, event-triggered server updates, and
+//! aggregation — Algorithms 1 & 2 of the paper, for all four methods.
+//!
+//! One **communication round** = one upload wave: each participating
+//! client trains `h` local batches (h = 1 except CSE_FSL) and uploads its
+//! smashed data once ("when client i sends the smashed data to the
+//! server, it completes one communication round"). The server consumes
+//! arrivals from the dataQueue in arrival order (configurable for the
+//! Fig. 6 ablation) and updates its (single or per-client) model
+//! event-triggered, never waiting for a barrier. Every `agg_every` rounds
+//! the clients upload their client-side models (+ aux) for FedAvg
+//! (Eq. (14)) and download the aggregate.
+//!
+//! Timing is simulated deterministically (sim/netmodel): client compute,
+//! uplink/downlink transmission, and server update costs all advance the
+//! clock, the timeline records every span, and the ledger records every
+//! byte — those feed Figs. 3/9 and Tables II/V.
+
+use crate::comm::accounting::{CommLedger, MsgKind, WireSizes};
+use crate::data::partition::Partition;
+use crate::data::Dataset;
+use crate::metrics::eval::accuracy;
+use crate::metrics::recorder::{RoundRecord, RunRecord};
+use crate::model::aggregate::fedavg;
+use crate::model::init::init_flat;
+use crate::model::layout::Layout;
+use crate::runtime::{EngineError, SplitEngine};
+use crate::sim::netmodel::NetModel;
+use crate::sim::timeline::{SpanKind, Timeline};
+use crate::storage;
+use crate::util::prng::Rng;
+
+use super::client::ClientState;
+use super::config::{ArrivalOrder, TrainConfig};
+
+use super::server::{ServerState, SmashedMsg};
+
+pub struct Trainer<'a, E: SplitEngine> {
+    pub engine: &'a E,
+    pub cfg: TrainConfig,
+    train: &'a Dataset,
+    test: &'a Dataset,
+    pub clients: Vec<ClientState>,
+    pub server: ServerState,
+    pub ledger: CommLedger,
+    pub timeline: Timeline,
+    wires: WireSizes,
+    rng: Rng,
+    records: Vec<RoundRecord>,
+    /// Clients that contributed training since the last aggregation.
+    dirty: Vec<bool>,
+    label: String,
+}
+
+/// Everything needed to build a Trainer over real or mock engines.
+pub struct TrainerSetup<'a> {
+    pub train: &'a Dataset,
+    pub test: &'a Dataset,
+    pub partition: Partition,
+    pub net: NetModel,
+    /// Layouts drive initialization; pass `None` to zero-init (mock).
+    pub client_layout: Option<&'a Layout>,
+    pub server_layout: Option<&'a Layout>,
+    pub aux_layout: Option<&'a Layout>,
+    pub label: String,
+}
+
+impl<'a, E: SplitEngine> Trainer<'a, E> {
+    pub fn new(engine: &'a E, cfg: TrainConfig, setup: TrainerSetup<'a>) -> Result<Self, String> {
+        let n = setup.partition.n_clients();
+        cfg.validate(n)?;
+        setup.partition.validate(setup.train.len()).map_err(|e| format!("partition: {e}"))?;
+        let root = Rng::new(cfg.seed);
+
+        // Global init: every client starts from the same x_c^0, a_c^0
+        // (Step 1: model download), server from x_s^0.
+        let irng = root.split_str("init");
+        let xc0 = match setup.client_layout {
+            Some(l) => init_flat(l, &mut irng.split_str("client")),
+            None => vec![0.0; engine.client_size()],
+        };
+        let ac0 = match setup.aux_layout {
+            Some(l) => init_flat(l, &mut irng.split_str("aux")),
+            None => vec![0.0; engine.aux_size()],
+        };
+        let xs0 = match setup.server_layout {
+            Some(l) => init_flat(l, &mut irng.split_str("server")),
+            None => vec![0.0; engine.server_size()],
+        };
+
+        let mut prng = root.split_str("profiles");
+        let clients: Vec<ClientState> = setup
+            .partition
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let profile = setup.net.sample_profile(&mut prng);
+                ClientState::new(
+                    i,
+                    xc0.clone(),
+                    ac0.clone(),
+                    shard.clone(),
+                    engine.batch(),
+                    profile,
+                    root.split(1_000 + i as u64),
+                )
+            })
+            .collect();
+
+        let copies = if cfg.method.per_client_server_model() { n } else { 1 };
+        let server = ServerState::new(xs0, copies, engine.client_size(), engine.aux_size());
+        let wires =
+            WireSizes::new(engine.smashed_len(), engine.client_size(), engine.aux_size());
+        Ok(Trainer {
+            engine,
+            cfg,
+            train: setup.train,
+            test: setup.test,
+            clients,
+            server,
+            ledger: CommLedger::new(),
+            timeline: Timeline::default(),
+            wires,
+            rng: root.split_str("trainer"),
+            records: Vec::new(),
+            dirty: vec![false; n],
+            label: setup.label,
+        })
+    }
+
+    fn smashed_bytes(&self) -> u64 {
+        self.engine.batch() as u64 * self.wires.smashed_per_sample
+    }
+
+    fn label_bytes(&self) -> u64 {
+        self.engine.batch() as u64 * self.wires.label
+    }
+
+    /// Select this round's participants (k of n, or all when k = 0).
+    fn select_participants(&mut self) -> Vec<usize> {
+        let n = self.clients.len();
+        let k = self.cfg.active_clients(n);
+        if k == n {
+            (0..n).collect()
+        } else {
+            let mut v = self.rng.choose(n, k);
+            v.sort_unstable();
+            v
+        }
+    }
+
+    /// Run all configured rounds; returns the run record.
+    pub fn run(&mut self) -> Result<RunRecord, EngineError> {
+        for t in 1..=self.cfg.rounds {
+            self.run_round(t)?;
+        }
+        // Final aggregation + full eval.
+        let final_acc = self.eval_probe(0)?;
+        if let Some(last) = self.records.last_mut() {
+            last.accuracy = Some(final_acc);
+        }
+        let sizes = storage::ModelSizes {
+            client: self.engine.client_size(),
+            server: self.engine.server_size(),
+            aux: self.engine.aux_size(),
+        };
+        Ok(RunRecord {
+            label: self.label.clone(),
+            rounds: self.records.clone(),
+            final_accuracy: final_acc,
+            total_up_bytes: self.ledger.up_bytes(),
+            total_down_bytes: self.ledger.down_bytes(),
+            sim_time: self.timeline.end_time(),
+            server_idle_fraction: self.timeline.server_idle_fraction(),
+            server_storage_params: storage::server_storage_params(
+                self.cfg.method,
+                self.clients.len(),
+                &sizes,
+            ),
+        })
+    }
+
+    fn run_round(&mut self, t: usize) -> Result<(), EngineError> {
+        let lr = self.cfg.lr_at(t - 1) as f32;
+        let server_lr = (self.cfg.lr_at(t - 1) * self.cfg.server_lr_scale) as f32;
+        let participants = self.select_participants();
+        let mut train_losses = Vec::new();
+        let mut client_gnorms = Vec::new();
+        let mut msgs: Vec<SmashedMsg> = Vec::new();
+
+        if self.cfg.method.grad_downlink() {
+            self.splitfed_round(&participants, lr, server_lr, &mut train_losses, &mut client_gnorms)?;
+        } else {
+            self.local_round(&participants, lr, &mut train_losses, &mut client_gnorms, &mut msgs)?;
+        }
+
+        // Event-triggered server updates over the arrival queue.
+        let (server_losses, server_gnorms) = self.drain_data_queue(server_lr, msgs)?;
+
+        for &i in &participants {
+            self.dirty[i] = true;
+        }
+
+        if t % self.cfg.agg_every == 0 {
+            self.aggregate(t)?;
+        }
+
+        let do_eval = self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0;
+        let acc = if do_eval { Some(self.eval_probe(self.cfg.eval_max_batches)?) } else { None };
+
+        let mean = |v: &[f32]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+            }
+        };
+        self.records.push(RoundRecord {
+            round: t,
+            sim_time: self.timeline.end_time(),
+            lr: lr as f64,
+            train_loss: mean(&train_losses),
+            server_loss: mean(&server_losses),
+            up_bytes: self.ledger.up_bytes(),
+            down_bytes: self.ledger.down_bytes(),
+            accuracy: acc,
+            client_grad_norm: self.cfg.track_grad_norms.then(|| mean(&client_gnorms)),
+            server_grad_norm: self.cfg.track_grad_norms.then(|| mean(&server_gnorms)),
+        });
+        Ok(())
+    }
+
+    /// FSL_AN / CSE_FSL round: h local auxiliary-loss batches per client,
+    /// then one smashed upload (Algorithm 1).
+    fn local_round(
+        &mut self,
+        participants: &[usize],
+        lr: f32,
+        train_losses: &mut Vec<f32>,
+        client_gnorms: &mut Vec<f32>,
+        msgs: &mut Vec<SmashedMsg>,
+    ) -> Result<(), EngineError> {
+        let h = self.cfg.h;
+        let payload = self.smashed_bytes() + self.label_bytes();
+        for &i in participants {
+            let c = &mut self.clients[i];
+            let start = c.ready_at;
+            let mut last_seed = 0;
+            for _ in 0..h {
+                c.load_batch(self.train);
+                last_seed = c.next_seed();
+                let out = self.engine.client_train_step(
+                    &c.xc, &c.ac, &c.images, &c.labels, lr, last_seed,
+                )?;
+                c.xc = out.new_client;
+                c.ac = out.new_aux;
+                train_losses.push(out.loss);
+                client_gnorms.push(out.grad_norm);
+            }
+            // Smashed data of the *updated* model on the last batch
+            // (Algorithm 1 line 9: g_{x^{t,h}}(z)).
+            let smashed = self.engine.client_fwd(&c.xc, &c.images, last_seed)?;
+            let mut drng = self.rng.split(i as u64);
+            let t_compute = c.profile.compute_delay(h, &mut drng);
+            let t_up = c.profile.upload_delay(payload, &mut drng);
+            self.timeline.record(
+                SpanKind::ClientCompute,
+                Some(i),
+                start,
+                start + t_compute,
+                format!("train h={h}"),
+            );
+            self.timeline.record(
+                SpanKind::Upload,
+                Some(i),
+                start + t_compute,
+                start + t_compute + t_up,
+                "smashed",
+            );
+            self.ledger.record(i, MsgKind::SmashedUpload, self.smashed_bytes());
+            self.ledger.record(i, MsgKind::LabelUpload, self.label_bytes());
+            msgs.push(SmashedMsg {
+                client: i,
+                smashed,
+                labels: self.clients[i].labels.clone(),
+                arrival: start + t_compute + t_up,
+                seed: last_seed,
+            });
+            // Fire-and-forget: the client is free as soon as the upload
+            // leaves — it never waits for server gradients.
+            self.clients[i].ready_at = start + t_compute + t_up;
+        }
+        Ok(())
+    }
+
+    /// FSL_MC / FSL_OC round: one interactive split batch per client —
+    /// forward, smashed upload, server fwd/bwd, gradient downlink, client
+    /// backward. The client *blocks* on the server round trip.
+    fn splitfed_round(
+        &mut self,
+        participants: &[usize],
+        lr: f32,
+        server_lr: f32,
+        train_losses: &mut Vec<f32>,
+        client_gnorms: &mut Vec<f32>,
+    ) -> Result<(), EngineError> {
+        // Phase 1: forwards + uploads (parallel across clients).
+        struct Pending {
+            client: usize,
+            smashed: Vec<f32>,
+            seed: i32,
+            arrival: f64,
+        }
+        let mut pend: Vec<Pending> = Vec::new();
+        let payload = self.smashed_bytes() + self.label_bytes();
+        for &i in participants {
+            let c = &mut self.clients[i];
+            let start = c.ready_at;
+            c.load_batch(self.train);
+            let seed = c.next_seed();
+            let smashed = self.engine.client_fwd(&c.xc, &c.images, seed)?;
+            let mut drng = self.rng.split(i as u64 ^ 0x5F);
+            let t_fwd = c.profile.compute_delay(1, &mut drng) * 0.5;
+            let t_up = c.profile.upload_delay(payload, &mut drng);
+            self.timeline
+                .record(SpanKind::ClientCompute, Some(i), start, start + t_fwd, "fwd");
+            self.timeline.record(
+                SpanKind::Upload,
+                Some(i),
+                start + t_fwd,
+                start + t_fwd + t_up,
+                "smashed",
+            );
+            self.ledger.record(i, MsgKind::SmashedUpload, self.smashed_bytes());
+            self.ledger.record(i, MsgKind::LabelUpload, self.label_bytes());
+            pend.push(Pending { client: i, smashed, seed, arrival: start + t_fwd + t_up });
+        }
+        pend.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+
+        // Phase 2: server processes sequentially; client backward after
+        // the gradient downlink.
+        let net_server = NetModel::edge_default().server_update_time;
+        for p in pend {
+            let i = p.client;
+            let start = self.server.free_at.max(p.arrival);
+            let copy = self.server.copy_for(i);
+            let labels = self.clients[i].labels.clone();
+            let out = self.engine.server_fwd_bwd(
+                &self.server.copies[copy],
+                &p.smashed,
+                &labels,
+                server_lr,
+                p.seed,
+                self.cfg.clip,
+            )?;
+            self.server.copies[copy] = out.new_server;
+            self.server.updates += 1;
+            train_losses.push(out.loss);
+            let done = start + net_server;
+            self.server.free_at = done;
+            self.timeline.record(SpanKind::ServerUpdate, None, start, done, "fwd/bwd");
+
+            let mut drng = self.rng.split(i as u64 ^ 0xA3);
+            let grad_bytes = self.smashed_bytes();
+            let c = &mut self.clients[i];
+            let t_down = c.profile.download_delay(grad_bytes, &mut drng);
+            self.timeline.record(SpanKind::Download, Some(i), done, done + t_down, "grads");
+            self.ledger.record(i, MsgKind::GradDownload, grad_bytes);
+
+            let (new_xc, gnorm) = self.engine.client_bwd(
+                &c.xc,
+                &c.images,
+                &out.grad_smashed,
+                lr,
+                p.seed,
+                self.cfg.clip,
+            )?;
+            c.xc = new_xc;
+            client_gnorms.push(gnorm);
+            let t_bwd = c.profile.compute_delay(1, &mut drng) * 0.5;
+            self.timeline.record(
+                SpanKind::ClientCompute,
+                Some(i),
+                done + t_down,
+                done + t_down + t_bwd,
+                "bwd",
+            );
+            c.ready_at = done + t_down + t_bwd;
+        }
+        Ok(())
+    }
+
+    /// The event-triggered update loop (Algorithm 2): order arrivals,
+    /// enqueue into the dataQueue, and update the server model(s) as each
+    /// message is consumed.
+    fn drain_data_queue(
+        &mut self,
+        lr: f32,
+        mut msgs: Vec<SmashedMsg>,
+    ) -> Result<(Vec<f32>, Vec<f32>), EngineError> {
+        match self.cfg.arrival {
+            ArrivalOrder::ByDelay => {
+                msgs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+            }
+            ArrivalOrder::ClientIndex => msgs.sort_by_key(|m| m.client),
+            ArrivalOrder::Shuffled => self.rng.shuffle(&mut msgs),
+        }
+        for m in msgs {
+            self.server.enqueue(m);
+        }
+        let net_server = NetModel::edge_default().server_update_time;
+        let mut losses = Vec::new();
+        let mut gnorms = Vec::new();
+        while let Some(m) = self.server.data_queue.pop_front() {
+            let start = self.server.free_at.max(m.arrival);
+            let copy = self.server.copy_for(m.client);
+            let out = self.engine.server_train_step(
+                &self.server.copies[copy],
+                &m.smashed,
+                &m.labels,
+                lr,
+                m.seed,
+            )?;
+            self.server.copies[copy] = out.new_server;
+            self.server.updates += 1;
+            losses.push(out.loss);
+            gnorms.push(out.grad_norm);
+            let done = start + net_server;
+            self.server.free_at = done;
+            self.timeline.record(
+                SpanKind::ServerUpdate,
+                None,
+                start,
+                done,
+                format!("update c{}", m.client),
+            );
+        }
+        Ok((losses, gnorms))
+    }
+
+    /// Global aggregation (Step 4, Eq. (14)): dirty clients upload their
+    /// client-side models (+ aux), the server averages and redistributes
+    /// to everyone; MC/AN additionally FedAvg their server copies.
+    fn aggregate(&mut self, _t: usize) -> Result<(), EngineError> {
+        let contributors: Vec<usize> =
+            (0..self.clients.len()).filter(|&i| self.dirty[i]).collect();
+        if contributors.is_empty() {
+            return Ok(());
+        }
+        // Upload client models (+ aux) — wire cost + arrival times.
+        let mut last_arrival = self.server.free_at;
+        for &i in &contributors {
+            let c = &mut self.clients[i];
+            let mut drng = self.rng.split(i as u64 ^ 0xC4);
+            let mut bytes = self.wires.client_model;
+            self.ledger.record(i, MsgKind::ClientModelUpload, self.wires.client_model);
+            if self.cfg.method.uses_aux() {
+                bytes += self.wires.aux_model;
+                self.ledger.record(i, MsgKind::AuxModelUpload, self.wires.aux_model);
+            }
+            let t_up = c.profile.upload_delay(bytes, &mut drng);
+            self.timeline.record(
+                SpanKind::Upload,
+                Some(i),
+                c.ready_at,
+                c.ready_at + t_up,
+                "model",
+            );
+            last_arrival = last_arrival.max(c.ready_at + t_up);
+            self.server.client_acc.add(&c.xc, 1.0);
+            if self.cfg.method.uses_aux() {
+                self.server.aux_acc.add(&c.ac, 1.0);
+            }
+        }
+        // Server aggregation (barrier: needs every contributor).
+        let agg_start = last_arrival.max(self.server.free_at);
+        let agg_cost = 1e-3; // FedAvg itself is cheap vs model transfer
+        let agg_done = agg_start + agg_cost;
+        self.server.free_at = agg_done;
+        self.timeline.record(SpanKind::Aggregate, None, agg_start, agg_done, "fedavg");
+
+        let mut xc_new = vec![0.0f32; self.engine.client_size()];
+        self.server.client_acc.finish_into(&mut xc_new);
+        let ac_new = if self.cfg.method.uses_aux() {
+            let mut v = vec![0.0f32; self.engine.aux_size()];
+            self.server.aux_acc.finish_into(&mut v);
+            Some(v)
+        } else {
+            self.server.aux_acc.reset();
+            None
+        };
+        self.server.aggregate_copies();
+
+        // Redistribute to ALL clients ("the aggregated models are used as
+        // the initial model for the next round").
+        for c in &mut self.clients {
+            c.xc.copy_from_slice(&xc_new);
+            let mut bytes = self.wires.client_model;
+            self.ledger.record(c.id, MsgKind::ClientModelDownload, self.wires.client_model);
+            if let Some(ac) = &ac_new {
+                c.ac.copy_from_slice(ac);
+                bytes += self.wires.aux_model;
+                self.ledger.record(c.id, MsgKind::AuxModelDownload, self.wires.aux_model);
+            }
+            let mut drng = self.rng.split(c.id as u64 ^ 0xD7);
+            let t_down = c.profile.download_delay(bytes, &mut drng);
+            self.timeline.record(
+                SpanKind::Download,
+                Some(c.id),
+                agg_done,
+                agg_done + t_down,
+                "model",
+            );
+            c.ready_at = agg_done + t_down;
+        }
+        self.dirty.iter_mut().for_each(|d| *d = false);
+        Ok(())
+    }
+
+    /// Evaluation probe: accuracy of (FedAvg of client models, mean of
+    /// server copies) on the test set. No wire traffic.
+    fn eval_probe(&self, max_batches: usize) -> Result<f64, EngineError> {
+        let refs: Vec<&[f32]> = self.clients.iter().map(|c| c.xc.as_slice()).collect();
+        let xc = fedavg(&refs);
+        let xs = self.server.eval_model();
+        accuracy(self.engine, &xc, &xs, self.test, max_batches)
+    }
+
+    pub fn records(&self) -> &[RoundRecord] {
+        &self.records
+    }
+}

@@ -1,0 +1,135 @@
+//! Server state: server-side model copies, the event-triggered
+//! `dataQueue` (Algorithm 2), and aggregation accumulators.
+
+use std::collections::VecDeque;
+
+use crate::model::aggregate::{fedavg, Accumulator};
+
+/// One smashed-data upload in flight / queued at the server.
+#[derive(Clone, Debug)]
+pub struct SmashedMsg {
+    pub client: usize,
+    pub smashed: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// Simulated arrival time at the server.
+    pub arrival: f64,
+    /// Dropout seed the client used for this forward (server replays it
+    /// for its own dropout stream).
+    pub seed: i32,
+}
+
+/// Algorithm 2 state.
+pub struct ServerState {
+    /// Server-side model copies: len 1 (FSL_OC / CSE_FSL) or n (FSL_MC /
+    /// FSL_AN, one per client).
+    pub copies: Vec<Vec<f32>>,
+    /// The paper's dataQueue: arrived smashed data waiting for the
+    /// event-triggered update loop.
+    pub data_queue: VecDeque<SmashedMsg>,
+    /// Simulated time at which the server finishes its current work.
+    pub free_at: f64,
+    /// Aggregation accumulators (client models / aux nets).
+    pub client_acc: Accumulator,
+    pub aux_acc: Accumulator,
+    /// Total event-triggered updates performed (observability).
+    pub updates: u64,
+}
+
+impl ServerState {
+    pub fn new(xs: Vec<f32>, copies: usize, client_size: usize, aux_size: usize) -> Self {
+        assert!(copies >= 1);
+        ServerState {
+            copies: vec![xs; copies],
+            data_queue: VecDeque::new(),
+            free_at: 0.0,
+            client_acc: Accumulator::new(client_size),
+            aux_acc: Accumulator::new(aux_size),
+            updates: 0,
+        }
+    }
+
+    /// The copy index serving `client` (0 when a single copy is shared).
+    pub fn copy_for(&self, client: usize) -> usize {
+        if self.copies.len() == 1 {
+            0
+        } else {
+            client
+        }
+    }
+
+    pub fn enqueue(&mut self, msg: SmashedMsg) {
+        self.data_queue.push_back(msg);
+    }
+
+    /// FedAvg the per-client server copies into a single model and reset
+    /// every copy to it (SplitFed's server-side aggregation). No-op with
+    /// a single copy.
+    pub fn aggregate_copies(&mut self) {
+        if self.copies.len() <= 1 {
+            return;
+        }
+        let refs: Vec<&[f32]> = self.copies.iter().map(|c| c.as_slice()).collect();
+        let mean = fedavg(&refs);
+        for c in &mut self.copies {
+            c.copy_from_slice(&mean);
+        }
+    }
+
+    /// Mean of the server copies (evaluation probe).
+    pub fn eval_model(&self) -> Vec<f32> {
+        if self.copies.len() == 1 {
+            self.copies[0].clone()
+        } else {
+            let refs: Vec<&[f32]> = self.copies.iter().map(|c| c.as_slice()).collect();
+            fedavg(&refs)
+        }
+    }
+
+    /// Resident server-side parameter count (live storage check).
+    pub fn resident_params(&self) -> usize {
+        self.copies.iter().map(|c| c.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn copy_routing() {
+        let single = ServerState::new(vec![0.0; 4], 1, 2, 2);
+        assert_eq!(single.copy_for(0), 0);
+        assert_eq!(single.copy_for(3), 0);
+        let multi = ServerState::new(vec![0.0; 4], 5, 2, 2);
+        assert_eq!(multi.copy_for(3), 3);
+        assert_eq!(multi.resident_params(), 20);
+        assert_eq!(single.resident_params(), 4);
+    }
+
+    #[test]
+    fn queue_fifo() {
+        let mut s = ServerState::new(vec![0.0; 2], 1, 1, 1);
+        for i in 0..3 {
+            s.enqueue(SmashedMsg {
+                client: i,
+                smashed: vec![],
+                labels: vec![],
+                arrival: i as f64,
+                seed: 0,
+            });
+        }
+        assert_eq!(s.data_queue.pop_front().unwrap().client, 0);
+        assert_eq!(s.data_queue.pop_front().unwrap().client, 1);
+    }
+
+    #[test]
+    fn aggregate_copies_means() {
+        let mut s = ServerState::new(vec![0.0; 2], 2, 1, 1);
+        s.copies[0] = vec![1.0, 3.0];
+        s.copies[1] = vec![3.0, 1.0];
+        s.aggregate_copies();
+        assert_eq!(s.copies[0], vec![2.0, 2.0]);
+        assert_eq!(s.copies[1], vec![2.0, 2.0]);
+        assert_eq!(s.eval_model(), vec![2.0, 2.0]);
+    }
+}

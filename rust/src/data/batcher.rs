@@ -1,0 +1,173 @@
+//! Deterministic per-client mini-batch iteration.
+//!
+//! Each client walks its local shard in a reshuffled order every epoch
+//! (standard SGD protocol; Algorithm 1 line 5 "for each mini-batch").
+//! Batches are exactly `batch_size` — the tail is carried into the next
+//! epoch's order so no sample is dropped and the AOT-fixed batch shape is
+//! always honored.
+
+use crate::util::prng::Rng;
+
+/// Infinite batch stream over a fixed index shard.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    shard: Vec<usize>,
+    order: Vec<usize>,
+    cursor: usize,
+    batch_size: usize,
+    rng: Rng,
+    epoch: u64,
+    carried: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(shard: Vec<usize>, batch_size: usize, rng: Rng) -> Self {
+        assert!(batch_size > 0);
+        assert!(!shard.is_empty(), "empty shard");
+        let mut b = Batcher {
+            shard,
+            order: Vec::new(),
+            cursor: 0,
+            batch_size,
+            rng,
+            epoch: 0,
+            carried: Vec::new(),
+        };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        self.order = self.shard.clone();
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+        self.epoch += 1;
+    }
+
+    /// Number of full batches per epoch (used for h/C scheduling).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.shard.len() / self.batch_size
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next mini-batch of exactly `batch_size` indices.
+    pub fn next_batch(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend_from_slice(&self.carried);
+        self.carried.clear();
+        while out.len() < self.batch_size {
+            if self.cursor >= self.order.len() {
+                self.reshuffle();
+            }
+            let take = (self.batch_size - out.len()).min(self.order.len() - self.cursor);
+            out.extend_from_slice(&self.order[self.cursor..self.cursor + take]);
+            self.cursor += take;
+        }
+    }
+}
+
+/// Chunked evaluation iterator: walks 0..n in fixed-size chunks, padding
+/// the last chunk by repeating the final index (the evaluator masks the
+/// padding out of the accuracy count).
+pub struct EvalChunks {
+    n: usize,
+    chunk: usize,
+    pos: usize,
+}
+
+impl EvalChunks {
+    pub fn new(n: usize, chunk: usize) -> Self {
+        assert!(chunk > 0);
+        EvalChunks { n, chunk, pos: 0 }
+    }
+}
+
+impl Iterator for EvalChunks {
+    /// (indices, number of real — unpadded — entries)
+    type Item = (Vec<usize>, usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.n {
+            return None;
+        }
+        let real = (self.n - self.pos).min(self.chunk);
+        let mut idx: Vec<usize> = (self.pos..self.pos + real).collect();
+        while idx.len() < self.chunk {
+            idx.push(self.n - 1);
+        }
+        self.pos += real;
+        Some((idx, real))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_epoch_exactly() {
+        let mut b = Batcher::new((0..10).collect(), 5, Rng::new(1));
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        for _ in 0..2 {
+            b.next_batch(&mut buf);
+            assert_eq!(buf.len(), 5);
+            got.extend_from_slice(&buf);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tail_carries_across_epochs() {
+        // shard of 7, batch of 5: batch1 = 5 items, batch2 = 2 carried + 3
+        // from the next epoch; nothing dropped, nothing duplicated within
+        // a window of 2 epochs minus the in-flight batch.
+        let mut b = Batcher::new((0..7).collect(), 5, Rng::new(2));
+        let mut buf = Vec::new();
+        let mut counts = vec![0usize; 7];
+        for _ in 0..14 {
+            // 14 batches * 5 = 70 = 10 epochs
+            b.next_batch(&mut buf);
+            for &i in &buf {
+                counts[i] += 1;
+            }
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 70);
+        for (i, &c) in counts.iter().enumerate() {
+            assert_eq!(c, 10, "sample {i} seen {c} times");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let mut a = Batcher::new((0..20).collect(), 4, Rng::new(3));
+        let mut b = Batcher::new((0..20).collect(), 4, Rng::new(3));
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        for _ in 0..10 {
+            a.next_batch(&mut ba);
+            b.next_batch(&mut bb);
+            assert_eq!(ba, bb);
+        }
+    }
+
+    #[test]
+    fn batches_per_epoch_math() {
+        let b = Batcher::new((0..53).collect(), 10, Rng::new(4));
+        assert_eq!(b.batches_per_epoch(), 5);
+    }
+
+    #[test]
+    fn eval_chunks_pad_and_mask() {
+        let chunks: Vec<_> = EvalChunks::new(7, 3).collect();
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], ((0..3).collect(), 3));
+        assert_eq!(chunks[2].0, vec![6, 6, 6]);
+        assert_eq!(chunks[2].1, 1);
+        let total: usize = chunks.iter().map(|c| c.1).sum();
+        assert_eq!(total, 7);
+    }
+}

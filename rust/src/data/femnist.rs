@@ -1,0 +1,289 @@
+//! Synthetic F-EMNIST: writer-structured 62-class handwriting substitute.
+//!
+//! Real F-EMNIST partitions digit/letter images *by author*, which makes
+//! the federated split naturally non-IID ("the writing style varies from
+//! person to person"). We reproduce that structure: every class has a
+//! global glyph template, every *writer* has a persistent style (shear,
+//! stroke gain, offset, contrast), and a sample is
+//! `style(writer) ∘ glyph(class) + noise`. Partitioning by writer then
+//! yields exactly the kind of covariate-shift non-IID the paper's Fig. 5b
+//! and Fig. 8 stress.
+
+use crate::util::prng::Rng;
+
+use super::Dataset;
+
+pub const CLASSES: usize = 62;
+pub const SIDE: usize = 28;
+
+/// Writer style: a persistent transform applied to every glyph rendered
+/// by that writer.
+#[derive(Clone, Debug)]
+pub struct WriterStyle {
+    /// Horizontal shear (slant), in pixels per row.
+    pub shear: f64,
+    /// Multiplicative stroke gain ("pen pressure").
+    pub gain: f64,
+    /// Spatial offset in pixels.
+    pub dx: i64,
+    pub dy: i64,
+    /// Additive background bias.
+    pub bias: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct FemnistSpec {
+    pub writers: usize,
+    pub samples_per_writer: usize,
+    /// Per-writer label skew: each writer draws labels from a Dirichlet
+    /// over classes with this concentration (smaller = more skew). Real
+    /// authors also have label skew (people write some characters more).
+    pub label_alpha: f64,
+    pub noise: f64,
+}
+
+impl FemnistSpec {
+    pub fn default_like() -> Self {
+        FemnistSpec { writers: 50, samples_per_writer: 40, label_alpha: 0.5, noise: 0.3 }
+    }
+}
+
+/// Global glyph templates (one 28x28 field per class).
+pub struct Glyphs {
+    pub fields: Vec<Vec<f32>>, // [CLASSES][SIDE*SIDE]
+}
+
+pub fn make_glyphs(rng: &mut Rng) -> Glyphs {
+    // Glyph = a handful of random "strokes" (soft line segments) on the
+    // canvas — close enough to character structure for a conv net, and
+    // far more class-distinctive than raw noise.
+    let mut fields = Vec::with_capacity(CLASSES);
+    for _ in 0..CLASSES {
+        let mut f = vec![0f32; SIDE * SIDE];
+        let strokes = 3 + rng.below(3) as usize;
+        for _ in 0..strokes {
+            let x0 = rng.uniform_in(4.0, 24.0);
+            let y0 = rng.uniform_in(4.0, 24.0);
+            let ang = rng.uniform_in(0.0, std::f64::consts::TAU);
+            let len = rng.uniform_in(6.0, 16.0);
+            let width = rng.uniform_in(1.0, 2.2);
+            let (dx, dy) = (ang.cos(), ang.sin());
+            // Soft line: intensity = exp(-d^2 / width^2) along the segment
+            for y in 0..SIDE {
+                for x in 0..SIDE {
+                    let px = x as f64 - x0;
+                    let py = y as f64 - y0;
+                    let t = (px * dx + py * dy).clamp(0.0, len);
+                    let qx = px - t * dx;
+                    let qy = py - t * dy;
+                    let d2 = qx * qx + qy * qy;
+                    f[y * SIDE + x] += (-d2 / (width * width)).exp() as f32;
+                }
+            }
+        }
+        // Normalize energy.
+        let norm: f32 = f.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+        for v in &mut f {
+            *v = *v / norm * 10.0;
+        }
+        fields.push(f);
+    }
+    Glyphs { fields }
+}
+
+pub fn make_writer_style(rng: &mut Rng) -> WriterStyle {
+    WriterStyle {
+        shear: rng.uniform_in(-0.25, 0.25),
+        gain: rng.uniform_in(0.7, 1.3),
+        dx: rng.uniform_in(-3.0, 4.0).floor() as i64,
+        dy: rng.uniform_in(-3.0, 4.0).floor() as i64,
+        bias: rng.uniform_in(-0.1, 0.1),
+    }
+}
+
+/// Render one glyph under a writer style.
+pub fn render(
+    glyphs: &Glyphs,
+    class: usize,
+    style: &WriterStyle,
+    noise: f64,
+    rng: &mut Rng,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), SIDE * SIDE);
+    let field = &glyphs.fields[class];
+    for y in 0..SIDE {
+        // shear: horizontal source offset grows with row
+        let shear_px = (style.shear * (y as f64 - SIDE as f64 / 2.0)).round() as i64;
+        for x in 0..SIDE {
+            let sx = (x as i64 + style.dx + shear_px).rem_euclid(SIDE as i64) as usize;
+            let sy = (y as i64 + style.dy).rem_euclid(SIDE as i64) as usize;
+            let v = field[sy * SIDE + sx] as f64 * style.gain
+                + style.bias
+                + rng.normal() * noise;
+            out[y * SIDE + x] = v as f32;
+        }
+    }
+}
+
+/// Generate a writer-structured dataset from existing glyphs, with
+/// writer RNG streams offset by `writer_base` (so train and test draw
+/// DISJOINT writer populations over the SAME glyph alphabet).
+pub fn generate_writers(
+    glyphs: &Glyphs,
+    spec: &FemnistSpec,
+    root: &Rng,
+    writer_base: u64,
+) -> Dataset {
+    let n = spec.writers * spec.samples_per_writer;
+    let sz = SIDE * SIDE;
+    let mut images = vec![0f32; n * sz];
+    let mut labels = Vec::with_capacity(n);
+    let mut writers = Vec::with_capacity(n);
+    let mut i = 0usize;
+    for w in 0..spec.writers {
+        let mut wrng = root.split(w as u64 + writer_base);
+        let style = make_writer_style(&mut wrng);
+        // Writer-specific label distribution (label skew).
+        let probs = wrng.dirichlet(spec.label_alpha, CLASSES);
+        for _ in 0..spec.samples_per_writer {
+            let class = wrng.categorical(&probs);
+            render(glyphs, class, &style, spec.noise, &mut wrng, &mut images[i * sz..(i + 1) * sz]);
+            labels.push(class as i32);
+            writers.push(w as u32);
+            i += 1;
+        }
+    }
+    Dataset { images, labels, shape: [SIDE, SIDE, 1], classes: CLASSES, writers }
+}
+
+/// Generate the full writer-structured dataset. Samples are grouped by
+/// writer (writer ids recorded in `Dataset::writers`).
+pub fn generate(spec: &FemnistSpec, seed: u64) -> Dataset {
+    let root = Rng::new(seed);
+    let mut grng = root.split_str("glyphs");
+    let glyphs = make_glyphs(&mut grng);
+    generate_writers(&glyphs, spec, &root, 1_000)
+}
+
+/// Train/test pair: SAME glyph alphabet (classes mean the same thing),
+/// DISJOINT writer populations (test measures generalization to unseen
+/// styles, like holding out authors in real F-EMNIST).
+pub fn train_test(spec: &FemnistSpec, test_writers: usize, seed: u64) -> (Dataset, Dataset) {
+    let root = Rng::new(seed);
+    let mut grng = root.split_str("glyphs");
+    let glyphs = make_glyphs(&mut grng);
+    let train = generate_writers(&glyphs, spec, &root, 1_000);
+    let test_spec = FemnistSpec { writers: test_writers, ..spec.clone() };
+    let test = generate_writers(&glyphs, &test_spec, &root, 5_000_000);
+    (train, test)
+}
+
+/// IID variant: same glyphs and styles, but every sample draws a uniform
+/// class and a *random* writer style — destroying the writer structure
+/// (used for the Fig. 5a IID arm).
+pub fn generate_iid(spec: &FemnistSpec, seed: u64) -> Dataset {
+    let root = Rng::new(seed);
+    let mut grng = root.split_str("glyphs");
+    let glyphs = make_glyphs(&mut grng);
+    generate_iid_from(&glyphs, spec, &root, "iid-samples")
+}
+
+/// IID train/test pair over a shared glyph alphabet.
+pub fn train_test_iid(spec: &FemnistSpec, test_samples: usize, seed: u64) -> (Dataset, Dataset) {
+    let root = Rng::new(seed);
+    let mut grng = root.split_str("glyphs");
+    let glyphs = make_glyphs(&mut grng);
+    let train = generate_iid_from(&glyphs, spec, &root, "iid-train");
+    let spw = spec.samples_per_writer.max(1);
+    let test_spec = FemnistSpec { writers: (test_samples / spw).max(1), ..spec.clone() };
+    let test = generate_iid_from(&glyphs, &test_spec, &root, "iid-test");
+    (train, test)
+}
+
+fn generate_iid_from(glyphs: &Glyphs, spec: &FemnistSpec, root: &Rng, stream: &str) -> Dataset {
+    let n = spec.writers * spec.samples_per_writer;
+    let sz = SIDE * SIDE;
+    let mut images = vec![0f32; n * sz];
+    let mut labels = Vec::with_capacity(n);
+    let mut srng = root.split_str(stream);
+    for i in 0..n {
+        let class = srng.below(CLASSES as u64) as usize;
+        let style = make_writer_style(&mut srng);
+        render(glyphs, class, &style, spec.noise, &mut srng, &mut images[i * sz..(i + 1) * sz]);
+        labels.push(class as i32);
+    }
+    Dataset {
+        images,
+        labels,
+        shape: [SIDE, SIDE, 1],
+        classes: CLASSES,
+        writers: (0..n).map(|i| (i % spec.writers) as u32).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_writers() {
+        let spec = FemnistSpec { writers: 5, samples_per_writer: 8, ..FemnistSpec::default_like() };
+        let d = generate(&spec, 1);
+        assert_eq!(d.len(), 40);
+        assert_eq!(d.shape, [28, 28, 1]);
+        assert_eq!(d.classes, 62);
+        assert_eq!(d.writers[0..8], [0; 8]);
+        assert_eq!(d.writers[8], 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = FemnistSpec { writers: 3, samples_per_writer: 4, ..FemnistSpec::default_like() };
+        let a = generate(&spec, 9);
+        let b = generate(&spec, 9);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn writers_have_label_skew() {
+        // With alpha=0.5 over 62 classes, each writer should concentrate
+        // on a small subset of classes — unlike the IID variant.
+        let spec = FemnistSpec { writers: 8, samples_per_writer: 50, label_alpha: 0.3, ..FemnistSpec::default_like() };
+        let d = generate(&spec, 2);
+        let mut max_share = 0f64;
+        for w in 0..spec.writers {
+            let mut hist = vec![0usize; CLASSES];
+            for i in 0..d.len() {
+                if d.writers[i] == w as u32 {
+                    hist[d.labels[i] as usize] += 1;
+                }
+            }
+            let top = *hist.iter().max().unwrap() as f64 / spec.samples_per_writer as f64;
+            max_share = max_share.max(top);
+        }
+        assert!(max_share > 0.2, "expected label concentration, got {max_share}");
+
+        let iid = generate_iid(&spec, 2);
+        let hist = iid.class_histogram();
+        let top = *hist.iter().max().unwrap() as f64 / iid.len() as f64;
+        assert!(top < 0.12, "iid should be flat, got {top}");
+    }
+
+    #[test]
+    fn glyph_classes_distinct() {
+        let mut rng = Rng::new(4);
+        let g = make_glyphs(&mut rng);
+        // distinct templates: normalized correlation below 0.9 for all pairs
+        for i in 0..8 {
+            for j in 0..i {
+                let (a, b) = (&g.fields[i], &g.fields[j]);
+                let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+                let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+                assert!(dot / (na * nb) < 0.9, "glyphs {i},{j} too similar");
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Federated dataset partitioners.
+//!
+//! Produces per-client index sets over a [`Dataset`]:
+//! * [`iid`] — shuffle and split evenly (paper: "training sets are evenly
+//!   distributed over N clients", CIFAR experiments);
+//! * [`dirichlet`] — label-skew non-IID with concentration `alpha`
+//!   (standard FL benchmark protocol);
+//! * [`by_writer`] — assign whole writers to clients (the natural
+//!   F-EMNIST non-IID split the paper uses).
+
+use crate::util::prng::Rng;
+
+use super::Dataset;
+
+/// Per-client sample indices.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub clients: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.clients.iter().map(|c| c.len()).sum()
+    }
+
+    /// Verify the partition is disjoint and within bounds.
+    pub fn validate(&self, dataset_len: usize) -> Result<(), String> {
+        let mut seen = vec![false; dataset_len];
+        for (ci, idx) in self.clients.iter().enumerate() {
+            for &i in idx {
+                if i >= dataset_len {
+                    return Err(format!("client {ci}: index {i} out of bounds"));
+                }
+                if seen[i] {
+                    return Err(format!("client {ci}: index {i} duplicated"));
+                }
+                seen[i] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Label histogram per client (for non-IID diagnostics).
+    pub fn label_histograms(&self, ds: &Dataset) -> Vec<Vec<usize>> {
+        self.clients
+            .iter()
+            .map(|idx| {
+                let mut h = vec![0usize; ds.classes];
+                for &i in idx {
+                    h[ds.labels[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+}
+
+/// IID: shuffle indices and deal them out evenly. Trailing remainder
+/// samples (fewer than n_clients) are dropped so all clients hold equally
+/// sized datasets, matching the paper's |D_i| = |D_j| assumption.
+pub fn iid(ds: &Dataset, n_clients: usize, rng: &mut Rng) -> Partition {
+    assert!(n_clients > 0);
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    rng.shuffle(&mut idx);
+    let per = ds.len() / n_clients;
+    let clients = (0..n_clients)
+        .map(|c| idx[c * per..(c + 1) * per].to_vec())
+        .collect();
+    Partition { clients }
+}
+
+/// Dirichlet label-skew: for each class, split its samples across clients
+/// with proportions ~ Dir(alpha). Smaller alpha = more skew.
+pub fn dirichlet(ds: &Dataset, n_clients: usize, alpha: f64, rng: &mut Rng) -> Partition {
+    assert!(n_clients > 0);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for mut class_idx in by_class {
+        rng.shuffle(&mut class_idx);
+        let props = rng.dirichlet(alpha, n_clients);
+        // Convert proportions to contiguous cut points.
+        let n = class_idx.len();
+        let mut start = 0usize;
+        let mut acc = 0f64;
+        for (c, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if c + 1 == n_clients { n } else { (acc * n as f64).round() as usize };
+            let end = end.clamp(start, n);
+            clients[c].extend_from_slice(&class_idx[start..end]);
+            start = end;
+        }
+    }
+    for c in &mut clients {
+        rng.shuffle(c);
+    }
+    Partition { clients }
+}
+
+/// By-writer: whole writers are dealt to clients round-robin after a
+/// shuffle; every sample of a writer lands on the same client.
+pub fn by_writer(ds: &Dataset, n_clients: usize, rng: &mut Rng) -> Partition {
+    assert!(n_clients > 0);
+    let max_writer = ds.writers.iter().copied().max().unwrap_or(0) as usize;
+    let mut writer_order: Vec<usize> = (0..=max_writer).collect();
+    rng.shuffle(&mut writer_order);
+    let mut writer_to_client = vec![0usize; max_writer + 1];
+    for (pos, &w) in writer_order.iter().enumerate() {
+        writer_to_client[w] = pos % n_clients;
+    }
+    let mut clients: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for (i, &w) in ds.writers.iter().enumerate() {
+        clients[writer_to_client[w as usize]].push(i);
+    }
+    Partition { clients }
+}
+
+/// Trim every client's shard to the same length (the paper's equal-|D_i|
+/// assumption); useful after dirichlet/by_writer which produce skewed
+/// shard sizes.
+pub fn equalize(p: &mut Partition) {
+    if let Some(min) = p.clients.iter().map(|c| c.len()).min() {
+        for c in &mut p.clients {
+            c.truncate(min);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::femnist::{generate, FemnistSpec};
+    use crate::data::synthetic::{generate as gen_syn, SyntheticSpec};
+
+    fn ds() -> Dataset {
+        let spec = SyntheticSpec { height: 4, width: 4, channels: 1, classes: 5, ..SyntheticSpec::cifar_like() };
+        gen_syn(&spec, 100, 1)
+    }
+
+    #[test]
+    fn iid_even_and_disjoint() {
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let p = iid(&d, 5, &mut rng);
+        assert_eq!(p.n_clients(), 5);
+        assert!(p.clients.iter().all(|c| c.len() == 20));
+        p.validate(d.len()).unwrap();
+    }
+
+    #[test]
+    fn iid_drops_remainder() {
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let p = iid(&d, 3, &mut rng); // 100/3 = 33
+        assert!(p.clients.iter().all(|c| c.len() == 33));
+        assert_eq!(p.total(), 99);
+    }
+
+    #[test]
+    fn dirichlet_disjoint_and_skewed() {
+        let d = ds();
+        let mut rng = Rng::new(3);
+        let p = dirichlet(&d, 4, 0.2, &mut rng);
+        p.validate(d.len()).unwrap();
+        assert_eq!(p.total(), d.len());
+        // With small alpha, at least one client must be visibly skewed:
+        // top class share > 2x the uniform share.
+        let hists = p.label_histograms(&d);
+        let skewed = hists.iter().any(|h| {
+            let tot: usize = h.iter().sum();
+            tot > 0 && *h.iter().max().unwrap() as f64 / tot as f64 > 2.0 / 5.0
+        });
+        assert!(skewed, "{hists:?}");
+    }
+
+    #[test]
+    fn dirichlet_large_alpha_approaches_iid() {
+        let d = ds();
+        let mut rng = Rng::new(4);
+        let p = dirichlet(&d, 4, 1000.0, &mut rng);
+        p.validate(d.len()).unwrap();
+        for h in p.label_histograms(&d) {
+            let tot: usize = h.iter().sum();
+            let top = *h.iter().max().unwrap() as f64 / tot as f64;
+            assert!(top < 0.35, "{h:?}");
+        }
+    }
+
+    #[test]
+    fn by_writer_keeps_writers_whole() {
+        let spec = FemnistSpec { writers: 9, samples_per_writer: 10, ..FemnistSpec::default_like() };
+        let d = generate(&spec, 5);
+        let mut rng = Rng::new(6);
+        let p = by_writer(&d, 3, &mut rng);
+        p.validate(d.len()).unwrap();
+        assert_eq!(p.total(), d.len());
+        // each writer's samples all on one client
+        for (ci, idx) in p.clients.iter().enumerate() {
+            for &i in idx {
+                let w = d.writers[i];
+                for (cj, idx2) in p.clients.iter().enumerate() {
+                    if ci != cj {
+                        assert!(idx2.iter().all(|&k| d.writers[k] != w));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn equalize_trims() {
+        let mut p = Partition { clients: vec![vec![0, 1, 2], vec![3], vec![4, 5]] };
+        equalize(&mut p);
+        assert!(p.clients.iter().all(|c| c.len() == 1));
+    }
+}

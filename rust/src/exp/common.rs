@@ -1,0 +1,565 @@
+//! Shared experiment harness: scales, dataset construction, engine
+//! caching, cached runs, and report formatting.
+//!
+//! Every figure/table driver goes through [`run_cached`]: a run is keyed
+//! by its full configuration and persisted as JSON under
+//! `results/cache/`, so drivers that share runs (Fig. 4 / Fig. 9 /
+//! Table V) never retrain, and interrupted sweeps resume for free.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::coordinator::config::{ArrivalOrder, TrainConfig};
+use crate::coordinator::methods::Method;
+use crate::coordinator::round::{Trainer, TrainerSetup};
+use crate::data::partition::{by_writer, dirichlet, equalize, iid, Partition};
+use crate::data::synthetic::{train_test, SyntheticSpec};
+use crate::data::{femnist, Dataset};
+use crate::metrics::recorder::{RoundRecord, RunRecord};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use crate::sim::netmodel::NetModel;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Experiment fidelity preset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds — CI smoke (tiny data, few rounds).
+    Quick,
+    /// Minutes — the default for `make figures`; trends visible.
+    Ci,
+    /// The paper's full setting (hours on this box; documented).
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "quick" => Some(Scale::Quick),
+            "ci" => Some(Scale::Ci),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Scale {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Scale::Quick => "quick",
+            Scale::Ci => "ci",
+            Scale::Paper => "paper",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Per-dataset workload sizes at a given scale.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub train_per_client: usize,
+    pub test: usize,
+    pub rounds: usize,
+    pub seeds: usize,
+    pub eval_every: usize,
+    pub eval_max_batches: usize,
+}
+
+pub fn cifar_workload(scale: Scale) -> Workload {
+    match scale {
+        Scale::Quick => Workload {
+            train_per_client: 100,
+            test: 100,
+            rounds: 4,
+            seeds: 1,
+            eval_every: 2,
+            eval_max_batches: 2,
+        },
+        Scale::Ci => Workload {
+            train_per_client: 400,
+            test: 400,
+            rounds: 12,
+            seeds: 1,
+            eval_every: 3,
+            eval_max_batches: 4,
+        },
+        Scale::Paper => Workload {
+            train_per_client: 10_000,
+            test: 10_000,
+            rounds: 400,
+            seeds: 5,
+            eval_every: 10,
+            eval_max_batches: 0,
+        },
+    }
+}
+
+pub fn femnist_workload(scale: Scale) -> Workload {
+    match scale {
+        Scale::Quick => Workload {
+            train_per_client: 60,
+            test: 120,
+            rounds: 8,
+            seeds: 1,
+            eval_every: 4,
+            eval_max_batches: 6,
+        },
+        Scale::Ci => Workload {
+            train_per_client: 200,
+            test: 600,
+            rounds: 220,
+            seeds: 1,
+            eval_every: 20,
+            eval_max_batches: 20,
+        },
+        Scale::Paper => Workload {
+            train_per_client: 240,
+            test: 4_000,
+            rounds: 4_000,
+            seeds: 5,
+            eval_every: 100,
+            eval_max_batches: 0,
+        },
+    }
+}
+
+/// How a dataset is distributed over clients.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dist {
+    Iid,
+    /// Dirichlet label skew (CIFAR non-IID arm of Table V).
+    NonIidDirichlet,
+    /// Natural writer split (F-EMNIST non-IID).
+    NonIidWriter,
+}
+
+impl Dist {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Dist::Iid => "iid",
+            Dist::NonIidDirichlet => "dir",
+            Dist::NonIidWriter => "writer",
+        }
+    }
+}
+
+/// One fully-specified run (the cache key).
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub dataset: String, // "cifar" | "femnist"
+    pub aux: String,
+    pub method: Method,
+    pub h: usize,
+    pub n_clients: usize,
+    pub participation: usize, // 0 = all
+    pub dist: Dist,
+    pub arrival: ArrivalOrder,
+    pub lr0: f64,
+    pub seed: u64,
+    pub workload: Workload,
+}
+
+impl RunSpec {
+    pub fn key(&self) -> String {
+        let arr = match self.arrival {
+            ArrivalOrder::ByDelay => "delay",
+            ArrivalOrder::ClientIndex => "index",
+            ArrivalOrder::Shuffled => "shuf",
+        };
+        format!(
+            "{}-{}-{}-h{}-n{}-p{}-{}-{}-lr{}-r{}-d{}-t{}-s{}",
+            self.dataset,
+            self.aux,
+            self.method,
+            self.h,
+            self.n_clients,
+            self.participation,
+            self.dist.tag(),
+            arr,
+            self.lr0,
+            self.workload.rounds,
+            self.workload.train_per_client,
+            self.workload.test,
+            self.seed
+        )
+    }
+
+    pub fn label(&self) -> String {
+        if self.method == Method::CseFsl {
+            format!("{} h={}", self.method, self.h)
+        } else {
+            self.method.to_string()
+        }
+    }
+}
+
+/// Engine + manifest cache shared by all drivers in one process.
+pub struct Harness {
+    pub manifest: Manifest,
+    pub rt: Rc<PjrtRuntime>,
+    engines: BTreeMap<(String, String), Rc<PjrtEngine>>,
+    pub out_dir: PathBuf,
+}
+
+impl Harness {
+    pub fn new(out_dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = crate::runtime::artifacts_dir();
+        let manifest = Manifest::load(&dir)
+            .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
+        let rt = PjrtRuntime::new().map_err(|e| e.to_string())?;
+        std::fs::create_dir_all(out_dir.as_ref().join("cache"))
+            .map_err(|e| e.to_string())?;
+        Ok(Harness {
+            manifest,
+            rt,
+            engines: BTreeMap::new(),
+            out_dir: out_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    pub fn engine(&mut self, dataset: &str, aux: &str) -> Result<Rc<PjrtEngine>, String> {
+        let key = (dataset.to_string(), aux.to_string());
+        if let Some(e) = self.engines.get(&key) {
+            return Ok(e.clone());
+        }
+        let e = Rc::new(
+            PjrtEngine::new(self.rt.clone(), &self.manifest, dataset, aux)
+                .map_err(|e| e.to_string())?,
+        );
+        self.engines.insert(key, e.clone());
+        Ok(e)
+    }
+
+    /// Build train/test datasets + partition for a spec (deterministic in
+    /// the spec seed).
+    pub fn data(&self, spec: &RunSpec) -> (Dataset, Dataset, Partition) {
+        let w = &spec.workload;
+        let data_seed = 10_000 + spec.seed;
+        match spec.dataset.as_str() {
+            "cifar" => {
+                let total = w.train_per_client * spec.n_clients;
+                let (train, test) =
+                    train_test(&SyntheticSpec::cifar_like(), total, w.test, data_seed);
+                let mut rng = Rng::new(data_seed ^ 0x77);
+                let mut part = match spec.dist {
+                    Dist::Iid => iid(&train, spec.n_clients, &mut rng),
+                    Dist::NonIidDirichlet => {
+                        let mut p = dirichlet(&train, spec.n_clients, 0.3, &mut rng);
+                        equalize(&mut p);
+                        p
+                    }
+                    Dist::NonIidWriter => {
+                        panic!("writer split is a femnist concept")
+                    }
+                };
+                equalize(&mut part);
+                (train, test, part)
+            }
+            "femnist" => {
+                // writers sized to give each client ~train_per_client.
+                let spw = 40usize;
+                let writers =
+                    (w.train_per_client * spec.n_clients / spw).max(spec.n_clients);
+                let fs = femnist::FemnistSpec {
+                    writers,
+                    samples_per_writer: spw,
+                    ..femnist::FemnistSpec::default_like()
+                };
+                // Train/test share the glyph alphabet; test uses unseen
+                // writers (writer split) or fresh styles (IID).
+                let test_writers = (w.test / spw).max(1);
+                let _ = &test_writers;
+                let (train, test) = match spec.dist {
+                    Dist::NonIidWriter => femnist::train_test(&fs, test_writers, data_seed),
+                    _ => femnist::train_test_iid(&fs, w.test, data_seed),
+                };
+                let mut rng = Rng::new(data_seed ^ 0x99);
+                let mut part = match spec.dist {
+                    Dist::NonIidWriter => by_writer(&train, spec.n_clients, &mut rng),
+                    _ => iid(&train, spec.n_clients, &mut rng),
+                };
+                equalize(&mut part);
+                (train, test, part)
+            }
+            other => panic!("unknown dataset {other}"),
+        }
+    }
+
+    /// Run (or load from cache) one spec.
+    pub fn run_cached(&mut self, spec: &RunSpec) -> Result<RunRecord, String> {
+        let cache = self.out_dir.join("cache").join(format!("{}.json", spec.key()));
+        if let Ok(text) = std::fs::read_to_string(&cache) {
+            if let Ok(rec) = run_from_json(&text) {
+                return Ok(rec);
+            }
+        }
+        let engine = self.engine(&spec.dataset, &spec.aux)?;
+        let (train, test, partition) = self.data(spec);
+        let ds_cfg = self.manifest.config(&spec.dataset).map_err(|e| e.to_string())?;
+        let aux_cfg = ds_cfg.aux(&spec.aux).map_err(|e| e.to_string())?;
+        let w = &spec.workload;
+        // Aggregate once per local epoch (paper setting): epoch =
+        // batches_per_epoch local batches = bpe/h rounds.
+        let bpe = (w.train_per_client / engine_batch(&engine)).max(1);
+        let agg_every = (bpe / spec.h).max(1);
+        let cfg = TrainConfig {
+            method: spec.method,
+            h: spec.h,
+            rounds: w.rounds,
+            agg_every,
+            lr0: spec.lr0,
+            lr_decay_rate: 0.99,
+            lr_decay_every: 10,
+            server_lr_scale: 0.25,
+            clip: spec.method.default_clip(),
+            participation: spec.participation,
+            seed: spec.seed,
+            eval_every: w.eval_every,
+            eval_max_batches: w.eval_max_batches,
+            arrival: spec.arrival,
+            track_grad_norms: true,
+        };
+        let setup = TrainerSetup {
+            train: &train,
+            test: &test,
+            partition,
+            net: NetModel::edge_default(),
+            client_layout: Some(&ds_cfg.client_layout),
+            server_layout: Some(&ds_cfg.server_layout),
+            aux_layout: Some(&aux_cfg.layout),
+            label: spec.label(),
+        };
+        let mut trainer = Trainer::new(engine.as_ref(), cfg, setup)?;
+        let rec = trainer.run().map_err(|e| e.to_string())?;
+        let _ = std::fs::write(&cache, run_to_json(&rec).pretty());
+        Ok(rec)
+    }
+}
+
+fn engine_batch(e: &PjrtEngine) -> usize {
+    use crate::runtime::SplitEngine;
+    e.batch()
+}
+
+// ------------------------------------------------ RunRecord <-> JSON
+
+pub fn run_to_json(r: &RunRecord) -> Json {
+    let rounds = r
+        .rounds
+        .iter()
+        .map(|x| {
+            Json::obj(vec![
+                ("round", Json::num(x.round as f64)),
+                ("sim_time", Json::num(x.sim_time)),
+                ("lr", Json::num(x.lr)),
+                ("train_loss", Json::num(x.train_loss)),
+                ("server_loss", Json::num(x.server_loss)),
+                ("up_bytes", Json::num(x.up_bytes as f64)),
+                ("down_bytes", Json::num(x.down_bytes as f64)),
+                (
+                    "accuracy",
+                    x.accuracy.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "client_grad_norm",
+                    x.client_grad_norm.map(Json::num).unwrap_or(Json::Null),
+                ),
+                (
+                    "server_grad_norm",
+                    x.server_grad_norm.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("label", Json::str(r.label.clone())),
+        ("rounds", Json::Arr(rounds)),
+        ("final_accuracy", Json::num(r.final_accuracy)),
+        ("total_up_bytes", Json::num(r.total_up_bytes as f64)),
+        ("total_down_bytes", Json::num(r.total_down_bytes as f64)),
+        ("sim_time", Json::num(r.sim_time)),
+        ("server_idle_fraction", Json::num(r.server_idle_fraction)),
+        ("server_storage_params", Json::num(r.server_storage_params as f64)),
+    ])
+}
+
+pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    let err = |e: crate::util::json::JsonError| e.to_string();
+    let mut rounds = Vec::new();
+    for rj in j.get("rounds").map_err(err)?.as_arr().map_err(err)? {
+        let opt = |k: &str| rj.opt(k).and_then(|v| v.as_f64().ok());
+        rounds.push(RoundRecord {
+            round: rj.get("round").map_err(err)?.as_usize().map_err(err)?,
+            sim_time: rj.get("sim_time").map_err(err)?.as_f64().map_err(err)?,
+            lr: rj.get("lr").map_err(err)?.as_f64().map_err(err)?,
+            train_loss: rj.get("train_loss").map_err(err)?.as_f64().map_err(err)?,
+            server_loss: rj.get("server_loss").map_err(err)?.as_f64().map_err(err)?,
+            up_bytes: rj.get("up_bytes").map_err(err)?.as_f64().map_err(err)? as u64,
+            down_bytes: rj.get("down_bytes").map_err(err)?.as_f64().map_err(err)? as u64,
+            accuracy: opt("accuracy"),
+            client_grad_norm: opt("client_grad_norm"),
+            server_grad_norm: opt("server_grad_norm"),
+        });
+    }
+    Ok(RunRecord {
+        label: j.get("label").map_err(err)?.as_str().map_err(err)?.to_string(),
+        rounds,
+        final_accuracy: j.get("final_accuracy").map_err(err)?.as_f64().map_err(err)?,
+        total_up_bytes: j.get("total_up_bytes").map_err(err)?.as_f64().map_err(err)? as u64,
+        total_down_bytes: j.get("total_down_bytes").map_err(err)?.as_f64().map_err(err)?
+            as u64,
+        sim_time: j.get("sim_time").map_err(err)?.as_f64().map_err(err)?,
+        server_idle_fraction: j
+            .get("server_idle_fraction")
+            .map_err(err)?
+            .as_f64()
+            .map_err(err)?,
+        server_storage_params: j
+            .get("server_storage_params")
+            .map_err(err)?
+            .as_f64()
+            .map_err(err)? as usize,
+    })
+}
+
+/// Render several accuracy-vs-round curves side by side.
+pub fn curve_table(title: &str, runs: &[&RunRecord]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!("{:<8}", "round"));
+    for r in runs {
+        out.push_str(&format!("{:>16}", truncate(&r.label, 15)));
+    }
+    out.push('\n');
+    // union of eval rounds from the first run's grid
+    let grid: Vec<usize> = runs
+        .first()
+        .map(|r| r.accuracy_curve().iter().map(|&(x, _)| x).collect())
+        .unwrap_or_default();
+    for &round in &grid {
+        out.push_str(&format!("{round:<8}"));
+        for r in runs {
+            let v = r
+                .accuracy_curve()
+                .iter()
+                .find(|&&(x, _)| x == round)
+                .map(|&(_, a)| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into());
+            out.push_str(&format!("{v:>16}"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("{:<8}", "final"));
+    for r in runs {
+        out.push_str(&format!("{:>16}", format!("{:.1}%", r.final_accuracy * 100.0)));
+    }
+    out.push('\n');
+    out
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parse() {
+        assert_eq!(Scale::parse("ci"), Some(Scale::Ci));
+        assert_eq!(Scale::parse("nope"), None);
+        assert_eq!(Scale::Paper.to_string(), "paper");
+    }
+
+    #[test]
+    fn runspec_keys_unique_per_field() {
+        let base = RunSpec {
+            dataset: "cifar".into(),
+            aux: "cnn27".into(),
+            method: Method::CseFsl,
+            h: 5,
+            n_clients: 5,
+            participation: 0,
+            dist: Dist::Iid,
+            arrival: ArrivalOrder::ByDelay,
+            lr0: 0.05,
+            seed: 1,
+            workload: cifar_workload(Scale::Quick),
+        };
+        let mut other = base.clone();
+        other.h = 10;
+        assert_ne!(base.key(), other.key());
+        let mut other = base.clone();
+        other.dist = Dist::NonIidDirichlet;
+        assert_ne!(base.key(), other.key());
+        let mut other = base.clone();
+        other.seed = 2;
+        assert_ne!(base.key(), other.key());
+    }
+
+    #[test]
+    fn run_json_roundtrip() {
+        let rec = RunRecord {
+            label: "x".into(),
+            rounds: vec![RoundRecord {
+                round: 1,
+                sim_time: 0.25,
+                lr: 0.05,
+                train_loss: 2.0,
+                server_loss: 1.0,
+                up_bytes: 10,
+                down_bytes: 20,
+                accuracy: Some(0.5),
+                client_grad_norm: None,
+                server_grad_norm: Some(1.5),
+            }],
+            final_accuracy: 0.5,
+            total_up_bytes: 10,
+            total_down_bytes: 20,
+            sim_time: 0.25,
+            server_idle_fraction: 0.9,
+            server_storage_params: 123,
+        };
+        let rt = run_from_json(&run_to_json(&rec).pretty()).unwrap();
+        assert_eq!(rt.label, "x");
+        assert_eq!(rt.rounds.len(), 1);
+        assert_eq!(rt.rounds[0].accuracy, Some(0.5));
+        assert_eq!(rt.rounds[0].client_grad_norm, None);
+        assert_eq!(rt.server_storage_params, 123);
+    }
+
+    #[test]
+    fn curve_table_renders() {
+        let rec = RunRecord {
+            label: "CSE_FSL h=5".into(),
+            rounds: vec![RoundRecord {
+                round: 2,
+                sim_time: 0.0,
+                lr: 0.0,
+                train_loss: 0.0,
+                server_loss: 0.0,
+                up_bytes: 0,
+                down_bytes: 0,
+                accuracy: Some(0.42),
+                client_grad_norm: None,
+                server_grad_norm: None,
+            }],
+            final_accuracy: 0.42,
+            total_up_bytes: 0,
+            total_down_bytes: 0,
+            sim_time: 0.0,
+            server_idle_fraction: 0.0,
+            server_storage_params: 0,
+        };
+        let t = curve_table("fig", &[&rec]);
+        assert!(t.contains("42.0%"));
+        assert!(t.contains("CSE_FSL h=5"));
+    }
+}

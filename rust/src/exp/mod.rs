@@ -1,0 +1,5 @@
+//! Experiment drivers: one per paper figure/table (DESIGN.md §3 index).
+
+pub mod common;
+pub mod figures;
+pub mod tables;

@@ -1,0 +1,19 @@
+//! CSE-FSL: Communication and Storage Efficient Federated Split Learning.
+//!
+//! Rust reproduction of Mu & Shen (2025) as a three-layer stack:
+//! Pallas kernels (L1) and JAX split models (L2) are AOT-compiled to HLO
+//! at build time (`make artifacts`); this crate is the L3 coordinator that
+//! loads those artifacts via PJRT and runs the full federated-split-
+//! learning system — clients, event-triggered server, aggregation,
+//! communication/storage accounting, and every experiment in the paper.
+
+pub mod comm;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod storage;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,224 @@
+//! `cse-fsl` — launcher for the CSE-FSL reproduction.
+//!
+//! Subcommands:
+//!   run      one training run (any method/dataset/aux/h), prints the
+//!            round table and summary
+//!   figure   regenerate a paper figure (3|4|5|6|7|8|9|all)
+//!   table    regenerate a paper table (2|3|4|5|all)
+//!   inspect  show the AOT artifact manifest
+//!
+//! Everything requires `make artifacts` to have produced `artifacts/`.
+
+use cse_fsl::coordinator::config::ArrivalOrder;
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::exp::common::{cifar_workload, femnist_workload, Dist, Harness, RunSpec, Scale};
+use cse_fsl::exp::{figures, tables};
+use cse_fsl::util::cli::Command;
+use cse_fsl::util::logging;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Ok(level) = std::env::var("CSE_FSL_LOG") {
+        logging::set_level(logging::level_from_str(&level));
+    }
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("figure") => cmd_figure(&argv[1..]),
+        Some("table") => cmd_table(&argv[1..]),
+        Some("inspect") => cmd_inspect(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            eprintln!(
+                "cse-fsl — Communication and Storage Efficient Federated Split Learning\n\n\
+                 USAGE:\n  cse-fsl <run|figure|table|inspect> [args]\n\n\
+                 EXAMPLES:\n  cse-fsl run --dataset femnist --method cse --h 2 --rounds 20\n  \
+                 cse-fsl figure 4 --scale ci\n  cse-fsl table all\n  cse-fsl inspect"
+            );
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}; try --help");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let cmd = Command::new("cse-fsl run", "run one federated-split-learning training job")
+        .opt("dataset", "femnist", "cifar | femnist")
+        .opt("aux", "", "auxiliary arch (default: cnn27 for cifar, cnn8 for femnist)")
+        .opt("method", "cse", "mc | oc | an | cse")
+        .opt("h", "1", "local batches per smashed upload (CSE only for h>1)")
+        .opt("clients", "5", "number of clients")
+        .opt("participation", "0", "clients sampled per round (0 = all)")
+        .opt("dist", "iid", "iid | dir | writer")
+        .opt("rounds", "20", "communication rounds")
+        .opt("lr", "0.02", "initial learning rate")
+        .opt("seed", "1", "experiment seed")
+        .opt("scale", "ci", "workload preset: quick | ci | paper")
+        .opt("out", "results", "output directory")
+        .flag("shuffled-arrivals", "randomize server consumption order (Fig. 6)");
+    let args = match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{}", cmd.usage());
+            return 2;
+        }
+    };
+    let run = || -> Result<(), String> {
+        let dataset = args.get("dataset").unwrap().to_string();
+        let scale = Scale::parse(args.get("scale").unwrap()).ok_or("bad --scale")?;
+        let mut workload = match dataset.as_str() {
+            "cifar" => cifar_workload(scale),
+            "femnist" => femnist_workload(scale),
+            other => return Err(format!("unknown dataset {other}")),
+        };
+        workload.rounds = args.parse_as("rounds").map_err(|e| e.to_string())?;
+        let aux = match args.get("aux").unwrap() {
+            "" => if dataset == "cifar" { "cnn27" } else { "cnn8" }.to_string(),
+            a => a.to_string(),
+        };
+        let dist = match args.get("dist").unwrap() {
+            "iid" => Dist::Iid,
+            "dir" => Dist::NonIidDirichlet,
+            "writer" => Dist::NonIidWriter,
+            other => return Err(format!("unknown dist {other}")),
+        };
+        let spec = RunSpec {
+            dataset,
+            aux,
+            method: Method::parse(args.get("method").unwrap()).ok_or("bad --method")?,
+            h: args.parse_as("h").map_err(|e| e.to_string())?,
+            n_clients: args.parse_as("clients").map_err(|e| e.to_string())?,
+            participation: args.parse_as("participation").map_err(|e| e.to_string())?,
+            dist,
+            arrival: if args.flag("shuffled-arrivals") {
+                ArrivalOrder::Shuffled
+            } else {
+                ArrivalOrder::ByDelay
+            },
+            lr0: args.parse_as("lr").map_err(|e| e.to_string())?,
+            seed: args.parse_as("seed").map_err(|e| e.to_string())?,
+            workload,
+        };
+        let mut harness = Harness::new(args.get("out").unwrap())?;
+        let rec = harness.run_cached(&spec)?;
+        println!("== {} ==", rec.label);
+        println!("round  train_loss  server_loss  acc");
+        for r in &rec.rounds {
+            println!(
+                "{:>5}  {:>10.4}  {:>11.4}  {}",
+                r.round,
+                r.train_loss,
+                r.server_loss,
+                r.accuracy.map(|a| format!("{:.1}%", a * 100.0)).unwrap_or_else(|| "-".into())
+            );
+        }
+        println!(
+            "final accuracy {:.2}%   load {:.4} GB   storage {:.2} M params   sim {:.2}s (idle {:.0}%)",
+            rec.final_accuracy * 100.0,
+            rec.total_gb(),
+            rec.server_storage_params as f64 / 1e6,
+            rec.sim_time,
+            rec.server_idle_fraction * 100.0,
+        );
+        let csv = harness.out_dir.join(format!("run_{}.csv", rec.label.replace([' ', '='], "_")));
+        rec.write_csv(&csv).map_err(|e| e.to_string())?;
+        println!("per-round CSV: {}", csv.display());
+        Ok(())
+    };
+    run().map(|_| 0).unwrap_or_else(fail)
+}
+
+fn figure_table_args(argv: &[String], what: &str) -> Result<(String, Scale, String), String> {
+    let cmd =
+        Command::new(&format!("cse-fsl {what}"), &format!("regenerate a paper {what}"))
+            .positional("id", "which one (or 'all')")
+            .opt("scale", "ci", "quick | ci | paper")
+            .opt("out", "results", "output directory");
+    let args = cmd.parse(argv).map_err(|e| format!("{e}\n\n{}", cmd.usage()))?;
+    let id = args.positional("id").unwrap().to_string();
+    let scale = Scale::parse(args.get("scale").unwrap()).ok_or("bad --scale")?;
+    Ok((id, scale, args.get("out").unwrap().to_string()))
+}
+
+fn cmd_figure(argv: &[String]) -> i32 {
+    let run = || -> Result<(), String> {
+        let (id, scale, out) = figure_table_args(argv, "figure")?;
+        let mut harness = Harness::new(&out)?;
+        let ids: Vec<&str> = if id == "all" {
+            vec!["3", "4", "5", "6", "7", "8", "9"]
+        } else {
+            vec![id.as_str()]
+        };
+        for id in ids {
+            let report = match id {
+                "3" => figures::fig3_metrics(&mut harness, scale)?,
+                "4" => figures::fig4(&mut harness, scale)?,
+                "5" => figures::fig5(&mut harness, scale)?,
+                "6" => figures::fig6(&mut harness, scale)?,
+                "7" => figures::fig7(&mut harness, scale)?,
+                "8" => figures::fig8(&mut harness, scale)?,
+                "9" => figures::fig9(&mut harness, scale)?,
+                other => return Err(format!("no figure {other} (have 3-9)")),
+            };
+            println!("{report}");
+        }
+        println!("(series CSVs under {out}/)");
+        Ok(())
+    };
+    run().map(|_| 0).unwrap_or_else(fail)
+}
+
+fn cmd_table(argv: &[String]) -> i32 {
+    let run = || -> Result<(), String> {
+        let (id, scale, out) = figure_table_args(argv, "table")?;
+        let mut harness = Harness::new(&out)?;
+        let ids: Vec<&str> =
+            if id == "all" { vec!["2", "3", "4", "5"] } else { vec![id.as_str()] };
+        for id in ids {
+            let report = match id {
+                "2" => tables::table2_report(&mut harness)?,
+                "3" | "4" => tables::table34_report(&mut harness)?,
+                "5" => tables::table5_report(&mut harness, scale)?,
+                other => return Err(format!("no table {other} (have 2-5)")),
+            };
+            println!("{report}");
+        }
+        Ok(())
+    };
+    run().map(|_| 0).unwrap_or_else(fail)
+}
+
+fn cmd_inspect(_argv: &[String]) -> i32 {
+    let run = || -> Result<(), String> {
+        let dir = cse_fsl::runtime::artifacts_dir();
+        let manifest = cse_fsl::runtime::artifact::Manifest::load(&dir)
+            .map_err(|e| format!("{e}\nhint: run `make artifacts`"))?;
+        println!("artifacts: {}", dir.display());
+        for (name, cfg) in &manifest.configs {
+            println!(
+                "\n[{name}] batch={} input={:?} classes={} smashed={:?}",
+                cfg.batch, cfg.input, cfg.classes, cfg.smashed
+            );
+            println!(
+                "  client params {:>9}   server params {:>9}",
+                cfg.client_layout.total, cfg.server_layout.total
+            );
+            for (arch, aux) in &cfg.aux {
+                println!("  aux {arch:<6} params {:>9}", aux.size);
+            }
+            println!(
+                "  entries: {}",
+                cfg.entries.keys().cloned().collect::<Vec<_>>().join(", ")
+            );
+        }
+        Ok(())
+    };
+    run().map(|_| 0).unwrap_or_else(fail)
+}

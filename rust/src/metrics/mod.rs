@@ -1,0 +1,5 @@
+//! Metrics: accuracy evaluation, per-round recording, multi-seed summary.
+
+pub mod eval;
+pub mod recorder;
+pub mod summary;

@@ -1,0 +1,181 @@
+//! Per-round run records + JSON/CSV export.
+//!
+//! One [`RoundRecord`] per communication round; a [`RunRecord`] wraps a
+//! whole training run with its config echo and final summary. Figure
+//! drivers consume these to print the paper's series and to dump CSVs.
+
+use std::path::Path;
+
+use crate::util::csvio::Csv;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated wall-clock at round end (seconds).
+    pub sim_time: f64,
+    pub lr: f64,
+    /// Mean client local loss this round (auxiliary loss for AN/CSE,
+    /// split loss for MC/OC).
+    pub train_loss: f64,
+    /// Mean server loss over this round's event-triggered updates.
+    pub server_loss: f64,
+    /// Cumulative wire bytes.
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    /// Test accuracy if evaluated this round.
+    pub accuracy: Option<f64>,
+    /// Mean gradient-norm traces (Props 1-2 probes), if tracked.
+    pub client_grad_norm: Option<f64>,
+    pub server_grad_norm: Option<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+    pub final_accuracy: f64,
+    pub total_up_bytes: u64,
+    pub total_down_bytes: u64,
+    pub sim_time: f64,
+    pub server_idle_fraction: f64,
+    pub server_storage_params: usize,
+}
+
+impl RunRecord {
+    pub fn total_gb(&self) -> f64 {
+        (self.total_up_bytes + self.total_down_bytes) as f64 / 1e9
+    }
+
+    /// Accuracy series as (round, acc) points.
+    pub fn accuracy_curve(&self) -> Vec<(usize, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.accuracy.map(|a| (r.round, a)))
+            .collect()
+    }
+
+    /// Accuracy vs cumulative communication load in GB (Fig. 9 axes).
+    pub fn accuracy_vs_load(&self) -> Vec<(f64, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| {
+                r.accuracy.map(|a| ((r.up_bytes + r.down_bytes) as f64 / 1e9, a))
+            })
+            .collect()
+    }
+
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "round",
+            "sim_time",
+            "lr",
+            "train_loss",
+            "server_loss",
+            "up_bytes",
+            "down_bytes",
+            "accuracy",
+            "client_grad_norm",
+            "server_grad_norm",
+        ]);
+        for r in &self.rounds {
+            csv.row(&[
+                r.round.to_string(),
+                format!("{:.6}", r.sim_time),
+                format!("{:.6}", r.lr),
+                format!("{:.6}", r.train_loss),
+                format!("{:.6}", r.server_loss),
+                r.up_bytes.to_string(),
+                r.down_bytes.to_string(),
+                r.accuracy.map(|a| format!("{a:.4}")).unwrap_or_default(),
+                r.client_grad_norm.map(|g| format!("{g:.6}")).unwrap_or_default(),
+                r.server_grad_norm.map(|g| format!("{g:.6}")).unwrap_or_default(),
+            ]);
+        }
+        csv
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        self.to_csv().write_to(path)
+    }
+
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("rounds", Json::num(self.rounds.len() as f64)),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("total_gb", Json::num(self.total_gb())),
+            ("sim_time", Json::num(self.sim_time)),
+            ("server_idle_fraction", Json::num(self.server_idle_fraction)),
+            ("server_storage_params", Json::num(self.server_storage_params as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec() -> RunRecord {
+        RunRecord {
+            label: "test".into(),
+            rounds: vec![
+                RoundRecord {
+                    round: 1,
+                    sim_time: 0.5,
+                    lr: 0.1,
+                    train_loss: 2.0,
+                    server_loss: 2.1,
+                    up_bytes: 100,
+                    down_bytes: 50,
+                    accuracy: None,
+                    client_grad_norm: None,
+                    server_grad_norm: None,
+                },
+                RoundRecord {
+                    round: 2,
+                    sim_time: 1.0,
+                    lr: 0.1,
+                    train_loss: 1.5,
+                    server_loss: 1.6,
+                    up_bytes: 200,
+                    down_bytes: 100,
+                    accuracy: Some(0.8),
+                    client_grad_norm: Some(0.5),
+                    server_grad_norm: Some(0.4),
+                },
+            ],
+            final_accuracy: 0.8,
+            total_up_bytes: 200,
+            total_down_bytes: 100,
+            sim_time: 1.0,
+            server_idle_fraction: 0.25,
+            server_storage_params: 1_000,
+        }
+    }
+
+    #[test]
+    fn curves() {
+        let r = rec();
+        assert_eq!(r.accuracy_curve(), vec![(2, 0.8)]);
+        let load = r.accuracy_vs_load();
+        assert_eq!(load.len(), 1);
+        assert!((load[0].0 - 300e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = rec().to_csv();
+        assert_eq!(csv.n_rows(), 2);
+        let s = csv.to_string();
+        assert!(s.contains("round,sim_time"));
+        assert!(s.contains("0.8"));
+    }
+
+    #[test]
+    fn summary_json_fields() {
+        let j = rec().summary_json();
+        assert_eq!(j.get("final_accuracy").unwrap().as_f64().unwrap(), 0.8);
+        assert!(j.get("total_gb").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

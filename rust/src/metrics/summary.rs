@@ -1,0 +1,88 @@
+//! Multi-seed summary statistics (the paper reports mean ± std over five
+//! independent runs).
+
+/// mean ± std (population std, like numpy's default ddof=0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanStd {
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl MeanStd {
+    pub fn of(xs: &[f64]) -> MeanStd {
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        MeanStd { mean, std: var.sqrt(), n }
+    }
+
+    /// `76.52±0.41` formatting (paper Table V style, percent points).
+    pub fn fmt_pct(&self) -> String {
+        format!("{:.2}±{:.2}", self.mean * 100.0, self.std * 100.0)
+    }
+
+    pub fn fmt_plain(&self, digits: usize) -> String {
+        format!("{:.*}±{:.*}", digits, self.mean, digits, self.std)
+    }
+}
+
+/// Align several per-seed curves (sampled at identical x points) into a
+/// per-point MeanStd series. Curves must share x grids.
+pub fn curve_mean_std(curves: &[Vec<(usize, f64)>]) -> Vec<(usize, MeanStd)> {
+    assert!(!curves.is_empty());
+    let grid: Vec<usize> = curves[0].iter().map(|&(x, _)| x).collect();
+    for c in curves {
+        assert_eq!(
+            c.iter().map(|&(x, _)| x).collect::<Vec<_>>(),
+            grid,
+            "curves must share the x grid"
+        );
+    }
+    grid.iter()
+        .enumerate()
+        .map(|(i, &x)| {
+            let ys: Vec<f64> = curves.iter().map(|c| c[i].1).collect();
+            (x, MeanStd::of(&ys))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let m = MeanStd::of(&[1.0, 2.0, 3.0]);
+        assert!((m.mean - 2.0).abs() < 1e-12);
+        assert!((m.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(m.n, 3);
+    }
+
+    #[test]
+    fn formatting() {
+        let m = MeanStd::of(&[0.7652, 0.7693, 0.7611]);
+        let s = m.fmt_pct();
+        assert!(s.starts_with("76."), "{s}");
+        assert!(s.contains('±'));
+        assert_eq!(MeanStd::of(&[1.5]).fmt_plain(1), "1.5±0.0");
+    }
+
+    #[test]
+    fn curves_aggregate() {
+        let c1 = vec![(0, 0.1), (10, 0.5)];
+        let c2 = vec![(0, 0.3), (10, 0.7)];
+        let agg = curve_mean_std(&[c1, c2]);
+        assert_eq!(agg.len(), 2);
+        assert!((agg[0].1.mean - 0.2).abs() < 1e-12);
+        assert!((agg[1].1.mean - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "share the x grid")]
+    fn mismatched_grids_panic() {
+        curve_mean_std(&[vec![(0, 0.1)], vec![(1, 0.1)]]);
+    }
+}

@@ -1,0 +1,215 @@
+//! FedAvg aggregation over flat parameter vectors (paper Eq. (14)).
+//!
+//! The server aggregates client-side models and auxiliary networks after
+//! every C batches: x^{t+1} = (1/n) Σ_i x_i^{t+1}. Weighted variants are
+//! provided for partial participation with unequal shard sizes, and an
+//! in-place accumulator (`Accumulator`) keeps the hot aggregation loop
+//! allocation-free.
+
+/// Uniform FedAvg: mean of equally-weighted parameter vectors.
+pub fn fedavg(models: &[&[f32]]) -> Vec<f32> {
+    assert!(!models.is_empty(), "fedavg of zero models");
+    let n = models[0].len();
+    assert!(models.iter().all(|m| m.len() == n), "length mismatch");
+    let mut out = vec![0f32; n];
+    let inv = 1.0 / models.len() as f32;
+    for m in models {
+        for (o, &v) in out.iter_mut().zip(m.iter()) {
+            *o += v * inv;
+        }
+    }
+    out
+}
+
+/// Weighted FedAvg with per-model weights (normalized internally).
+pub fn fedavg_weighted(models: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "zero total weight");
+    let n = models[0].len();
+    let mut out = vec![0f32; n];
+    for (m, &w) in models.iter().zip(weights) {
+        assert_eq!(m.len(), n);
+        let scale = (w / total) as f32;
+        for (o, &v) in out.iter_mut().zip(m.iter()) {
+            *o += v * scale;
+        }
+    }
+    out
+}
+
+/// Streaming accumulator: clients can be folded in as they arrive
+/// (asynchronous aggregation) without holding all vectors alive.
+#[derive(Clone, Debug)]
+pub struct Accumulator {
+    sum: Vec<f64>,
+    weight: f64,
+}
+
+impl Accumulator {
+    pub fn new(len: usize) -> Self {
+        Accumulator { sum: vec![0f64; len], weight: 0.0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weight == 0.0
+    }
+
+    pub fn count_weight(&self) -> f64 {
+        self.weight
+    }
+
+    pub fn add(&mut self, model: &[f32], weight: f64) {
+        assert_eq!(model.len(), self.sum.len());
+        assert!(weight > 0.0);
+        for (s, &v) in self.sum.iter_mut().zip(model) {
+            *s += v as f64 * weight;
+        }
+        self.weight += weight;
+    }
+
+    /// Finalize into `out` (len must match) and reset the accumulator.
+    pub fn finish_into(&mut self, out: &mut [f32]) {
+        assert!(self.weight > 0.0, "finish with no contributions");
+        assert_eq!(out.len(), self.sum.len());
+        let inv = 1.0 / self.weight;
+        for (o, s) in out.iter_mut().zip(self.sum.iter()) {
+            *o = (*s * inv) as f32;
+        }
+        self.reset();
+    }
+
+    pub fn reset(&mut self) {
+        self.sum.iter_mut().for_each(|s| *s = 0.0);
+        self.weight = 0.0;
+    }
+}
+
+/// L2 norm of a parameter vector (used for convergence traces).
+pub fn l2_norm(v: &[f32]) -> f64 {
+    v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Max |a-b| — convergence/equality diagnostics in tests.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::{prng::Rng, prop};
+
+    #[test]
+    fn fedavg_mean() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [3.0f32, 2.0, 1.0];
+        assert_eq!(fedavg(&[&a, &b]), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn single_model_identity() {
+        let a = [0.5f32, -1.5];
+        assert_eq!(fedavg(&[&a]), a.to_vec());
+    }
+
+    #[test]
+    fn weighted_matches_uniform_when_equal() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        let u = fedavg(&[&a, &b]);
+        let w = fedavg_weighted(&[&a, &b], &[5.0, 5.0]);
+        assert_eq!(u, w);
+        let skew = fedavg_weighted(&[&a, &b], &[3.0, 1.0]);
+        assert!((skew[0] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulator_streaming_equals_batch() {
+        prop::check("accumulator == fedavg_weighted", |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let k = 1 + rng.below(6) as usize;
+            let models: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| rng.uniform() + 0.1).collect();
+            let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+            let batch = fedavg_weighted(&refs, &weights);
+            let mut acc = Accumulator::new(n);
+            for (m, &w) in models.iter().zip(&weights) {
+                acc.add(m, w);
+            }
+            let mut out = vec![0f32; n];
+            acc.finish_into(&mut out);
+            prop_assert!(
+                max_abs_diff(&batch, &out) < 1e-5,
+                "diff {}",
+                max_abs_diff(&batch, &out)
+            );
+            prop_assert!(acc.is_empty(), "accumulator not reset");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fedavg_idempotent_on_identical_models() {
+        prop::check("fedavg(x,x,..) == x", |rng| {
+            let n = 1 + rng.below(128) as usize;
+            let m: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let k = 1 + rng.below(5) as usize;
+            let refs: Vec<&[f32]> = (0..k).map(|_| m.as_slice()).collect();
+            let avg = fedavg(&refs);
+            prop_assert!(max_abs_diff(&avg, &m) < 1e-6, "not idempotent");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fedavg_permutation_invariant() {
+        prop::check("fedavg order-invariant", |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let k = 2 + rng.below(5) as usize;
+            let models: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let mut order: Vec<usize> = (0..k).collect();
+            rng.shuffle(&mut order);
+            let refs1: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+            let refs2: Vec<&[f32]> = order.iter().map(|&i| models[i].as_slice()).collect();
+            prop_assert!(
+                max_abs_diff(&fedavg(&refs1), &fedavg(&refs2)) < 1e-5,
+                "order changed result"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn norms() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fedavg_empty_panics() {
+        fedavg(&[]);
+    }
+
+    #[test]
+    fn rng_seeded_models_average_toward_mean() {
+        let mut rng = Rng::new(9);
+        let models: Vec<Vec<f32>> =
+            (0..32).map(|_| (0..16).map(|_| rng.normal() as f32).collect()).collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let avg = fedavg(&refs);
+        // mean of 32 N(0,1) coords has std 1/sqrt(32) ≈ 0.18
+        assert!(l2_norm(&avg) < 2.0);
+    }
+}

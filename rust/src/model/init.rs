@@ -1,0 +1,69 @@
+//! Parameter initialization from layout init specs.
+//!
+//! The Rust binary is self-contained after `make artifacts`: parameters
+//! are initialized here (He-normal convs / Glorot heads / zero biases, as
+//! recorded per-tensor by `python/compile/models.py`), not shipped from
+//! Python. Each model part gets its own derived RNG stream so client i's
+//! init is independent of client count and ordering.
+
+use crate::util::prng::Rng;
+
+use super::layout::{InitSpec, Layout};
+
+/// Initialize a flat parameter vector for `layout`.
+pub fn init_flat(layout: &Layout, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0f32; layout.total];
+    for t in &layout.tensors {
+        match t.init {
+            InitSpec::Zero => {}
+            InitSpec::Normal { std } => {
+                for v in &mut out[t.offset..t.offset + t.size] {
+                    *v = rng.normal_ms(0.0, std) as f32;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn layout() -> Layout {
+        Layout::from_json(
+            &Json::parse(
+                r#"[
+              {"name":"w","shape":[1000],"offset":0,"size":1000,
+               "init":{"kind":"normal","std":0.1}},
+              {"name":"b","shape":[10],"offset":1000,"size":10,
+               "init":{"kind":"zero"}}
+            ]"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn zero_tensors_zero_normal_tensors_scaled() {
+        let mut rng = Rng::new(1);
+        let p = init_flat(&layout(), &mut rng);
+        assert_eq!(p.len(), 1010);
+        assert!(p[1000..].iter().all(|&v| v == 0.0));
+        let mean = p[..1000].iter().sum::<f32>() / 1000.0;
+        let var = p[..1000].iter().map(|v| (v - mean).powi(2)).sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var.sqrt() - 0.1).abs() < 0.02, "{}", var.sqrt());
+    }
+
+    #[test]
+    fn deterministic_per_stream() {
+        let a = init_flat(&layout(), &mut Rng::new(2));
+        let b = init_flat(&layout(), &mut Rng::new(2));
+        let c = init_flat(&layout(), &mut Rng::new(3));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,121 @@
+//! Flat-parameter layout tables (the L2↔L3 ABI).
+//!
+//! The AOT manifest records, for each model part (client / server / aux),
+//! an ordered list of tensors with shapes, offsets into the flat f32
+//! vector, and init specs. Rust never needs tensor semantics — only this
+//! table — to initialize, aggregate, serialize, and byte-account models.
+
+use crate::util::json::{Json, JsonError};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum InitSpec {
+    Zero,
+    /// Gaussian with the given standard deviation.
+    Normal { std: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: InitSpec,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub tensors: Vec<TensorSpec>,
+    pub total: usize,
+}
+
+impl Layout {
+    pub fn from_json(j: &Json) -> Result<Layout, JsonError> {
+        let mut tensors = Vec::new();
+        let mut total = 0usize;
+        for item in j.as_arr()? {
+            let name = item.get("name")?.as_str()?.to_string();
+            let shape = item.get("shape")?.as_usize_vec()?;
+            let offset = item.get("offset")?.as_usize()?;
+            let size = item.get("size")?.as_usize()?;
+            let init_j = item.get("init")?;
+            let init = match init_j.get("kind")?.as_str()? {
+                "zero" => InitSpec::Zero,
+                "normal" => InitSpec::Normal { std: init_j.get("std")?.as_f64()? },
+                other => {
+                    return Err(JsonError::Access(format!("unknown init kind {other:?}")))
+                }
+            };
+            let expect: usize = shape.iter().product();
+            if expect != size {
+                return Err(JsonError::Access(format!(
+                    "tensor {name}: shape product {expect} != size {size}"
+                )));
+            }
+            if offset != total {
+                return Err(JsonError::Access(format!(
+                    "tensor {name}: offset {offset} != running total {total}"
+                )));
+            }
+            total += size;
+            tensors.push(TensorSpec { name, shape, offset, size, init });
+        }
+        Ok(Layout { tensors, total })
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorSpec> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// Bytes of one serialized parameter vector (f32).
+    pub fn bytes(&self) -> u64 {
+        (self.total * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout_json() -> Json {
+        Json::parse(
+            r#"[
+              {"name":"w","shape":[2,3],"offset":0,"size":6,
+               "init":{"kind":"normal","std":0.5}},
+              {"name":"b","shape":[3],"offset":6,"size":3,
+               "init":{"kind":"zero"}}
+            ]"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_totals() {
+        let l = Layout::from_json(&layout_json()).unwrap();
+        assert_eq!(l.total, 9);
+        assert_eq!(l.bytes(), 36);
+        assert_eq!(l.tensor("w").unwrap().shape, vec![2, 3]);
+        assert_eq!(l.tensor("b").unwrap().init, InitSpec::Zero);
+        assert!(l.tensor("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_inconsistent_offsets() {
+        let j = Json::parse(
+            r#"[{"name":"w","shape":[2],"offset":5,"size":2,
+                 "init":{"kind":"zero"}}]"#,
+        )
+        .unwrap();
+        assert!(Layout::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_size_mismatch() {
+        let j = Json::parse(
+            r#"[{"name":"w","shape":[2,2],"offset":0,"size":3,
+                 "init":{"kind":"zero"}}]"#,
+        )
+        .unwrap();
+        assert!(Layout::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-parameter plumbing: flat-vector [`layout`] tables (the L2↔L3
+//! ABI), He/Glorot [`init`] from manifest specs, and FedAvg
+//! [`aggregate`]-ion (paper Eq. (14)).
+
+pub mod aggregate;
+pub mod init;
+pub mod layout;

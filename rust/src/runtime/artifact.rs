@@ -1,0 +1,304 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) parsing.
+//!
+//! The manifest is emitted by `python/compile/aot.py` and is the complete
+//! description of what Python built: per-dataset model geometry, flat
+//! parameter layouts with init specs, and per-entry HLO file + signature.
+//! Loading it is the only coupling between the Rust binary and the Python
+//! build — there is no Python at run time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::layout::Layout;
+use crate::util::json::{Json, JsonError};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    #[error("manifest io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest parse error: {0}")]
+    Json(#[from] JsonError),
+    #[error("manifest: {0}")]
+    Invalid(String),
+}
+
+/// dtype of a tensor argument/result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype, ArtifactError> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => Err(ArtifactError::Invalid(format!("unsupported dtype {other:?}"))),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSig {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSig, ArtifactError> {
+        Ok(TensorSig {
+            shape: j.get("shape")?.as_usize_vec()?,
+            dtype: Dtype::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+}
+
+/// One lowered entry point: HLO file + argument/result signatures.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<TensorSig>,
+    pub results: Vec<TensorSig>,
+}
+
+impl Entry {
+    fn from_json(name: &str, dir: &Path, j: &Json) -> Result<Entry, ArtifactError> {
+        let file = dir.join(j.get("file")?.as_str()?);
+        let args = j
+            .get("args")?
+            .as_arr()?
+            .iter()
+            .map(TensorSig::from_json)
+            .collect::<Result<_, _>>()?;
+        let results = j
+            .get("results")?
+            .as_arr()?
+            .iter()
+            .map(TensorSig::from_json)
+            .collect::<Result<_, _>>()?;
+        Ok(Entry { name: name.to_string(), file, args, results })
+    }
+}
+
+/// Auxiliary-network variant: its layout + aux-specific entries.
+#[derive(Clone, Debug)]
+pub struct AuxConfig {
+    pub arch: String,
+    pub layout: Layout,
+    pub size: usize,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+/// One dataset configuration (cifar / femnist).
+#[derive(Clone, Debug)]
+pub struct DatasetConfig {
+    pub name: String,
+    pub batch: usize,
+    pub input: Vec<usize>,
+    pub classes: usize,
+    pub smashed: Vec<usize>,
+    pub smashed_size: usize,
+    pub client_layout: Layout,
+    pub server_layout: Layout,
+    pub entries: BTreeMap<String, Entry>,
+    pub aux: BTreeMap<String, AuxConfig>,
+}
+
+impl DatasetConfig {
+    pub fn input_len(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    /// Bytes of one sample's smashed data (f32).
+    pub fn smashed_bytes_per_sample(&self) -> u64 {
+        (self.smashed_size * 4) as u64
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entry, ArtifactError> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| ArtifactError::Invalid(format!("missing entry {name:?}")))
+    }
+
+    pub fn aux(&self, arch: &str) -> Result<&AuxConfig, ArtifactError> {
+        self.aux
+            .get(arch)
+            .ok_or_else(|| ArtifactError::Invalid(format!("missing aux arch {arch:?}")))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, DatasetConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ArtifactError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ArtifactError> {
+        let j = Json::parse(text)?;
+        let format = j.get("format")?.as_usize()?;
+        if format != 1 {
+            return Err(ArtifactError::Invalid(format!("unknown manifest format {format}")));
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cfg) in j.get("configs")?.as_obj()? {
+            let client_layout = Layout::from_json(cfg.get("client_layout")?)?;
+            let server_layout = Layout::from_json(cfg.get("server_layout")?)?;
+            let client_size = cfg.get("client_size")?.as_usize()?;
+            let server_size = cfg.get("server_size")?.as_usize()?;
+            if client_layout.total != client_size || server_layout.total != server_size {
+                return Err(ArtifactError::Invalid(format!(
+                    "{name}: layout totals disagree with sizes"
+                )));
+            }
+            let mut entries = BTreeMap::new();
+            for (ename, ej) in cfg.get("entries")?.as_obj()? {
+                entries.insert(ename.clone(), Entry::from_json(ename, &dir, ej)?);
+            }
+            let mut aux = BTreeMap::new();
+            for (arch, aj) in cfg.get("aux")?.as_obj()? {
+                let layout = Layout::from_json(aj.get("layout")?)?;
+                let size = aj.get("size")?.as_usize()?;
+                if layout.total != size {
+                    return Err(ArtifactError::Invalid(format!(
+                        "{name}/{arch}: aux layout total {} != size {size}",
+                        layout.total
+                    )));
+                }
+                let mut aentries = BTreeMap::new();
+                for (ename, ej) in aj.get("entries")?.as_obj()? {
+                    aentries.insert(ename.clone(), Entry::from_json(ename, &dir, ej)?);
+                }
+                aux.insert(
+                    arch.clone(),
+                    AuxConfig { arch: arch.clone(), layout, size, entries: aentries },
+                );
+            }
+            configs.insert(
+                name.clone(),
+                DatasetConfig {
+                    name: name.clone(),
+                    batch: cfg.get("batch")?.as_usize()?,
+                    input: cfg.get("input")?.as_usize_vec()?,
+                    classes: cfg.get("classes")?.as_usize()?,
+                    smashed: cfg.get("smashed")?.as_usize_vec()?,
+                    smashed_size: cfg.get("smashed_size")?.as_usize()?,
+                    client_layout,
+                    server_layout,
+                    entries,
+                    aux,
+                },
+            );
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&DatasetConfig, ArtifactError> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| ArtifactError::Invalid(format!("unknown dataset {name:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const MINI_MANIFEST: &str = r#"{
+      "format": 1,
+      "configs": {
+        "toy": {
+          "batch": 2, "input": [4, 4, 1], "classes": 3,
+          "smashed": [2, 2, 1], "smashed_size": 4,
+          "client_size": 6, "server_size": 3,
+          "client_layout": [
+            {"name":"w","shape":[2,3],"offset":0,"size":6,
+             "init":{"kind":"normal","std":0.1}}],
+          "server_layout": [
+            {"name":"v","shape":[3],"offset":0,"size":3,
+             "init":{"kind":"zero"}}],
+          "entries": {
+            "eval_step": {"file": "toy/eval_step.hlo.txt",
+              "args": [{"shape":[6],"dtype":"float32"}],
+              "results": [{"shape":[2,3],"dtype":"float32"}]}
+          },
+          "aux": {
+            "mlp": {
+              "size": 2,
+              "layout": [
+                {"name":"a","shape":[2],"offset":0,"size":2,
+                 "init":{"kind":"zero"}}],
+              "entries": {
+                "client_train_step": {"file": "toy/cts_mlp.hlo.txt",
+                  "args": [{"shape":[],"dtype":"int32"}],
+                  "results": [{"shape":[],"dtype":"float32"}]}
+              }
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI_MANIFEST, PathBuf::from("/a")).unwrap();
+        let c = m.config("toy").unwrap();
+        assert_eq!(c.batch, 2);
+        assert_eq!(c.input_len(), 16);
+        assert_eq!(c.smashed_bytes_per_sample(), 16);
+        assert_eq!(c.client_layout.total, 6);
+        let e = c.entry("eval_step").unwrap();
+        assert_eq!(e.file, PathBuf::from("/a/toy/eval_step.hlo.txt"));
+        assert_eq!(e.args[0].dtype, Dtype::F32);
+        assert_eq!(e.results[0].len(), 6);
+        let aux = c.aux("mlp").unwrap();
+        assert_eq!(aux.size, 2);
+        assert!(aux.entries.contains_key("client_train_step"));
+        assert!(c.aux("nope").is_err());
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = MINI_MANIFEST.replace("\"format\": 1", "\"format\": 99");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let bad = MINI_MANIFEST.replace("\"client_size\": 6", "\"client_size\": 7");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration-level check against the actual AOT output when the
+        // artifacts exist (CI runs `make artifacts` first).
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let cifar = m.config("cifar").unwrap();
+        assert_eq!(cifar.client_layout.total, 107_328);
+        assert_eq!(cifar.server_layout.total, 960_970);
+        assert_eq!(cifar.aux("mlp").unwrap().size, 23_050);
+        let fem = m.config("femnist").unwrap();
+        assert_eq!(fem.client_layout.total, 18_816);
+        assert_eq!(fem.server_layout.total, 1_187_774);
+        assert_eq!(fem.aux("cnn2").unwrap().size, 18_048);
+    }
+}

@@ -1,0 +1,417 @@
+//! Pure-Rust mock engine with transparent linear dynamics.
+//!
+//! Implements [`SplitEngine`] without PJRT so coordinator logic (routing,
+//! batching, event ordering, aggregation, accounting) can be tested and
+//! property-checked in microseconds. Dynamics are deliberately simple and
+//! analytically predictable:
+//!
+//! * each model part has a fixed target vector T (derived from a seed);
+//!   the "loss" of a step is ||params - T||²/(2·len) and the SGD update is
+//!   exact gradient descent on it, so params converge geometrically and
+//!   FedAvg of converging clients also converges (linear dynamics);
+//! * smashed data is an affine function of (mean(x_c), batch images) so
+//!   server steps depend on client state (ordering effects measurable);
+//! * eval logits score class c by -(distance of params to target) + a
+//!   per-sample signature so accuracy rises as training proceeds.
+
+use crate::util::prng::Rng;
+
+use super::{ClientStepOut, EngineError, ServerFwdBwdOut, ServerStepOut, SplitEngine};
+
+#[derive(Clone, Debug)]
+pub struct MockEngine {
+    pub batch: usize,
+    pub classes: usize,
+    pub input_len: usize,
+    pub smashed_len: usize,
+    target_client: Vec<f32>,
+    target_aux: Vec<f32>,
+    target_server: Vec<f32>,
+}
+
+impl MockEngine {
+    pub fn new(
+        batch: usize,
+        classes: usize,
+        input_len: usize,
+        smashed_len: usize,
+        client_size: usize,
+        aux_size: usize,
+        server_size: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let mk = |n: usize, rng: &mut Rng| (0..n).map(|_| rng.normal() as f32).collect();
+        MockEngine {
+            batch,
+            classes,
+            input_len,
+            smashed_len,
+            target_client: mk(client_size, &mut rng),
+            target_aux: mk(aux_size, &mut rng),
+            target_server: mk(server_size, &mut rng),
+        }
+    }
+
+    /// A small default geometry for tests.
+    pub fn small(seed: u64) -> Self {
+        MockEngine::new(4, 3, 8, 6, 32, 8, 24, seed)
+    }
+
+    fn check(&self, name: &str, len: usize, want: usize) -> Result<(), EngineError> {
+        if len != want {
+            return Err(EngineError::Shape(format!("{name}: len {len} != {want}")));
+        }
+        Ok(())
+    }
+
+    fn quad_step(params: &[f32], target: &[f32], lr: f32) -> (Vec<f32>, f32, f32) {
+        // loss = ||p - T||^2 / (2 len); grad = (p - T)/len
+        let n = params.len() as f32;
+        let mut new = Vec::with_capacity(params.len());
+        let mut loss = 0f32;
+        let mut gsq = 0f32;
+        for (&p, &t) in params.iter().zip(target) {
+            let g = (p - t) / n;
+            loss += (p - t) * (p - t);
+            gsq += g * g;
+            new.push(p - lr * g);
+        }
+        (new, loss / (2.0 * n), gsq.sqrt())
+    }
+
+    /// Target vectors (tests place models "at convergence").
+    pub fn targets(&self) -> (&[f32], &[f32], &[f32]) {
+        (&self.target_client, &self.target_aux, &self.target_server)
+    }
+
+    pub fn client_distance(&self, xc: &[f32]) -> f32 {
+        xc.iter()
+            .zip(&self.target_client)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn server_distance(&self, xs: &[f32]) -> f32 {
+        xs.iter()
+            .zip(&self.target_server)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+impl SplitEngine for MockEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn classes(&self) -> usize {
+        self.classes
+    }
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+    fn smashed_len(&self) -> usize {
+        self.smashed_len
+    }
+    fn client_size(&self) -> usize {
+        self.target_client.len()
+    }
+    fn server_size(&self) -> usize {
+        self.target_server.len()
+    }
+    fn aux_size(&self) -> usize {
+        self.target_aux.len()
+    }
+
+    fn client_train_step(
+        &self,
+        xc: &[f32],
+        ac: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        _seed: i32,
+    ) -> Result<ClientStepOut, EngineError> {
+        self.check("xc", xc.len(), self.client_size())?;
+        self.check("ac", ac.len(), self.aux_size())?;
+        self.check("images", images.len(), self.batch * self.input_len)?;
+        self.check("labels", labels.len(), self.batch)?;
+        let (mut new_client, l1, g1) = Self::quad_step(xc, &self.target_client, lr);
+        let (new_aux, l2, g2) = Self::quad_step(ac, &self.target_aux, lr);
+        // Weak data coupling: different mini-batches perturb the update
+        // differently (so clients genuinely diverge between aggregations)
+        // without disturbing convergence.
+        for (j, v) in new_client.iter_mut().enumerate() {
+            *v += 1e-3 * lr * images[(j * 7) % images.len()];
+        }
+        Ok(ClientStepOut {
+            new_client,
+            new_aux,
+            loss: l1 + l2,
+            grad_norm: (g1 * g1 + g2 * g2).sqrt(),
+        })
+    }
+
+    fn client_fwd(&self, xc: &[f32], images: &[f32], seed: i32) -> Result<Vec<f32>, EngineError> {
+        self.check("xc", xc.len(), self.client_size())?;
+        self.check("images", images.len(), self.batch * self.input_len)?;
+        let mean_xc: f32 = xc.iter().sum::<f32>() / xc.len() as f32;
+        // bounded seed jitter (dropout-mask stand-in): different seeds
+        // give different smashed data, equal seeds replay exactly.
+        let jitter = 0.01 * ((seed.rem_euclid(997)) as f32 / 997.0);
+        let mut out = Vec::with_capacity(self.batch * self.smashed_len);
+        for b in 0..self.batch {
+            for j in 0..self.smashed_len {
+                let img = images[b * self.input_len + (j % self.input_len)];
+                out.push(mean_xc + 0.5 * img + jitter);
+            }
+        }
+        Ok(out)
+    }
+
+    fn server_train_step(
+        &self,
+        xs: &[f32],
+        smashed: &[f32],
+        labels: &[i32],
+        lr: f32,
+        _seed: i32,
+    ) -> Result<ServerStepOut, EngineError> {
+        self.check("xs", xs.len(), self.server_size())?;
+        self.check("smashed", smashed.len(), self.batch * self.smashed_len)?;
+        self.check("labels", labels.len(), self.batch)?;
+        let (mut new_server, loss, grad_norm) = Self::quad_step(xs, &self.target_server, lr);
+        // Couple the update (weakly) to the arriving smashed data so
+        // update ORDER is observable in tests.
+        let s_mean: f32 = smashed.iter().sum::<f32>() / smashed.len() as f32;
+        for v in &mut new_server {
+            *v += 1e-4 * lr * s_mean;
+        }
+        Ok(ServerStepOut { new_server, loss, grad_norm })
+    }
+
+    fn server_fwd_bwd(
+        &self,
+        xs: &[f32],
+        smashed: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+        clip: f32,
+    ) -> Result<ServerFwdBwdOut, EngineError> {
+        let step = self.server_train_step(xs, smashed, labels, lr, seed)?;
+        // Cut-layer gradient points the smashed data toward zero (any
+        // fixed linear map works for coordinator testing).
+        let mut grad: Vec<f32> = smashed.iter().map(|&s| 0.1 * s).collect();
+        if clip > 0.0 {
+            let norm: f32 = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+            if norm > clip {
+                let scale = clip / norm;
+                grad.iter_mut().for_each(|g| *g *= scale);
+            }
+        }
+        Ok(ServerFwdBwdOut {
+            new_server: step.new_server,
+            grad_smashed: grad,
+            loss: step.loss,
+            grad_norm: step.grad_norm,
+        })
+    }
+
+    fn client_bwd(
+        &self,
+        xc: &[f32],
+        images: &[f32],
+        grad_smashed: &[f32],
+        lr: f32,
+        _seed: i32,
+        clip: f32,
+    ) -> Result<(Vec<f32>, f32), EngineError> {
+        self.check("xc", xc.len(), self.client_size())?;
+        self.check("images", images.len(), self.batch * self.input_len)?;
+        self.check("gsm", grad_smashed.len(), self.batch * self.smashed_len)?;
+        // Chain rule through the mock client_fwd: d smashed / d xc is
+        // uniform (1/len per element), plus the quadratic pull to target
+        // so MC/OC training also converges in mock-land.
+        let gsum: f32 = grad_smashed.iter().sum::<f32>() / xc.len() as f32;
+        let n = xc.len() as f32;
+        let mut new = Vec::with_capacity(xc.len());
+        let mut gsq = 0f32;
+        for (&p, &t) in xc.iter().zip(&self.target_client) {
+            let mut g = (p - t) / n + gsum * 1e-3;
+            if clip > 0.0 {
+                g = g.clamp(-clip, clip);
+            }
+            gsq += g * g;
+            new.push(p - lr * g);
+        }
+        Ok((new, gsq.sqrt()))
+    }
+
+    fn eval_step(&self, xc: &[f32], xs: &[f32], images: &[f32]) -> Result<Vec<f32>, EngineError> {
+        self.check("xc", xc.len(), self.client_size())?;
+        self.check("xs", xs.len(), self.server_size())?;
+        self.check("images", images.len(), self.batch * self.input_len)?;
+        // Per-sample true class signature: argmax over class buckets of
+        // the sample's pixel sums. The model "knows" it better as params
+        // approach targets: logits = signature * quality - noise(dist).
+        let dist = self.client_distance(xc) + self.server_distance(xs);
+        let quality = 1.0 / (1.0 + dist);
+        let mut logits = Vec::with_capacity(self.batch * self.classes);
+        for b in 0..self.batch {
+            let img = &images[b * self.input_len..(b + 1) * self.input_len];
+            for c in 0..self.classes {
+                let sig: f32 = img
+                    .iter()
+                    .skip(c)
+                    .step_by(self.classes)
+                    .sum();
+                // distance-dependent deterministic "confusion"
+                let confusion = ((b + c) as f32 * 0.7).sin() * dist * 0.1;
+                logits.push(sig * quality + confusion);
+            }
+        }
+        Ok(logits)
+    }
+
+    fn aux_eval_step(
+        &self,
+        xc: &[f32],
+        ac: &[f32],
+        images: &[f32],
+    ) -> Result<Vec<f32>, EngineError> {
+        self.check("ac", ac.len(), self.aux_size())?;
+        // Reuse eval_step quality with the aux distance instead.
+        let dist = self.client_distance(xc)
+            + ac.iter()
+                .zip(&self.target_aux)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt();
+        let quality = 1.0 / (1.0 + dist);
+        let mut logits = Vec::with_capacity(self.batch * self.classes);
+        for b in 0..self.batch {
+            let img = &images[b * self.input_len..(b + 1) * self.input_len];
+            for c in 0..self.classes {
+                let sig: f32 = img.iter().skip(c).step_by(self.classes).sum();
+                logits.push(sig * quality);
+            }
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zeros(e: &MockEngine) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>) {
+        (
+            vec![0.0; e.client_size()],
+            vec![0.0; e.aux_size()],
+            vec![0.0; e.server_size()],
+            vec![0.1; e.batch * e.input_len],
+            vec![0; e.batch],
+        )
+    }
+
+    #[test]
+    fn client_step_converges_to_target() {
+        let e = MockEngine::small(1);
+        let (mut xc, mut ac, _, x, y) = zeros(&e);
+        let d0 = e.client_distance(&xc);
+        for i in 0..200 {
+            let out = e.client_train_step(&xc, &ac, &x, &y, 4.0, i).unwrap();
+            xc = out.new_client;
+            ac = out.new_aux;
+        }
+        assert!(e.client_distance(&xc) < d0 * 0.2);
+    }
+
+    #[test]
+    fn server_step_converges_and_losses_decrease() {
+        let e = MockEngine::small(2);
+        let (xc, _, mut xs, x, y) = zeros(&e);
+        let sm = e.client_fwd(&xc, &x, 0).unwrap();
+        let mut losses = Vec::new();
+        for i in 0..50 {
+            let out = e.server_train_step(&xs, &sm, &y, 4.0, i).unwrap();
+            xs = out.new_server;
+            losses.push(out.loss);
+        }
+        assert!(losses.last().unwrap() < &losses[0]);
+    }
+
+    #[test]
+    fn shapes_are_enforced() {
+        let e = MockEngine::small(3);
+        let (xc, ac, _, x, y) = zeros(&e);
+        assert!(e.client_train_step(&xc[1..], &ac, &x, &y, 0.1, 0).is_err());
+        assert!(e.client_fwd(&xc, &x[1..], 0).is_err());
+        let sm = e.client_fwd(&xc, &x, 0).unwrap();
+        assert_eq!(sm.len(), e.batch() * e.smashed_len());
+        assert!(e.server_train_step(&xc, &sm, &y, 0.1, 0).is_err()); // wrong vec
+    }
+
+    #[test]
+    fn eval_quality_improves_with_training() {
+        let e = MockEngine::small(4);
+        let (xc0, _, xs0, x, _) = zeros(&e);
+        // aux_eval has no confusion term: signal magnitude rises
+        // monotonically as params approach targets.
+        let far = e.aux_eval_step(&xc0, &vec![0.0; e.aux_size()], &x).unwrap();
+        let near = e
+            .aux_eval_step(&e.target_client.clone(), &e.target_aux.clone(), &x)
+            .unwrap();
+        let mag = |v: &[f32]| v.iter().map(|x| x.abs()).sum::<f32>();
+        assert!(mag(&near) > mag(&far));
+        // eval_step is deterministic
+        let a = e.eval_step(&xc0, &xs0, &x).unwrap();
+        let b = e.eval_step(&xc0, &xs0, &x).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn clip_caps_grad_smashed() {
+        let e = MockEngine::small(5);
+        let (xc, _, xs, x, y) = zeros(&e);
+        let sm = e.client_fwd(&xc, &x, 0).unwrap();
+        let out = e.server_fwd_bwd(&xs, &sm, &y, 0.1, 0, 1e-4).unwrap();
+        let norm: f32 = out.grad_smashed.iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(norm <= 1e-4 * 1.001);
+    }
+
+    #[test]
+    fn server_update_depends_on_smashed_order_observably() {
+        let e = MockEngine::small(6);
+        let (xc, _, xs, x, y) = zeros(&e);
+        let sm1 = e.client_fwd(&xc, &x, 1).unwrap();
+        let sm2 = e.client_fwd(&xc, &x, 2).unwrap();
+        let a = e
+            .server_train_step(
+                &e.server_train_step(&xs, &sm1, &y, 0.5, 0).unwrap().new_server,
+                &sm2,
+                &y,
+                0.5,
+                0,
+            )
+            .unwrap()
+            .new_server;
+        let b = e
+            .server_train_step(
+                &e.server_train_step(&xs, &sm2, &y, 0.5, 0).unwrap().new_server,
+                &sm1,
+                &y,
+                0.5,
+                0,
+            )
+            .unwrap()
+            .new_server;
+        // different order, *slightly* different trajectory (paper Fig. 6:
+        // nearly identical, not bitwise identical)
+        assert!(crate::model::aggregate::max_abs_diff(&a, &b) > 0.0);
+        assert!(crate::model::aggregate::max_abs_diff(&a, &b) < 1e-2);
+    }
+}

@@ -1,0 +1,132 @@
+//! Runtime: loading and executing the AOT HLO artifacts via PJRT.
+//!
+//! * [`artifact`] — manifest parsing (what Python built).
+//! * [`pjrt`] — the real engine: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile → execute.
+//! * [`mock`] — a pure-Rust engine with linear dynamics, implementing the
+//!   same [`SplitEngine`] trait, for fast coordinator tests/properties.
+//!
+//! The coordinator is generic over [`SplitEngine`], the six-entry compute
+//! interface of a split model (DESIGN.md L2 table).
+
+pub mod artifact;
+pub mod mock;
+pub mod pjrt;
+
+use std::path::PathBuf;
+
+/// Resolve the artifacts directory: `$CSE_FSL_ARTIFACTS` or
+/// `<workspace>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("CSE_FSL_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("artifact error: {0}")]
+    Artifact(#[from] artifact::ArtifactError),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+}
+
+/// Output of one local client step (Eq. (8)).
+#[derive(Clone, Debug)]
+pub struct ClientStepOut {
+    pub new_client: Vec<f32>,
+    pub new_aux: Vec<f32>,
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+/// Output of one event-triggered server step (Eq. (11)).
+#[derive(Clone, Debug)]
+pub struct ServerStepOut {
+    pub new_server: Vec<f32>,
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+/// Output of the SplitFed server fwd+bwd (FSL_MC / FSL_OC).
+#[derive(Clone, Debug)]
+pub struct ServerFwdBwdOut {
+    pub new_server: Vec<f32>,
+    pub grad_smashed: Vec<f32>,
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+/// The six-entry compute interface of one (dataset, aux) configuration.
+///
+/// All tensors are flat `Vec<f32>` / `Vec<i32>` in the layouts fixed by
+/// the manifest; batch size is baked in at AOT time.
+pub trait SplitEngine {
+    fn batch(&self) -> usize;
+    fn classes(&self) -> usize;
+    fn input_len(&self) -> usize; // per sample
+    fn smashed_len(&self) -> usize; // per sample
+    fn client_size(&self) -> usize;
+    fn server_size(&self) -> usize;
+    fn aux_size(&self) -> usize;
+
+    /// Eq. (8): local step on (x_c, a_c) with the auxiliary loss.
+    fn client_train_step(
+        &self,
+        xc: &[f32],
+        ac: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+    ) -> Result<ClientStepOut, EngineError>;
+
+    /// Smashed data g_{x_c}(z) for one batch.
+    fn client_fwd(&self, xc: &[f32], images: &[f32], seed: i32)
+        -> Result<Vec<f32>, EngineError>;
+
+    /// Eq. (11): server update from arriving smashed data.
+    fn server_train_step(
+        &self,
+        xs: &[f32],
+        smashed: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+    ) -> Result<ServerStepOut, EngineError>;
+
+    /// SplitFed server step: update AND return cut-layer gradient
+    /// (clip > 0 enables global-norm clipping — the FSL_OC fix).
+    fn server_fwd_bwd(
+        &self,
+        xs: &[f32],
+        smashed: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+        clip: f32,
+    ) -> Result<ServerFwdBwdOut, EngineError>;
+
+    /// SplitFed client step from the upstream cut-layer gradient; the
+    /// same `seed` as the matching client_fwd replays dropout.
+    fn client_bwd(
+        &self,
+        xc: &[f32],
+        images: &[f32],
+        grad_smashed: &[f32],
+        lr: f32,
+        seed: i32,
+        clip: f32,
+    ) -> Result<(Vec<f32>, f32), EngineError>;
+
+    /// Full-model logits (train=False), flattened [batch * classes].
+    fn eval_step(&self, xc: &[f32], xs: &[f32], images: &[f32])
+        -> Result<Vec<f32>, EngineError>;
+
+    /// Client-only logits through the auxiliary head.
+    fn aux_eval_step(&self, xc: &[f32], ac: &[f32], images: &[f32])
+        -> Result<Vec<f32>, EngineError>;
+}

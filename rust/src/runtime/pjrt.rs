@@ -1,0 +1,374 @@
+//! The real engine: AOT HLO artifacts executed on the PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** is parsed with
+//! `HloModuleProto::from_text_file` (the text parser reassigns the 64-bit
+//! instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1 would
+//! otherwise reject), compiled once per entry, and cached for the whole
+//! run. Marshalling is flat `Vec<f32>`/`Vec<i32>` ↔ `xla::Literal`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use super::artifact::{AuxConfig, DatasetConfig, Dtype, Entry, Manifest, TensorSig};
+use super::{ClientStepOut, EngineError, ServerFwdBwdOut, ServerStepOut, SplitEngine};
+
+fn xerr(e: xla::Error) -> EngineError {
+    EngineError::Xla(e.to_string())
+}
+
+/// Shared PJRT client + compiled-executable cache. One per process;
+/// engines for different (dataset, aux) configs share it.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// Compilation stats (observability; quoted in EXPERIMENTS.md).
+    pub compiles: RefCell<usize>,
+}
+
+impl PjrtRuntime {
+    pub fn new() -> Result<Rc<Self>, EngineError> {
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Rc::new(PjrtRuntime {
+            client,
+            exes: RefCell::new(HashMap::new()),
+            compiles: RefCell::new(0),
+        }))
+    }
+
+    fn executable(&self, entry: &Entry) -> Result<Rc<xla::PjRtLoadedExecutable>, EngineError> {
+        let key = entry.file.to_string_lossy().to_string();
+        if let Some(exe) = self.exes.borrow().get(&key) {
+            return Ok(exe.clone());
+        }
+        let path = entry.file.to_str().ok_or_else(|| {
+            EngineError::Xla(format!("non-utf8 artifact path {:?}", entry.file))
+        })?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(xerr)?);
+        *self.compiles.borrow_mut() += 1;
+        self.exes.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Argument value passed to an entry.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl Arg<'_> {
+    fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal, EngineError> {
+        let want: usize = sig.len();
+        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+        match (self, sig.dtype) {
+            (Arg::F32(v), Dtype::F32) => {
+                if v.len() != want {
+                    return Err(EngineError::Shape(format!(
+                        "f32 arg len {} != sig {want} (shape {:?})",
+                        v.len(),
+                        sig.shape
+                    )));
+                }
+                xla::Literal::vec1(v).reshape(&dims).map_err(xerr)
+            }
+            (Arg::I32(v), Dtype::I32) => {
+                if v.len() != want {
+                    return Err(EngineError::Shape(format!(
+                        "i32 arg len {} != sig {want}",
+                        v.len()
+                    )));
+                }
+                xla::Literal::vec1(v).reshape(&dims).map_err(xerr)
+            }
+            (Arg::ScalarF32(x), Dtype::F32) => {
+                if !sig.shape.is_empty() {
+                    return Err(EngineError::Shape("scalar f32 vs non-scalar sig".into()));
+                }
+                Ok(xla::Literal::scalar(*x))
+            }
+            (Arg::ScalarI32(x), Dtype::I32) => {
+                if !sig.shape.is_empty() {
+                    return Err(EngineError::Shape("scalar i32 vs non-scalar sig".into()));
+                }
+                Ok(xla::Literal::scalar(*x))
+            }
+            _ => Err(EngineError::Shape(format!(
+                "dtype mismatch against sig {:?}",
+                sig.dtype
+            ))),
+        }
+    }
+}
+
+/// A decoded result tensor.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Value {
+    pub fn into_f32(self) -> Result<Vec<f32>, EngineError> {
+        match self {
+            Value::F32(v) => Ok(v),
+            Value::I32(_) => Err(EngineError::Shape("expected f32 result".into())),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32, EngineError> {
+        match self {
+            Value::F32(v) if v.len() == 1 => Ok(v[0]),
+            _ => Err(EngineError::Shape("expected scalar f32 result".into())),
+        }
+    }
+}
+
+impl PjrtRuntime {
+    /// Execute `entry` with `args`, returning decoded result tensors.
+    pub fn exec(&self, entry: &Entry, args: &[Arg<'_>]) -> Result<Vec<Value>, EngineError> {
+        if args.len() != entry.args.len() {
+            return Err(EngineError::Shape(format!(
+                "{}: {} args provided, {} expected",
+                entry.name,
+                args.len(),
+                entry.args.len()
+            )));
+        }
+        let exe = self.executable(entry)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&entry.args)
+            .map(|(a, sig)| a.to_literal(sig))
+            .collect::<Result<_, _>>()?;
+        let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple().map_err(xerr)?;
+        if parts.len() != entry.results.len() {
+            return Err(EngineError::Shape(format!(
+                "{}: {} results, {} expected",
+                entry.name,
+                parts.len(),
+                entry.results.len()
+            )));
+        }
+        parts
+            .into_iter()
+            .zip(&entry.results)
+            .map(|(lit, sig)| {
+                Ok(match sig.dtype {
+                    Dtype::F32 => Value::F32(lit.to_vec::<f32>().map_err(xerr)?),
+                    Dtype::I32 => Value::I32(lit.to_vec::<i32>().map_err(xerr)?),
+                })
+            })
+            .collect()
+    }
+}
+
+/// [`SplitEngine`] backed by PJRT for one (dataset, aux) configuration.
+pub struct PjrtEngine {
+    rt: Rc<PjrtRuntime>,
+    cfg: DatasetConfig,
+    aux: AuxConfig,
+}
+
+impl PjrtEngine {
+    pub fn new(
+        rt: Rc<PjrtRuntime>,
+        manifest: &Manifest,
+        dataset: &str,
+        aux_arch: &str,
+    ) -> Result<Self, EngineError> {
+        let cfg = manifest.config(dataset)?.clone();
+        let aux = cfg.aux(aux_arch)?.clone();
+        Ok(PjrtEngine { rt, cfg, aux })
+    }
+
+    fn shared(&self, name: &str) -> Result<&Entry, EngineError> {
+        Ok(self.cfg.entry(name)?)
+    }
+
+    fn aux_entry(&self, name: &str) -> Result<&Entry, EngineError> {
+        self.aux
+            .entries
+            .get(name)
+            .ok_or_else(|| EngineError::Shape(format!("missing aux entry {name:?}")))
+    }
+
+    pub fn dataset(&self) -> &str {
+        &self.cfg.name
+    }
+
+    pub fn aux_arch(&self) -> &str {
+        &self.aux.arch
+    }
+
+    pub fn config(&self) -> &DatasetConfig {
+        &self.cfg
+    }
+
+    pub fn runtime(&self) -> &Rc<PjrtRuntime> {
+        &self.rt
+    }
+}
+
+impl SplitEngine for PjrtEngine {
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+    fn classes(&self) -> usize {
+        self.cfg.classes
+    }
+    fn input_len(&self) -> usize {
+        self.cfg.input_len()
+    }
+    fn smashed_len(&self) -> usize {
+        self.cfg.smashed_size
+    }
+    fn client_size(&self) -> usize {
+        self.cfg.client_layout.total
+    }
+    fn server_size(&self) -> usize {
+        self.cfg.server_layout.total
+    }
+    fn aux_size(&self) -> usize {
+        self.aux.size
+    }
+
+    fn client_train_step(
+        &self,
+        xc: &[f32],
+        ac: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+    ) -> Result<ClientStepOut, EngineError> {
+        let entry = self.aux_entry("client_train_step")?;
+        let mut out = self.rt.exec(
+            entry,
+            &[
+                Arg::F32(xc),
+                Arg::F32(ac),
+                Arg::F32(images),
+                Arg::I32(labels),
+                Arg::ScalarF32(lr),
+                Arg::ScalarI32(seed),
+            ],
+        )?;
+        let grad_norm = out.pop().unwrap().scalar_f32()?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        let new_aux = out.pop().unwrap().into_f32()?;
+        let new_client = out.pop().unwrap().into_f32()?;
+        Ok(ClientStepOut { new_client, new_aux, loss, grad_norm })
+    }
+
+    fn client_fwd(&self, xc: &[f32], images: &[f32], seed: i32) -> Result<Vec<f32>, EngineError> {
+        let entry = self.shared("client_fwd")?;
+        let mut out =
+            self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(images), Arg::ScalarI32(seed)])?;
+        out.pop().unwrap().into_f32()
+    }
+
+    fn server_train_step(
+        &self,
+        xs: &[f32],
+        smashed: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+    ) -> Result<ServerStepOut, EngineError> {
+        let entry = self.shared("server_train_step")?;
+        let mut out = self.rt.exec(
+            entry,
+            &[
+                Arg::F32(xs),
+                Arg::F32(smashed),
+                Arg::I32(labels),
+                Arg::ScalarF32(lr),
+                Arg::ScalarI32(seed),
+            ],
+        )?;
+        let grad_norm = out.pop().unwrap().scalar_f32()?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        let new_server = out.pop().unwrap().into_f32()?;
+        Ok(ServerStepOut { new_server, loss, grad_norm })
+    }
+
+    fn server_fwd_bwd(
+        &self,
+        xs: &[f32],
+        smashed: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i32,
+        clip: f32,
+    ) -> Result<ServerFwdBwdOut, EngineError> {
+        let entry = self.shared("server_fwd_bwd")?;
+        let mut out = self.rt.exec(
+            entry,
+            &[
+                Arg::F32(xs),
+                Arg::F32(smashed),
+                Arg::I32(labels),
+                Arg::ScalarF32(lr),
+                Arg::ScalarI32(seed),
+                Arg::ScalarF32(clip),
+            ],
+        )?;
+        let grad_norm = out.pop().unwrap().scalar_f32()?;
+        let loss = out.pop().unwrap().scalar_f32()?;
+        let grad_smashed = out.pop().unwrap().into_f32()?;
+        let new_server = out.pop().unwrap().into_f32()?;
+        Ok(ServerFwdBwdOut { new_server, grad_smashed, loss, grad_norm })
+    }
+
+    fn client_bwd(
+        &self,
+        xc: &[f32],
+        images: &[f32],
+        grad_smashed: &[f32],
+        lr: f32,
+        seed: i32,
+        clip: f32,
+    ) -> Result<(Vec<f32>, f32), EngineError> {
+        let entry = self.shared("client_bwd")?;
+        let mut out = self.rt.exec(
+            entry,
+            &[
+                Arg::F32(xc),
+                Arg::F32(images),
+                Arg::F32(grad_smashed),
+                Arg::ScalarF32(lr),
+                Arg::ScalarI32(seed),
+                Arg::ScalarF32(clip),
+            ],
+        )?;
+        let gnorm = out.pop().unwrap().scalar_f32()?;
+        let new_client = out.pop().unwrap().into_f32()?;
+        Ok((new_client, gnorm))
+    }
+
+    fn eval_step(&self, xc: &[f32], xs: &[f32], images: &[f32]) -> Result<Vec<f32>, EngineError> {
+        let entry = self.shared("eval_step")?;
+        let mut out = self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(xs), Arg::F32(images)])?;
+        out.pop().unwrap().into_f32()
+    }
+
+    fn aux_eval_step(
+        &self,
+        xc: &[f32],
+        ac: &[f32],
+        images: &[f32],
+    ) -> Result<Vec<f32>, EngineError> {
+        let entry = self.aux_entry("aux_eval_step")?;
+        let mut out = self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(ac), Arg::F32(images)])?;
+        out.pop().unwrap().into_f32()
+    }
+}

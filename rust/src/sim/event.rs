@@ -1,0 +1,154 @@
+//! Deterministic event-driven simulation clock.
+//!
+//! The paper's asynchronous claims (Fig. 3, Fig. 6) are about *arrival
+//! orders and idle time* under heterogeneous client compute/network
+//! delays. A binary-heap event queue reproduces those schedules exactly
+//! and reproducibly — and lets the coordinator measure wall-clock-style
+//! metrics (server idle time, straggler stalls) without real multi-machine
+//! nondeterminism. Ties are broken by insertion sequence so equal-time
+//! events keep FIFO order.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds.
+pub type SimTime = f64;
+
+#[derive(Clone, Debug)]
+struct Scheduled<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: smaller time first; FIFO on ties.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event queue + clock.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: SimTime,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` at absolute time `at` (>= now).
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.heap.push(Scheduled { time: at.max(self.now), seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a relative delay.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        debug_assert!(delay >= 0.0);
+        self.schedule_at(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let s = self.heap.pop()?;
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_by_time() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(1.0, 2);
+        q.schedule_at(1.0, 3);
+        let order: Vec<_> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn relative_scheduling_advances_clock() {
+        let mut q = EventQueue::new();
+        q.schedule_in(5.0, "x");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 5.0);
+        q.schedule_in(2.0, "y");
+        let (t2, _) = q.pop().unwrap();
+        assert_eq!(t2, 7.0);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        let mut q = EventQueue::new();
+        q.schedule_at(1.0, 1);
+        q.schedule_at(10.0, 10);
+        let (_, e) = q.pop().unwrap();
+        assert_eq!(e, 1);
+        // scheduling relative to the advanced clock
+        q.schedule_in(1.0, 2);
+        let (t, e) = q.pop().unwrap();
+        assert_eq!((t, e), (2.0, 2));
+        assert_eq!(q.pop().unwrap(), (10.0, 10));
+    }
+}

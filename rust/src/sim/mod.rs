@@ -1,0 +1,7 @@
+//! Event-driven simulation substrate: deterministic clock ([`event`]),
+//! client heterogeneity / network delay models ([`netmodel`]), and
+//! Fig.-3-style timeline recording ([`timeline`]).
+
+pub mod event;
+pub mod netmodel;
+pub mod timeline;

@@ -1,0 +1,159 @@
+//! Client heterogeneity + network delay models.
+//!
+//! Converts the byte counts from `comm::accounting` and per-client compute
+//! profiles into simulated delays (Fig. 3's staggered arrivals). Each
+//! client draws a persistent speed profile at setup — "variations in
+//! training and communication delays across client devices" — plus
+//! per-operation jitter.
+
+use crate::util::prng::Rng;
+
+/// Persistent per-client performance profile.
+#[derive(Clone, Debug)]
+pub struct ClientProfile {
+    /// Seconds of compute per training batch.
+    pub batch_time: f64,
+    /// Uplink bandwidth, bytes/second.
+    pub up_bps: f64,
+    /// Downlink bandwidth, bytes/second.
+    pub down_bps: f64,
+    /// Fixed per-message latency, seconds.
+    pub rtt: f64,
+    /// Multiplicative jitter sigma (log-normal) on every operation.
+    pub jitter: f64,
+}
+
+/// Heterogeneity model parameters.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    /// Mean seconds per training batch.
+    pub mean_batch_time: f64,
+    /// Log-normal sigma of per-client batch speed (heterogeneity).
+    pub speed_sigma: f64,
+    /// Mean uplink bytes/sec.
+    pub mean_up_bps: f64,
+    /// Mean downlink bytes/sec.
+    pub mean_down_bps: f64,
+    /// Log-normal sigma of per-client bandwidth.
+    pub bw_sigma: f64,
+    /// Mean one-way latency.
+    pub mean_rtt: f64,
+    /// Per-operation jitter sigma.
+    pub jitter: f64,
+    /// Seconds of server compute per arriving smashed batch update.
+    pub server_update_time: f64,
+}
+
+impl NetModel {
+    /// An edge-device-flavored default: ~10 ms/batch compute, ~20 Mbit/s
+    /// up, ~100 Mbit/s down, 20 ms latency, 2x client heterogeneity.
+    pub fn edge_default() -> Self {
+        NetModel {
+            mean_batch_time: 0.010,
+            speed_sigma: 0.6,
+            mean_up_bps: 2.5e6,
+            mean_down_bps: 12.5e6,
+            bw_sigma: 0.5,
+            mean_rtt: 0.020,
+            jitter: 0.10,
+            server_update_time: 0.004,
+        }
+    }
+
+    /// Homogeneous variant (no client-to-client spread, no jitter) —
+    /// isolates algorithmic ordering from hardware noise in tests.
+    pub fn homogeneous() -> Self {
+        NetModel {
+            speed_sigma: 0.0,
+            bw_sigma: 0.0,
+            jitter: 0.0,
+            ..Self::edge_default()
+        }
+    }
+
+    /// Draw a persistent profile for one client.
+    pub fn sample_profile(&self, rng: &mut Rng) -> ClientProfile {
+        let spd = if self.speed_sigma > 0.0 { rng.lognormal(1.0, self.speed_sigma) } else { 1.0 };
+        let bw = if self.bw_sigma > 0.0 { rng.lognormal(1.0, self.bw_sigma) } else { 1.0 };
+        ClientProfile {
+            batch_time: self.mean_batch_time * spd,
+            up_bps: self.mean_up_bps * bw,
+            down_bps: self.mean_down_bps * bw,
+            rtt: self.mean_rtt,
+            jitter: self.jitter,
+        }
+    }
+}
+
+impl ClientProfile {
+    fn jittered(&self, base: f64, rng: &mut Rng) -> f64 {
+        if self.jitter > 0.0 {
+            base * rng.lognormal(1.0, self.jitter)
+        } else {
+            base
+        }
+    }
+
+    /// Compute time for `batches` local training batches.
+    pub fn compute_delay(&self, batches: usize, rng: &mut Rng) -> f64 {
+        self.jittered(self.batch_time * batches as f64, rng)
+    }
+
+    /// Uplink transmission time for a payload.
+    pub fn upload_delay(&self, bytes: u64, rng: &mut Rng) -> f64 {
+        self.jittered(self.rtt + bytes as f64 / self.up_bps, rng)
+    }
+
+    /// Downlink transmission time for a payload.
+    pub fn download_delay(&self, bytes: u64, rng: &mut Rng) -> f64 {
+        self.jittered(self.rtt + bytes as f64 / self.down_bps, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_is_deterministic() {
+        let m = NetModel::homogeneous();
+        let mut rng = Rng::new(1);
+        let p1 = m.sample_profile(&mut rng);
+        let p2 = m.sample_profile(&mut rng);
+        assert_eq!(p1.batch_time, p2.batch_time);
+        let mut r = Rng::new(2);
+        assert_eq!(p1.compute_delay(10, &mut r), p1.batch_time * 10.0);
+        // upload delay = rtt + bytes/bw exactly
+        let d = p1.upload_delay(2_500_000, &mut r);
+        assert!((d - (0.020 + 1.0)).abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn heterogeneous_profiles_spread() {
+        let m = NetModel::edge_default();
+        let mut rng = Rng::new(3);
+        let speeds: Vec<f64> = (0..64).map(|_| m.sample_profile(&mut rng).batch_time).collect();
+        let min = speeds.iter().cloned().fold(f64::MAX, f64::min);
+        let max = speeds.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max / min > 2.0, "expected heterogeneity, got {min}..{max}");
+    }
+
+    #[test]
+    fn delays_monotone_in_size() {
+        let m = NetModel::homogeneous();
+        let mut rng = Rng::new(4);
+        let p = m.sample_profile(&mut rng);
+        assert!(p.upload_delay(10_000, &mut rng) < p.upload_delay(10_000_000, &mut rng));
+        assert!(p.compute_delay(1, &mut rng) < p.compute_delay(50, &mut rng));
+    }
+
+    #[test]
+    fn downlink_faster_than_uplink_by_default() {
+        let m = NetModel::homogeneous();
+        let mut rng = Rng::new(5);
+        let p = m.sample_profile(&mut rng);
+        let up = p.upload_delay(1_000_000, &mut rng);
+        let down = p.download_delay(1_000_000, &mut rng);
+        assert!(down < up);
+    }
+}

@@ -1,0 +1,165 @@
+//! Timeline recording for the asynchronous schedule (paper Fig. 3).
+//!
+//! Records spans (client local training, uploads, server updates, idle
+//! gaps) against the simulated clock, computes the utilization metrics
+//! the paper argues about (server idle fraction, straggler stall), and
+//! renders an ASCII Gantt chart for `examples/async_timeline.rs`.
+
+use super::event::SimTime;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    ClientCompute,
+    Upload,
+    Download,
+    ServerUpdate,
+    Aggregate,
+}
+
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    /// Client id, or None for server-side spans.
+    pub who: Option<usize>,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub label: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn record(
+        &mut self,
+        kind: SpanKind,
+        who: Option<usize>,
+        start: SimTime,
+        end: SimTime,
+        label: impl Into<String>,
+    ) {
+        debug_assert!(end >= start);
+        self.spans.push(Span { kind, who, start, end, label: label.into() });
+    }
+
+    pub fn end_time(&self) -> SimTime {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Total busy time of the server (update + aggregate spans).
+    pub fn server_busy(&self) -> f64 {
+        self.spans
+            .iter()
+            .filter(|s| matches!(s.kind, SpanKind::ServerUpdate | SpanKind::Aggregate))
+            .map(|s| s.end - s.start)
+            .sum()
+    }
+
+    /// Server idle fraction over the full run: 1 - busy/total.
+    pub fn server_idle_fraction(&self) -> f64 {
+        let total = self.end_time();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.server_busy() / total).clamp(0.0, 1.0)
+    }
+
+    /// First-to-last gap between clients finishing their uploads in a
+    /// window — the straggler spread the synchronous barrier pays for.
+    pub fn straggler_spread(&self) -> f64 {
+        let uploads: Vec<&Span> =
+            self.spans.iter().filter(|s| s.kind == SpanKind::Upload).collect();
+        if uploads.is_empty() {
+            return 0.0;
+        }
+        let first = uploads.iter().map(|s| s.end).fold(f64::MAX, f64::min);
+        let last = uploads.iter().map(|s| s.end).fold(f64::MIN, f64::max);
+        last - first
+    }
+
+    /// ASCII Gantt chart: one row per client plus a server row.
+    pub fn ascii_gantt(&self, columns: usize) -> String {
+        let total = self.end_time().max(1e-9);
+        let n_clients = self
+            .spans
+            .iter()
+            .filter_map(|s| s.who)
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0);
+        let mut rows: Vec<Vec<u8>> = vec![vec![b'.'; columns]; n_clients + 1];
+        for s in &self.spans {
+            let row = match s.who {
+                Some(c) => c,
+                None => n_clients,
+            };
+            let a = ((s.start / total) * columns as f64) as usize;
+            let b = (((s.end / total) * columns as f64).ceil() as usize).clamp(a + 1, columns);
+            let ch = match s.kind {
+                SpanKind::ClientCompute => b'#',
+                SpanKind::Upload => b'^',
+                SpanKind::Download => b'v',
+                SpanKind::ServerUpdate => b'S',
+                SpanKind::Aggregate => b'A',
+            };
+            for cell in &mut rows[row][a..b.min(columns)] {
+                *cell = ch;
+            }
+        }
+        let mut out = String::new();
+        for (i, row) in rows.iter().enumerate() {
+            let name = if i < n_clients {
+                format!("client {i:>2}")
+            } else {
+                "server   ".to_string()
+            };
+            out.push_str(&format!("{name} |{}|\n", String::from_utf8_lossy(row)));
+        }
+        out.push_str(&format!(
+            "legend: #=compute ^=upload v=download S=server-update A=aggregate  total={total:.3}s\n"
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tl() -> Timeline {
+        let mut t = Timeline::default();
+        t.record(SpanKind::ClientCompute, Some(0), 0.0, 1.0, "c0 train");
+        t.record(SpanKind::Upload, Some(0), 1.0, 1.5, "c0 up");
+        t.record(SpanKind::ServerUpdate, None, 1.5, 2.0, "s upd");
+        t.record(SpanKind::Upload, Some(1), 3.0, 4.0, "c1 up");
+        t
+    }
+
+    #[test]
+    fn metrics() {
+        let t = tl();
+        assert_eq!(t.end_time(), 4.0);
+        assert!((t.server_busy() - 0.5).abs() < 1e-12);
+        assert!((t.server_idle_fraction() - (1.0 - 0.5 / 4.0)).abs() < 1e-12);
+        assert!((t.straggler_spread() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gantt_renders_all_rows() {
+        let g = tl().ascii_gantt(40);
+        assert_eq!(g.lines().count(), 4); // 2 clients + server + legend
+        assert!(g.contains('#'));
+        assert!(g.contains('^'));
+        assert!(g.contains('S'));
+    }
+
+    #[test]
+    fn empty_timeline_is_benign() {
+        let t = Timeline::default();
+        assert_eq!(t.end_time(), 0.0);
+        assert_eq!(t.server_idle_fraction(), 0.0);
+        assert_eq!(t.straggler_spread(), 0.0);
+    }
+}

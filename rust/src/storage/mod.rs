@@ -1,0 +1,97 @@
+//! Storage accounting (paper Table II "Server storage" column and the
+//! Table V "Storage (M)" comparison).
+//!
+//! The paper measures storage in *millions of parameters*: everything the
+//! server must hold during training — server-side model copies (n for
+//! FSL_MC / FSL_AN, 1 for FSL_OC / CSE_FSL), plus the client-side models
+//! and auxiliary networks it receives at aggregation time.
+
+use crate::coordinator::methods::Method;
+
+/// Parameter counts of the three model parts.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSizes {
+    pub client: usize,
+    pub server: usize,
+    pub aux: usize,
+}
+
+/// Server-side model copies held during training.
+pub fn server_model_copies(method: Method, n_clients: usize) -> usize {
+    if method.per_client_server_model() {
+        n_clients
+    } else {
+        1
+    }
+}
+
+/// Total parameters resident at the server (Table V accounting):
+/// server-side copies + n client models (aggregation) + n aux models
+/// (methods with auxiliary networks).
+pub fn server_storage_params(method: Method, n_clients: usize, sizes: &ModelSizes) -> usize {
+    let server = server_model_copies(method, n_clients) * sizes.server;
+    let clients = n_clients * sizes.client;
+    let aux = if method.uses_aux() { n_clients * sizes.aux } else { 0 };
+    server + clients + aux
+}
+
+/// In millions of parameters, as Table V reports.
+pub fn server_storage_m(method: Method, n_clients: usize, sizes: &ModelSizes) -> f64 {
+    server_storage_params(method, n_clients, sizes) as f64 / 1e6
+}
+
+/// Client-side storage (params a single client holds).
+pub fn client_storage_params(method: Method, sizes: &ModelSizes) -> usize {
+    sizes.client + if method.uses_aux() { sizes.aux } else { 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::methods::Method;
+
+    const CIFAR: ModelSizes = ModelSizes { client: 107_328, server: 960_970, aux: 23_050 };
+    const FEMNIST: ModelSizes = ModelSizes { client: 18_816, server: 1_187_774, aux: 571_454 };
+
+    #[test]
+    fn matches_paper_table5_cifar() {
+        // Paper Table V (n=5): MC 5.34M, OC 1.50M, AN 5.46M, CSE 1.61M.
+        let m = |meth| server_storage_m(meth, 5, &CIFAR);
+        assert!((m(Method::FslMc) - 5.34).abs() < 0.01, "{}", m(Method::FslMc));
+        assert!((m(Method::FslOc) - 1.50).abs() < 0.01, "{}", m(Method::FslOc));
+        assert!((m(Method::FslAn) - 5.46).abs() < 0.01, "{}", m(Method::FslAn));
+        assert!((m(Method::CseFsl) - 1.61).abs() < 0.01, "{}", m(Method::CseFsl));
+    }
+
+    #[test]
+    fn matches_paper_table5_femnist() {
+        // Paper Table V (n=5, aux=MLP): MC 6.03M, OC 1.28M, AN 8.89M,
+        // CSE 4.14M.
+        let m = |meth| server_storage_m(meth, 5, &FEMNIST);
+        assert!((m(Method::FslMc) - 6.03).abs() < 0.01, "{}", m(Method::FslMc));
+        assert!((m(Method::FslOc) - 1.28).abs() < 0.01, "{}", m(Method::FslOc));
+        assert!((m(Method::FslAn) - 8.89).abs() < 0.01, "{}", m(Method::FslAn));
+        assert!((m(Method::CseFsl) - 4.14).abs() < 0.01, "{}", m(Method::CseFsl));
+    }
+
+    #[test]
+    fn cse_storage_independent_of_n_in_server_copies() {
+        // The paper's headline: server-side model count does not scale
+        // with n for CSE_FSL.
+        assert_eq!(server_model_copies(Method::CseFsl, 5), 1);
+        assert_eq!(server_model_copies(Method::CseFsl, 5000), 1);
+        assert_eq!(server_model_copies(Method::FslMc, 5000), 5000);
+        // and the *server model* storage gap grows linearly
+        let gap = |n: usize| {
+            server_storage_params(Method::FslMc, n, &CIFAR)
+                - server_storage_params(Method::CseFsl, n, &CIFAR)
+        };
+        assert!(gap(100) > gap(10));
+    }
+
+    #[test]
+    fn client_storage() {
+        assert_eq!(client_storage_params(Method::FslMc, &CIFAR), 107_328);
+        assert_eq!(client_storage_params(Method::CseFsl, &CIFAR), 107_328 + 23_050);
+    }
+}

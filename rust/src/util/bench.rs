@@ -1,0 +1,196 @@
+//! Mini benchmarking harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each bench target with `harness = false`; targets
+//! build `Bench` groups with closures and get warmup, calibrated iteration
+//! counts, and robust statistics (median / p10 / p90 / mean) printed in a
+//! fixed-width table that EXPERIMENTS.md quotes directly.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set, all in nanoseconds per iteration.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Optional user-supplied throughput denominator (items per iter).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n * 1e9 / self.mean_ns)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A named group of benchmarks with shared settings.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    measure: Duration,
+    min_iters: u64,
+    results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Keep total bench time bounded: these run in CI on one core.
+        Bench {
+            group: group.to_string(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(900),
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_times(mut self, warmup: Duration, measure: Duration) -> Self {
+        self.warmup = warmup;
+        self.measure = measure;
+        self
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call and
+    /// returns something observable (guarding against dead-code elim).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, f: F) -> &Stats {
+        self.run_with_items(name, None, f)
+    }
+
+    /// Benchmark with a throughput denominator (e.g. samples per call).
+    pub fn run_with_items<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: Option<f64>,
+        mut f: F,
+    ) -> &Stats {
+        // Warmup and calibration.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup || warm_iters < 2 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+        let target = (self.measure.as_nanos() as f64 / per_iter.max(1.0)) as u64;
+        let iters = target.clamp(self.min_iters, 1_000_000);
+
+        // Measure each iteration separately for robust percentiles.
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = Stats {
+            name: format!("{}/{}", self.group, name),
+            iters,
+            mean_ns: mean,
+            median_ns: q(0.5),
+            p10_ns: q(0.10),
+            p90_ns: q(0.90),
+            items_per_iter: items,
+        };
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Print the results table for this group.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<48} {:>10} {:>12} {:>12} {:>12} {:>14}",
+            "name", "iters", "median", "p10", "p90", "throughput"
+        );
+        for s in &self.results {
+            let tp = s
+                .throughput_per_sec()
+                .map(|t| {
+                    if t >= 1e6 {
+                        format!("{:.2} M/s", t / 1e6)
+                    } else if t >= 1e3 {
+                        format!("{:.2} K/s", t / 1e3)
+                    } else {
+                        format!("{t:.1} /s")
+                    }
+                })
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "{:<48} {:>10} {:>12} {:>12} {:>12} {:>14}",
+                s.name,
+                s.iters,
+                fmt_ns(s.median_ns),
+                fmt_ns(s.p10_ns),
+                fmt_ns(s.p90_ns),
+                tp
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("t").with_times(
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+        );
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.median_ns <= s.p90_ns);
+        assert!(s.p10_ns <= s.median_ns);
+        assert!(s.iters >= 5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p10_ns: 1e9,
+            p90_ns: 1e9,
+            items_per_iter: Some(50.0),
+        };
+        assert!((s.throughput_per_sec().unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,303 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and generated `--help`. Unknown flags are errors — experiment drivers
+//! must not silently ignore typos in sweep parameters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    Invalid { key: String, value: String, why: String },
+    #[error("unexpected positional argument {0:?}")]
+    UnexpectedPositional(String),
+    #[error("missing required argument <{0}>")]
+    MissingPositional(String),
+}
+
+/// Option specification.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A declarative command parser.
+#[derive(Debug, Default)]
+pub struct Command {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String, bool)>, // (name, help, required)
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+    pos_names: BTreeMap<String, usize>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command { name: name.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// `--key <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: Some(default.into()),
+        });
+        self
+    }
+
+    /// `--key <value>` option with no default (optional).
+    pub fn opt_nodefault(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Required positional argument.
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into(), true));
+        self
+    }
+
+    /// Optional positional argument.
+    pub fn positional_opt(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.into(), help.into(), false));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _, req) in &self.positionals {
+            if *req {
+                s.push_str(&format!(" <{p}>"));
+            } else {
+                s.push_str(&format!(" [{p}]"));
+            }
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, help, _) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {help}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut line = format!("  --{}", o.name);
+                if o.takes_value {
+                    line.push_str(" <v>");
+                }
+                if let Some(d) = &o.default {
+                    line.push_str(&format!(" [default: {d}]"));
+                }
+                s.push_str(&format!("{line}\n      {}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse a token list (not including argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.clone(), d.clone());
+            }
+            if !o.takes_value {
+                args.flags.insert(o.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                } else {
+                    args.flags.insert(key, true);
+                }
+            } else {
+                if args.positionals.len() >= self.positionals.len() {
+                    return Err(CliError::UnexpectedPositional(tok.clone()));
+                }
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        for (idx, (name, _, required)) in self.positionals.iter().enumerate() {
+            if idx < args.positionals.len() {
+                args.pos_names.insert(name.clone(), idx);
+            } else if *required {
+                return Err(CliError::MissingPositional(name.clone()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, name: &str) -> Option<&str> {
+        self.pos_names.get(name).map(|&i| self.positionals[i].as_str())
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(key).ok_or_else(|| CliError::MissingValue(key.into()))?;
+        raw.parse::<T>().map_err(|e| CliError::Invalid {
+            key: key.into(),
+            value: raw.into(),
+            why: e.to_string(),
+        })
+    }
+
+    /// Comma-separated list, e.g. `--h 1,5,10`.
+    pub fn parse_list<T: std::str::FromStr>(&self, key: &str) -> Result<Vec<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(key).ok_or_else(|| CliError::MissingValue(key.into()))?;
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse::<T>().map_err(|e| CliError::Invalid {
+                    key: key.into(),
+                    value: s.into(),
+                    why: e.to_string(),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .opt("rounds", "10", "rounds")
+            .opt_nodefault("out", "output path")
+            .flag("verbose", "chatty")
+            .positional("dataset", "which dataset")
+            .positional_opt("extra", "optional arg")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&argv(&["cifar"])).unwrap();
+        assert_eq!(a.get("rounds"), Some("10"));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.positional("dataset"), Some("cifar"));
+        assert_eq!(a.positional("extra"), None);
+
+        let a = cmd()
+            .parse(&argv(&["femnist", "--rounds", "5", "--verbose", "--out=x.json"]))
+            .unwrap();
+        assert_eq!(a.parse_as::<u32>("rounds").unwrap(), 5);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cmd().parse(&argv(&["cifar", "--rounds=42"])).unwrap();
+        assert_eq!(a.parse_as::<usize>("rounds").unwrap(), 42);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(matches!(cmd().parse(&argv(&["c", "--nope"])), Err(CliError::Unknown(_))));
+        assert!(matches!(
+            cmd().parse(&argv(&["c", "--rounds"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(cmd().parse(&argv(&[])), Err(CliError::MissingPositional(_))));
+        assert!(matches!(
+            cmd().parse(&argv(&["a", "b", "c"])),
+            Err(CliError::UnexpectedPositional(_))
+        ));
+        let a = cmd().parse(&argv(&["c", "--rounds", "xyz"])).unwrap();
+        assert!(matches!(a.parse_as::<u32>("rounds"), Err(CliError::Invalid { .. })));
+    }
+
+    #[test]
+    fn lists() {
+        let c = Command::new("t", "t").opt("h", "1,5,10", "h values").positional("d", "");
+        let a = c.parse(&argv(&["x", "--h", "1, 2,8"])).unwrap();
+        assert_eq!(a.parse_list::<u32>("h").unwrap(), vec![1, 2, 8]);
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = cmd().usage();
+        assert!(u.contains("--rounds"));
+        assert!(u.contains("<dataset>"));
+        assert!(u.contains("[extra]"));
+    }
+}

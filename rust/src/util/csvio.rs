@@ -1,0 +1,115 @@
+//! CSV writing for experiment curves (accuracy-vs-round, loss traces).
+//!
+//! Every figure driver dumps its series as CSV next to the printed table
+//! so curves can be re-plotted without re-running training.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A simple in-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format every cell with Display.
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn escape(cell: &str) -> String {
+        if cell.contains([',', '"', '\n']) {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            &self.header.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut c = Csv::new(&["round", "acc"]);
+        c.row(&["1".into(), "0.5".into()]);
+        c.row_display(&[&2, &0.75]);
+        let s = c.to_string();
+        assert_eq!(s, "round,acc\n1,0.5\n2,0.75\n");
+        assert_eq!(c.n_rows(), 2);
+    }
+
+    #[test]
+    fn escaping() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&["x,y".into()]);
+        c.row(&["q\"q".into()]);
+        let s = c.to_string();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let mut c = Csv::new(&["x"]);
+        c.row(&["1".into()]);
+        let dir = std::env::temp_dir().join("cse_fsl_csv_test");
+        let path = dir.join("t.csv");
+        c.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "x\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

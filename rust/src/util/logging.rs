@@ -1,0 +1,107 @@
+//! Leveled stderr logging with per-run verbosity (log crate facade is
+//! vendored but a full env_logger is not; this is the thin subset the
+//! coordinator needs: timestamped, leveled, globally toggled).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_str(s: &str) -> Level {
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t0 = START.get_or_init(Instant::now);
+    let secs = t0.elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{secs:9.3}s {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)+) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_parsing() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(level_from_str("debug"), Level::Debug);
+        assert_eq!(level_from_str("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn enabled_respects_max() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

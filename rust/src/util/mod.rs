@@ -1,0 +1,16 @@
+//! Dependency-light substrate utilities.
+//!
+//! The offline vendor set has no serde/clap/criterion/proptest/rand, so
+//! this module provides functional equivalents, each unit-tested:
+//! [`prng`] (seeded xoshiro256++ with derived streams), [`json`]
+//! (parser + serializer for the AOT manifest and configs), [`cli`]
+//! (declarative argument parsing), [`bench`] (mini-criterion), [`prop`]
+//! (mini property-testing harness), [`csvio`] and [`logging`].
+
+pub mod bench;
+pub mod cli;
+pub mod csvio;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod prop;

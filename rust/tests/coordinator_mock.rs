@@ -1,0 +1,326 @@
+//! Coordinator behaviour over the mock engine: method semantics, wire
+//! accounting vs closed forms, aggregation, determinism, participation,
+//! and the Fig.-6 order-invariance claim — all in milliseconds, no PJRT.
+
+use cse_fsl::comm::accounting::{table2, MsgKind, WireSizes};
+use cse_fsl::coordinator::config::{ArrivalOrder, TrainConfig};
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::data::Dataset;
+use cse_fsl::model::aggregate::max_abs_diff;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::runtime::SplitEngine;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    generate(&spec(), n, seed)
+}
+
+fn setup<'a>(
+    train: &'a Dataset,
+    test: &'a Dataset,
+    n_clients: usize,
+    label: &str,
+) -> TrainerSetup<'a> {
+    let mut rng = Rng::new(7);
+    TrainerSetup {
+        train,
+        test,
+        partition: iid(train, n_clients, &mut rng),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: label.to_string(),
+    }
+}
+
+fn engine() -> MockEngine {
+    // batch=4, classes=3, input_len=8 matches spec() (2*2*2)
+    MockEngine::small(42)
+}
+
+#[test]
+fn all_methods_run_and_losses_fall() {
+    let train = dataset(64, 1);
+    let test = dataset(32, 2);
+    for method in Method::ALL {
+        let e = engine();
+        let cfg = TrainConfig { lr0: 2.0, ..TrainConfig::new(method) }.with_rounds(30);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 4, "t")).unwrap();
+        let rec = tr.run().unwrap();
+        assert_eq!(rec.rounds.len(), 30, "{method}");
+        let first = rec.rounds[0].train_loss;
+        let last = rec.rounds[29].train_loss;
+        assert!(last < first, "{method}: loss {first} -> {last}");
+        assert!(rec.final_accuracy >= 0.0 && rec.final_accuracy <= 1.0);
+        assert!(rec.sim_time > 0.0);
+    }
+}
+
+#[test]
+fn server_copy_counts_match_method() {
+    let train = dataset(64, 1);
+    let test = dataset(16, 2);
+    for (method, copies) in
+        [(Method::FslMc, 5), (Method::FslOc, 1), (Method::FslAn, 5), (Method::CseFsl, 1)]
+    {
+        let e = engine();
+        let cfg = TrainConfig::new(method).with_rounds(2);
+        let tr = Trainer::new(&e, cfg, setup(&train, &test, 5, "t")).unwrap();
+        assert_eq!(tr.server.copies.len(), copies, "{method}");
+        assert_eq!(tr.server.resident_params(), copies * e.server_size());
+    }
+}
+
+#[test]
+fn grad_downlink_only_for_splitfed_methods() {
+    let train = dataset(64, 1);
+    let test = dataset(16, 2);
+    for method in Method::ALL {
+        let e = engine();
+        let cfg = TrainConfig { agg_every: 3, ..TrainConfig::new(method) }.with_rounds(6);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).unwrap();
+        tr.run().unwrap();
+        let grad_bytes = tr.ledger.bytes_of(MsgKind::GradDownload);
+        if method.grad_downlink() {
+            assert!(grad_bytes > 0, "{method} should downlink grads");
+        } else {
+            assert_eq!(grad_bytes, 0, "{method} must not downlink grads");
+        }
+        let aux_bytes = tr.ledger.bytes_of(MsgKind::AuxModelUpload);
+        if method.uses_aux() {
+            assert!(aux_bytes > 0, "{method} should upload aux nets");
+        } else {
+            assert_eq!(aux_bytes, 0, "{method} must not upload aux nets");
+        }
+    }
+}
+
+#[test]
+fn measured_bytes_match_table2_closed_form() {
+    // Run exactly one "epoch": each of n clients walks its |D_i| samples
+    // once with one aggregation — the unit Table II counts.
+    let n = 4usize;
+    let per_client = 16usize; // |D_i|
+    let train = dataset(n * per_client, 3);
+    let test = dataset(16, 4);
+    let e = engine();
+    let batches_per_epoch = per_client / e.batch; // 4
+    let w = WireSizes::new(e.smashed_len, e.client_size(), e.aux_size());
+
+    // CSE_FSL with h=2: rounds per epoch = batches/h = 2, aggregate at
+    // the end of the epoch.
+    let h = 2usize;
+    let rounds = batches_per_epoch / h;
+    let cfg = TrainConfig {
+        h,
+        rounds,
+        agg_every: rounds,
+        eval_every: 0,
+        ..TrainConfig::new(Method::CseFsl)
+    };
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, n, "t")).unwrap();
+    tr.run().unwrap();
+    let measured = tr.ledger.total_bytes();
+    let predicted = table2::cse_fsl(n as u64, per_client as u64, h as u64, &w);
+    assert_eq!(measured, predicted, "CSE_FSL_h accounting");
+
+    // FSL_MC one epoch: rounds = batches_per_epoch.
+    let e2 = engine();
+    let cfg = TrainConfig {
+        rounds: batches_per_epoch,
+        agg_every: batches_per_epoch,
+        eval_every: 0,
+        ..TrainConfig::new(Method::FslMc)
+    };
+    let mut tr = Trainer::new(&e2, cfg, setup(&train, &test, n, "t")).unwrap();
+    tr.run().unwrap();
+    assert_eq!(
+        tr.ledger.total_bytes(),
+        table2::fsl_mc(n as u64, per_client as u64, &w),
+        "FSL_MC accounting"
+    );
+
+    // FSL_AN one epoch.
+    let e3 = engine();
+    let cfg = TrainConfig {
+        rounds: batches_per_epoch,
+        agg_every: batches_per_epoch,
+        eval_every: 0,
+        ..TrainConfig::new(Method::FslAn)
+    };
+    let mut tr = Trainer::new(&e3, cfg, setup(&train, &test, n, "t")).unwrap();
+    tr.run().unwrap();
+    assert_eq!(
+        tr.ledger.total_bytes(),
+        table2::fsl_an(n as u64, per_client as u64, &w),
+        "FSL_AN accounting"
+    );
+}
+
+#[test]
+fn larger_h_uploads_fewer_smashed_bytes_per_batchwork() {
+    let train = dataset(96, 5);
+    let test = dataset(16, 6);
+    let mut totals = Vec::new();
+    for h in [1usize, 2, 4] {
+        let e = engine();
+        // same total local batches (8) for every h
+        let rounds = 8 / h;
+        let cfg = TrainConfig {
+            h,
+            rounds,
+            agg_every: rounds,
+            eval_every: 0,
+            ..TrainConfig::new(Method::CseFsl)
+        };
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).unwrap();
+        tr.run().unwrap();
+        totals.push(tr.ledger.bytes_of(MsgKind::SmashedUpload));
+    }
+    assert_eq!(totals[0], 2 * totals[1]);
+    assert_eq!(totals[0], 4 * totals[2]);
+}
+
+#[test]
+fn aggregation_synchronizes_clients() {
+    let train = dataset(64, 7);
+    let test = dataset(16, 8);
+    let e = engine();
+    let cfg = TrainConfig { agg_every: 5, ..TrainConfig::new(Method::CseFsl) }.with_rounds(5);
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 4, "t")).unwrap();
+    tr.run().unwrap();
+    // last round was an aggregation round: all clients share xc
+    for c in &tr.clients[1..] {
+        assert_eq!(c.xc, tr.clients[0].xc);
+        assert_eq!(c.ac, tr.clients[0].ac);
+    }
+}
+
+#[test]
+fn between_aggregations_clients_diverge() {
+    let train = dataset(64, 9);
+    let test = dataset(16, 10);
+    let e = engine();
+    // aggregation far beyond the horizon
+    let cfg = TrainConfig { agg_every: 100, lr0: 1.0, ..TrainConfig::new(Method::CseFsl) }
+        .with_rounds(4);
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).unwrap();
+    tr.run().unwrap();
+    // mock dynamics pull everyone to the same target, but trajectories
+    // (different batches/seeds) must not be bitwise identical
+    assert!(max_abs_diff(&tr.clients[0].xc, &tr.clients[1].xc) > 0.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let train = dataset(64, 11);
+    let test = dataset(16, 12);
+    let run = |seed: u64| {
+        let e = engine();
+        let cfg = TrainConfig::new(Method::CseFsl).with_h(2).with_rounds(10).with_seed(seed);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).unwrap();
+        let rec = tr.run().unwrap();
+        (rec.final_accuracy, rec.total_up_bytes, tr.clients[0].xc.clone(), rec.sim_time)
+    };
+    let a = run(5);
+    let b = run(5);
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.1, b.1);
+    assert_eq!(a.2, b.2);
+    assert_eq!(a.3, b.3);
+    let c = run(6);
+    assert!(a.2 != c.2 || a.3 != c.3, "different seeds should differ somewhere");
+}
+
+#[test]
+fn partial_participation_limits_round_traffic() {
+    let train = dataset(120, 13);
+    let test = dataset(16, 14);
+    let e = engine();
+    let cfg = TrainConfig {
+        participation: 2,
+        agg_every: 1000,
+        eval_every: 0,
+        ..TrainConfig::new(Method::CseFsl)
+    }
+    .with_rounds(1);
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 6, "t")).unwrap();
+    tr.run().unwrap();
+    // exactly 2 smashed uploads happened
+    assert_eq!(tr.ledger.count_of(MsgKind::SmashedUpload), 2);
+}
+
+#[test]
+fn fig6_order_invariance_holds_in_spirit() {
+    // Same seed, same everything, only the server's consumption order of
+    // arrivals differs: trajectories must stay close (the paper's Fig. 6
+    // claim) while not being bitwise identical.
+    let train = dataset(64, 15);
+    let test = dataset(32, 16);
+    let run = |arrival: ArrivalOrder| {
+        let e = engine();
+        let cfg = TrainConfig {
+            arrival,
+            lr0: 1.0,
+            ..TrainConfig::new(Method::CseFsl)
+        }
+        .with_rounds(20);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 4, "t")).unwrap();
+        let rec = tr.run().unwrap();
+        (tr.server.copies[0].clone(), rec.final_accuracy)
+    };
+    let (xs_ordered, acc_ordered) = run(ArrivalOrder::ClientIndex);
+    let (xs_shuffled, acc_shuffled) = run(ArrivalOrder::Shuffled);
+    let diff = max_abs_diff(&xs_ordered, &xs_shuffled);
+    assert!(diff < 0.05, "order changed the model too much: {diff}");
+    assert!((acc_ordered - acc_shuffled).abs() < 0.2);
+}
+
+#[test]
+fn server_updates_counted_per_upload() {
+    let train = dataset(64, 17);
+    let test = dataset(16, 18);
+    let e = engine();
+    let rounds = 7usize;
+    let n = 3usize;
+    let cfg = TrainConfig { eval_every: 0, agg_every: 1000, ..TrainConfig::new(Method::CseFsl) }
+        .with_rounds(rounds);
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, n, "t")).unwrap();
+    tr.run().unwrap();
+    assert_eq!(tr.server.updates, (rounds * n) as u64);
+}
+
+#[test]
+fn timeline_records_server_activity_and_idle() {
+    let train = dataset(64, 19);
+    let test = dataset(16, 20);
+    let e = engine();
+    let cfg = TrainConfig::new(Method::CseFsl).with_rounds(5);
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 4, "t")).unwrap();
+    let rec = tr.run().unwrap();
+    assert!(tr.timeline.server_busy() > 0.0);
+    assert!(rec.server_idle_fraction > 0.0 && rec.server_idle_fraction < 1.0);
+    // clients actually interleave: straggler spread is positive under
+    // heterogeneous profiles
+    assert!(tr.timeline.straggler_spread() > 0.0);
+}
+
+#[test]
+fn rejects_invalid_configs() {
+    let train = dataset(64, 21);
+    let test = dataset(16, 22);
+    let e = engine();
+    let cfg = TrainConfig::new(Method::FslMc).with_h(4);
+    assert!(Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).is_err());
+    let cfg = TrainConfig { participation: 10, ..TrainConfig::new(Method::CseFsl) };
+    assert!(Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).is_err());
+}

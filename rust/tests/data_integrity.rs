@@ -1,0 +1,169 @@
+//! Data-substrate integrity: the properties the experiments silently rely
+//! on — shared glyph alphabets across train/test, disjoint writers,
+//! deterministic regeneration, and partition invariants under the
+//! property harness.
+
+use cse_fsl::data::femnist::{self, FemnistSpec};
+use cse_fsl::data::partition;
+use cse_fsl::data::synthetic::{train_test as syn_train_test, SyntheticSpec};
+use cse_fsl::prop_assert;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+fn spec() -> FemnistSpec {
+    FemnistSpec { writers: 8, samples_per_writer: 12, ..FemnistSpec::default_like() }
+}
+
+#[test]
+fn femnist_train_test_share_glyph_alphabet() {
+    // Same class => correlated mean images across train and test (the
+    // test split must be *learnable*: it was not, before train_test()).
+    let big = FemnistSpec { writers: 40, samples_per_writer: 30, ..FemnistSpec::default_like() };
+    let (train, test) = femnist::train_test(&big, 40, 3);
+    let side = 28 * 28;
+    let mean_img = |ds: &cse_fsl::data::Dataset, class: i32| -> Option<Vec<f32>> {
+        let idx: Vec<usize> =
+            (0..ds.len()).filter(|&i| ds.labels[i] == class).collect();
+        if idx.len() < 4 {
+            return None;
+        }
+        let mut m = vec![0f32; side];
+        for &i in &idx {
+            for (a, b) in m.iter_mut().zip(ds.image(i)) {
+                *a += b / idx.len() as f32;
+            }
+        }
+        Some(m)
+    };
+    let corr = |a: &[f32], b: &[f32]| -> f32 {
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+        dot / (na * nb).max(1e-9)
+    };
+    let mut matched = 0;
+    let mut checked = 0;
+    for class in 0..62 {
+        let (Some(tr), Some(te)) = (mean_img(&train, class), mean_img(&test, class)) else {
+            continue;
+        };
+        checked += 1;
+        if corr(&tr, &te) > 0.5 {
+            matched += 1;
+        }
+    }
+    assert!(checked >= 5, "not enough shared classes to check ({checked})");
+    assert!(
+        matched * 10 >= checked * 7,
+        "train/test glyphs disagree: {matched}/{checked} correlated"
+    );
+}
+
+#[test]
+fn femnist_train_test_use_disjoint_writer_styles() {
+    let (train, test) = femnist::train_test(&spec(), 8, 3);
+    // Styles are drawn from disjoint RNG streams; images of the same
+    // class should still differ between splits (not bitwise shared).
+    assert_ne!(train.images[..784], test.images[..784]);
+    assert_eq!(train.classes, test.classes);
+}
+
+#[test]
+fn femnist_iid_train_test_learnable_pair() {
+    let (train, test) = femnist::train_test_iid(&spec(), 96, 9);
+    assert_eq!(train.shape, test.shape);
+    assert!(test.len() >= 90);
+    // IID: labels roughly uniform
+    let hist = train.class_histogram();
+    let top = *hist.iter().max().unwrap() as f64 / train.len() as f64;
+    assert!(top < 0.15, "{top}");
+}
+
+#[test]
+fn synthetic_train_test_same_templates() {
+    let spec = SyntheticSpec { height: 8, width: 8, channels: 1, classes: 4, ..SyntheticSpec::cifar_like() };
+    let (a_train, a_test) = syn_train_test(&spec, 16, 16, 5);
+    let (b_train, _) = syn_train_test(&spec, 16, 16, 5);
+    assert_eq!(a_train.images, b_train.images, "regeneration must be exact");
+    assert_ne!(a_train.images, a_test.images);
+}
+
+#[test]
+fn prop_partitions_are_disjoint_and_complete() {
+    prop::check("dirichlet partition validity", |rng| {
+        let n = 20 + rng.below(200) as usize;
+        let k = 2 + rng.below(6) as usize;
+        let alpha = 0.1 + rng.uniform() * 5.0;
+        let spec = SyntheticSpec { height: 2, width: 2, channels: 1, classes: 5, ..SyntheticSpec::cifar_like() };
+        let ds = cse_fsl::data::synthetic::generate(&spec, n, rng.next_u64());
+        let p = partition::dirichlet(&ds, k, alpha, rng);
+        p.validate(ds.len()).map_err(|e| e)?;
+        prop_assert!(p.total() == ds.len(), "dirichlet dropped samples: {} != {n}", p.total());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_equalized_partitions_are_uniform() {
+    prop::check("equalize uniformity", |rng| {
+        let n = 50 + rng.below(150) as usize;
+        let k = 2 + rng.below(5) as usize;
+        let spec = SyntheticSpec { height: 2, width: 2, channels: 1, classes: 3, ..SyntheticSpec::cifar_like() };
+        let ds = cse_fsl::data::synthetic::generate(&spec, n, rng.next_u64());
+        let mut p = partition::dirichlet(&ds, k, 0.3, rng);
+        partition::equalize(&mut p);
+        let len0 = p.clients[0].len();
+        prop_assert!(
+            p.clients.iter().all(|c| c.len() == len0),
+            "equalize left unequal shards"
+        );
+        p.validate(ds.len()).map_err(|e| e)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_never_repeats_within_epoch() {
+    prop::check("batcher epoch coverage", |rng| {
+        let shard_n = 4 + rng.below(60) as usize;
+        let bs = 1 + rng.below(8) as usize;
+        let mut b = cse_fsl::data::batcher::Batcher::new(
+            (0..shard_n).collect(),
+            bs,
+            Rng::new(rng.next_u64()),
+        );
+        // over exactly LCM-ish horizon: count occurrences in k*shard_n draws
+        let batches = 3 * shard_n; // 3 epochs worth of samples per item
+        let mut counts = vec![0usize; shard_n];
+        let mut buf = Vec::new();
+        for _ in 0..batches {
+            b.next_batch(&mut buf);
+            for &i in &buf {
+                counts[i] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        prop_assert!(total == batches * bs, "lost samples");
+        let min = counts.iter().min().unwrap();
+        let max = counts.iter().max().unwrap();
+        prop_assert!(max - min <= 1, "unfair batcher: min {min} max {max}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_queue_is_time_ordered() {
+    prop::check("event queue ordering", |rng| {
+        let mut q = cse_fsl::sim::event::EventQueue::new();
+        let n = 1 + rng.below(200) as usize;
+        for i in 0..n {
+            q.schedule_at(rng.uniform() * 100.0, i);
+        }
+        let mut last = f64::MIN;
+        while let Some((t, _)) = q.pop() {
+            prop_assert!(t >= last, "time went backwards: {t} < {last}");
+            last = t;
+        }
+        Ok(())
+    });
+}

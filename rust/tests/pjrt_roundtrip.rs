@@ -1,0 +1,145 @@
+//! Integration: the real AOT artifacts load, compile, and execute via
+//! PJRT, and the training entries behave like training steps (loss falls,
+//! shapes line up, dropout replays). Requires `make artifacts`.
+
+use std::rc::Rc;
+
+use cse_fsl::model::init::init_flat;
+use cse_fsl::runtime::artifact::Manifest;
+use cse_fsl::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use cse_fsl::runtime::{artifacts_dir, SplitEngine};
+use cse_fsl::util::prng::Rng;
+
+fn setup(dataset: &str, aux: &str) -> Option<(Rc<PjrtRuntime>, PjrtEngine, Manifest)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let rt = PjrtRuntime::new().expect("pjrt client");
+    let engine = PjrtEngine::new(rt.clone(), &manifest, dataset, aux).expect("engine");
+    Some((rt, engine, manifest))
+}
+
+fn rand_batch(e: &impl SplitEngine, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..e.batch() * e.input_len())
+        .map(|_| rng.normal() as f32 * 0.5)
+        .collect();
+    let y: Vec<i32> = (0..e.batch()).map(|_| rng.below(e.classes() as u64) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn femnist_full_split_training_path() {
+    let Some((_rt, e, m)) = setup("femnist", "cnn8") else { return };
+    let cfg = m.config("femnist").unwrap();
+    let mut rng = Rng::new(1);
+    let mut xc = init_flat(&cfg.client_layout, &mut rng.split_str("c"));
+    let mut ac = init_flat(&cfg.aux("cnn8").unwrap().layout, &mut rng.split_str("a"));
+    let mut xs = init_flat(&cfg.server_layout, &mut rng.split_str("s"));
+    assert_eq!(xc.len(), 18_816);
+    assert_eq!(xs.len(), 1_187_774);
+    assert_eq!(ac.len(), 72_006);
+
+    let (x, y) = rand_batch(&e, 2);
+
+    // --- auxiliary-network local training (CSE-FSL client, Eq. (8))
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for i in 0..8 {
+        let out = e.client_train_step(&xc, &ac, &x, &y, 0.01, i).unwrap();
+        xc = out.new_client;
+        ac = out.new_aux;
+        first_loss.get_or_insert(out.loss);
+        last_loss = out.loss;
+        assert!(out.loss.is_finite());
+        assert!(out.grad_norm > 0.0);
+    }
+    assert!(
+        last_loss < first_loss.unwrap(),
+        "client loss did not fall: {first_loss:?} -> {last_loss}"
+    );
+
+    // --- smashed upload + event-triggered server update (Eq. (11))
+    let sm = e.client_fwd(&xc, &x, 7).unwrap();
+    assert_eq!(sm.len(), e.batch() * e.smashed_len());
+    let sm2 = e.client_fwd(&xc, &x, 7).unwrap();
+    assert_eq!(sm, sm2, "dropout must replay for equal seeds");
+    let sm3 = e.client_fwd(&xc, &x, 8).unwrap();
+    assert_ne!(sm, sm3, "different seed must change dropout");
+
+    let mut sfirst = None;
+    let mut slast = 0.0;
+    for i in 0..8 {
+        let out = e.server_train_step(&xs, &sm, &y, 0.005, i).unwrap();
+        xs = out.new_server;
+        sfirst.get_or_insert(out.loss);
+        slast = out.loss;
+    }
+    assert!(slast < sfirst.unwrap(), "server loss did not fall");
+
+    // --- full-model eval
+    let logits = e.eval_step(&xc, &xs, &x).unwrap();
+    assert_eq!(logits.len(), e.batch() * e.classes());
+    assert!(logits.iter().all(|v| v.is_finite()));
+
+    // --- aux-head eval
+    let alogits = e.aux_eval_step(&xc, &ac, &x).unwrap();
+    assert_eq!(alogits.len(), e.batch() * e.classes());
+}
+
+#[test]
+fn femnist_splitfed_grad_path_matches_training_semantics() {
+    let Some((_rt, e, m)) = setup("femnist", "mlp") else { return };
+    let cfg = m.config("femnist").unwrap();
+    let mut rng = Rng::new(3);
+    let xc = init_flat(&cfg.client_layout, &mut rng.split_str("c"));
+    let xs = init_flat(&cfg.server_layout, &mut rng.split_str("s"));
+    let (x, y) = rand_batch(&e, 4);
+
+    let seed = 11;
+    let sm = e.client_fwd(&xc, &x, seed).unwrap();
+    let out = e.server_fwd_bwd(&xs, &sm, &y, 0.01, seed, 0.0).unwrap();
+    assert_eq!(out.grad_smashed.len(), sm.len());
+    assert!(out.loss.is_finite());
+    let (xc2, gnorm) = e.client_bwd(&xc, &x, &out.grad_smashed, 0.01, seed, 0.0).unwrap();
+    assert_eq!(xc2.len(), xc.len());
+    assert!(gnorm > 0.0);
+    // the update must actually move the client model
+    let moved = xc.iter().zip(&xc2).any(|(a, b)| a != b);
+    assert!(moved);
+
+    // clipping caps the returned cut-layer gradient
+    let clipped = e.server_fwd_bwd(&xs, &sm, &y, 0.01, seed, 1e-3).unwrap();
+    let norm: f32 = clipped.grad_smashed.iter().map(|g| g * g).sum::<f32>().sqrt();
+    assert!(norm <= 1e-3 * 1.01, "clip violated: {norm}");
+}
+
+#[test]
+fn executables_are_cached_per_entry() {
+    let Some((rt, e, _m)) = setup("femnist", "cnn2") else { return };
+    let (x, y) = rand_batch(&e, 5);
+    let xc = vec![0.01f32; e.client_size()];
+    let ac = vec![0.01f32; e.aux_size()];
+    let before = *rt.compiles.borrow();
+    for i in 0..3 {
+        e.client_train_step(&xc, &ac, &x, &y, 0.0, i).unwrap();
+    }
+    let after = *rt.compiles.borrow();
+    assert_eq!(after - before, 1, "entry must compile exactly once");
+}
+
+#[test]
+fn lr_zero_is_identity_through_pjrt() {
+    let Some((_rt, e, m)) = setup("femnist", "cnn2") else { return };
+    let cfg = m.config("femnist").unwrap();
+    let mut rng = Rng::new(6);
+    let xc = init_flat(&cfg.client_layout, &mut rng.split_str("c"));
+    let ac = init_flat(&cfg.aux("cnn2").unwrap().layout, &mut rng.split_str("a"));
+    let (x, y) = rand_batch(&e, 7);
+    let out = e.client_train_step(&xc, &ac, &x, &y, 0.0, 0).unwrap();
+    assert_eq!(out.new_client, xc);
+    assert_eq!(out.new_aux, ac);
+}
