@@ -87,7 +87,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("simulated time      : {:.2} s   server idle {:.0}%",
         rec.sim_time, rec.server_idle_fraction * 100.0);
     println!("wall-clock          : {:.1} s ({} PJRT executables compiled)",
-        wall.as_secs_f64(), rt.compiles.borrow());
+        wall.as_secs_f64(), rt.compiles());
     println!("\nasync timeline (first rounds):\n{}",
         trainer.timeline.ascii_gantt(100));
     Ok(())

@@ -5,7 +5,7 @@
 use std::time::Duration;
 
 use cse_fsl::comm::accounting::{table2, CommLedger, MsgKind, WireSizes};
-use cse_fsl::coordinator::config::TrainConfig;
+use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
 use cse_fsl::coordinator::methods::Method;
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
@@ -49,6 +49,68 @@ fn main() {
         });
     }
     bench.report();
+
+    // --- the parallel round engine: sequential vs threaded client
+    // fan-out at 8 mock clients. The engine is sized so one client's
+    // local round costs real work (paper-scale flat vectors), making the
+    // fan-out, not the harness, the measured quantity. Results are
+    // bit-identical across strategies (tests/determinism_golden.rs);
+    // only wall-clock may differ.
+    let heavy_spec = SyntheticSpec {
+        height: 16,
+        width: 16,
+        channels: 2,
+        classes: 10,
+        ..SyntheticSpec::cifar_like()
+    };
+    let heavy_train = generate(&heavy_spec, 1024, 3);
+    let heavy_test = generate(&heavy_spec, 64, 4);
+    // batch 16, input 512, smashed 256; client 262k / aux 32k / server 64k params.
+    let heavy = MockEngine::new(16, 10, 512, 256, 262_144, 32_768, 65_536, 9);
+    let n_clients = 8;
+    let run_fanout = |par: Parallelism| {
+        let cfg = TrainConfig {
+            h: 2,
+            eval_every: 0,
+            agg_every: 1000,
+            lr0: 0.05,
+            parallelism: par,
+            ..TrainConfig::new(Method::CseFsl)
+        }
+        .with_rounds(6);
+        let setup = TrainerSetup {
+            train: &heavy_train,
+            test: &heavy_test,
+            partition: iid(&heavy_train, n_clients, &mut Rng::new(7)),
+            net: NetModel::edge_default(),
+            client_layout: None,
+            server_layout: None,
+            aux_layout: None,
+            label: "fanout".into(),
+        };
+        let mut tr = Trainer::new(&heavy, cfg, setup).unwrap();
+        tr.run().unwrap()
+    };
+    let mut bench = Bench::new("coordinator/parallelism")
+        .with_times(Duration::from_millis(300), Duration::from_millis(1500));
+    let seq_ns =
+        bench.run("seq_8clients_h2_6rounds", || run_fanout(Parallelism::Sequential)).median_ns;
+    let thr2_ns = bench
+        .run("threads2_8clients_h2_6rounds", || run_fanout(Parallelism::Threads(2)))
+        .median_ns;
+    let thr4_ns = bench
+        .run("threads4_8clients_h2_6rounds", || run_fanout(Parallelism::Threads(4)))
+        .median_ns;
+    let thr8_ns = bench
+        .run("threads8_8clients_h2_6rounds", || run_fanout(Parallelism::Threads(8)))
+        .median_ns;
+    bench.report();
+    println!(
+        "\nfan-out scaling at 8 clients (median): threads2 {:.2}x, threads4 {:.2}x, threads8 {:.2}x vs sequential",
+        seq_ns / thr2_ns,
+        seq_ns / thr4_ns,
+        seq_ns / thr8_ns,
+    );
 
     // --- FedAvg at the paper's exact model sizes (Table II aggregation)
     let mut bench = Bench::new("coordinator/fedavg");

@@ -59,11 +59,20 @@ impl MsgKind {
 }
 
 /// The measured communication ledger.
-#[derive(Clone, Debug, Default)]
+///
+/// Every message is recorded under two views that must stay conserved:
+/// the **server-side view** (totals per [`MsgKind`]) and the
+/// **client-side view** (per-client, per-kind totals). Ledgers are
+/// mergeable: the parallel round engine gives each client worker its own
+/// ledger and folds them into the trainer's in canonical client order,
+/// which yields a map-for-map identical ledger to the sequential
+/// schedule (BTreeMaps are order-insensitive, so equality is exact).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CommLedger {
     bytes: BTreeMap<MsgKind, u64>,
     counts: BTreeMap<MsgKind, u64>,
     per_client_bytes: BTreeMap<usize, u64>,
+    per_client_kind: BTreeMap<(usize, MsgKind), u64>,
 }
 
 impl CommLedger {
@@ -75,6 +84,33 @@ impl CommLedger {
         *self.bytes.entry(kind).or_default() += bytes;
         *self.counts.entry(kind).or_default() += 1;
         *self.per_client_bytes.entry(client).or_default() += bytes;
+        *self.per_client_kind.entry((client, kind)).or_default() += bytes;
+    }
+
+    /// Fold another ledger into this one (all views summed).
+    pub fn merge(&mut self, other: &CommLedger) {
+        for (&k, &b) in &other.bytes {
+            *self.bytes.entry(k).or_default() += b;
+        }
+        for (&k, &c) in &other.counts {
+            *self.counts.entry(k).or_default() += c;
+        }
+        for (&c, &b) in &other.per_client_bytes {
+            *self.per_client_bytes.entry(c).or_default() += b;
+        }
+        for (&ck, &b) in &other.per_client_kind {
+            *self.per_client_kind.entry(ck).or_default() += b;
+        }
+    }
+
+    /// Bytes of `kind` attributed to `client` (client-side view).
+    pub fn client_kind_bytes(&self, client: usize, kind: MsgKind) -> u64 {
+        self.per_client_kind.get(&(client, kind)).copied().unwrap_or(0)
+    }
+
+    /// All client ids with recorded traffic, ascending.
+    pub fn clients(&self) -> Vec<usize> {
+        self.per_client_bytes.keys().copied().collect()
     }
 
     pub fn bytes_of(&self, kind: MsgKind) -> u64 {
@@ -180,12 +216,154 @@ pub mod table2 {
     }
 }
 
+/// Generalized closed forms for a FULL RUN at full participation —
+/// `rounds` communication rounds with an aggregation every `agg_every`
+/// rounds. The per-epoch Table II forms are the special case
+/// `rounds = (|D_i|/batch)/h`, `agg_every = rounds` (asserted by
+/// `tests/comm_properties.rs`); the property suite checks the live
+/// `CommLedger` against these for random configurations.
+pub mod predict {
+    use super::{MsgKind, WireSizes};
+
+    /// The two wire-relevant method capabilities (decoupled from
+    /// `coordinator::methods::Method` so `comm` stays a leaf module).
+    #[derive(Clone, Copy, Debug)]
+    pub struct TrafficProfile {
+        /// Server returns cut-layer gradients per batch (FSL_MC/FSL_OC).
+        pub grad_downlink: bool,
+        /// Client aux nets ride along with model aggregation
+        /// (FSL_AN/CSE_FSL).
+        pub uses_aux: bool,
+    }
+
+    /// Expected bytes per message kind over a whole run, full
+    /// participation of `n` clients with per-upload batch size `batch`.
+    pub fn run_kind_bytes(
+        p: TrafficProfile,
+        n: u64,
+        batch: u64,
+        rounds: u64,
+        agg_every: u64,
+        w: &WireSizes,
+    ) -> Vec<(MsgKind, u64)> {
+        let aggs = rounds / agg_every;
+        let per_round_up = n * batch;
+        let mut out = vec![
+            (MsgKind::SmashedUpload, rounds * per_round_up * w.smashed_per_sample),
+            (MsgKind::LabelUpload, rounds * per_round_up * w.label),
+            (
+                MsgKind::GradDownload,
+                if p.grad_downlink { rounds * per_round_up * w.smashed_per_sample } else { 0 },
+            ),
+            (MsgKind::ClientModelUpload, aggs * n * w.client_model),
+            (MsgKind::ClientModelDownload, aggs * n * w.client_model),
+        ];
+        if p.uses_aux {
+            out.push((MsgKind::AuxModelUpload, aggs * n * w.aux_model));
+            out.push((MsgKind::AuxModelDownload, aggs * n * w.aux_model));
+        } else {
+            out.push((MsgKind::AuxModelUpload, 0));
+            out.push((MsgKind::AuxModelDownload, 0));
+        }
+        out
+    }
+
+    /// (uplink, downlink) byte totals for a whole run.
+    pub fn run_totals(
+        p: TrafficProfile,
+        n: u64,
+        batch: u64,
+        rounds: u64,
+        agg_every: u64,
+        w: &WireSizes,
+    ) -> (u64, u64) {
+        let mut up = 0;
+        let mut down = 0;
+        for (kind, bytes) in run_kind_bytes(p, n, batch, rounds, agg_every, w) {
+            match kind.dir() {
+                super::Dir::Up => up += bytes,
+                super::Dir::Down => down += bytes,
+            }
+        }
+        (up, down)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn wires() -> WireSizes {
         WireSizes::new(2304, 107_328, 23_050)
+    }
+
+    #[test]
+    fn merge_equals_single_ledger() {
+        let mut whole = CommLedger::new();
+        let mut a = CommLedger::new();
+        let mut b = CommLedger::new();
+        for (ledger_pair, client, kind, bytes) in [
+            (0, 0usize, MsgKind::SmashedUpload, 100u64),
+            (0, 0, MsgKind::LabelUpload, 4),
+            (1, 1, MsgKind::SmashedUpload, 100),
+            (1, 0, MsgKind::GradDownload, 64),
+        ] {
+            whole.record(client, kind, bytes);
+            if ledger_pair == 0 {
+                a.record(client, kind, bytes);
+            } else {
+                b.record(client, kind, bytes);
+            }
+        }
+        let mut merged = CommLedger::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged, whole);
+        assert_eq!(merged.client_kind_bytes(0, MsgKind::SmashedUpload), 100);
+        assert_eq!(merged.client_kind_bytes(1, MsgKind::SmashedUpload), 100);
+        assert_eq!(merged.clients(), vec![0, 1]);
+    }
+
+    #[test]
+    fn per_kind_views_are_conserved() {
+        let mut l = CommLedger::new();
+        l.record(0, MsgKind::SmashedUpload, 10);
+        l.record(2, MsgKind::SmashedUpload, 30);
+        l.record(2, MsgKind::GradDownload, 7);
+        for kind in MsgKind::ALL {
+            let client_sum: u64 =
+                l.clients().iter().map(|&c| l.client_kind_bytes(c, kind)).sum();
+            assert_eq!(client_sum, l.bytes_of(kind), "{kind:?}");
+        }
+        for c in l.clients() {
+            let kind_sum: u64 =
+                MsgKind::ALL.iter().map(|&k| l.client_kind_bytes(c, k)).sum();
+            assert_eq!(kind_sum, l.client_bytes(c));
+        }
+    }
+
+    #[test]
+    fn predict_reduces_to_table2_epoch_forms() {
+        let w = wires();
+        let (n, batch) = (5u64, 50u64);
+        // One epoch of CSE_FSL_h: |D_i| = batch*h*rounds, one aggregation.
+        for h in [1u64, 5, 10] {
+            let rounds = 8;
+            let d_i = batch * h * rounds;
+            let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+            let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+            assert_eq!(up + down, table2::cse_fsl(n, d_i, h, &w), "h={h}");
+        }
+        // One epoch of FSL_MC: h=1, rounds = |D_i|/batch.
+        let rounds = 12;
+        let d_i = batch * rounds;
+        let p = predict::TrafficProfile { grad_downlink: true, uses_aux: false };
+        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        assert_eq!(up + down, table2::fsl_mc(n, d_i, &w));
+        // One epoch of FSL_AN: no grad downlink, aux rides along.
+        let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        assert_eq!(up + down, table2::fsl_an(n, d_i, &w));
     }
 
     #[test]

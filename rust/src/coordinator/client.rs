@@ -6,6 +6,13 @@ use crate::sim::netmodel::ClientProfile;
 use crate::util::prng::Rng;
 
 /// One federated client (Algorithm 1 state).
+///
+/// Must stay `Send`: the parallel round engine hands each participating
+/// client's `&mut ClientState` to a scoped worker thread. All randomness
+/// a client consumes (its batcher stream, its dropout-seed stream) is
+/// owned here, derived from `root.split(1000 + id)` at construction — so
+/// client trajectories are independent of both scheduling and the fan-out
+/// strategy.
 pub struct ClientState {
     pub id: usize,
     /// Client-side model x_{c,i}.
@@ -106,6 +113,12 @@ mod tests {
         let s2: Vec<i32> = (0..100).map(|_| c2.next_seed()).collect();
         assert_eq!(s, s2);
         assert!(s.iter().all(|&x| x >= 0));
+    }
+
+    #[test]
+    fn client_state_is_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ClientState>();
     }
 
     #[test]

@@ -2,6 +2,69 @@
 
 use super::methods::Method;
 
+/// Client fan-out strategy for the local-training phase of a round.
+///
+/// The paper's clients are fire-and-forget — they never wait for server
+/// gradients — so their local work is embarrassingly parallel. `Threads`
+/// runs it on a scoped thread pool; results are merged in canonical
+/// order (client id, then time) so a parallel run's `RunRecord` is
+/// **bit-identical** to the sequential one (enforced by
+/// `tests/determinism_golden.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Parallelism {
+    /// One client at a time (the reference schedule).
+    #[default]
+    Sequential,
+    /// Fan client work out over `n` worker threads (n >= 1).
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// One worker per hardware core (what `--parallelism auto` means).
+    pub fn auto() -> Self {
+        Parallelism::Threads(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+
+    /// Worker threads actually used for `items` units of work.
+    pub fn worker_count(self, items: usize) -> usize {
+        match self {
+            Parallelism::Sequential => 1,
+            Parallelism::Threads(n) => n.clamp(1, items.max(1)),
+        }
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Parallelism::Sequential => write!(f, "seq"),
+            Parallelism::Threads(n) => write!(f, "threads{n}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Parallelism {
+    type Err = String;
+
+    /// `seq` / `sequential` / `0` => Sequential; `auto` => one thread per
+    /// hardware core; any integer n >= 1 => Threads(n).
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "seq" | "sequential" => Ok(Parallelism::Sequential),
+            "auto" => Ok(Parallelism::auto()),
+            other => match other.parse::<usize>() {
+                Ok(0) => Ok(Parallelism::Sequential),
+                Ok(n) => Ok(Parallelism::Threads(n)),
+                Err(_) => Err(format!(
+                    "bad parallelism {s:?} (expected seq | auto | <threads>)"
+                )),
+            },
+        }
+    }
+}
+
 /// Order in which the server consumes arriving smashed-data uploads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ArrivalOrder {
@@ -46,6 +109,8 @@ pub struct TrainConfig {
     pub arrival: ArrivalOrder,
     /// Record gradient norms (Props 1-2 traces).
     pub track_grad_norms: bool,
+    /// Client fan-out strategy (bit-deterministic either way).
+    pub parallelism: Parallelism,
 }
 
 impl TrainConfig {
@@ -66,7 +131,13 @@ impl TrainConfig {
             eval_max_batches: 0,
             arrival: ArrivalOrder::ByDelay,
             track_grad_norms: false,
+            parallelism: Parallelism::Sequential,
         }
+    }
+
+    pub fn with_parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
     }
 
     pub fn with_h(mut self, h: usize) -> Self {
@@ -152,6 +223,32 @@ mod tests {
         assert_eq!(c.active_clients(5), 3);
         c.participation = 0;
         assert_eq!(c.active_clients(5), 5);
+    }
+
+    #[test]
+    fn parallelism_parse_display_and_workers() {
+        use std::str::FromStr;
+        assert_eq!(Parallelism::from_str("seq"), Ok(Parallelism::Sequential));
+        assert_eq!(Parallelism::from_str("sequential"), Ok(Parallelism::Sequential));
+        assert_eq!(Parallelism::from_str("0"), Ok(Parallelism::Sequential));
+        assert_eq!(Parallelism::from_str("4"), Ok(Parallelism::Threads(4)));
+        assert!(Parallelism::from_str("sideways").is_err());
+        if let Ok(Parallelism::Threads(n)) = Parallelism::from_str("auto") {
+            assert!(n >= 1);
+        } else {
+            panic!("auto must map to Threads");
+        }
+        assert_eq!(Parallelism::from_str("auto").unwrap(), Parallelism::auto());
+        assert_eq!(Parallelism::Sequential.to_string(), "seq");
+        assert_eq!(Parallelism::Threads(4).to_string(), "threads4");
+        assert_eq!(Parallelism::Sequential.worker_count(8), 1);
+        assert_eq!(Parallelism::Threads(4).worker_count(8), 4);
+        assert_eq!(Parallelism::Threads(4).worker_count(2), 2, "never more workers than work");
+        assert_eq!(Parallelism::Threads(4).worker_count(0), 1);
+        assert_eq!(Parallelism::Threads(0).worker_count(8), 1);
+        assert_eq!(TrainConfig::new(Method::CseFsl).parallelism, Parallelism::Sequential);
+        let c = TrainConfig::new(Method::CseFsl).with_parallelism(Parallelism::Threads(2));
+        assert_eq!(c.parallelism, Parallelism::Threads(2));
     }
 
     #[test]

@@ -15,6 +15,26 @@
 //! uplink/downlink transmission, and server update costs all advance the
 //! clock, the timeline records every span, and the ledger records every
 //! byte — those feed Figs. 3/9 and Tables II/V.
+//!
+//! # The parallel round engine
+//!
+//! CSE-FSL clients are fire-and-forget — they never wait for server
+//! gradients — so the client phase of a round is embarrassingly
+//! parallel. With [`Parallelism::Threads`], client local training (and
+//! the phase-1 forwards of the SplitFed methods) fans out across a
+//! scoped thread pool ([`std::thread::scope`]): each worker drives its
+//! own [`ClientState`] with its already-independent per-client RNG
+//! streams, recording spans and wire bytes into worker-local
+//! [`Timeline`]/[`CommLedger`]s. The server side stays a single event
+//! loop draining arrivals exactly as before.
+//!
+//! **Determinism is a hard contract**: per-client results are merged in
+//! canonical order (client id, then time), so a parallel run's
+//! `RunRecord`, timeline, ledger, and model states are bit-identical to
+//! the sequential schedule's — enforced by `tests/determinism_golden.rs`
+//! for every method. See `coordinator/README.md` for the argument.
+
+use std::sync::mpsc;
 
 use crate::comm::accounting::{CommLedger, MsgKind, WireSizes};
 use crate::data::partition::Partition;
@@ -31,7 +51,7 @@ use crate::storage;
 use crate::util::prng::Rng;
 
 use super::client::ClientState;
-use super::config::{ArrivalOrder, TrainConfig};
+use super::config::{ArrivalOrder, Parallelism, TrainConfig};
 
 use super::server::{ServerState, SmashedMsg};
 
@@ -63,6 +83,95 @@ pub struct TrainerSetup<'a> {
     pub server_layout: Option<&'a Layout>,
     pub aux_layout: Option<&'a Layout>,
     pub label: String,
+}
+
+/// Run `work(position, client_id, client)` once per participant, fanned
+/// out according to `parallelism`, and return the results **in
+/// participant order** (ascending client id — the canonical merge order
+/// of the deterministic parallel engine).
+///
+/// `participants` must be sorted and duplicate-free (guaranteed by
+/// `select_participants`). Work items are dealt round-robin to scoped
+/// worker threads; each worker owns disjoint `&mut ClientState`s, so no
+/// client state is ever shared. The first error in canonical order wins,
+/// matching sequential error reporting.
+fn fanout_clients<T, F>(
+    parallelism: Parallelism,
+    clients: &mut [ClientState],
+    participants: &[usize],
+    work: F,
+) -> Result<Vec<T>, EngineError>
+where
+    T: Send,
+    F: Fn(usize, usize, &mut ClientState) -> Result<T, EngineError> + Sync,
+{
+    debug_assert!(
+        participants.windows(2).all(|w| w[0] < w[1]),
+        "participants must be sorted and distinct"
+    );
+    // Disjoint mutable borrows for the participant set, ascending.
+    let mut refs: Vec<&mut ClientState> = Vec::with_capacity(participants.len());
+    {
+        let mut want = participants.iter().copied().peekable();
+        for (i, c) in clients.iter_mut().enumerate() {
+            if want.peek() == Some(&i) {
+                want.next();
+                refs.push(c);
+            }
+        }
+        assert!(want.peek().is_none(), "participant id out of range");
+    }
+    let workers = parallelism.worker_count(refs.len());
+    if workers <= 1 {
+        // Reference schedule: no thread machinery at all.
+        let mut out = Vec::with_capacity(refs.len());
+        for (pos, c) in refs.into_iter().enumerate() {
+            out.push(work(pos, participants[pos], c)?);
+        }
+        return Ok(out);
+    }
+    let n = refs.len();
+    let work = &work;
+    let mut slots: Vec<Option<Result<T, EngineError>>> = std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, EngineError>)>();
+        let mut buckets: Vec<Vec<(usize, &mut ClientState)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (pos, c) in refs.into_iter().enumerate() {
+            buckets[pos % workers].push((pos, c));
+        }
+        for bucket in buckets {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                for (pos, c) in bucket {
+                    let result = work(pos, participants[pos], c);
+                    let failed = result.is_err();
+                    if tx.send((pos, result)).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<T, EngineError>>> = (0..n).map(|_| None).collect();
+        for (pos, result) in rx {
+            slots[pos] = Some(result);
+        }
+        slots
+    });
+    let mut out = Vec::with_capacity(n);
+    for slot in slots.iter_mut() {
+        match slot.take() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            // A worker only skips positions after reporting an error at
+            // an earlier canonical position, so this is unreachable; keep
+            // it as a defensive invariant rather than a panic.
+            None => {
+                return Err(EngineError::Parallel("worker dropped a client result".into()))
+            }
+        }
+    }
+    Ok(out)
 }
 
 impl<'a, E: SplitEngine> Trainer<'a, E> {
@@ -232,7 +341,11 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     }
 
     /// FSL_AN / CSE_FSL round: h local auxiliary-loss batches per client,
-    /// then one smashed upload (Algorithm 1).
+    /// then one smashed upload (Algorithm 1). Client work fans out
+    /// according to `cfg.parallelism`; every per-client artifact (spans,
+    /// wire bytes, the smashed message) is produced worker-locally and
+    /// merged back in canonical client-id order, so the fan-out is
+    /// invisible in the run record.
     fn local_round(
         &mut self,
         participants: &[usize],
@@ -241,62 +354,95 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         client_gnorms: &mut Vec<f32>,
         msgs: &mut Vec<SmashedMsg>,
     ) -> Result<(), EngineError> {
+        struct LocalOutcome {
+            losses: Vec<f32>,
+            gnorms: Vec<f32>,
+            timeline: Timeline,
+            ledger: CommLedger,
+            msg: SmashedMsg,
+        }
+        let engine = self.engine;
+        let train = self.train;
         let h = self.cfg.h;
-        let payload = self.smashed_bytes() + self.label_bytes();
-        for &i in participants {
-            let c = &mut self.clients[i];
-            let start = c.ready_at;
-            let mut last_seed = 0;
-            for _ in 0..h {
-                c.load_batch(self.train);
-                last_seed = c.next_seed();
-                let out = self.engine.client_train_step(
-                    &c.xc, &c.ac, &c.images, &c.labels, lr, last_seed,
-                )?;
-                c.xc = out.new_client;
-                c.ac = out.new_aux;
-                train_losses.push(out.loss);
-                client_gnorms.push(out.grad_norm);
-            }
-            // Smashed data of the *updated* model on the last batch
-            // (Algorithm 1 line 9: g_{x^{t,h}}(z)).
-            let smashed = self.engine.client_fwd(&c.xc, &c.images, last_seed)?;
-            let mut drng = self.rng.split(i as u64);
-            let t_compute = c.profile.compute_delay(h, &mut drng);
-            let t_up = c.profile.upload_delay(payload, &mut drng);
-            self.timeline.record(
-                SpanKind::ClientCompute,
-                Some(i),
-                start,
-                start + t_compute,
-                format!("train h={h}"),
-            );
-            self.timeline.record(
-                SpanKind::Upload,
-                Some(i),
-                start + t_compute,
-                start + t_compute + t_up,
-                "smashed",
-            );
-            self.ledger.record(i, MsgKind::SmashedUpload, self.smashed_bytes());
-            self.ledger.record(i, MsgKind::LabelUpload, self.label_bytes());
-            msgs.push(SmashedMsg {
-                client: i,
-                smashed,
-                labels: self.clients[i].labels.clone(),
-                arrival: start + t_compute + t_up,
-                seed: last_seed,
-            });
-            // Fire-and-forget: the client is free as soon as the upload
-            // leaves — it never waits for server gradients.
-            self.clients[i].ready_at = start + t_compute + t_up;
+        let smashed_bytes = self.smashed_bytes();
+        let label_bytes = self.label_bytes();
+        let payload = smashed_bytes + label_bytes;
+        // Snapshot of the trainer stream: `split` derives child streams
+        // without mutating, so every worker sees exactly the state the
+        // sequential loop would.
+        let round_rng = self.rng.clone();
+        let outcomes = fanout_clients(
+            self.cfg.parallelism,
+            &mut self.clients,
+            participants,
+            |_pos, i, c: &mut ClientState| {
+                let start = c.ready_at;
+                let mut losses = Vec::with_capacity(h);
+                let mut gnorms = Vec::with_capacity(h);
+                let mut last_seed = 0;
+                for _ in 0..h {
+                    c.load_batch(train);
+                    last_seed = c.next_seed();
+                    let out = engine.client_train_step(
+                        &c.xc, &c.ac, &c.images, &c.labels, lr, last_seed,
+                    )?;
+                    c.xc = out.new_client;
+                    c.ac = out.new_aux;
+                    losses.push(out.loss);
+                    gnorms.push(out.grad_norm);
+                }
+                // Smashed data of the *updated* model on the last batch
+                // (Algorithm 1 line 9: g_{x^{t,h}}(z)).
+                let smashed = engine.client_fwd(&c.xc, &c.images, last_seed)?;
+                let mut drng = round_rng.split(i as u64);
+                let t_compute = c.profile.compute_delay(h, &mut drng);
+                let t_up = c.profile.upload_delay(payload, &mut drng);
+                let mut timeline = Timeline::default();
+                timeline.record(
+                    SpanKind::ClientCompute,
+                    Some(i),
+                    start,
+                    start + t_compute,
+                    format!("train h={h}"),
+                );
+                timeline.record(
+                    SpanKind::Upload,
+                    Some(i),
+                    start + t_compute,
+                    start + t_compute + t_up,
+                    "smashed",
+                );
+                let mut ledger = CommLedger::new();
+                ledger.record(i, MsgKind::SmashedUpload, smashed_bytes);
+                ledger.record(i, MsgKind::LabelUpload, label_bytes);
+                let msg = SmashedMsg {
+                    client: i,
+                    smashed,
+                    labels: c.labels.clone(),
+                    arrival: start + t_compute + t_up,
+                    seed: last_seed,
+                };
+                // Fire-and-forget: the client is free as soon as the
+                // upload leaves — it never waits for server gradients.
+                c.ready_at = start + t_compute + t_up;
+                Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg })
+            },
+        )?;
+        for o in outcomes {
+            train_losses.extend_from_slice(&o.losses);
+            client_gnorms.extend_from_slice(&o.gnorms);
+            self.timeline.append(o.timeline);
+            self.ledger.merge(&o.ledger);
+            msgs.push(o.msg);
         }
         Ok(())
     }
 
     /// FSL_MC / FSL_OC round: one interactive split batch per client —
     /// forward, smashed upload, server fwd/bwd, gradient downlink, client
-    /// backward. The client *blocks* on the server round trip.
+    /// backward. The client *blocks* on the server round trip, so only
+    /// phase 1 (forward + upload) fans out; phase 2 is inherently the
+    /// serialized server loop.
     fn splitfed_round(
         &mut self,
         participants: &[usize],
@@ -305,37 +451,60 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         train_losses: &mut Vec<f32>,
         client_gnorms: &mut Vec<f32>,
     ) -> Result<(), EngineError> {
-        // Phase 1: forwards + uploads (parallel across clients).
         struct Pending {
             client: usize,
             smashed: Vec<f32>,
             seed: i32,
             arrival: f64,
         }
-        let mut pend: Vec<Pending> = Vec::new();
-        let payload = self.smashed_bytes() + self.label_bytes();
-        for &i in participants {
-            let c = &mut self.clients[i];
-            let start = c.ready_at;
-            c.load_batch(self.train);
-            let seed = c.next_seed();
-            let smashed = self.engine.client_fwd(&c.xc, &c.images, seed)?;
-            let mut drng = self.rng.split(i as u64 ^ 0x5F);
-            let t_fwd = c.profile.compute_delay(1, &mut drng) * 0.5;
-            let t_up = c.profile.upload_delay(payload, &mut drng);
-            self.timeline
-                .record(SpanKind::ClientCompute, Some(i), start, start + t_fwd, "fwd");
-            self.timeline.record(
-                SpanKind::Upload,
-                Some(i),
-                start + t_fwd,
-                start + t_fwd + t_up,
-                "smashed",
-            );
-            self.ledger.record(i, MsgKind::SmashedUpload, self.smashed_bytes());
-            self.ledger.record(i, MsgKind::LabelUpload, self.label_bytes());
-            pend.push(Pending { client: i, smashed, seed, arrival: start + t_fwd + t_up });
+        struct FwdOutcome {
+            timeline: Timeline,
+            ledger: CommLedger,
+            pend: Pending,
         }
+        // Phase 1: forwards + uploads (parallel across clients).
+        let engine = self.engine;
+        let train = self.train;
+        let smashed_bytes = self.smashed_bytes();
+        let label_bytes = self.label_bytes();
+        let payload = smashed_bytes + label_bytes;
+        let round_rng = self.rng.clone();
+        let outcomes = fanout_clients(
+            self.cfg.parallelism,
+            &mut self.clients,
+            participants,
+            |_pos, i, c: &mut ClientState| {
+                let start = c.ready_at;
+                c.load_batch(train);
+                let seed = c.next_seed();
+                let smashed = engine.client_fwd(&c.xc, &c.images, seed)?;
+                let mut drng = round_rng.split(i as u64 ^ 0x5F);
+                let t_fwd = c.profile.compute_delay(1, &mut drng) * 0.5;
+                let t_up = c.profile.upload_delay(payload, &mut drng);
+                let mut timeline = Timeline::default();
+                timeline.record(SpanKind::ClientCompute, Some(i), start, start + t_fwd, "fwd");
+                timeline.record(
+                    SpanKind::Upload,
+                    Some(i),
+                    start + t_fwd,
+                    start + t_fwd + t_up,
+                    "smashed",
+                );
+                let mut ledger = CommLedger::new();
+                ledger.record(i, MsgKind::SmashedUpload, smashed_bytes);
+                ledger.record(i, MsgKind::LabelUpload, label_bytes);
+                let pend =
+                    Pending { client: i, smashed, seed, arrival: start + t_fwd + t_up };
+                Ok(FwdOutcome { timeline, ledger, pend })
+            },
+        )?;
+        let mut pend: Vec<Pending> = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            self.timeline.append(o.timeline);
+            self.ledger.merge(&o.ledger);
+            pend.push(o.pend);
+        }
+        // Stable sort: equal arrivals keep canonical client-id order.
         pend.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
 
         // Phase 2: server processes sequentially; client backward after
@@ -406,9 +575,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             ArrivalOrder::ClientIndex => msgs.sort_by_key(|m| m.client),
             ArrivalOrder::Shuffled => self.rng.shuffle(&mut msgs),
         }
-        for m in msgs {
-            self.server.enqueue(m);
-        }
+        self.server.enqueue_all(msgs);
         let net_server = NetModel::edge_default().server_update_time;
         let mut losses = Vec::new();
         let mut gnorms = Vec::new();

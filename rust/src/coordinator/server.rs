@@ -61,6 +61,16 @@ impl ServerState {
         self.data_queue.push_back(msg);
     }
 
+    /// Enqueue a whole upload wave, preserving the given order (the
+    /// round engine pre-sorts by the configured [`ArrivalOrder`]).
+    ///
+    /// [`ArrivalOrder`]: super::config::ArrivalOrder
+    pub fn enqueue_all(&mut self, msgs: impl IntoIterator<Item = SmashedMsg>) {
+        for m in msgs {
+            self.enqueue(m);
+        }
+    }
+
     /// FedAvg the per-client server copies into a single model and reset
     /// every copy to it (SplitFed's server-side aggregation). No-op with
     /// a single copy.
@@ -109,17 +119,23 @@ mod tests {
     #[test]
     fn queue_fifo() {
         let mut s = ServerState::new(vec![0.0; 2], 1, 1, 1);
-        for i in 0..3 {
-            s.enqueue(SmashedMsg {
-                client: i,
-                smashed: vec![],
-                labels: vec![],
-                arrival: i as f64,
-                seed: 0,
-            });
-        }
+        s.enqueue_all((0..3).map(|i| SmashedMsg {
+            client: i,
+            smashed: vec![],
+            labels: vec![],
+            arrival: i as f64,
+            seed: 0,
+        }));
         assert_eq!(s.data_queue.pop_front().unwrap().client, 0);
         assert_eq!(s.data_queue.pop_front().unwrap().client, 1);
+    }
+
+    #[test]
+    fn smashed_msg_is_send() {
+        // The parallel round engine produces SmashedMsgs on worker
+        // threads and ships them back over a channel.
+        fn assert_send<T: Send>() {}
+        assert_send::<SmashedMsg>();
     }
 
     #[test]

@@ -8,9 +8,9 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
-use crate::coordinator::config::{ArrivalOrder, TrainConfig};
+use crate::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
 use crate::coordinator::methods::Method;
 use crate::coordinator::round::{Trainer, TrainerSetup};
 use crate::data::partition::{by_writer, dirichlet, equalize, iid, Partition};
@@ -159,6 +159,11 @@ pub struct RunSpec {
     pub lr0: f64,
     pub seed: u64,
     pub workload: Workload,
+    /// Client fan-out strategy. Deliberately NOT part of the cache key:
+    /// the parallel round engine is bit-deterministic (see
+    /// coordinator/README.md), so sequential and threaded runs of the
+    /// same spec share one cached RunRecord.
+    pub parallelism: Parallelism,
 }
 
 impl RunSpec {
@@ -198,8 +203,8 @@ impl RunSpec {
 /// Engine + manifest cache shared by all drivers in one process.
 pub struct Harness {
     pub manifest: Manifest,
-    pub rt: Rc<PjrtRuntime>,
-    engines: BTreeMap<(String, String), Rc<PjrtEngine>>,
+    pub rt: Arc<PjrtRuntime>,
+    engines: BTreeMap<(String, String), Arc<PjrtEngine>>,
     pub out_dir: PathBuf,
 }
 
@@ -219,12 +224,12 @@ impl Harness {
         })
     }
 
-    pub fn engine(&mut self, dataset: &str, aux: &str) -> Result<Rc<PjrtEngine>, String> {
+    pub fn engine(&mut self, dataset: &str, aux: &str) -> Result<Arc<PjrtEngine>, String> {
         let key = (dataset.to_string(), aux.to_string());
         if let Some(e) = self.engines.get(&key) {
             return Ok(e.clone());
         }
-        let e = Rc::new(
+        let e = Arc::new(
             PjrtEngine::new(self.rt.clone(), &self.manifest, dataset, aux)
                 .map_err(|e| e.to_string())?,
         );
@@ -320,6 +325,7 @@ impl Harness {
             eval_max_batches: w.eval_max_batches,
             arrival: spec.arrival,
             track_grad_norms: true,
+            parallelism: spec.parallelism,
         };
         let setup = TrainerSetup {
             train: &train,
@@ -492,10 +498,16 @@ mod tests {
             lr0: 0.05,
             seed: 1,
             workload: cifar_workload(Scale::Quick),
+            parallelism: Parallelism::Sequential,
         };
         let mut other = base.clone();
         other.h = 10;
         assert_ne!(base.key(), other.key());
+        // Parallelism must NOT change the key: threaded runs are
+        // bit-identical to sequential ones and share the cache.
+        let mut other = base.clone();
+        other.parallelism = Parallelism::Threads(4);
+        assert_eq!(base.key(), other.key());
         let mut other = base.clone();
         other.dist = Dist::NonIidDirichlet;
         assert_ne!(base.key(), other.key());

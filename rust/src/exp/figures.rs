@@ -6,7 +6,7 @@
 //! data — DESIGN.md §Substitutions); the reproduction targets are the
 //! paper's *orderings and trends*, restated in each driver's doc.
 
-use crate::coordinator::config::ArrivalOrder;
+use crate::coordinator::config::{ArrivalOrder, Parallelism};
 use crate::coordinator::methods::Method;
 use crate::metrics::recorder::RunRecord;
 use crate::util::csvio::Csv;
@@ -28,6 +28,9 @@ fn base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
         lr0: if dataset == "cifar" { 0.01 } else { 0.05 },
         seed: 1,
         workload: w,
+        // Figure sweeps default to the full-machine fan-out; results are
+        // bit-identical to Sequential (coordinator/README.md).
+        parallelism: Parallelism::auto(),
     }
 }
 

@@ -1,7 +1,7 @@
 //! Drivers for the paper's tables (II, III, IV, V).
 
 use crate::comm::accounting::{table2, WireSizes};
-use crate::coordinator::config::ArrivalOrder;
+use crate::coordinator::config::{ArrivalOrder, Parallelism};
 use crate::coordinator::methods::Method;
 use crate::storage::{server_storage_m, ModelSizes};
 
@@ -174,5 +174,6 @@ fn fig_base(dataset: &str, aux: &str, w: super::common::Workload) -> RunSpec {
         lr0: if dataset == "cifar" { 0.01 } else { 0.05 },
         seed: 1,
         workload: w,
+        parallelism: Parallelism::auto(),
     }
 }

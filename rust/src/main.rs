@@ -9,7 +9,7 @@
 //!
 //! Everything requires `make artifacts` to have produced `artifacts/`.
 
-use cse_fsl::coordinator::config::ArrivalOrder;
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism};
 use cse_fsl::coordinator::methods::Method;
 use cse_fsl::exp::common::{cifar_workload, femnist_workload, Dist, Harness, RunSpec, Scale};
 use cse_fsl::exp::{figures, tables};
@@ -62,6 +62,11 @@ fn cmd_run(argv: &[String]) -> i32 {
         .opt("seed", "1", "experiment seed")
         .opt("scale", "ci", "workload preset: quick | ci | paper")
         .opt("out", "results", "output directory")
+        .opt(
+            "parallelism",
+            "auto",
+            "client fan-out: seq | auto | <threads> (bit-identical results either way)",
+        )
         .flag("shuffled-arrivals", "randomize server consumption order (Fig. 6)");
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -105,6 +110,9 @@ fn cmd_run(argv: &[String]) -> i32 {
             lr0: args.parse_as("lr").map_err(|e| e.to_string())?,
             seed: args.parse_as("seed").map_err(|e| e.to_string())?,
             workload,
+            parallelism: args
+                .parse_as::<Parallelism>("parallelism")
+                .map_err(|e| e.to_string())?,
         };
         let mut harness = Harness::new(args.get("out").unwrap())?;
         let rec = harness.run_cached(&spec)?;

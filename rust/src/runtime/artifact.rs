@@ -12,14 +12,43 @@ use std::path::{Path, PathBuf};
 use crate::model::layout::Layout;
 use crate::util::json::{Json, JsonError};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ArtifactError {
-    #[error("manifest io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest parse error: {0}")]
-    Json(#[from] JsonError),
-    #[error("manifest: {0}")]
+    Io(std::io::Error),
+    Json(JsonError),
     Invalid(String),
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "manifest io error: {e}"),
+            ArtifactError::Json(e) => write!(f, "manifest parse error: {e}"),
+            ArtifactError::Invalid(msg) => write!(f, "manifest: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            ArtifactError::Json(e) => Some(e),
+            ArtifactError::Invalid(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ArtifactError {
+    fn from(e: std::io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
+}
+
+impl From<JsonError> for ArtifactError {
+    fn from(e: JsonError) -> Self {
+        ArtifactError::Json(e)
+    }
 }
 
 /// dtype of a tensor argument/result.
@@ -48,6 +77,10 @@ pub struct TensorSig {
 impl TensorSig {
     pub fn len(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 
     fn from_json(j: &Json) -> Result<TensorSig, ArtifactError> {

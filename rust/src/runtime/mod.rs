@@ -24,14 +24,41 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum EngineError {
-    #[error("artifact error: {0}")]
-    Artifact(#[from] artifact::ArtifactError),
-    #[error("xla error: {0}")]
+    Artifact(artifact::ArtifactError),
     Xla(String),
-    #[error("shape error: {0}")]
     Shape(String),
+    /// A parallel round-engine worker failed outside an engine call
+    /// (lost result, poisoned channel). Never raised on the sequential
+    /// path.
+    Parallel(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Artifact(e) => write!(f, "artifact error: {e}"),
+            EngineError::Xla(msg) => write!(f, "xla error: {msg}"),
+            EngineError::Shape(msg) => write!(f, "shape error: {msg}"),
+            EngineError::Parallel(msg) => write!(f, "parallel engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Artifact(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<artifact::ArtifactError> for EngineError {
+    fn from(e: artifact::ArtifactError) -> Self {
+        EngineError::Artifact(e)
+    }
 }
 
 /// Output of one local client step (Eq. (8)).
@@ -64,7 +91,14 @@ pub struct ServerFwdBwdOut {
 ///
 /// All tensors are flat `Vec<f32>` / `Vec<i32>` in the layouts fixed by
 /// the manifest; batch size is baked in at AOT time.
-pub trait SplitEngine {
+///
+/// `Sync` is part of the contract: the coordinator's parallel round
+/// engine shares one engine reference across its client worker threads
+/// (`coordinator/round.rs`), so every implementation must be safe to
+/// call concurrently from `&self`. Engines must also be deterministic
+/// functions of their arguments — the parallel and sequential schedules
+/// are required to produce bit-identical runs.
+pub trait SplitEngine: Sync {
     fn batch(&self) -> usize;
     fn classes(&self) -> usize;
     fn input_len(&self) -> usize; // per sample

@@ -5,370 +5,601 @@
 //! instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1 would
 //! otherwise reject), compiled once per entry, and cached for the whole
 //! run. Marshalling is flat `Vec<f32>`/`Vec<i32>` ↔ `xla::Literal`.
+//!
+//! The XLA bindings are only present in environments that vendor the
+//! `xla` crate, so the real implementation is gated behind the `pjrt`
+//! cargo feature. Without it an API-compatible stub is compiled:
+//! construction fails with a clear error, the type system stays intact
+//! (`Harness`, examples, and benches build unchanged), and every test
+//! that needs real artifacts skips itself exactly as it does when
+//! `make artifacts` has not run.
+//!
+//! Both variants expose the same surface:
+//! * `PjrtRuntime::new() -> Result<Arc<PjrtRuntime>, EngineError>`
+//! * `PjrtRuntime::compiles() -> usize` (compilation counter)
+//! * `PjrtEngine::new(rt, &manifest, dataset, aux)` implementing
+//!   [`SplitEngine`] (which now requires `Sync` for the parallel round
+//!   engine — the runtime serializes PJRT access behind a mutex).
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::rc::Rc;
+#[cfg(feature = "pjrt")]
+pub use real::{Arg, PjrtEngine, PjrtRuntime, Value};
 
-use super::artifact::{AuxConfig, DatasetConfig, Dtype, Entry, Manifest, TensorSig};
-use super::{ClientStepOut, EngineError, ServerFwdBwdOut, ServerStepOut, SplitEngine};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{PjrtEngine, PjrtRuntime};
 
-fn xerr(e: xla::Error) -> EngineError {
-    EngineError::Xla(e.to_string())
-}
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Arc, Mutex};
 
-/// Shared PJRT client + compiled-executable cache. One per process;
-/// engines for different (dataset, aux) configs share it.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    /// Compilation stats (observability; quoted in EXPERIMENTS.md).
-    pub compiles: RefCell<usize>,
-}
+    use super::super::artifact::{AuxConfig, DatasetConfig, Dtype, Entry, Manifest, TensorSig};
+    use super::super::{
+        ClientStepOut, EngineError, ServerFwdBwdOut, ServerStepOut, SplitEngine,
+    };
 
-impl PjrtRuntime {
-    pub fn new() -> Result<Rc<Self>, EngineError> {
-        let client = xla::PjRtClient::cpu().map_err(xerr)?;
-        Ok(Rc::new(PjrtRuntime {
-            client,
-            exes: RefCell::new(HashMap::new()),
-            compiles: RefCell::new(0),
-        }))
+    fn xerr(e: xla::Error) -> EngineError {
+        EngineError::Xla(e.to_string())
     }
 
-    fn executable(&self, entry: &Entry) -> Result<Rc<xla::PjRtLoadedExecutable>, EngineError> {
-        let key = entry.file.to_string_lossy().to_string();
-        if let Some(exe) = self.exes.borrow().get(&key) {
-            return Ok(exe.clone());
+    /// Shared PJRT client + compiled-executable cache. One per process;
+    /// engines for different (dataset, aux) configs share it. All PJRT
+    /// calls are serialized behind `inner` — the CPU client is a single
+    /// device, so concurrent submission buys nothing, and the mutex makes
+    /// the engine `Sync` for the parallel coordinator.
+    pub struct PjrtRuntime {
+        inner: Mutex<Inner>,
+        compiles: AtomicUsize,
+    }
+
+    struct Inner {
+        client: xla::PjRtClient,
+        exes: HashMap<String, Arc<xla::PjRtLoadedExecutable>>,
+    }
+
+    // SAFETY: all access to the PJRT client and executable cache goes
+    // through the `inner` mutex; the raw xla handles are never shared
+    // across threads without it.
+    unsafe impl Send for PjrtRuntime {}
+    unsafe impl Sync for PjrtRuntime {}
+
+    impl PjrtRuntime {
+        pub fn new() -> Result<Arc<Self>, EngineError> {
+            let client = xla::PjRtClient::cpu().map_err(xerr)?;
+            Ok(Arc::new(PjrtRuntime {
+                inner: Mutex::new(Inner { client, exes: HashMap::new() }),
+                compiles: AtomicUsize::new(0),
+            }))
         }
-        let path = entry.file.to_str().ok_or_else(|| {
-            EngineError::Xla(format!("non-utf8 artifact path {:?}", entry.file))
-        })?;
-        let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp).map_err(xerr)?);
-        *self.compiles.borrow_mut() += 1;
-        self.exes.borrow_mut().insert(key, exe.clone());
-        Ok(exe)
-    }
-}
 
-/// Argument value passed to an entry.
-pub enum Arg<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
-    ScalarF32(f32),
-    ScalarI32(i32),
-}
+        /// Number of HLO entries compiled so far (observability; quoted
+        /// in EXPERIMENTS.md).
+        pub fn compiles(&self) -> usize {
+            self.compiles.load(Ordering::Relaxed)
+        }
 
-impl Arg<'_> {
-    fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal, EngineError> {
-        let want: usize = sig.len();
-        let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
-        match (self, sig.dtype) {
-            (Arg::F32(v), Dtype::F32) => {
-                if v.len() != want {
-                    return Err(EngineError::Shape(format!(
-                        "f32 arg len {} != sig {want} (shape {:?})",
-                        v.len(),
-                        sig.shape
-                    )));
-                }
-                xla::Literal::vec1(v).reshape(&dims).map_err(xerr)
+        fn executable(
+            &self,
+            inner: &mut Inner,
+            entry: &Entry,
+        ) -> Result<Arc<xla::PjRtLoadedExecutable>, EngineError> {
+            let key = entry.file.to_string_lossy().to_string();
+            if let Some(exe) = inner.exes.get(&key) {
+                return Ok(exe.clone());
             }
-            (Arg::I32(v), Dtype::I32) => {
-                if v.len() != want {
-                    return Err(EngineError::Shape(format!(
-                        "i32 arg len {} != sig {want}",
-                        v.len()
-                    )));
-                }
-                xla::Literal::vec1(v).reshape(&dims).map_err(xerr)
-            }
-            (Arg::ScalarF32(x), Dtype::F32) => {
-                if !sig.shape.is_empty() {
-                    return Err(EngineError::Shape("scalar f32 vs non-scalar sig".into()));
-                }
-                Ok(xla::Literal::scalar(*x))
-            }
-            (Arg::ScalarI32(x), Dtype::I32) => {
-                if !sig.shape.is_empty() {
-                    return Err(EngineError::Shape("scalar i32 vs non-scalar sig".into()));
-                }
-                Ok(xla::Literal::scalar(*x))
-            }
-            _ => Err(EngineError::Shape(format!(
-                "dtype mismatch against sig {:?}",
-                sig.dtype
-            ))),
-        }
-    }
-}
-
-/// A decoded result tensor.
-#[derive(Clone, Debug)]
-pub enum Value {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl Value {
-    pub fn into_f32(self) -> Result<Vec<f32>, EngineError> {
-        match self {
-            Value::F32(v) => Ok(v),
-            Value::I32(_) => Err(EngineError::Shape("expected f32 result".into())),
+            let path = entry.file.to_str().ok_or_else(|| {
+                EngineError::Xla(format!("non-utf8 artifact path {:?}", entry.file))
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(xerr)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = Arc::new(inner.client.compile(&comp).map_err(xerr)?);
+            self.compiles.fetch_add(1, Ordering::Relaxed);
+            inner.exes.insert(key, exe.clone());
+            Ok(exe)
         }
     }
 
-    pub fn scalar_f32(&self) -> Result<f32, EngineError> {
-        match self {
-            Value::F32(v) if v.len() == 1 => Ok(v[0]),
-            _ => Err(EngineError::Shape("expected scalar f32 result".into())),
+    /// Argument value passed to an entry.
+    pub enum Arg<'a> {
+        F32(&'a [f32]),
+        I32(&'a [i32]),
+        ScalarF32(f32),
+        ScalarI32(i32),
+    }
+
+    impl Arg<'_> {
+        fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal, EngineError> {
+            let want: usize = sig.len();
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            match (self, sig.dtype) {
+                (Arg::F32(v), Dtype::F32) => {
+                    if v.len() != want {
+                        return Err(EngineError::Shape(format!(
+                            "f32 arg len {} != sig {want} (shape {:?})",
+                            v.len(),
+                            sig.shape
+                        )));
+                    }
+                    xla::Literal::vec1(v).reshape(&dims).map_err(xerr)
+                }
+                (Arg::I32(v), Dtype::I32) => {
+                    if v.len() != want {
+                        return Err(EngineError::Shape(format!(
+                            "i32 arg len {} != sig {want}",
+                            v.len()
+                        )));
+                    }
+                    xla::Literal::vec1(v).reshape(&dims).map_err(xerr)
+                }
+                (Arg::ScalarF32(x), Dtype::F32) => {
+                    if !sig.shape.is_empty() {
+                        return Err(EngineError::Shape("scalar f32 vs non-scalar sig".into()));
+                    }
+                    Ok(xla::Literal::scalar(*x))
+                }
+                (Arg::ScalarI32(x), Dtype::I32) => {
+                    if !sig.shape.is_empty() {
+                        return Err(EngineError::Shape("scalar i32 vs non-scalar sig".into()));
+                    }
+                    Ok(xla::Literal::scalar(*x))
+                }
+                _ => Err(EngineError::Shape(format!(
+                    "dtype mismatch against sig {:?}",
+                    sig.dtype
+                ))),
+            }
         }
     }
-}
 
-impl PjrtRuntime {
-    /// Execute `entry` with `args`, returning decoded result tensors.
-    pub fn exec(&self, entry: &Entry, args: &[Arg<'_>]) -> Result<Vec<Value>, EngineError> {
-        if args.len() != entry.args.len() {
-            return Err(EngineError::Shape(format!(
-                "{}: {} args provided, {} expected",
-                entry.name,
-                args.len(),
-                entry.args.len()
-            )));
+    /// A decoded result tensor.
+    #[derive(Clone, Debug)]
+    pub enum Value {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+    }
+
+    impl Value {
+        pub fn into_f32(self) -> Result<Vec<f32>, EngineError> {
+            match self {
+                Value::F32(v) => Ok(v),
+                Value::I32(_) => Err(EngineError::Shape("expected f32 result".into())),
+            }
         }
-        let exe = self.executable(entry)?;
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .zip(&entry.args)
-            .map(|(a, sig)| a.to_literal(sig))
-            .collect::<Result<_, _>>()?;
-        let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?[0][0]
-            .to_literal_sync()
-            .map_err(xerr)?;
-        // aot.py lowers with return_tuple=True: output is always a tuple.
-        let parts = result.to_tuple().map_err(xerr)?;
-        if parts.len() != entry.results.len() {
-            return Err(EngineError::Shape(format!(
-                "{}: {} results, {} expected",
-                entry.name,
-                parts.len(),
-                entry.results.len()
-            )));
+
+        pub fn scalar_f32(&self) -> Result<f32, EngineError> {
+            match self {
+                Value::F32(v) if v.len() == 1 => Ok(v[0]),
+                _ => Err(EngineError::Shape("expected scalar f32 result".into())),
+            }
         }
-        parts
-            .into_iter()
-            .zip(&entry.results)
-            .map(|(lit, sig)| {
-                Ok(match sig.dtype {
-                    Dtype::F32 => Value::F32(lit.to_vec::<f32>().map_err(xerr)?),
-                    Dtype::I32 => Value::I32(lit.to_vec::<i32>().map_err(xerr)?),
+    }
+
+    impl PjrtRuntime {
+        /// Execute `entry` with `args`, returning decoded result tensors.
+        pub fn exec(&self, entry: &Entry, args: &[Arg<'_>]) -> Result<Vec<Value>, EngineError> {
+            if args.len() != entry.args.len() {
+                return Err(EngineError::Shape(format!(
+                    "{}: {} args provided, {} expected",
+                    entry.name,
+                    args.len(),
+                    entry.args.len()
+                )));
+            }
+            let mut inner = self
+                .inner
+                .lock()
+                .map_err(|_| EngineError::Parallel("pjrt runtime mutex poisoned".into()))?;
+            let exe = self.executable(&mut inner, entry)?;
+            let literals: Vec<xla::Literal> = args
+                .iter()
+                .zip(&entry.args)
+                .map(|(a, sig)| a.to_literal(sig))
+                .collect::<Result<_, _>>()?;
+            let result = exe.execute::<xla::Literal>(&literals).map_err(xerr)?[0][0]
+                .to_literal_sync()
+                .map_err(xerr)?;
+            // aot.py lowers with return_tuple=True: output is always a tuple.
+            let parts = result.to_tuple().map_err(xerr)?;
+            if parts.len() != entry.results.len() {
+                return Err(EngineError::Shape(format!(
+                    "{}: {} results, {} expected",
+                    entry.name,
+                    parts.len(),
+                    entry.results.len()
+                )));
+            }
+            parts
+                .into_iter()
+                .zip(&entry.results)
+                .map(|(lit, sig)| {
+                    Ok(match sig.dtype {
+                        Dtype::F32 => Value::F32(lit.to_vec::<f32>().map_err(xerr)?),
+                        Dtype::I32 => Value::I32(lit.to_vec::<i32>().map_err(xerr)?),
+                    })
                 })
-            })
-            .collect()
+                .collect()
+        }
+    }
+
+    /// [`SplitEngine`] backed by PJRT for one (dataset, aux) configuration.
+    pub struct PjrtEngine {
+        rt: Arc<PjrtRuntime>,
+        cfg: DatasetConfig,
+        aux: AuxConfig,
+    }
+
+    impl PjrtEngine {
+        pub fn new(
+            rt: Arc<PjrtRuntime>,
+            manifest: &Manifest,
+            dataset: &str,
+            aux_arch: &str,
+        ) -> Result<Self, EngineError> {
+            let cfg = manifest.config(dataset)?.clone();
+            let aux = cfg.aux(aux_arch)?.clone();
+            Ok(PjrtEngine { rt, cfg, aux })
+        }
+
+        fn shared(&self, name: &str) -> Result<&Entry, EngineError> {
+            Ok(self.cfg.entry(name)?)
+        }
+
+        fn aux_entry(&self, name: &str) -> Result<&Entry, EngineError> {
+            self.aux
+                .entries
+                .get(name)
+                .ok_or_else(|| EngineError::Shape(format!("missing aux entry {name:?}")))
+        }
+
+        pub fn dataset(&self) -> &str {
+            &self.cfg.name
+        }
+
+        pub fn aux_arch(&self) -> &str {
+            &self.aux.arch
+        }
+
+        pub fn config(&self) -> &DatasetConfig {
+            &self.cfg
+        }
+
+        pub fn runtime(&self) -> &Arc<PjrtRuntime> {
+            &self.rt
+        }
+    }
+
+    impl SplitEngine for PjrtEngine {
+        fn batch(&self) -> usize {
+            self.cfg.batch
+        }
+        fn classes(&self) -> usize {
+            self.cfg.classes
+        }
+        fn input_len(&self) -> usize {
+            self.cfg.input_len()
+        }
+        fn smashed_len(&self) -> usize {
+            self.cfg.smashed_size
+        }
+        fn client_size(&self) -> usize {
+            self.cfg.client_layout.total
+        }
+        fn server_size(&self) -> usize {
+            self.cfg.server_layout.total
+        }
+        fn aux_size(&self) -> usize {
+            self.aux.size
+        }
+
+        fn client_train_step(
+            &self,
+            xc: &[f32],
+            ac: &[f32],
+            images: &[f32],
+            labels: &[i32],
+            lr: f32,
+            seed: i32,
+        ) -> Result<ClientStepOut, EngineError> {
+            let entry = self.aux_entry("client_train_step")?;
+            let mut out = self.rt.exec(
+                entry,
+                &[
+                    Arg::F32(xc),
+                    Arg::F32(ac),
+                    Arg::F32(images),
+                    Arg::I32(labels),
+                    Arg::ScalarF32(lr),
+                    Arg::ScalarI32(seed),
+                ],
+            )?;
+            let grad_norm = out.pop().unwrap().scalar_f32()?;
+            let loss = out.pop().unwrap().scalar_f32()?;
+            let new_aux = out.pop().unwrap().into_f32()?;
+            let new_client = out.pop().unwrap().into_f32()?;
+            Ok(ClientStepOut { new_client, new_aux, loss, grad_norm })
+        }
+
+        fn client_fwd(
+            &self,
+            xc: &[f32],
+            images: &[f32],
+            seed: i32,
+        ) -> Result<Vec<f32>, EngineError> {
+            let entry = self.shared("client_fwd")?;
+            let mut out =
+                self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(images), Arg::ScalarI32(seed)])?;
+            out.pop().unwrap().into_f32()
+        }
+
+        fn server_train_step(
+            &self,
+            xs: &[f32],
+            smashed: &[f32],
+            labels: &[i32],
+            lr: f32,
+            seed: i32,
+        ) -> Result<ServerStepOut, EngineError> {
+            let entry = self.shared("server_train_step")?;
+            let mut out = self.rt.exec(
+                entry,
+                &[
+                    Arg::F32(xs),
+                    Arg::F32(smashed),
+                    Arg::I32(labels),
+                    Arg::ScalarF32(lr),
+                    Arg::ScalarI32(seed),
+                ],
+            )?;
+            let grad_norm = out.pop().unwrap().scalar_f32()?;
+            let loss = out.pop().unwrap().scalar_f32()?;
+            let new_server = out.pop().unwrap().into_f32()?;
+            Ok(ServerStepOut { new_server, loss, grad_norm })
+        }
+
+        fn server_fwd_bwd(
+            &self,
+            xs: &[f32],
+            smashed: &[f32],
+            labels: &[i32],
+            lr: f32,
+            seed: i32,
+            clip: f32,
+        ) -> Result<ServerFwdBwdOut, EngineError> {
+            let entry = self.shared("server_fwd_bwd")?;
+            let mut out = self.rt.exec(
+                entry,
+                &[
+                    Arg::F32(xs),
+                    Arg::F32(smashed),
+                    Arg::I32(labels),
+                    Arg::ScalarF32(lr),
+                    Arg::ScalarI32(seed),
+                    Arg::ScalarF32(clip),
+                ],
+            )?;
+            let grad_norm = out.pop().unwrap().scalar_f32()?;
+            let loss = out.pop().unwrap().scalar_f32()?;
+            let grad_smashed = out.pop().unwrap().into_f32()?;
+            let new_server = out.pop().unwrap().into_f32()?;
+            Ok(ServerFwdBwdOut { new_server, grad_smashed, loss, grad_norm })
+        }
+
+        fn client_bwd(
+            &self,
+            xc: &[f32],
+            images: &[f32],
+            grad_smashed: &[f32],
+            lr: f32,
+            seed: i32,
+            clip: f32,
+        ) -> Result<(Vec<f32>, f32), EngineError> {
+            let entry = self.shared("client_bwd")?;
+            let mut out = self.rt.exec(
+                entry,
+                &[
+                    Arg::F32(xc),
+                    Arg::F32(images),
+                    Arg::F32(grad_smashed),
+                    Arg::ScalarF32(lr),
+                    Arg::ScalarI32(seed),
+                    Arg::ScalarF32(clip),
+                ],
+            )?;
+            let gnorm = out.pop().unwrap().scalar_f32()?;
+            let new_client = out.pop().unwrap().into_f32()?;
+            Ok((new_client, gnorm))
+        }
+
+        fn eval_step(
+            &self,
+            xc: &[f32],
+            xs: &[f32],
+            images: &[f32],
+        ) -> Result<Vec<f32>, EngineError> {
+            let entry = self.shared("eval_step")?;
+            let mut out =
+                self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(xs), Arg::F32(images)])?;
+            out.pop().unwrap().into_f32()
+        }
+
+        fn aux_eval_step(
+            &self,
+            xc: &[f32],
+            ac: &[f32],
+            images: &[f32],
+        ) -> Result<Vec<f32>, EngineError> {
+            let entry = self.aux_entry("aux_eval_step")?;
+            let mut out =
+                self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(ac), Arg::F32(images)])?;
+            out.pop().unwrap().into_f32()
+        }
     }
 }
 
-/// [`SplitEngine`] backed by PJRT for one (dataset, aux) configuration.
-pub struct PjrtEngine {
-    rt: Rc<PjrtRuntime>,
-    cfg: DatasetConfig,
-    aux: AuxConfig,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::sync::Arc;
 
-impl PjrtEngine {
-    pub fn new(
-        rt: Rc<PjrtRuntime>,
-        manifest: &Manifest,
-        dataset: &str,
-        aux_arch: &str,
-    ) -> Result<Self, EngineError> {
-        let cfg = manifest.config(dataset)?.clone();
-        let aux = cfg.aux(aux_arch)?.clone();
-        Ok(PjrtEngine { rt, cfg, aux })
-    }
+    use super::super::artifact::Manifest;
+    use super::super::{
+        ClientStepOut, EngineError, ServerFwdBwdOut, ServerStepOut, SplitEngine,
+    };
 
-    fn shared(&self, name: &str) -> Result<&Entry, EngineError> {
-        Ok(self.cfg.entry(name)?)
-    }
+    const UNAVAILABLE: &str = "PJRT engine unavailable: this build has no `pjrt` feature \
+         (vendor the xla crate and build with `--features pjrt`); \
+         use runtime::mock::MockEngine for engine-independent work";
 
-    fn aux_entry(&self, name: &str) -> Result<&Entry, EngineError> {
-        self.aux
-            .entries
-            .get(name)
-            .ok_or_else(|| EngineError::Shape(format!("missing aux entry {name:?}")))
+    /// Uninhabited marker: a stub `PjrtEngine` can never be constructed,
+    /// so the `SplitEngine` methods below are statically unreachable.
+    enum Void {}
+
+    /// Stub runtime: constructible API, but `new()` always fails.
+    pub struct PjrtRuntime {
+        _priv: (),
     }
 
-    pub fn dataset(&self) -> &str {
-        &self.cfg.name
+    impl PjrtRuntime {
+        pub fn new() -> Result<Arc<Self>, EngineError> {
+            Err(EngineError::Xla(UNAVAILABLE.into()))
+        }
+
+        /// Compilation counter (always 0 in the stub).
+        pub fn compiles(&self) -> usize {
+            0
+        }
     }
 
-    pub fn aux_arch(&self) -> &str {
-        &self.aux.arch
+    /// Stub engine: the type exists so `Harness`, examples, and benches
+    /// compile without the xla bindings, but no value can exist.
+    pub struct PjrtEngine {
+        void: Void,
     }
 
-    pub fn config(&self) -> &DatasetConfig {
-        &self.cfg
+    impl PjrtEngine {
+        pub fn new(
+            _rt: Arc<PjrtRuntime>,
+            _manifest: &Manifest,
+            _dataset: &str,
+            _aux_arch: &str,
+        ) -> Result<Self, EngineError> {
+            Err(EngineError::Xla(UNAVAILABLE.into()))
+        }
+
+        pub fn dataset(&self) -> &str {
+            match self.void {}
+        }
+
+        pub fn aux_arch(&self) -> &str {
+            match self.void {}
+        }
     }
 
-    pub fn runtime(&self) -> &Rc<PjrtRuntime> {
-        &self.rt
-    }
-}
+    impl SplitEngine for PjrtEngine {
+        fn batch(&self) -> usize {
+            match self.void {}
+        }
+        fn classes(&self) -> usize {
+            match self.void {}
+        }
+        fn input_len(&self) -> usize {
+            match self.void {}
+        }
+        fn smashed_len(&self) -> usize {
+            match self.void {}
+        }
+        fn client_size(&self) -> usize {
+            match self.void {}
+        }
+        fn server_size(&self) -> usize {
+            match self.void {}
+        }
+        fn aux_size(&self) -> usize {
+            match self.void {}
+        }
 
-impl SplitEngine for PjrtEngine {
-    fn batch(&self) -> usize {
-        self.cfg.batch
-    }
-    fn classes(&self) -> usize {
-        self.cfg.classes
-    }
-    fn input_len(&self) -> usize {
-        self.cfg.input_len()
-    }
-    fn smashed_len(&self) -> usize {
-        self.cfg.smashed_size
-    }
-    fn client_size(&self) -> usize {
-        self.cfg.client_layout.total
-    }
-    fn server_size(&self) -> usize {
-        self.cfg.server_layout.total
-    }
-    fn aux_size(&self) -> usize {
-        self.aux.size
-    }
+        fn client_train_step(
+            &self,
+            _xc: &[f32],
+            _ac: &[f32],
+            _images: &[f32],
+            _labels: &[i32],
+            _lr: f32,
+            _seed: i32,
+        ) -> Result<ClientStepOut, EngineError> {
+            match self.void {}
+        }
 
-    fn client_train_step(
-        &self,
-        xc: &[f32],
-        ac: &[f32],
-        images: &[f32],
-        labels: &[i32],
-        lr: f32,
-        seed: i32,
-    ) -> Result<ClientStepOut, EngineError> {
-        let entry = self.aux_entry("client_train_step")?;
-        let mut out = self.rt.exec(
-            entry,
-            &[
-                Arg::F32(xc),
-                Arg::F32(ac),
-                Arg::F32(images),
-                Arg::I32(labels),
-                Arg::ScalarF32(lr),
-                Arg::ScalarI32(seed),
-            ],
-        )?;
-        let grad_norm = out.pop().unwrap().scalar_f32()?;
-        let loss = out.pop().unwrap().scalar_f32()?;
-        let new_aux = out.pop().unwrap().into_f32()?;
-        let new_client = out.pop().unwrap().into_f32()?;
-        Ok(ClientStepOut { new_client, new_aux, loss, grad_norm })
-    }
+        fn client_fwd(
+            &self,
+            _xc: &[f32],
+            _images: &[f32],
+            _seed: i32,
+        ) -> Result<Vec<f32>, EngineError> {
+            match self.void {}
+        }
 
-    fn client_fwd(&self, xc: &[f32], images: &[f32], seed: i32) -> Result<Vec<f32>, EngineError> {
-        let entry = self.shared("client_fwd")?;
-        let mut out =
-            self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(images), Arg::ScalarI32(seed)])?;
-        out.pop().unwrap().into_f32()
-    }
+        fn server_train_step(
+            &self,
+            _xs: &[f32],
+            _smashed: &[f32],
+            _labels: &[i32],
+            _lr: f32,
+            _seed: i32,
+        ) -> Result<ServerStepOut, EngineError> {
+            match self.void {}
+        }
 
-    fn server_train_step(
-        &self,
-        xs: &[f32],
-        smashed: &[f32],
-        labels: &[i32],
-        lr: f32,
-        seed: i32,
-    ) -> Result<ServerStepOut, EngineError> {
-        let entry = self.shared("server_train_step")?;
-        let mut out = self.rt.exec(
-            entry,
-            &[
-                Arg::F32(xs),
-                Arg::F32(smashed),
-                Arg::I32(labels),
-                Arg::ScalarF32(lr),
-                Arg::ScalarI32(seed),
-            ],
-        )?;
-        let grad_norm = out.pop().unwrap().scalar_f32()?;
-        let loss = out.pop().unwrap().scalar_f32()?;
-        let new_server = out.pop().unwrap().into_f32()?;
-        Ok(ServerStepOut { new_server, loss, grad_norm })
-    }
+        fn server_fwd_bwd(
+            &self,
+            _xs: &[f32],
+            _smashed: &[f32],
+            _labels: &[i32],
+            _lr: f32,
+            _seed: i32,
+            _clip: f32,
+        ) -> Result<ServerFwdBwdOut, EngineError> {
+            match self.void {}
+        }
 
-    fn server_fwd_bwd(
-        &self,
-        xs: &[f32],
-        smashed: &[f32],
-        labels: &[i32],
-        lr: f32,
-        seed: i32,
-        clip: f32,
-    ) -> Result<ServerFwdBwdOut, EngineError> {
-        let entry = self.shared("server_fwd_bwd")?;
-        let mut out = self.rt.exec(
-            entry,
-            &[
-                Arg::F32(xs),
-                Arg::F32(smashed),
-                Arg::I32(labels),
-                Arg::ScalarF32(lr),
-                Arg::ScalarI32(seed),
-                Arg::ScalarF32(clip),
-            ],
-        )?;
-        let grad_norm = out.pop().unwrap().scalar_f32()?;
-        let loss = out.pop().unwrap().scalar_f32()?;
-        let grad_smashed = out.pop().unwrap().into_f32()?;
-        let new_server = out.pop().unwrap().into_f32()?;
-        Ok(ServerFwdBwdOut { new_server, grad_smashed, loss, grad_norm })
+        fn client_bwd(
+            &self,
+            _xc: &[f32],
+            _images: &[f32],
+            _grad_smashed: &[f32],
+            _lr: f32,
+            _seed: i32,
+            _clip: f32,
+        ) -> Result<(Vec<f32>, f32), EngineError> {
+            match self.void {}
+        }
+
+        fn eval_step(
+            &self,
+            _xc: &[f32],
+            _xs: &[f32],
+            _images: &[f32],
+        ) -> Result<Vec<f32>, EngineError> {
+            match self.void {}
+        }
+
+        fn aux_eval_step(
+            &self,
+            _xc: &[f32],
+            _ac: &[f32],
+            _images: &[f32],
+        ) -> Result<Vec<f32>, EngineError> {
+            match self.void {}
+        }
     }
 
-    fn client_bwd(
-        &self,
-        xc: &[f32],
-        images: &[f32],
-        grad_smashed: &[f32],
-        lr: f32,
-        seed: i32,
-        clip: f32,
-    ) -> Result<(Vec<f32>, f32), EngineError> {
-        let entry = self.shared("client_bwd")?;
-        let mut out = self.rt.exec(
-            entry,
-            &[
-                Arg::F32(xc),
-                Arg::F32(images),
-                Arg::F32(grad_smashed),
-                Arg::ScalarF32(lr),
-                Arg::ScalarI32(seed),
-                Arg::ScalarF32(clip),
-            ],
-        )?;
-        let gnorm = out.pop().unwrap().scalar_f32()?;
-        let new_client = out.pop().unwrap().into_f32()?;
-        Ok((new_client, gnorm))
-    }
+    #[cfg(test)]
+    mod tests {
+        use super::*;
 
-    fn eval_step(&self, xc: &[f32], xs: &[f32], images: &[f32]) -> Result<Vec<f32>, EngineError> {
-        let entry = self.shared("eval_step")?;
-        let mut out = self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(xs), Arg::F32(images)])?;
-        out.pop().unwrap().into_f32()
-    }
-
-    fn aux_eval_step(
-        &self,
-        xc: &[f32],
-        ac: &[f32],
-        images: &[f32],
-    ) -> Result<Vec<f32>, EngineError> {
-        let entry = self.aux_entry("aux_eval_step")?;
-        let mut out = self.rt.exec(entry, &[Arg::F32(xc), Arg::F32(ac), Arg::F32(images)])?;
-        out.pop().unwrap().into_f32()
+        #[test]
+        fn stub_construction_fails_with_hint() {
+            let err = PjrtRuntime::new().err().expect("stub must not construct");
+            assert!(err.to_string().contains("pjrt"), "{err}");
+        }
     }
 }

@@ -16,7 +16,7 @@ pub enum SpanKind {
     Aggregate,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Span {
     pub kind: SpanKind,
     /// Client id, or None for server-side spans.
@@ -26,7 +26,11 @@ pub struct Span {
     pub label: String,
 }
 
-#[derive(Clone, Debug, Default)]
+/// The recorded schedule. Timelines are mergeable: the parallel round
+/// engine records each client's spans into a worker-local timeline and
+/// [`Timeline::append`]s them in canonical order (client id, then time),
+/// reproducing the sequential span order bit-for-bit.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Timeline {
     pub spans: Vec<Span>,
 }
@@ -44,8 +48,45 @@ impl Timeline {
         self.spans.push(Span { kind, who, start, end, label: label.into() });
     }
 
+    /// Append another timeline's spans (in their recorded order).
+    pub fn append(&mut self, mut other: Timeline) {
+        self.spans.append(&mut other.spans);
+    }
+
     pub fn end_time(&self) -> SimTime {
         self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Client ids appearing in the timeline, ascending and deduplicated.
+    pub fn client_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.spans.iter().filter_map(|s| s.who).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Worst pairwise overlap between spans of one actor (`Some(client)`
+    /// or `None` for the server); 0.0 when the actor's schedule is
+    /// consistent (no actor can do two things at once).
+    pub fn max_overlap(&self, who: Option<usize>) -> f64 {
+        let mut windows: Vec<(SimTime, SimTime)> = self
+            .spans
+            .iter()
+            .filter(|s| s.who == who)
+            .map(|s| (s.start, s.end))
+            .collect();
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+        let mut worst = 0.0f64;
+        let mut frontier = f64::NEG_INFINITY;
+        for (start, end) in windows {
+            if frontier > start {
+                // A span nested inside an earlier one overlaps only up to
+                // its own end, not to the earlier span's.
+                worst = worst.max(frontier.min(end) - start);
+            }
+            frontier = frontier.max(end);
+        }
+        worst
     }
 
     /// Total busy time of the server (update + aggregate spans).
@@ -161,5 +202,40 @@ mod tests {
         assert_eq!(t.end_time(), 0.0);
         assert_eq!(t.server_idle_fraction(), 0.0);
         assert_eq!(t.straggler_spread(), 0.0);
+        assert_eq!(t.max_overlap(None), 0.0);
+        assert!(t.client_ids().is_empty());
+    }
+
+    #[test]
+    fn append_preserves_order_and_equality() {
+        let whole = tl();
+        let mut merged = Timeline::default();
+        let mut part1 = Timeline::default();
+        part1.record(SpanKind::ClientCompute, Some(0), 0.0, 1.0, "c0 train");
+        part1.record(SpanKind::Upload, Some(0), 1.0, 1.5, "c0 up");
+        let mut part2 = Timeline::default();
+        part2.record(SpanKind::ServerUpdate, None, 1.5, 2.0, "s upd");
+        part2.record(SpanKind::Upload, Some(1), 3.0, 4.0, "c1 up");
+        merged.append(part1);
+        merged.append(part2);
+        assert_eq!(merged, whole);
+        assert_eq!(merged.client_ids(), vec![0, 1]);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let t = tl();
+        assert_eq!(t.max_overlap(Some(0)), 0.0);
+        assert_eq!(t.max_overlap(None), 0.0);
+        let mut bad = Timeline::default();
+        bad.record(SpanKind::ClientCompute, Some(2), 0.0, 2.0, "a");
+        bad.record(SpanKind::Upload, Some(2), 1.25, 3.0, "b");
+        assert!((bad.max_overlap(Some(2)) - 0.75).abs() < 1e-12);
+        assert_eq!(bad.max_overlap(Some(9)), 0.0, "unknown actor has no spans");
+        // A span nested in a longer one overlaps only its own duration.
+        let mut nested = Timeline::default();
+        nested.record(SpanKind::ClientCompute, Some(3), 0.0, 2.0, "outer");
+        nested.record(SpanKind::Upload, Some(3), 0.5, 0.75, "inner");
+        assert!((nested.max_overlap(Some(3)) - 0.25).abs() < 1e-12);
     }
 }

@@ -6,19 +6,34 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({why})")]
     Invalid { key: String, value: String, why: String },
-    #[error("unexpected positional argument {0:?}")]
     UnexpectedPositional(String),
-    #[error("missing required argument <{0}>")]
     MissingPositional(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(k) => write!(f, "unknown option --{k}"),
+            CliError::MissingValue(k) => write!(f, "option --{k} expects a value"),
+            CliError::Invalid { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value:?} ({why})")
+            }
+            CliError::UnexpectedPositional(a) => {
+                write!(f, "unexpected positional argument {a:?}")
+            }
+            CliError::MissingPositional(p) => {
+                write!(f, "missing required argument <{p}>")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Option specification.
 #[derive(Clone, Debug)]

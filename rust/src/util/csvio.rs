@@ -47,27 +47,32 @@ impl Csv {
         }
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        out.push_str(
-            &self.header.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(","),
-        );
-        out.push('\n');
-        for row in &self.rows {
-            out.push_str(
-                &row.iter().map(|c| Self::escape(c)).collect::<Vec<_>>().join(","),
-            );
-            out.push('\n');
-        }
-        out
-    }
-
     pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_string().as_bytes())
+    }
+}
+
+// `to_string()` comes from the blanket ToString impl.
+impl std::fmt::Display for Csv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let line = |f: &mut std::fmt::Formatter<'_>, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(",")?;
+                }
+                f.write_str(&Self::escape(c))?;
+            }
+            f.write_str("\n")
+        };
+        line(f, &self.header)?;
+        for row in &self.rows {
+            line(f, row)?;
+        }
+        Ok(())
     }
 }
 

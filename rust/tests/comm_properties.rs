@@ -1,0 +1,208 @@
+//! Wire-accounting properties (util/prop harness): across random
+//! `(method, n, h, agg_every, rounds, parallelism)` configurations the
+//! live `CommLedger` must equal the generalized closed forms in
+//! `comm::accounting::predict` (which reduce to the paper's Table II
+//! per-epoch forms), and the ledger's client-side and server-side views
+//! must conserve bytes per message kind.
+
+use cse_fsl::comm::accounting::{predict, table2, MsgKind, WireSizes};
+use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::prop_assert;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::runtime::SplitEngine;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn random_parallelism(rng: &mut Rng) -> Parallelism {
+    if rng.below(2) == 0 {
+        Parallelism::Sequential
+    } else {
+        Parallelism::Threads(1 + rng.below(4) as usize)
+    }
+}
+
+/// A random trainer run; returns the trainer (ledger inspection) plus
+/// the configuration numbers the closed forms need.
+struct RandomRun {
+    method: Method,
+    n: usize,
+    h: usize,
+    rounds: usize,
+    agg_every: usize,
+    batch: usize,
+    wires: WireSizes,
+    ledger: cse_fsl::comm::accounting::CommLedger,
+}
+
+fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> {
+    let n = 1 + rng.below(5) as usize;
+    let method = Method::ALL[rng.below(4) as usize];
+    let h = if method.supports_h() { 1 + rng.below(4) as usize } else { 1 };
+    let rounds = 1 + rng.below(10) as usize;
+    let agg_every = 1 + rng.below(rounds as u64 + 3) as usize;
+    let e = MockEngine::small(rng.next_u64());
+    let train = generate(&spec(), n * 16, rng.next_u64());
+    let test = generate(&spec(), 8, rng.next_u64());
+    let cfg = TrainConfig {
+        h,
+        rounds,
+        agg_every,
+        eval_every: 0,
+        participation: participation.min(n),
+        parallelism: random_parallelism(rng),
+        ..TrainConfig::new(method)
+    };
+    let setup = TrainerSetup {
+        train: &train,
+        test: &test,
+        partition: iid(&train, n, &mut Rng::new(rng.next_u64())),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "prop".into(),
+    };
+    let mut tr = Trainer::new(&e, cfg, setup)?;
+    tr.run().map_err(|e| e.to_string())?;
+    Ok(RandomRun {
+        method,
+        n,
+        h,
+        rounds,
+        agg_every,
+        batch: e.batch,
+        wires: WireSizes::new(e.smashed_len, e.client_size(), e.aux_size()),
+        ledger: tr.ledger.clone(),
+    })
+}
+
+#[test]
+fn prop_ledger_matches_generalized_closed_forms() {
+    prop::check("ledger == predict closed forms", |rng| {
+        // Full participation: the closed forms count every client each
+        // round and every client at each aggregation.
+        let r = run_random(rng, 0)?;
+        let p = predict::TrafficProfile {
+            grad_downlink: r.method.grad_downlink(),
+            uses_aux: r.method.uses_aux(),
+        };
+        let expected = predict::run_kind_bytes(
+            p,
+            r.n as u64,
+            r.batch as u64,
+            r.rounds as u64,
+            r.agg_every as u64,
+            &r.wires,
+        );
+        for (kind, bytes) in expected {
+            prop_assert!(
+                r.ledger.bytes_of(kind) == bytes,
+                "{} n={} h={} rounds={} agg={}: {kind:?} measured {} != predicted {bytes}",
+                r.method,
+                r.n,
+                r.h,
+                r.rounds,
+                r.agg_every,
+                r.ledger.bytes_of(kind)
+            );
+        }
+        let (up, down) = predict::run_totals(
+            p,
+            r.n as u64,
+            r.batch as u64,
+            r.rounds as u64,
+            r.agg_every as u64,
+            &r.wires,
+        );
+        prop_assert!(
+            r.ledger.up_bytes() == up,
+            "uplink measured {} != predicted {up}",
+            r.ledger.up_bytes()
+        );
+        prop_assert!(
+            r.ledger.down_bytes() == down,
+            "downlink measured {} != predicted {down}",
+            r.ledger.down_bytes()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ledger_views_conserve_bytes_per_kind() {
+    prop::check("client view == server view", |rng| {
+        // Partial participation allowed: conservation is schedule-free.
+        let participation = rng.below(4) as usize; // 0 = all
+        let r = run_random(rng, participation)?;
+        for kind in MsgKind::ALL {
+            let client_sum: u64 = r
+                .ledger
+                .clients()
+                .iter()
+                .map(|&c| r.ledger.client_kind_bytes(c, kind))
+                .sum();
+            prop_assert!(
+                client_sum == r.ledger.bytes_of(kind),
+                "{kind:?}: client-side view {client_sum} != server-side {}",
+                r.ledger.bytes_of(kind)
+            );
+        }
+        for c in r.ledger.clients() {
+            let kind_sum: u64 =
+                MsgKind::ALL.iter().map(|&k| r.ledger.client_kind_bytes(c, k)).sum();
+            prop_assert!(
+                kind_sum == r.ledger.client_bytes(c),
+                "client {c}: per-kind sum {kind_sum} != client total {}",
+                r.ledger.client_bytes(c)
+            );
+        }
+        prop_assert!(
+            r.ledger.up_bytes() + r.ledger.down_bytes() == r.ledger.total_bytes(),
+            "direction split does not cover the total"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_generalized_forms_reduce_to_table2_epoch_forms() {
+    prop::check("predict reduces to Table II", |rng| {
+        let n = 1 + rng.below(50);
+        let batch = 1 + rng.below(100);
+        let h = 1 + rng.below(10);
+        let rounds = 1 + rng.below(50);
+        let w = WireSizes::new(
+            1 + rng.below(4096) as usize,
+            1 + rng.below(200_000) as usize,
+            1 + rng.below(50_000) as usize,
+        );
+        // CSE_FSL_h epoch: |D_i| = batch*h*rounds, aggregate once.
+        let d_cse = batch * h * rounds;
+        let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        prop_assert!(
+            up + down == table2::cse_fsl(n, d_cse, h, &w),
+            "CSE: {} != table2 {}",
+            up + down,
+            table2::cse_fsl(n, d_cse, h, &w)
+        );
+        // FSL_MC / FSL_AN epochs: h = 1, |D_i| = batch*rounds.
+        let d1 = batch * rounds;
+        let p = predict::TrafficProfile { grad_downlink: true, uses_aux: false };
+        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        prop_assert!(up + down == table2::fsl_mc(n, d1, &w), "MC mismatch");
+        let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        prop_assert!(up + down == table2::fsl_an(n, d1, &w), "AN mismatch");
+        Ok(())
+    });
+}

@@ -1,0 +1,224 @@
+//! Golden determinism: the parallel round engine must be invisible.
+//!
+//! The contract (coordinator/README.md): for any method and any thread
+//! count, `Parallelism::Threads(n)` produces a **bit-identical** run to
+//! `Parallelism::Sequential` — same `RunRecord` JSON (every loss, byte
+//! count, and simulated timestamp), same timeline span sequence, same
+//! communication ledger, same final model states. These tests pin that
+//! contract over the mock engine for all four methods.
+
+use cse_fsl::comm::accounting::CommLedger;
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::data::Dataset;
+use cse_fsl::exp::common::run_to_json;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::sim::timeline::Timeline;
+use cse_fsl::util::prng::Rng;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    generate(&spec(), n, seed)
+}
+
+fn setup<'a>(train: &'a Dataset, test: &'a Dataset, n_clients: usize) -> TrainerSetup<'a> {
+    let mut rng = Rng::new(7);
+    TrainerSetup {
+        train,
+        test,
+        partition: iid(train, n_clients, &mut rng),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "golden".to_string(),
+    }
+}
+
+/// Everything observable about a finished run.
+struct Fingerprint {
+    json: String,
+    timeline: Timeline,
+    ledger: CommLedger,
+    client_models: Vec<Vec<f32>>,
+    client_aux: Vec<Vec<f32>>,
+    server_copies: Vec<Vec<f32>>,
+    server_updates: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run(
+    method: Method,
+    h: usize,
+    participation: usize,
+    arrival: ArrivalOrder,
+    parallelism: Parallelism,
+    rounds: usize,
+    train: &Dataset,
+    test: &Dataset,
+) -> Fingerprint {
+    let e = MockEngine::small(42);
+    let cfg = TrainConfig {
+        h,
+        participation,
+        arrival,
+        parallelism,
+        agg_every: 4,
+        eval_every: 3,
+        eval_max_batches: 2,
+        lr0: 1.0,
+        track_grad_norms: true,
+        ..TrainConfig::new(method)
+    }
+    .with_rounds(rounds);
+    let mut tr = Trainer::new(&e, cfg, setup(train, test, 5)).unwrap();
+    let rec = tr.run().unwrap();
+    Fingerprint {
+        json: run_to_json(&rec).pretty(),
+        timeline: tr.timeline.clone(),
+        ledger: tr.ledger.clone(),
+        client_models: tr.clients.iter().map(|c| c.xc.clone()).collect(),
+        client_aux: tr.clients.iter().map(|c| c.ac.clone()).collect(),
+        server_copies: tr.server.copies.clone(),
+        server_updates: tr.server.updates,
+    }
+}
+
+fn assert_identical(seq: &Fingerprint, par: &Fingerprint, ctx: &str) {
+    // Byte-identical serialized RunRecord is the headline contract.
+    assert_eq!(seq.json.as_bytes(), par.json.as_bytes(), "{ctx}: RunRecord JSON diverged");
+    assert_eq!(seq.timeline, par.timeline, "{ctx}: timeline span sequence diverged");
+    assert_eq!(seq.ledger, par.ledger, "{ctx}: communication ledger diverged");
+    assert_eq!(seq.client_models, par.client_models, "{ctx}: client models diverged");
+    assert_eq!(seq.client_aux, par.client_aux, "{ctx}: aux models diverged");
+    assert_eq!(seq.server_copies, par.server_copies, "{ctx}: server copies diverged");
+    assert_eq!(seq.server_updates, par.server_updates, "{ctx}: update count diverged");
+}
+
+#[test]
+fn threads_bit_identical_to_sequential_for_all_methods() {
+    let train = dataset(120, 1);
+    let test = dataset(24, 2);
+    for method in Method::ALL {
+        let h = if method.supports_h() { 2 } else { 1 };
+        let seq = run(
+            method,
+            h,
+            0,
+            ArrivalOrder::ByDelay,
+            Parallelism::Sequential,
+            10,
+            &train,
+            &test,
+        );
+        for threads in [1usize, 2, 4, 8] {
+            let par = run(
+                method,
+                h,
+                0,
+                ArrivalOrder::ByDelay,
+                Parallelism::Threads(threads),
+                10,
+                &train,
+                &test,
+            );
+            assert_identical(&seq, &par, &format!("{method} threads={threads}"));
+        }
+    }
+}
+
+#[test]
+fn golden_holds_under_partial_participation() {
+    // k-of-n sampling exercises non-contiguous sorted participant sets
+    // in the fan-out (disjoint-borrow collection + round-robin buckets).
+    let train = dataset(120, 3);
+    let test = dataset(24, 4);
+    for method in [Method::CseFsl, Method::FslMc] {
+        let seq = run(
+            method,
+            1,
+            3,
+            ArrivalOrder::ByDelay,
+            Parallelism::Sequential,
+            12,
+            &train,
+            &test,
+        );
+        let par = run(
+            method,
+            1,
+            3,
+            ArrivalOrder::ByDelay,
+            Parallelism::Threads(4),
+            12,
+            &train,
+            &test,
+        );
+        assert_identical(&seq, &par, &format!("{method} participation=3"));
+    }
+}
+
+#[test]
+fn golden_holds_under_shuffled_arrival_order() {
+    // The Fig. 6 shuffled arm consumes the trainer RNG *after* the
+    // fan-out; the parallel engine must leave that stream untouched.
+    let train = dataset(120, 5);
+    let test = dataset(24, 6);
+    let seq = run(
+        Method::CseFsl,
+        3,
+        0,
+        ArrivalOrder::Shuffled,
+        Parallelism::Sequential,
+        9,
+        &train,
+        &test,
+    );
+    let par = run(
+        Method::CseFsl,
+        3,
+        0,
+        ArrivalOrder::Shuffled,
+        Parallelism::Threads(3),
+        9,
+        &train,
+        &test,
+    );
+    assert_identical(&seq, &par, "CSE_FSL shuffled arrivals");
+}
+
+#[test]
+fn parallel_runs_are_reproducible_across_invocations() {
+    // Threads(n) vs Threads(n) with identical configs: scheduling noise
+    // must never leak into results.
+    let train = dataset(80, 7);
+    let test = dataset(16, 8);
+    let a = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Threads(4),
+        8,
+        &train,
+        &test,
+    );
+    let b = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Threads(4),
+        8,
+        &train,
+        &test,
+    );
+    assert_identical(&a, &b, "Threads(4) repeat");
+}

@@ -1,0 +1,183 @@
+//! Timeline invariants under the property harness: whatever the method,
+//! fan-out, participation, and horizon, the simulated schedule must be
+//! physically consistent — no actor does two things at once, the server
+//! idle fraction is a fraction, spans are well-formed, and running
+//! longer never ends earlier.
+
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::data::Dataset;
+use cse_fsl::prop_assert;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn setup<'a>(train: &'a Dataset, test: &'a Dataset, n: usize, seed: u64) -> TrainerSetup<'a> {
+    TrainerSetup {
+        train,
+        test,
+        partition: iid(train, n, &mut Rng::new(seed)),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "tl".into(),
+    }
+}
+
+#[test]
+fn prop_no_actor_ever_overlaps_itself() {
+    prop::check("actor schedules are consistent", |rng| {
+        let n = 2 + rng.below(4) as usize;
+        let method = Method::ALL[rng.below(4) as usize];
+        let h = if method.supports_h() { 1 + rng.below(3) as usize } else { 1 };
+        let rounds = 1 + rng.below(8) as usize;
+        let agg_every = 1 + rng.below(rounds as u64 + 2) as usize;
+        let participation = rng.below(n as u64 + 1) as usize; // 0 = all
+        let parallelism = if rng.below(2) == 0 {
+            Parallelism::Sequential
+        } else {
+            Parallelism::Threads(1 + rng.below(4) as usize)
+        };
+        let e = MockEngine::small(rng.next_u64());
+        let train = generate(&spec(), n * 16, rng.next_u64());
+        let test = generate(&spec(), 8, rng.next_u64());
+        let cfg = TrainConfig {
+            h,
+            rounds,
+            agg_every,
+            participation,
+            parallelism,
+            eval_every: 0,
+            ..TrainConfig::new(method)
+        };
+        let mut tr =
+            Trainer::new(&e, cfg, setup(&train, &test, n, rng.next_u64()))?;
+        let rec = tr.run().map_err(|e| e.to_string())?;
+
+        // Well-formed spans.
+        for s in &tr.timeline.spans {
+            prop_assert!(
+                s.end >= s.start && s.start >= 0.0,
+                "malformed span {s:?} ({method}, {parallelism:?})"
+            );
+        }
+        // No client is ever in two places at once.
+        for id in tr.timeline.client_ids() {
+            let overlap = tr.timeline.max_overlap(Some(id));
+            prop_assert!(
+                overlap <= 1e-9,
+                "client {id} overlaps itself by {overlap} ({method}, h={h}, {parallelism:?})"
+            );
+        }
+        // Neither is the server.
+        let overlap = tr.timeline.max_overlap(None);
+        prop_assert!(
+            overlap <= 1e-9,
+            "server overlaps itself by {overlap} ({method}, {parallelism:?})"
+        );
+        // Idle fraction is a fraction; end time covers every span.
+        prop_assert!(
+            (0.0..=1.0).contains(&rec.server_idle_fraction),
+            "idle fraction {} out of range",
+            rec.server_idle_fraction
+        );
+        let max_end =
+            tr.timeline.spans.iter().map(|s| s.end).fold(0.0f64, f64::max);
+        prop_assert!(
+            rec.sim_time == max_end,
+            "sim_time {} != latest span end {max_end}",
+            rec.sim_time
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn end_time_is_monotone_in_rounds() {
+    let train = generate(&spec(), 96, 11);
+    let test = generate(&spec(), 16, 12);
+    for method in Method::ALL {
+        for parallelism in [Parallelism::Sequential, Parallelism::Threads(3)] {
+            let mut last = 0.0f64;
+            for rounds in [2usize, 5, 9] {
+                let e = MockEngine::small(42);
+                let cfg = TrainConfig {
+                    rounds,
+                    agg_every: 4,
+                    eval_every: 0,
+                    parallelism,
+                    ..TrainConfig::new(method)
+                };
+                let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 4, 7)).unwrap();
+                let rec = tr.run().unwrap();
+                assert!(
+                    rec.sim_time > last,
+                    "{method} {parallelism:?}: end_time not monotone \
+                     ({last} -> {} at rounds={rounds})",
+                    rec.sim_time
+                );
+                last = rec.sim_time;
+            }
+        }
+    }
+}
+
+#[test]
+fn end_time_prefix_property_across_horizons() {
+    // Stronger than monotonicity: a shorter run is a prefix of a longer
+    // one, so its per-round sim_time series must match exactly.
+    let train = generate(&spec(), 96, 13);
+    let test = generate(&spec(), 16, 14);
+    let run = |rounds: usize| {
+        let e = MockEngine::small(42);
+        let cfg = TrainConfig {
+            rounds,
+            agg_every: 3,
+            eval_every: 0,
+            ..TrainConfig::new(Method::CseFsl)
+        };
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 4, 7)).unwrap();
+        let rec = tr.run().unwrap();
+        rec.rounds.iter().map(|r| r.sim_time).collect::<Vec<_>>()
+    };
+    let short = run(4);
+    let long = run(10);
+    assert_eq!(short[..], long[..4], "shorter horizon must be a prefix of the longer one");
+}
+
+#[test]
+fn splitfed_clients_block_but_stay_consistent() {
+    // FSL_MC's round-trip schedule (fwd, upload, server, download, bwd)
+    // threads one client through five span kinds; the per-actor
+    // non-overlap invariant must survive the interleaving, and the
+    // server must process one update per participant per round.
+    let train = generate(&spec(), 64, 15);
+    let test = generate(&spec(), 16, 16);
+    let e = MockEngine::small(42);
+    let rounds = 6;
+    let n = 4;
+    let cfg = TrainConfig {
+        rounds,
+        agg_every: 100,
+        eval_every: 0,
+        parallelism: Parallelism::Threads(2),
+        arrival: ArrivalOrder::ByDelay,
+        ..TrainConfig::new(Method::FslMc)
+    };
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, n, 7)).unwrap();
+    tr.run().unwrap();
+    for id in tr.timeline.client_ids() {
+        assert!(tr.timeline.max_overlap(Some(id)) <= 1e-9);
+    }
+    assert!(tr.timeline.max_overlap(None) <= 1e-9);
+    assert_eq!(tr.server.updates, (rounds * n) as u64);
+}
