@@ -112,6 +112,57 @@ fn main() {
         seq_ns / thr8_ns,
     );
 
+    // --- the sharded server phase: k server shards (k copies + k event
+    // loops, cross-shard FedAvg at aggregation) at the same 8 heavy mock
+    // clients. Unlike --parallelism, k changes results — these rows
+    // measure the throughput side of the storage/staleness/throughput
+    // trade-off (k=1 = CSE-FSL's shared copy, k=8 = FSL_MC-like copies).
+    let run_sharded = |shards: usize, par: Parallelism| {
+        let cfg = TrainConfig {
+            h: 2,
+            eval_every: 0,
+            agg_every: 3,
+            lr0: 0.05,
+            parallelism: par,
+            server_shards: shards,
+            ..TrainConfig::new(Method::CseFsl)
+        }
+        .with_rounds(6);
+        let setup = TrainerSetup {
+            train: &heavy_train,
+            test: &heavy_test,
+            partition: iid(&heavy_train, n_clients, &mut Rng::new(7)),
+            net: NetModel::edge_default(),
+            client_layout: None,
+            server_layout: None,
+            aux_layout: None,
+            label: "sharded".into(),
+        };
+        let mut tr = Trainer::new(&heavy, cfg, setup).unwrap();
+        tr.run().unwrap()
+    };
+    let mut bench = Bench::new("coordinator/server_shards")
+        .with_times(Duration::from_millis(300), Duration::from_millis(1500));
+    let k1_ns = bench
+        .run("shards1_threads4_8clients", || run_sharded(1, Parallelism::Threads(4)))
+        .median_ns;
+    let k2_ns = bench
+        .run("shards2_threads4_8clients", || run_sharded(2, Parallelism::Threads(4)))
+        .median_ns;
+    let k4_ns = bench
+        .run("shards4_threads4_8clients", || run_sharded(4, Parallelism::Threads(4)))
+        .median_ns;
+    let k8_ns = bench
+        .run("shards8_threads4_8clients", || run_sharded(8, Parallelism::Threads(4)))
+        .median_ns;
+    bench.report();
+    println!(
+        "\nsharded server phase at 8 clients (median): shards2 {:.2}x, shards4 {:.2}x, shards8 {:.2}x vs single copy",
+        k1_ns / k2_ns,
+        k1_ns / k4_ns,
+        k1_ns / k8_ns,
+    );
+
     // --- FedAvg at the paper's exact model sizes (Table II aggregation)
     let mut bench = Bench::new("coordinator/fedavg");
     for (name, size) in [

@@ -1,17 +1,21 @@
-//! Communication accounting: the measured ledger and the paper's Table II
-//! closed forms.
+//! Communication + storage accounting: the measured ledger and the
+//! paper's Table II closed forms.
 //!
 //! Every message the coordinator sends is recorded here with its byte
 //! size, direction, and kind; figures 9 and Table V read the ledger, and
 //! `table2.rs` cross-checks the measured totals against the closed forms
-//! (they must agree exactly — that is a test).
+//! (they must agree exactly — that is a test). [`storage`] holds the
+//! matching server-storage closed form, generalized to the sharded
+//! server phase's k copies.
 
 use std::collections::BTreeMap;
 
 /// Message direction relative to the server.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Dir {
+    /// Client → server (uplink).
     Up,
+    /// Server → client (downlink).
     Down,
 }
 
@@ -35,6 +39,7 @@ pub enum MsgKind {
 }
 
 impl MsgKind {
+    /// Every wire message kind, in canonical report order.
     pub const ALL: [MsgKind; 7] = [
         MsgKind::SmashedUpload,
         MsgKind::LabelUpload,
@@ -45,6 +50,7 @@ impl MsgKind {
         MsgKind::AuxModelDownload,
     ];
 
+    /// The direction this kind travels, relative to the server.
     pub fn dir(self) -> Dir {
         match self {
             MsgKind::SmashedUpload
@@ -76,10 +82,13 @@ pub struct CommLedger {
 }
 
 impl CommLedger {
+    /// An empty ledger.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one message of `kind`, `bytes` long, attributed to
+    /// `client`.
     pub fn record(&mut self, client: usize, kind: MsgKind, bytes: u64) {
         *self.bytes.entry(kind).or_default() += bytes;
         *self.counts.entry(kind).or_default() += 1;
@@ -113,30 +122,37 @@ impl CommLedger {
         self.per_client_bytes.keys().copied().collect()
     }
 
+    /// Total bytes of one message kind (server-side view).
     pub fn bytes_of(&self, kind: MsgKind) -> u64 {
         self.bytes.get(&kind).copied().unwrap_or(0)
     }
 
+    /// Number of messages of one kind.
     pub fn count_of(&self, kind: MsgKind) -> u64 {
         self.counts.get(&kind).copied().unwrap_or(0)
     }
 
+    /// Total uplink bytes.
     pub fn up_bytes(&self) -> u64 {
         self.bytes.iter().filter(|(k, _)| k.dir() == Dir::Up).map(|(_, &b)| b).sum()
     }
 
+    /// Total downlink bytes.
     pub fn down_bytes(&self) -> u64 {
         self.bytes.iter().filter(|(k, _)| k.dir() == Dir::Down).map(|(_, &b)| b).sum()
     }
 
+    /// Total bytes in both directions.
     pub fn total_bytes(&self) -> u64 {
         self.up_bytes() + self.down_bytes()
     }
 
+    /// Total bytes attributed to one client.
     pub fn client_bytes(&self, client: usize) -> u64 {
         self.per_client_bytes.get(&client).copied().unwrap_or(0)
     }
 
+    /// Total traffic in gigabytes (Table V / Fig. 9 units).
     pub fn total_gb(&self) -> f64 {
         self.total_bytes() as f64 / 1e9
     }
@@ -166,6 +182,7 @@ pub struct WireSizes {
 }
 
 impl WireSizes {
+    /// Derive wire sizes from parameter/element counts (4 bytes each).
     pub fn new(smashed_size: usize, client_params: usize, aux_params: usize) -> Self {
         WireSizes {
             smashed_per_sample: (smashed_size * 4) as u64,
@@ -216,12 +233,61 @@ pub mod table2 {
     }
 }
 
+/// Table II "server storage" closed form, generalized to the sharded
+/// server phase's k copies.
+///
+/// Wire traffic is shard-independent (the same messages flow whichever
+/// copy serves them — checked by `tests/comm_properties.rs`), so the
+/// shard knob moves **storage only**: `copies × |w_s|` parameters
+/// resident server-side.
+pub mod storage {
+    /// Parameters of `copies` resident server-side partial models:
+    /// `copies × |w_s|`. Reduces to the paper's Table II server-storage
+    /// column at both endpoints — `1 × |w_s|` (FSL_OC / CSE_FSL) and
+    /// `n × |w_s|` (FSL_MC / FSL_AN) — and interpolates linearly along
+    /// the shard axis in between. The live counterpart is
+    /// `ServerState::resident_params`.
+    ///
+    /// ```
+    /// use cse_fsl::comm::accounting::storage;
+    ///
+    /// let ws = 960_970u64; // paper CIFAR-10 server-side model
+    /// assert_eq!(storage::server_copies_params(1, ws), ws); // OC / CSE (k=1)
+    /// assert_eq!(storage::server_copies_params(5, ws), 5 * ws); // MC / AN (n=5)
+    /// // each extra shard copy costs exactly one more server model
+    /// assert_eq!(
+    ///     storage::server_copies_params(3, ws) - storage::server_copies_params(2, ws),
+    ///     ws
+    /// );
+    /// ```
+    pub fn server_copies_params(copies: u64, server_model_params: u64) -> u64 {
+        copies * server_model_params
+    }
+}
+
 /// Generalized closed forms for a FULL RUN at full participation —
 /// `rounds` communication rounds with an aggregation every `agg_every`
 /// rounds. The per-epoch Table II forms are the special case
 /// `rounds = (|D_i|/batch)/h`, `agg_every = rounds` (asserted by
 /// `tests/comm_properties.rs`); the property suite checks the live
 /// `CommLedger` against these for random configurations.
+///
+/// # Example: reproducing a Table II epoch form
+///
+/// One global epoch of CSE_FSL_h is `(|D_i|/batch)/h` communication
+/// rounds with a single aggregation; the generalized run totals then
+/// reduce exactly to [`table2::cse_fsl`]:
+///
+/// ```
+/// use cse_fsl::comm::accounting::{predict, table2, WireSizes};
+///
+/// let w = WireSizes::new(2304, 107_328, 23_050); // paper CIFAR-10 sizes
+/// let (n, batch, h, rounds) = (5u64, 50u64, 5u64, 8u64);
+/// let d_i = batch * h * rounds; // |D_i|: samples walked once per epoch
+/// let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+/// let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+/// assert_eq!(up + down, table2::cse_fsl(n, d_i, h, &w));
+/// ```
 pub mod predict {
     use super::{MsgKind, WireSizes};
 
@@ -407,6 +473,21 @@ mod tests {
         assert!(cse5 < an, "CSE {cse5} !< AN {an}");
         // MC ≈ 2x AN minus aux overhead
         assert!((mc as f64) / (an as f64) > 1.8);
+    }
+
+    #[test]
+    fn storage_closed_form_endpoints() {
+        let ws = 960_970u64;
+        // Table II endpoints and linear interpolation along k.
+        assert_eq!(storage::server_copies_params(1, ws), ws);
+        assert_eq!(storage::server_copies_params(5, ws), 5 * ws);
+        for k in 1..5 {
+            assert_eq!(
+                storage::server_copies_params(k + 1, ws)
+                    - storage::server_copies_params(k, ws),
+                ws
+            );
+        }
     }
 
     #[test]

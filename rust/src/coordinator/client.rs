@@ -14,24 +14,31 @@ use crate::util::prng::Rng;
 /// client trajectories are independent of both scheduling and the fan-out
 /// strategy.
 pub struct ClientState {
+    /// Client id (canonical merge order of the parallel engine).
     pub id: usize,
     /// Client-side model x_{c,i}.
     pub xc: Vec<f32>,
     /// Auxiliary network a_{c,i} (empty when the method has none).
     pub ac: Vec<f32>,
+    /// Mini-batch stream over this client's data shard.
     pub batcher: Batcher,
+    /// Persistent compute/network delay profile.
     pub profile: ClientProfile,
     /// Simulated time at which this client is free to start local work.
     pub ready_at: f64,
     rng: Rng,
     seed_counter: i64,
-    // Reusable batch buffers (no allocation in the round loop).
+    /// Reusable batch index buffer (no allocation in the round loop).
     pub idx_buf: Vec<usize>,
+    /// Reusable batch image buffer.
     pub images: Vec<f32>,
+    /// Reusable batch label buffer.
     pub labels: Vec<i32>,
 }
 
 impl ClientState {
+    /// Build one client from its initial models, data shard, and delay
+    /// profile; `rng` seeds all of this client's private random streams.
     pub fn new(
         id: usize,
         xc: Vec<f32>,
@@ -72,6 +79,7 @@ impl ClientState {
         ds.gather(&self.idx_buf, &mut self.images, &mut self.labels);
     }
 
+    /// Full mini-batches per local epoch (h/C scheduling).
     pub fn shard_len(&self) -> usize {
         self.batcher.batches_per_epoch()
     }

@@ -78,8 +78,14 @@ pub enum ArrivalOrder {
     Shuffled,
 }
 
+/// Full configuration of one training run (all methods).
+///
+/// Built with [`TrainConfig::new`] (per-method defaults), adjusted via
+/// the `with_*` builders or struct update syntax, and checked by
+/// [`TrainConfig::validate`] before any training happens.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// Which of the four compared FSL methods to run.
     pub method: Method,
     /// Batches of local training per smashed upload (CSE_FSL's h;
     /// must be 1 for the other methods).
@@ -88,10 +94,12 @@ pub struct TrainConfig {
     pub rounds: usize,
     /// Aggregate every k rounds (paper: once per epoch).
     pub agg_every: usize,
-    /// Initial learning rate and decay schedule:
-    /// lr(t) = lr0 * decay_rate^(t / decay_every).
+    /// Initial learning rate of the schedule
+    /// `lr(t) = lr0 * decay_rate^(t / decay_every)`.
     pub lr0: f64,
+    /// Multiplicative decay factor of the learning-rate schedule.
     pub lr_decay_rate: f64,
+    /// Rounds between learning-rate decay steps (0 disables decay).
     pub lr_decay_every: usize,
     /// Server-side learning-rate multiplier (the server head sees much
     /// larger fan-in than the client stack; the paper uses one eta, but
@@ -101,19 +109,31 @@ pub struct TrainConfig {
     pub clip: f32,
     /// Clients sampled per round (k of n; n = partition size).
     pub participation: usize,
+    /// Experiment seed: every random stream in the run derives from it.
     pub seed: u64,
     /// Evaluate accuracy every k rounds (0 = only at the end).
     pub eval_every: usize,
     /// Cap eval to k batches (0 = full test set).
     pub eval_max_batches: usize,
+    /// Order in which the server consumes this round's uploads.
     pub arrival: ArrivalOrder,
     /// Record gradient norms (Props 1-2 traces).
     pub track_grad_norms: bool,
     /// Client fan-out strategy (bit-deterministic either way).
     pub parallelism: Parallelism,
+    /// Server shard count k for the single-copy methods (FSL_OC /
+    /// CSE_FSL): k server-side copies, each serving a contiguous
+    /// client group on its own event-loop executor, FedAvg'd together
+    /// every `agg_every` rounds. k = 1 (the default) is the paper's
+    /// shared copy; k = n matches FSL_MC's storage. Rejected (> 1) for
+    /// the per-client-copy methods, which fix their own copy count.
+    /// Unlike `parallelism`, shard count **changes results** and is part
+    /// of the experiment cache key.
+    pub server_shards: usize,
 }
 
 impl TrainConfig {
+    /// Per-method defaults (paper Section VI-A operating points).
     pub fn new(method: Method) -> Self {
         TrainConfig {
             method,
@@ -132,34 +152,48 @@ impl TrainConfig {
             arrival: ArrivalOrder::ByDelay,
             track_grad_norms: false,
             parallelism: Parallelism::Sequential,
+            server_shards: 1,
         }
     }
 
+    /// Builder: set the client fan-out strategy.
     pub fn with_parallelism(mut self, parallelism: Parallelism) -> Self {
         self.parallelism = parallelism;
         self
     }
 
+    /// Builder: set CSE_FSL's local batches per upload.
     pub fn with_h(mut self, h: usize) -> Self {
         self.h = h;
         self
     }
 
+    /// Builder: set the communication-round count.
     pub fn with_rounds(mut self, rounds: usize) -> Self {
         self.rounds = rounds;
         self
     }
 
+    /// Builder: set the experiment seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Builder: set the server shard count k.
+    pub fn with_server_shards(mut self, server_shards: usize) -> Self {
+        self.server_shards = server_shards;
+        self
+    }
+
+    /// The learning rate in effect at (0-based) `round`.
     pub fn lr_at(&self, round: usize) -> f64 {
         let steps = if self.lr_decay_every == 0 { 0 } else { round / self.lr_decay_every };
         self.lr0 * self.lr_decay_rate.powi(steps as i32)
     }
 
+    /// Check the configuration against the client count; returns a
+    /// human-readable reason when it cannot run.
     pub fn validate(&self, n_clients: usize) -> Result<(), String> {
         if self.h == 0 {
             return Err("h must be >= 1".into());
@@ -177,6 +211,22 @@ impl TrainConfig {
             return Err(format!(
                 "participation {} exceeds client count {n_clients}",
                 self.participation
+            ));
+        }
+        if self.server_shards == 0 {
+            return Err("server-shards must be >= 1".into());
+        }
+        if self.server_shards > n_clients {
+            return Err(format!(
+                "server-shards {} exceeds client count {n_clients}",
+                self.server_shards
+            ));
+        }
+        if self.server_shards > 1 && self.method.per_client_server_model() {
+            return Err(format!(
+                "{} already keeps one server copy per client; \
+                 --server-shards applies to the single-copy methods (FSL_OC / CSE_FSL)",
+                self.method
             ));
         }
         if self.lr0 <= 0.0 || self.lr_decay_rate <= 0.0 || self.lr_decay_rate > 1.0 {
@@ -223,6 +273,29 @@ mod tests {
         assert_eq!(c.active_clients(5), 3);
         c.participation = 0;
         assert_eq!(c.active_clients(5), 5);
+    }
+
+    #[test]
+    fn server_shard_validation() {
+        // Default is the paper's single copy.
+        assert_eq!(TrainConfig::new(Method::CseFsl).server_shards, 1);
+        // Any k in 1..=n works for the single-copy methods.
+        for method in [Method::CseFsl, Method::FslOc] {
+            for k in 1..=5usize {
+                let c = TrainConfig::new(method).with_server_shards(k);
+                assert!(c.validate(5).is_ok(), "{method} k={k}");
+            }
+            assert!(TrainConfig::new(method).with_server_shards(6).validate(5).is_err());
+            assert!(TrainConfig::new(method).with_server_shards(0).validate(5).is_err());
+        }
+        // The per-client-copy methods fix their own copy count.
+        for method in [Method::FslMc, Method::FslAn] {
+            assert!(TrainConfig::new(method).with_server_shards(1).validate(5).is_ok());
+            assert!(
+                TrainConfig::new(method).with_server_shards(2).validate(5).is_err(),
+                "{method} must reject explicit sharding"
+            );
+        }
     }
 
     #[test]

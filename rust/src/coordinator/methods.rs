@@ -7,15 +7,22 @@
 //! | FSL_AN  | n             | yes     | local auxiliary loss   | every batch|
 //! | CSE_FSL | 1             | yes     | local auxiliary loss   | every h    |
 
+/// One of the four compared federated-split-learning methods.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Method {
+    /// SplitFed baseline with one server-side copy per client.
     FslMc,
+    /// SplitFed with one shared server-side copy (clipped gradients).
     FslOc,
+    /// Auxiliary-network local updates, per-client server copies.
     FslAn,
+    /// The paper's method: auxiliary networks, one shared server copy,
+    /// smashed uploads every h batches.
     CseFsl,
 }
 
 impl Method {
+    /// Every method, in the paper's comparison order.
     pub const ALL: [Method; 4] = [Method::FslMc, Method::FslOc, Method::FslAn, Method::CseFsl];
 
     /// Does the server keep one model copy per client?
@@ -48,6 +55,7 @@ impl Method {
         }
     }
 
+    /// Parse a method name (`fsl_mc`/`mc`, …, `cse_fsl`/`cse`).
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().replace('-', "_").as_str() {
             "fsl_mc" | "mc" => Some(Method::FslMc),

@@ -6,10 +6,10 @@
 //! smashed data once ("when client i sends the smashed data to the
 //! server, it completes one communication round"). The server consumes
 //! arrivals from the dataQueue in arrival order (configurable for the
-//! Fig. 6 ablation) and updates its (single or per-client) model
-//! event-triggered, never waiting for a barrier. Every `agg_every` rounds
-//! the clients upload their client-side models (+ aux) for FedAvg
-//! (Eq. (14)) and download the aggregate.
+//! Fig. 6 ablation) and updates its server-side model(s) event-triggered,
+//! never waiting for a barrier. Every `agg_every` rounds the clients
+//! upload their client-side models (+ aux) for FedAvg (Eq. (14)) and
+//! download the aggregate.
 //!
 //! Timing is simulated deterministically (sim/netmodel): client compute,
 //! uplink/downlink transmission, and server update costs all advance the
@@ -25,14 +25,31 @@
 //! scoped thread pool ([`std::thread::scope`]): each worker drives its
 //! own [`ClientState`] with its already-independent per-client RNG
 //! streams, recording spans and wire bytes into worker-local
-//! [`Timeline`]/[`CommLedger`]s. The server side stays a single event
-//! loop draining arrivals exactly as before.
+//! [`Timeline`]/[`CommLedger`]s.
+//!
+//! # The sharded server phase
+//!
+//! With `TrainConfig::server_shards = k` (single-copy methods only), the
+//! server holds `k` model copies, each serving a contiguous client group
+//! ([`ShardMap`]) on its **own event-loop executor** with its own
+//! simulated clock. The event-triggered drain loop runs once per shard —
+//! fanned over the same scoped-thread machinery as the client phase —
+//! and shard results (losses, spans, clocks, per-shard update counts)
+//! are merged in canonical shard order. Every `agg_every` rounds the
+//! shard copies are FedAvg'd back together (cross-shard FedAvg), which
+//! doubles as a global clock barrier. `k = 1` reproduces the historical
+//! single-copy schedule bit-for-bit; the per-client-copy methods
+//! (FSL_MC / FSL_AN) keep their n copies behind a single executor,
+//! exactly as the paper describes them.
 //!
 //! **Determinism is a hard contract**: per-client results are merged in
-//! canonical order (client id, then time), so a parallel run's
-//! `RunRecord`, timeline, ledger, and model states are bit-identical to
-//! the sequential schedule's — enforced by `tests/determinism_golden.rs`
-//! for every method. See `coordinator/README.md` for the argument.
+//! canonical order (client id, then time) and per-shard results in
+//! canonical shard order, so a parallel run's `RunRecord`, timeline,
+//! ledger, and model states are bit-identical to the sequential
+//! schedule's — enforced by `tests/determinism_golden.rs` for every
+//! method and shard count. See `coordinator/README.md` for the argument.
+//!
+//! [`ShardMap`]: super::server::ShardMap
 
 use std::sync::mpsc;
 
@@ -53,16 +70,24 @@ use crate::util::prng::Rng;
 use super::client::ClientState;
 use super::config::{ArrivalOrder, Parallelism, TrainConfig};
 
-use super::server::{ServerState, SmashedMsg};
+use super::server::{ServerState, SmashedMsg, Topology};
 
+/// Drives one full training run over an engine: owns the clients, the
+/// (possibly sharded) server, the wire ledger, and the timeline.
 pub struct Trainer<'a, E: SplitEngine> {
+    /// The compute engine shared by every client and server step.
     pub engine: &'a E,
+    /// The validated run configuration.
     pub cfg: TrainConfig,
     train: &'a Dataset,
     test: &'a Dataset,
+    /// Per-client state (models, batcher, delay profile).
     pub clients: Vec<ClientState>,
+    /// Server-side state (shard copies, executor clocks, dataQueue).
     pub server: ServerState,
+    /// Measured wire traffic.
     pub ledger: CommLedger,
+    /// Recorded simulated schedule.
     pub timeline: Timeline,
     wires: WireSizes,
     rng: Rng,
@@ -74,15 +99,92 @@ pub struct Trainer<'a, E: SplitEngine> {
 
 /// Everything needed to build a Trainer over real or mock engines.
 pub struct TrainerSetup<'a> {
+    /// Training dataset (clients batch from their partition shards).
     pub train: &'a Dataset,
+    /// Held-out evaluation dataset.
     pub test: &'a Dataset,
+    /// Per-client sample-index partition of `train`.
     pub partition: Partition,
+    /// Client heterogeneity / network delay model.
     pub net: NetModel,
     /// Layouts drive initialization; pass `None` to zero-init (mock).
     pub client_layout: Option<&'a Layout>,
+    /// Server-side model layout (`None` = zero-init).
     pub server_layout: Option<&'a Layout>,
+    /// Auxiliary-network layout (`None` = zero-init).
     pub aux_layout: Option<&'a Layout>,
+    /// Human-readable run label carried into the `RunRecord`.
     pub label: String,
+}
+
+/// Run `work(position, item)` once per owned work item, fanned out
+/// according to `parallelism`, and return the results **in item order**
+/// (the canonical merge order of the deterministic parallel engine).
+///
+/// Work items are dealt round-robin to scoped worker threads. The first
+/// error in canonical order wins, matching sequential error reporting: a
+/// worker stops after its first error, so any unfilled slot can only
+/// follow an error at an earlier canonical position.
+fn fanout_owned<I, T, F>(
+    parallelism: Parallelism,
+    items: Vec<I>,
+    work: F,
+) -> Result<Vec<T>, EngineError>
+where
+    I: Send,
+    T: Send,
+    F: Fn(usize, I) -> Result<T, EngineError> + Sync,
+{
+    let workers = parallelism.worker_count(items.len());
+    if workers <= 1 {
+        // Reference schedule: no thread machinery at all.
+        let mut out = Vec::with_capacity(items.len());
+        for (pos, item) in items.into_iter().enumerate() {
+            out.push(work(pos, item)?);
+        }
+        return Ok(out);
+    }
+    let n = items.len();
+    let work = &work;
+    let mut slots: Vec<Option<Result<T, EngineError>>> = std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, EngineError>)>();
+        let mut buckets: Vec<Vec<(usize, I)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (pos, item) in items.into_iter().enumerate() {
+            buckets[pos % workers].push((pos, item));
+        }
+        for bucket in buckets {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                for (pos, item) in bucket {
+                    let result = work(pos, item);
+                    let failed = result.is_err();
+                    if tx.send((pos, result)).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<T, EngineError>>> = (0..n).map(|_| None).collect();
+        for (pos, result) in rx {
+            slots[pos] = Some(result);
+        }
+        slots
+    });
+    let mut out = Vec::with_capacity(n);
+    for slot in slots.iter_mut() {
+        match slot.take() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(e),
+            // A worker only skips positions after reporting an error at
+            // an earlier canonical position, so this is unreachable; keep
+            // it as a defensive invariant rather than a panic.
+            None => {
+                return Err(EngineError::Parallel("worker dropped a result".into()))
+            }
+        }
+    }
+    Ok(out)
 }
 
 /// Run `work(position, client_id, client)` once per participant, fanned
@@ -91,10 +193,8 @@ pub struct TrainerSetup<'a> {
 /// of the deterministic parallel engine).
 ///
 /// `participants` must be sorted and duplicate-free (guaranteed by
-/// `select_participants`). Work items are dealt round-robin to scoped
-/// worker threads; each worker owns disjoint `&mut ClientState`s, so no
-/// client state is ever shared. The first error in canonical order wins,
-/// matching sequential error reporting.
+/// `select_participants`). Each worker owns disjoint `&mut ClientState`s,
+/// so no client state is ever shared.
 fn fanout_clients<T, F>(
     parallelism: Parallelism,
     clients: &mut [ClientState],
@@ -121,60 +221,14 @@ where
         }
         assert!(want.peek().is_none(), "participant id out of range");
     }
-    let workers = parallelism.worker_count(refs.len());
-    if workers <= 1 {
-        // Reference schedule: no thread machinery at all.
-        let mut out = Vec::with_capacity(refs.len());
-        for (pos, c) in refs.into_iter().enumerate() {
-            out.push(work(pos, participants[pos], c)?);
-        }
-        return Ok(out);
-    }
-    let n = refs.len();
-    let work = &work;
-    let mut slots: Vec<Option<Result<T, EngineError>>> = std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::channel::<(usize, Result<T, EngineError>)>();
-        let mut buckets: Vec<Vec<(usize, &mut ClientState)>> =
-            (0..workers).map(|_| Vec::new()).collect();
-        for (pos, c) in refs.into_iter().enumerate() {
-            buckets[pos % workers].push((pos, c));
-        }
-        for bucket in buckets {
-            let tx = tx.clone();
-            scope.spawn(move || {
-                for (pos, c) in bucket {
-                    let result = work(pos, participants[pos], c);
-                    let failed = result.is_err();
-                    if tx.send((pos, result)).is_err() || failed {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(tx);
-        let mut slots: Vec<Option<Result<T, EngineError>>> = (0..n).map(|_| None).collect();
-        for (pos, result) in rx {
-            slots[pos] = Some(result);
-        }
-        slots
-    });
-    let mut out = Vec::with_capacity(n);
-    for slot in slots.iter_mut() {
-        match slot.take() {
-            Some(Ok(v)) => out.push(v),
-            Some(Err(e)) => return Err(e),
-            // A worker only skips positions after reporting an error at
-            // an earlier canonical position, so this is unreachable; keep
-            // it as a defensive invariant rather than a panic.
-            None => {
-                return Err(EngineError::Parallel("worker dropped a client result".into()))
-            }
-        }
-    }
-    Ok(out)
+    fanout_owned(parallelism, refs, |pos, c| work(pos, participants[pos], c))
 }
 
 impl<'a, E: SplitEngine> Trainer<'a, E> {
+    /// Validate `cfg` against the setup and build the initial state:
+    /// globally-initialized models (Step 1), per-client profiles and RNG
+    /// streams, and the server topology implied by the method and
+    /// `cfg.server_shards`.
     pub fn new(engine: &'a E, cfg: TrainConfig, setup: TrainerSetup<'a>) -> Result<Self, String> {
         let n = setup.partition.n_clients();
         cfg.validate(n)?;
@@ -217,8 +271,13 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             })
             .collect();
 
-        let copies = if cfg.method.per_client_server_model() { n } else { 1 };
-        let server = ServerState::new(xs0, copies, engine.client_size(), engine.aux_size());
+        let topology = if cfg.method.per_client_server_model() {
+            Topology::PerClient
+        } else {
+            Topology::Sharded(cfg.server_shards)
+        };
+        let server =
+            ServerState::new(xs0, n, topology, engine.client_size(), engine.aux_size());
         let wires =
             WireSizes::new(engine.smashed_len(), engine.client_size(), engine.aux_size());
         Ok(Trainer {
@@ -282,11 +341,13 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             total_down_bytes: self.ledger.down_bytes(),
             sim_time: self.timeline.end_time(),
             server_idle_fraction: self.timeline.server_idle_fraction(),
-            server_storage_params: storage::server_storage_params(
+            server_storage_params: storage::server_storage_params_sharded(
                 self.cfg.method,
                 self.clients.len(),
+                self.cfg.server_shards,
                 &sizes,
             ),
+            server_updates_per_shard: self.server.shard_updates.clone(),
         })
     }
 
@@ -441,8 +502,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     /// FSL_MC / FSL_OC round: one interactive split batch per client —
     /// forward, smashed upload, server fwd/bwd, gradient downlink, client
     /// backward. The client *blocks* on the server round trip, so only
-    /// phase 1 (forward + upload) fans out; phase 2 is inherently the
-    /// serialized server loop.
+    /// phase 1 (forward + upload) fans out; phase 2 is the serialized
+    /// server loop — one global loop for the per-client-copy methods, or
+    /// one loop per shard executor for sharded FSL_OC.
     fn splitfed_round(
         &mut self,
         participants: &[usize],
@@ -507,67 +569,94 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         // Stable sort: equal arrivals keep canonical client-id order.
         pend.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
 
-        // Phase 2: server processes sequentially; client backward after
-        // the gradient downlink.
+        // Phase 2: the server round trip, then client backward after the
+        // gradient downlink. Arrivals are grouped by executor lane
+        // (stable within the global arrival order) and lanes run in
+        // canonical lane order; with a single lane this is exactly the
+        // historical global loop. Lanes stay sequential here — the loop
+        // interleaves client mutation with the shared timeline/ledger —
+        // only the event-triggered drain loop fans out over threads.
         let net_server = NetModel::edge_default().server_update_time;
+        let lanes = self.server.lanes();
+        let mut by_lane: Vec<Vec<Pending>> = (0..lanes).map(|_| Vec::new()).collect();
         for p in pend {
-            let i = p.client;
-            let start = self.server.free_at.max(p.arrival);
-            let copy = self.server.copy_for(i);
-            let labels = self.clients[i].labels.clone();
-            let out = self.engine.server_fwd_bwd(
-                &self.server.copies[copy],
-                &p.smashed,
-                &labels,
-                server_lr,
-                p.seed,
-                self.cfg.clip,
-            )?;
-            self.server.copies[copy] = out.new_server;
-            self.server.updates += 1;
-            train_losses.push(out.loss);
-            let done = start + net_server;
-            self.server.free_at = done;
-            self.timeline.record(SpanKind::ServerUpdate, None, start, done, "fwd/bwd");
+            by_lane[self.server.lane_for(p.client)].push(p);
+        }
+        for (lane, lane_pend) in by_lane.into_iter().enumerate() {
+            for p in lane_pend {
+                let i = p.client;
+                let start = self.server.free_at[lane].max(p.arrival);
+                let copy = self.server.copy_for(i);
+                let labels = self.clients[i].labels.clone();
+                let out = self.engine.server_fwd_bwd(
+                    &self.server.copies[copy],
+                    &p.smashed,
+                    &labels,
+                    server_lr,
+                    p.seed,
+                    self.cfg.clip,
+                )?;
+                self.server.copies[copy] = out.new_server;
+                self.server.record_update(copy);
+                train_losses.push(out.loss);
+                let done = start + net_server;
+                self.server.free_at[lane] = done;
+                let label = if lanes == 1 {
+                    "fwd/bwd".to_string()
+                } else {
+                    format!("fwd/bwd s{lane}")
+                };
+                self.timeline.record(SpanKind::ServerUpdate, None, start, done, label);
 
-            let mut drng = self.rng.split(i as u64 ^ 0xA3);
-            let grad_bytes = self.smashed_bytes();
-            let c = &mut self.clients[i];
-            let t_down = c.profile.download_delay(grad_bytes, &mut drng);
-            self.timeline.record(SpanKind::Download, Some(i), done, done + t_down, "grads");
-            self.ledger.record(i, MsgKind::GradDownload, grad_bytes);
+                let mut drng = self.rng.split(i as u64 ^ 0xA3);
+                let grad_bytes = self.smashed_bytes();
+                let c = &mut self.clients[i];
+                let t_down = c.profile.download_delay(grad_bytes, &mut drng);
+                self.timeline.record(SpanKind::Download, Some(i), done, done + t_down, "grads");
+                self.ledger.record(i, MsgKind::GradDownload, grad_bytes);
 
-            let (new_xc, gnorm) = self.engine.client_bwd(
-                &c.xc,
-                &c.images,
-                &out.grad_smashed,
-                lr,
-                p.seed,
-                self.cfg.clip,
-            )?;
-            c.xc = new_xc;
-            client_gnorms.push(gnorm);
-            let t_bwd = c.profile.compute_delay(1, &mut drng) * 0.5;
-            self.timeline.record(
-                SpanKind::ClientCompute,
-                Some(i),
-                done + t_down,
-                done + t_down + t_bwd,
-                "bwd",
-            );
-            c.ready_at = done + t_down + t_bwd;
+                let (new_xc, gnorm) = self.engine.client_bwd(
+                    &c.xc,
+                    &c.images,
+                    &out.grad_smashed,
+                    lr,
+                    p.seed,
+                    self.cfg.clip,
+                )?;
+                c.xc = new_xc;
+                client_gnorms.push(gnorm);
+                let t_bwd = c.profile.compute_delay(1, &mut drng) * 0.5;
+                self.timeline.record(
+                    SpanKind::ClientCompute,
+                    Some(i),
+                    done + t_down,
+                    done + t_down + t_bwd,
+                    "bwd",
+                );
+                c.ready_at = done + t_down + t_bwd;
+            }
         }
         Ok(())
     }
 
     /// The event-triggered update loop (Algorithm 2): order arrivals,
-    /// enqueue into the dataQueue, and update the server model(s) as each
-    /// message is consumed.
+    /// route them to their executor lane, and run each lane's update
+    /// loop — fanned over the `Parallelism` thread machinery, merged in
+    /// canonical lane order.
+    ///
+    /// Each lane owns a contiguous range of server copies: all of them
+    /// behind the single executor of the per-client-copy methods, or
+    /// exactly one each for the sharded server phase. On error the
+    /// trainer is left with its copies taken and must be discarded
+    /// (matching the documented error contract of the parallel engine).
     fn drain_data_queue(
         &mut self,
         lr: f32,
         mut msgs: Vec<SmashedMsg>,
     ) -> Result<(Vec<f32>, Vec<f32>), EngineError> {
+        if msgs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
         match self.cfg.arrival {
             ArrivalOrder::ByDelay => {
                 msgs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
@@ -575,40 +664,101 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             ArrivalOrder::ClientIndex => msgs.sort_by_key(|m| m.client),
             ArrivalOrder::Shuffled => self.rng.shuffle(&mut msgs),
         }
-        self.server.enqueue_all(msgs);
+        let lanes = self.server.lanes();
+        // The paper's dataQueue, materialized per executor lane: route
+        // the globally-ordered arrivals to their lanes (stable: within
+        // a lane, the global order is preserved).
+        let mut lane_msgs: Vec<Vec<SmashedMsg>> = (0..lanes).map(|_| Vec::new()).collect();
+        for m in msgs {
+            lane_msgs[self.server.lane_for(m.client)].push(m);
+        }
+        // Each lane takes ownership of its contiguous copy range.
+        let all_copies = std::mem::take(&mut self.server.copies);
+        let lane_copies: Vec<(usize, Vec<Vec<f32>>)> = if lanes == 1 {
+            vec![(0, all_copies)]
+        } else {
+            all_copies.into_iter().enumerate().map(|(l, c)| (l, vec![c])).collect()
+        };
+        struct LaneOutcome {
+            copies: Vec<Vec<f32>>,
+            free_at: f64,
+            /// Updates applied to each owned copy (parallel to `copies`).
+            updates: Vec<u64>,
+            losses: Vec<f32>,
+            gnorms: Vec<f32>,
+            timeline: Timeline,
+        }
+        let engine = self.engine;
         let net_server = NetModel::edge_default().server_update_time;
+        let shard_map = self.server.shard_map.clone();
+        let items: Vec<_> = lane_copies
+            .into_iter()
+            .zip(self.server.free_at.iter().copied())
+            .zip(lane_msgs)
+            .map(|(((base, copies), free_at), msgs)| (base, copies, free_at, msgs))
+            .collect();
+        let outcomes = fanout_owned(
+            self.cfg.parallelism,
+            items,
+            |lane, item: (usize, Vec<Vec<f32>>, f64, Vec<SmashedMsg>)| {
+                let (base, mut copies, mut free_at, msgs) = item;
+                let mut updates = vec![0u64; copies.len()];
+                let mut losses = Vec::with_capacity(msgs.len());
+                let mut gnorms = Vec::with_capacity(msgs.len());
+                let mut timeline = Timeline::default();
+                for m in msgs {
+                    let start = free_at.max(m.arrival);
+                    let slot = shard_map.shard_of(m.client) - base;
+                    let out = engine.server_train_step(
+                        &copies[slot],
+                        &m.smashed,
+                        &m.labels,
+                        lr,
+                        m.seed,
+                    )?;
+                    copies[slot] = out.new_server;
+                    updates[slot] += 1;
+                    losses.push(out.loss);
+                    gnorms.push(out.grad_norm);
+                    let done = start + net_server;
+                    free_at = done;
+                    let label = if lanes == 1 {
+                        format!("update c{}", m.client)
+                    } else {
+                        format!("update c{} s{lane}", m.client)
+                    };
+                    timeline.record(SpanKind::ServerUpdate, None, start, done, label);
+                }
+                Ok(LaneOutcome { copies, free_at, updates, losses, gnorms, timeline })
+            },
+        )?;
+        // Merge in canonical lane order (the bit-determinism contract);
+        // copies are re-assembled in ascending copy-index order.
         let mut losses = Vec::new();
         let mut gnorms = Vec::new();
-        while let Some(m) = self.server.data_queue.pop_front() {
-            let start = self.server.free_at.max(m.arrival);
-            let copy = self.server.copy_for(m.client);
-            let out = self.engine.server_train_step(
-                &self.server.copies[copy],
-                &m.smashed,
-                &m.labels,
-                lr,
-                m.seed,
-            )?;
-            self.server.copies[copy] = out.new_server;
-            self.server.updates += 1;
-            losses.push(out.loss);
-            gnorms.push(out.grad_norm);
-            let done = start + net_server;
-            self.server.free_at = done;
-            self.timeline.record(
-                SpanKind::ServerUpdate,
-                None,
-                start,
-                done,
-                format!("update c{}", m.client),
-            );
+        for (lane, o) in outcomes.into_iter().enumerate() {
+            let base = if lanes == 1 { 0 } else { lane };
+            for (j, (copy, ups)) in o.copies.into_iter().zip(o.updates).enumerate() {
+                debug_assert_eq!(self.server.copies.len(), base + j);
+                self.server.copies.push(copy);
+                self.server.updates += ups;
+                self.server.shard_updates[base + j] += ups;
+            }
+            self.server.free_at[lane] = o.free_at;
+            self.timeline.append(o.timeline);
+            losses.extend(o.losses);
+            gnorms.extend(o.gnorms);
         }
         Ok((losses, gnorms))
     }
 
     /// Global aggregation (Step 4, Eq. (14)): dirty clients upload their
     /// client-side models (+ aux), the server averages and redistributes
-    /// to everyone; MC/AN additionally FedAvg their server copies.
+    /// to everyone; the multi-copy server states (per-client copies or
+    /// shard copies) additionally FedAvg their copies — the cross-shard
+    /// FedAvg that resynchronizes the sharded server phase. Aggregation
+    /// is a global barrier: every executor lane's clock is advanced to
+    /// the aggregation end.
     fn aggregate(&mut self, _t: usize) -> Result<(), EngineError> {
         let contributors: Vec<usize> =
             (0..self.clients.len()).filter(|&i| self.dirty[i]).collect();
@@ -616,7 +766,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             return Ok(());
         }
         // Upload client models (+ aux) — wire cost + arrival times.
-        let mut last_arrival = self.server.free_at;
+        let mut last_arrival = self.server.free_at_max();
         for &i in &contributors {
             let c = &mut self.clients[i];
             let mut drng = self.rng.split(i as u64 ^ 0xC4);
@@ -640,11 +790,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 self.server.aux_acc.add(&c.ac, 1.0);
             }
         }
-        // Server aggregation (barrier: needs every contributor).
-        let agg_start = last_arrival.max(self.server.free_at);
+        // Server aggregation (barrier: needs every contributor and every
+        // shard executor).
+        let agg_start = last_arrival.max(self.server.free_at_max());
         let agg_cost = 1e-3; // FedAvg itself is cheap vs model transfer
         let agg_done = agg_start + agg_cost;
-        self.server.free_at = agg_done;
+        self.server.sync_free_at(agg_done);
         self.timeline.record(SpanKind::Aggregate, None, agg_start, agg_done, "fedavg");
 
         let mut xc_new = vec![0.0f32; self.engine.client_size()];
@@ -694,6 +845,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         accuracy(self.engine, &xc, &xs, self.test, max_batches)
     }
 
+    /// Per-round records accumulated so far.
     pub fn records(&self) -> &[RoundRecord] {
         &self.records
     }

@@ -1,15 +1,28 @@
-//! Server state: server-side model copies, the event-triggered
-//! `dataQueue` (Algorithm 2), and aggregation accumulators.
+//! Server state: sharded server-side model copies, per-shard executor
+//! clocks, and aggregation accumulators. The paper's event-triggered
+//! `dataQueue` (Algorithm 2) is materialized by the round engine as
+//! per-executor-lane arrival queues each round
+//! (`coordinator::round::Trainer::drain_data_queue`).
+//!
+//! The paper's methods pin two points of a storage/throughput curve: one
+//! shared copy behind one event loop (FSL_OC / CSE_FSL) or one copy per
+//! client behind one event loop (FSL_MC / FSL_AN). [`Topology`]
+//! generalizes the single-copy side to `k` **shards**: `k` server-side
+//! copies, each serving a contiguous group of clients on its own
+//! event-loop executor, FedAvg'd back together at every aggregation
+//! (cross-shard FedAvg). `k = 1` reproduces the paper's single-copy
+//! server bit-for-bit; `k = n` holds as many copies as FSL_MC.
 
-use std::collections::VecDeque;
-
-use crate::model::aggregate::{fedavg, Accumulator};
+use crate::model::aggregate::{fedavg, fedavg_weighted, Accumulator};
 
 /// One smashed-data upload in flight / queued at the server.
 #[derive(Clone, Debug)]
 pub struct SmashedMsg {
+    /// Originating client id.
     pub client: usize,
+    /// Flattened smashed activations for one batch.
     pub smashed: Vec<f32>,
+    /// Labels accompanying the smashed batch.
     pub labels: Vec<i32>,
     /// Simulated arrival time at the server.
     pub arrival: f64,
@@ -18,84 +31,214 @@ pub struct SmashedMsg {
     pub seed: i32,
 }
 
-/// Algorithm 2 state.
+/// Deterministic client → shard assignment: canonical client-id order,
+/// contiguous groups, sizes as equal as possible (the first
+/// `n mod k` shards hold one extra client).
+///
+/// The assignment is a pure function of `(n_clients, shards)` — never of
+/// arrival order or scheduling — which is what lets the sharded server
+/// phase keep the bit-determinism contract (see `coordinator/README.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    shard_of: Vec<usize>,
+    shards: usize,
+}
+
+impl ShardMap {
+    /// Contiguous equal-as-possible groups of `n_clients` over `shards`.
+    ///
+    /// `shards` must be in `1..=n_clients`; `contiguous(n, 1)` maps every
+    /// client to shard 0 (the paper's shared copy) and `contiguous(n, n)`
+    /// is the identity (one copy per client, FSL_MC-style).
+    pub fn contiguous(n_clients: usize, shards: usize) -> Self {
+        assert!(shards >= 1, "at least one shard required");
+        assert!(
+            shards <= n_clients.max(1),
+            "more shards ({shards}) than clients ({n_clients})"
+        );
+        let base = n_clients / shards;
+        let extra = n_clients % shards;
+        let mut shard_of = Vec::with_capacity(n_clients);
+        for s in 0..shards {
+            let len = base + usize::from(s < extra);
+            shard_of.resize(shard_of.len() + len, s);
+        }
+        debug_assert_eq!(shard_of.len(), n_clients);
+        ShardMap { shard_of, shards }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Number of clients mapped.
+    pub fn n_clients(&self) -> usize {
+        self.shard_of.len()
+    }
+
+    /// The shard serving `client`.
+    pub fn shard_of(&self, client: usize) -> usize {
+        self.shard_of[client]
+    }
+
+    /// Client ids of one shard, ascending (contiguous by construction).
+    pub fn clients_of(&self, shard: usize) -> Vec<usize> {
+        (0..self.shard_of.len()).filter(|&c| self.shard_of[c] == shard).collect()
+    }
+}
+
+/// How server-side model copies map to event-loop executors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// One copy per client behind a **single** executor — FSL_MC / FSL_AN
+    /// exactly as the paper describes them (the server is one machine
+    /// holding n models).
+    PerClient,
+    /// `k` shard copies, each with its own event-loop executor; clients
+    /// map to shards via [`ShardMap::contiguous`]. `Sharded(1)` is the
+    /// paper's single-copy server (FSL_OC / CSE_FSL).
+    Sharded(usize),
+}
+
+/// Algorithm 2 state, generalized to sharded copies.
 pub struct ServerState {
-    /// Server-side model copies: len 1 (FSL_OC / CSE_FSL) or n (FSL_MC /
-    /// FSL_AN, one per client).
+    /// Server-side model copies: `n` ([`Topology::PerClient`]) or `k`
+    /// ([`Topology::Sharded`]).
     pub copies: Vec<Vec<f32>>,
-    /// The paper's dataQueue: arrived smashed data waiting for the
-    /// event-triggered update loop.
-    pub data_queue: VecDeque<SmashedMsg>,
-    /// Simulated time at which the server finishes its current work.
-    pub free_at: f64,
-    /// Aggregation accumulators (client models / aux nets).
+    /// Client → copy routing (identity for `PerClient`).
+    pub shard_map: ShardMap,
+    /// Per-executor clocks: when each event-loop lane finishes its
+    /// current work. Length 1 for `PerClient` (n copies share one
+    /// executor) and `k` for `Sharded(k)` (one executor per shard copy).
+    pub free_at: Vec<f64>,
+    /// Aggregation accumulator for client-side models.
     pub client_acc: Accumulator,
+    /// Aggregation accumulator for auxiliary networks.
     pub aux_acc: Accumulator,
     /// Total event-triggered updates performed (observability).
     pub updates: u64,
+    /// Event-triggered updates applied to each copy (per-shard counts;
+    /// sums to [`ServerState::updates`]).
+    pub shard_updates: Vec<u64>,
 }
 
 impl ServerState {
-    pub fn new(xs: Vec<f32>, copies: usize, client_size: usize, aux_size: usize) -> Self {
-        assert!(copies >= 1);
+    /// Build the server from the initial server-side model `xs`, the
+    /// client count, and the copy/executor [`Topology`].
+    pub fn new(
+        xs: Vec<f32>,
+        n_clients: usize,
+        topology: Topology,
+        client_size: usize,
+        aux_size: usize,
+    ) -> Self {
+        let (shard_map, lanes) = match topology {
+            Topology::PerClient => (ShardMap::contiguous(n_clients, n_clients.max(1)), 1),
+            Topology::Sharded(k) => (ShardMap::contiguous(n_clients, k), k),
+        };
+        let copies = shard_map.shards();
         ServerState {
             copies: vec![xs; copies],
-            data_queue: VecDeque::new(),
-            free_at: 0.0,
+            shard_map,
+            free_at: vec![0.0; lanes],
             client_acc: Accumulator::new(client_size),
             aux_acc: Accumulator::new(aux_size),
             updates: 0,
+            shard_updates: vec![0; copies],
         }
     }
 
-    /// The copy index serving `client` (0 when a single copy is shared).
+    /// Number of executor lanes (independent server event loops).
+    pub fn lanes(&self) -> usize {
+        self.free_at.len()
+    }
+
+    /// The copy index serving `client`.
     pub fn copy_for(&self, client: usize) -> usize {
-        if self.copies.len() == 1 {
+        self.shard_map.shard_of(client)
+    }
+
+    /// The executor lane serving `client` (0 when all copies share one
+    /// event loop).
+    pub fn lane_for(&self, client: usize) -> usize {
+        if self.free_at.len() == 1 {
             0
         } else {
-            client
+            self.shard_map.shard_of(client)
         }
     }
 
-    pub fn enqueue(&mut self, msg: SmashedMsg) {
-        self.data_queue.push_back(msg);
+    /// Latest time any executor lane is busy until (the global "server
+    /// free" time — used as the aggregation barrier baseline).
+    pub fn free_at_max(&self) -> f64 {
+        self.free_at.iter().copied().fold(0.0, f64::max)
     }
 
-    /// Enqueue a whole upload wave, preserving the given order (the
-    /// round engine pre-sorts by the configured [`ArrivalOrder`]).
-    ///
-    /// [`ArrivalOrder`]: super::config::ArrivalOrder
-    pub fn enqueue_all(&mut self, msgs: impl IntoIterator<Item = SmashedMsg>) {
-        for m in msgs {
-            self.enqueue(m);
+    /// Synchronize every executor lane to `t` (aggregation is a global
+    /// barrier across shards).
+    pub fn sync_free_at(&mut self, t: f64) {
+        self.free_at.iter_mut().for_each(|f| *f = t);
+    }
+
+    /// Count one event-triggered update against `copy`.
+    pub fn record_update(&mut self, copy: usize) {
+        self.updates += 1;
+        self.shard_updates[copy] += 1;
+    }
+
+    /// Clients served by each copy (the FedAvg weights of the copies:
+    /// a shard copy speaks for its whole client group, so copies must
+    /// be weighted per client — Eq. (14) — not per copy).
+    fn copy_weights(&self) -> Vec<f64> {
+        let mut w = vec![0f64; self.copies.len()];
+        for c in 0..self.shard_map.n_clients() {
+            w[self.shard_map.shard_of(c)] += 1.0;
+        }
+        w
+    }
+
+    /// Client-count-weighted mean of the copies. Uses the exact uniform
+    /// path when every copy serves equally many clients (the per-client
+    /// topologies and evenly divisible shards), so historical results
+    /// stay bit-identical there.
+    fn copies_mean(&self) -> Vec<f32> {
+        let refs: Vec<&[f32]> = self.copies.iter().map(|c| c.as_slice()).collect();
+        let w = self.copy_weights();
+        if w.windows(2).all(|p| p[0] == p[1]) {
+            fedavg(&refs)
+        } else {
+            fedavg_weighted(&refs, &w)
         }
     }
 
-    /// FedAvg the per-client server copies into a single model and reset
-    /// every copy to it (SplitFed's server-side aggregation). No-op with
-    /// a single copy.
+    /// FedAvg all server copies into a single model and reset every copy
+    /// to it — SplitFed's server-side aggregation for the per-client
+    /// copies, and the **cross-shard FedAvg** of the sharded server
+    /// phase. Copies are weighted by the number of clients they serve
+    /// (uneven contiguous shards must not down-weight the larger
+    /// groups). No-op with a single copy.
     pub fn aggregate_copies(&mut self) {
         if self.copies.len() <= 1 {
             return;
         }
-        let refs: Vec<&[f32]> = self.copies.iter().map(|c| c.as_slice()).collect();
-        let mean = fedavg(&refs);
+        let mean = self.copies_mean();
         for c in &mut self.copies {
             c.copy_from_slice(&mean);
         }
     }
 
-    /// Mean of the server copies (evaluation probe).
+    /// Client-weighted mean of the server copies (evaluation probe).
     pub fn eval_model(&self) -> Vec<f32> {
         if self.copies.len() == 1 {
             self.copies[0].clone()
         } else {
-            let refs: Vec<&[f32]> = self.copies.iter().map(|c| c.as_slice()).collect();
-            fedavg(&refs)
+            self.copies_mean()
         }
     }
 
-    /// Resident server-side parameter count (live storage check).
+    /// Resident server-side parameter count (live storage check): the
+    /// measured counterpart of `comm::accounting::storage`'s closed form.
     pub fn resident_params(&self) -> usize {
         self.copies.iter().map(|c| c.len()).sum()
     }
@@ -107,27 +250,58 @@ mod tests {
 
     #[test]
     fn copy_routing() {
-        let single = ServerState::new(vec![0.0; 4], 1, 2, 2);
+        let single = ServerState::new(vec![0.0; 4], 4, Topology::Sharded(1), 2, 2);
         assert_eq!(single.copy_for(0), 0);
         assert_eq!(single.copy_for(3), 0);
-        let multi = ServerState::new(vec![0.0; 4], 5, 2, 2);
+        assert_eq!(single.lanes(), 1);
+        let multi = ServerState::new(vec![0.0; 4], 5, Topology::PerClient, 2, 2);
         assert_eq!(multi.copy_for(3), 3);
+        assert_eq!(multi.lanes(), 1, "per-client copies share one executor");
+        assert_eq!(multi.lane_for(3), 0);
         assert_eq!(multi.resident_params(), 20);
         assert_eq!(single.resident_params(), 4);
     }
 
     #[test]
-    fn queue_fifo() {
-        let mut s = ServerState::new(vec![0.0; 2], 1, 1, 1);
-        s.enqueue_all((0..3).map(|i| SmashedMsg {
-            client: i,
-            smashed: vec![],
-            labels: vec![],
-            arrival: i as f64,
-            seed: 0,
-        }));
-        assert_eq!(s.data_queue.pop_front().unwrap().client, 0);
-        assert_eq!(s.data_queue.pop_front().unwrap().client, 1);
+    fn shard_map_contiguous_and_balanced() {
+        // 7 clients over 3 shards: sizes 3, 2, 2 in canonical order.
+        let m = ShardMap::contiguous(7, 3);
+        assert_eq!(m.shards(), 3);
+        assert_eq!(m.n_clients(), 7);
+        let of: Vec<usize> = (0..7).map(|c| m.shard_of(c)).collect();
+        assert_eq!(of, vec![0, 0, 0, 1, 1, 2, 2]);
+        assert_eq!(m.clients_of(0), vec![0, 1, 2]);
+        assert_eq!(m.clients_of(2), vec![5, 6]);
+        // The two paper endpoints.
+        let one = ShardMap::contiguous(5, 1);
+        assert!((0..5).all(|c| one.shard_of(c) == 0));
+        let per = ShardMap::contiguous(5, 5);
+        assert!((0..5).all(|c| per.shard_of(c) == c));
+    }
+
+    #[test]
+    #[should_panic(expected = "more shards")]
+    fn shard_map_rejects_oversharding() {
+        ShardMap::contiguous(3, 4);
+    }
+
+    #[test]
+    fn sharded_topology_lanes_and_counts() {
+        let mut s = ServerState::new(vec![0.0; 4], 6, Topology::Sharded(3), 2, 2);
+        assert_eq!(s.lanes(), 3);
+        assert_eq!(s.copies.len(), 3);
+        assert_eq!(s.lane_for(0), 0);
+        assert_eq!(s.lane_for(5), 2);
+        assert_eq!(s.resident_params(), 12);
+        s.record_update(2);
+        s.record_update(2);
+        s.record_update(0);
+        assert_eq!(s.updates, 3);
+        assert_eq!(s.shard_updates, vec![1, 0, 2]);
+        s.free_at[1] = 4.0;
+        assert_eq!(s.free_at_max(), 4.0);
+        s.sync_free_at(7.0);
+        assert_eq!(s.free_at, vec![7.0; 3]);
     }
 
     #[test]
@@ -140,12 +314,27 @@ mod tests {
 
     #[test]
     fn aggregate_copies_means() {
-        let mut s = ServerState::new(vec![0.0; 2], 2, 1, 1);
+        let mut s = ServerState::new(vec![0.0; 2], 2, Topology::Sharded(2), 1, 1);
         s.copies[0] = vec![1.0, 3.0];
         s.copies[1] = vec![3.0, 1.0];
         s.aggregate_copies();
         assert_eq!(s.copies[0], vec![2.0, 2.0]);
         assert_eq!(s.copies[1], vec![2.0, 2.0]);
         assert_eq!(s.eval_model(), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn uneven_shards_weight_copies_per_client() {
+        // 3 clients over 2 shards: groups of 2 and 1. The cross-shard
+        // FedAvg must weight per CLIENT (Eq. (14)): (2*a + 1*b) / 3,
+        // not the per-copy mean (a + b) / 2.
+        let mut s = ServerState::new(vec![0.0; 1], 3, Topology::Sharded(2), 1, 1);
+        s.copies[0] = vec![3.0]; // serves clients 0, 1
+        s.copies[1] = vec![9.0]; // serves client 2
+        let m = s.eval_model();
+        assert!((m[0] - 5.0).abs() < 1e-5, "(2*3 + 1*9) / 3 = 5, got {}", m[0]);
+        s.aggregate_copies();
+        assert!((s.copies[0][0] - 5.0).abs() < 1e-5, "{}", s.copies[0][0]);
+        assert_eq!(s.copies[0], s.copies[1]);
     }
 }

@@ -21,6 +21,8 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Build a batch stream over `shard` (non-empty) with the given
+    /// batch size; `rng` drives the per-epoch reshuffles.
     pub fn new(shard: Vec<usize>, batch_size: usize, rng: Rng) -> Self {
         assert!(batch_size > 0);
         assert!(!shard.is_empty(), "empty shard");
@@ -49,6 +51,7 @@ impl Batcher {
         self.shard.len() / self.batch_size
     }
 
+    /// Number of reshuffles so far (1 after construction).
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
@@ -79,6 +82,7 @@ pub struct EvalChunks {
 }
 
 impl EvalChunks {
+    /// Walk `0..n` in chunks of `chunk` (> 0), padding the tail.
     pub fn new(n: usize, chunk: usize) -> Self {
         assert!(chunk > 0);
         EvalChunks { n, chunk, pos: 0 }

@@ -13,7 +13,9 @@ use crate::util::prng::Rng;
 
 use super::Dataset;
 
+/// F-EMNIST class count (digits + upper/lowercase letters).
 pub const CLASSES: usize = 62;
+/// Glyph canvas side length in pixels.
 pub const SIDE: usize = 28;
 
 /// Writer style: a persistent transform applied to every glyph rendered
@@ -24,25 +26,31 @@ pub struct WriterStyle {
     pub shear: f64,
     /// Multiplicative stroke gain ("pen pressure").
     pub gain: f64,
-    /// Spatial offset in pixels.
+    /// Horizontal offset in pixels.
     pub dx: i64,
+    /// Vertical offset in pixels.
     pub dy: i64,
     /// Additive background bias.
     pub bias: f64,
 }
 
+/// Generation parameters of the synthetic F-EMNIST.
 #[derive(Clone, Debug)]
 pub struct FemnistSpec {
+    /// Number of writers.
     pub writers: usize,
+    /// Samples rendered per writer.
     pub samples_per_writer: usize,
     /// Per-writer label skew: each writer draws labels from a Dirichlet
     /// over classes with this concentration (smaller = more skew). Real
     /// authors also have label skew (people write some characters more).
     pub label_alpha: f64,
+    /// Pixel noise sigma.
     pub noise: f64,
 }
 
 impl FemnistSpec {
+    /// A default sized like the CI workloads.
     pub fn default_like() -> Self {
         FemnistSpec { writers: 50, samples_per_writer: 40, label_alpha: 0.5, noise: 0.3 }
     }
@@ -50,9 +58,11 @@ impl FemnistSpec {
 
 /// Global glyph templates (one 28x28 field per class).
 pub struct Glyphs {
-    pub fields: Vec<Vec<f32>>, // [CLASSES][SIDE*SIDE]
+    /// [CLASSES][SIDE*SIDE] stroke fields.
+    pub fields: Vec<Vec<f32>>,
 }
 
+/// Draw the per-class glyph templates (random soft strokes).
 pub fn make_glyphs(rng: &mut Rng) -> Glyphs {
     // Glyph = a handful of random "strokes" (soft line segments) on the
     // canvas — close enough to character structure for a conv net, and
@@ -91,6 +101,7 @@ pub fn make_glyphs(rng: &mut Rng) -> Glyphs {
     Glyphs { fields }
 }
 
+/// Draw one writer's persistent style transform.
 pub fn make_writer_style(rng: &mut Rng) -> WriterStyle {
     WriterStyle {
         shear: rng.uniform_in(-0.25, 0.25),

@@ -25,7 +25,9 @@ pub struct Dataset {
     pub images: Vec<f32>,
     /// Class labels in [0, classes).
     pub labels: Vec<i32>,
+    /// Per-sample shape [h, w, c].
     pub shape: [usize; 3],
+    /// Number of classes.
     pub classes: usize,
     /// Writer/author id per sample (used by the by-writer partitioner);
     /// all zeros for datasets without writer structure.
@@ -33,14 +35,17 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// Whether the dataset holds no samples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
+    /// Elements per sample (h·w·c).
     pub fn sample_size(&self) -> usize {
         self.shape[0] * self.shape[1] * self.shape[2]
     }

@@ -15,14 +15,17 @@ use super::Dataset;
 /// Per-client sample indices.
 #[derive(Clone, Debug)]
 pub struct Partition {
+    /// One index shard per client.
     pub clients: Vec<Vec<usize>>,
 }
 
 impl Partition {
+    /// Number of clients.
     pub fn n_clients(&self) -> usize {
         self.clients.len()
     }
 
+    /// Total samples across all shards.
     pub fn total(&self) -> usize {
         self.clients.iter().map(|c| c.len()).sum()
     }

@@ -15,9 +15,13 @@ use super::Dataset;
 /// at the paper's tensor shapes.
 #[derive(Clone, Debug)]
 pub struct SyntheticSpec {
+    /// Number of classes.
     pub classes: usize,
+    /// Image height in pixels.
     pub height: usize,
+    /// Image width in pixels.
     pub width: usize,
+    /// Channels per pixel.
     pub channels: usize,
     /// Number of cosine components per class template.
     pub waves: usize,
@@ -52,11 +56,13 @@ impl SyntheticSpec {
 /// The per-class smooth templates. Kept public so tests can assert
 /// separation properties.
 pub struct Templates {
+    /// The generation parameters the templates were built from.
     pub spec: SyntheticSpec,
     /// [classes][h*w*c]
     pub fields: Vec<Vec<f32>>,
 }
 
+/// Draw the per-class smooth random fields (unit-normalized).
 pub fn make_templates(spec: &SyntheticSpec, rng: &mut Rng) -> Templates {
     let (h, w, c) = (spec.height, spec.width, spec.channels);
     let mut fields = Vec::with_capacity(spec.classes);

@@ -35,6 +35,7 @@ pub enum Scale {
 }
 
 impl Scale {
+    /// Parse `quick` / `ci` / `paper`.
     pub fn parse(s: &str) -> Option<Scale> {
         match s {
             "quick" => Some(Scale::Quick),
@@ -59,14 +60,21 @@ impl std::fmt::Display for Scale {
 /// Per-dataset workload sizes at a given scale.
 #[derive(Clone, Copy, Debug)]
 pub struct Workload {
+    /// Training samples per client.
     pub train_per_client: usize,
+    /// Test-set size.
     pub test: usize,
+    /// Communication rounds.
     pub rounds: usize,
+    /// Independent seeds for mean ± std reporting.
     pub seeds: usize,
+    /// Evaluate accuracy every k rounds (0 = only at the end).
     pub eval_every: usize,
+    /// Cap periodic eval to k batches (0 = full test set).
     pub eval_max_batches: usize,
 }
 
+/// CIFAR-like workload sizes per [`Scale`].
 pub fn cifar_workload(scale: Scale) -> Workload {
     match scale {
         Scale::Quick => Workload {
@@ -96,6 +104,7 @@ pub fn cifar_workload(scale: Scale) -> Workload {
     }
 }
 
+/// F-EMNIST-like workload sizes per [`Scale`].
 pub fn femnist_workload(scale: Scale) -> Workload {
     match scale {
         Scale::Quick => Workload {
@@ -128,6 +137,7 @@ pub fn femnist_workload(scale: Scale) -> Workload {
 /// How a dataset is distributed over clients.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dist {
+    /// Shuffle-and-split evenly (the paper's IID arms).
     Iid,
     /// Dirichlet label skew (CIFAR non-IID arm of Table V).
     NonIidDirichlet,
@@ -136,6 +146,7 @@ pub enum Dist {
 }
 
 impl Dist {
+    /// Short cache-key / filename tag.
     pub fn tag(self) -> &'static str {
         match self {
             Dist::Iid => "iid",
@@ -148,25 +159,44 @@ impl Dist {
 /// One fully-specified run (the cache key).
 #[derive(Clone, Debug)]
 pub struct RunSpec {
-    pub dataset: String, // "cifar" | "femnist"
+    /// Dataset name: `"cifar"` | `"femnist"`.
+    pub dataset: String,
+    /// Auxiliary architecture name (manifest key).
     pub aux: String,
+    /// Which FSL method to run.
     pub method: Method,
+    /// CSE_FSL's local batches per upload.
     pub h: usize,
+    /// Number of federated clients.
     pub n_clients: usize,
-    pub participation: usize, // 0 = all
+    /// Clients sampled per round (0 = all).
+    pub participation: usize,
+    /// How data is distributed over clients.
     pub dist: Dist,
+    /// Server consumption order of arriving uploads.
     pub arrival: ArrivalOrder,
+    /// Initial learning rate.
     pub lr0: f64,
+    /// Experiment seed.
     pub seed: u64,
+    /// Workload sizes (rounds, dataset sizes, eval cadence).
     pub workload: Workload,
     /// Client fan-out strategy. Deliberately NOT part of the cache key:
     /// the parallel round engine is bit-deterministic (see
     /// coordinator/README.md), so sequential and threaded runs of the
     /// same spec share one cached RunRecord.
     pub parallelism: Parallelism,
+    /// Server shard count k (single-copy methods). Unlike `parallelism`
+    /// this **changes results** — k shard copies train on disjoint
+    /// client groups between aggregations — so by the Harness contract
+    /// it MUST be part of the cache key.
+    pub server_shards: usize,
 }
 
 impl RunSpec {
+    /// The results-cache key: every field that can change the run's
+    /// outcome, and nothing else (`parallelism` is excluded by the
+    /// bit-determinism contract).
     pub fn key(&self) -> String {
         let arr = match self.arrival {
             ArrivalOrder::ByDelay => "delay",
@@ -174,7 +204,7 @@ impl RunSpec {
             ArrivalOrder::Shuffled => "shuf",
         };
         format!(
-            "{}-{}-{}-h{}-n{}-p{}-{}-{}-lr{}-r{}-d{}-t{}-s{}",
+            "{}-{}-{}-h{}-n{}-p{}-{}-{}-lr{}-r{}-d{}-t{}-k{}-s{}",
             self.dataset,
             self.aux,
             self.method,
@@ -187,28 +217,39 @@ impl RunSpec {
             self.workload.rounds,
             self.workload.train_per_client,
             self.workload.test,
+            self.server_shards,
             self.seed
         )
     }
 
+    /// Human-readable series label (method, plus h for CSE_FSL and the
+    /// shard count when sharded).
     pub fn label(&self) -> String {
-        if self.method == Method::CseFsl {
+        let mut l = if self.method == Method::CseFsl {
             format!("{} h={}", self.method, self.h)
         } else {
             self.method.to_string()
+        };
+        if self.server_shards > 1 {
+            l.push_str(&format!(" k={}", self.server_shards));
         }
+        l
     }
 }
 
 /// Engine + manifest cache shared by all drivers in one process.
 pub struct Harness {
+    /// The AOT artifact manifest.
     pub manifest: Manifest,
+    /// The shared PJRT runtime.
     pub rt: Arc<PjrtRuntime>,
     engines: BTreeMap<(String, String), Arc<PjrtEngine>>,
+    /// Output directory (tables, CSVs, and the `cache/` subdirectory).
     pub out_dir: PathBuf,
 }
 
 impl Harness {
+    /// Load the manifest, start the PJRT runtime, and prepare `out_dir`.
     pub fn new(out_dir: impl AsRef<Path>) -> Result<Self, String> {
         let dir = crate::runtime::artifacts_dir();
         let manifest = Manifest::load(&dir)
@@ -224,6 +265,7 @@ impl Harness {
         })
     }
 
+    /// The (cached) engine for one (dataset, aux) configuration.
     pub fn engine(&mut self, dataset: &str, aux: &str) -> Result<Arc<PjrtEngine>, String> {
         let key = (dataset.to_string(), aux.to_string());
         if let Some(e) = self.engines.get(&key) {
@@ -326,6 +368,7 @@ impl Harness {
             arrival: spec.arrival,
             track_grad_norms: true,
             parallelism: spec.parallelism,
+            server_shards: spec.server_shards,
         };
         let setup = TrainerSetup {
             train: &train,
@@ -351,6 +394,7 @@ fn engine_batch(e: &PjrtEngine) -> usize {
 
 // ------------------------------------------------ RunRecord <-> JSON
 
+/// Serialize a [`RunRecord`] for the results cache.
 pub fn run_to_json(r: &RunRecord) -> Json {
     let rounds = r
         .rounds
@@ -388,9 +432,16 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ("sim_time", Json::num(r.sim_time)),
         ("server_idle_fraction", Json::num(r.server_idle_fraction)),
         ("server_storage_params", Json::num(r.server_storage_params as f64)),
+        (
+            "server_updates_per_shard",
+            Json::Arr(
+                r.server_updates_per_shard.iter().map(|&u| Json::num(u as f64)).collect(),
+            ),
+        ),
     ])
 }
 
+/// Parse a cached [`RunRecord`] back from JSON.
 pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
     let j = Json::parse(text).map_err(|e| e.to_string())?;
     let err = |e: crate::util::json::JsonError| e.to_string();
@@ -428,6 +479,17 @@ pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
             .map_err(err)?
             .as_f64()
             .map_err(err)? as usize,
+        // Absent in pre-shard cache entries; default to "unknown".
+        server_updates_per_shard: match j.opt("server_updates_per_shard") {
+            Some(v) => v
+                .as_arr()
+                .map_err(err)?
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as u64))
+                .collect::<Result<_, _>>()
+                .map_err(err)?,
+            None => Vec::new(),
+        },
     })
 }
 
@@ -499,6 +561,7 @@ mod tests {
             seed: 1,
             workload: cifar_workload(Scale::Quick),
             parallelism: Parallelism::Sequential,
+            server_shards: 1,
         };
         let mut other = base.clone();
         other.h = 10;
@@ -508,6 +571,12 @@ mod tests {
         let mut other = base.clone();
         other.parallelism = Parallelism::Threads(4);
         assert_eq!(base.key(), other.key());
+        // Shard count MUST change the key: sharding changes results.
+        let mut other = base.clone();
+        other.server_shards = 2;
+        assert_ne!(base.key(), other.key());
+        assert!(other.label().contains("k=2"));
+        assert!(!base.label().contains("k="));
         let mut other = base.clone();
         other.dist = Dist::NonIidDirichlet;
         assert_ne!(base.key(), other.key());
@@ -538,6 +607,7 @@ mod tests {
             sim_time: 0.25,
             server_idle_fraction: 0.9,
             server_storage_params: 123,
+            server_updates_per_shard: vec![4, 6],
         };
         let rt = run_from_json(&run_to_json(&rec).pretty()).unwrap();
         assert_eq!(rt.label, "x");
@@ -545,6 +615,14 @@ mod tests {
         assert_eq!(rt.rounds[0].accuracy, Some(0.5));
         assert_eq!(rt.rounds[0].client_grad_norm, None);
         assert_eq!(rt.server_storage_params, 123);
+        assert_eq!(rt.server_updates_per_shard, vec![4, 6]);
+        // Pre-shard cache entries (no field) still parse.
+        let legacy = run_to_json(&rec).pretty().replace(
+            "\"server_updates_per_shard\"",
+            "\"legacy_ignored\"",
+        );
+        let rt = run_from_json(&legacy).unwrap();
+        assert!(rt.server_updates_per_shard.is_empty());
     }
 
     #[test]
@@ -569,6 +647,7 @@ mod tests {
             sim_time: 0.0,
             server_idle_fraction: 0.0,
             server_storage_params: 0,
+            server_updates_per_shard: Vec::new(),
         };
         let t = curve_table("fig", &[&rec]);
         assert!(t.contains("42.0%"));

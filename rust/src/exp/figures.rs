@@ -31,6 +31,7 @@ fn base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
         // Figure sweeps default to the full-machine fan-out; results are
         // bit-identical to Sequential (coordinator/README.md).
         parallelism: Parallelism::auto(),
+        server_shards: 1,
     }
 }
 

@@ -175,5 +175,6 @@ fn fig_base(dataset: &str, aux: &str, w: super::common::Workload) -> RunSpec {
         seed: 1,
         workload: w,
         parallelism: Parallelism::auto(),
+        server_shards: 1,
     }
 }

@@ -4,8 +4,33 @@
 //! Pallas kernels (L1) and JAX split models (L2) are AOT-compiled to HLO
 //! at build time (`make artifacts`); this crate is the L3 coordinator that
 //! loads those artifacts via PJRT and runs the full federated-split-
-//! learning system — clients, event-triggered server, aggregation,
-//! communication/storage accounting, and every experiment in the paper.
+//! learning system — clients, event-triggered (optionally sharded)
+//! server, aggregation, communication/storage accounting, and every
+//! experiment in the paper.
+//!
+//! # Module map
+//!
+//! * [`coordinator`] — the system contribution: methods, config, client
+//!   and (sharded) server state, and the deterministic parallel round
+//!   engine.
+//! * [`runtime`] — the `SplitEngine` compute interface, its PJRT and
+//!   mock implementations, and the AOT artifact manifest.
+//! * [`comm`] / [`storage`] — measured wire ledger, Table II closed
+//!   forms, and server-storage accounting.
+//! * [`sim`] — deterministic clock, network/heterogeneity models, and
+//!   timeline recording.
+//! * [`data`] / [`model`] — synthetic datasets + partitioners; flat
+//!   parameter layouts, init, and FedAvg.
+//! * [`exp`] / [`metrics`] — figure/table drivers with cached runs;
+//!   evaluation and run records.
+//! * [`util`] — the zero-dependency substrate (prng, json, cli, bench,
+//!   prop, csv, logging).
+//!
+//! `ARCHITECTURE.md` at the repository root walks the round data-flow
+//! and the two cross-cutting contracts (bit-determinism merge order;
+//! `RunSpec::key` completeness).
+
+#![warn(missing_docs)]
 
 pub mod comm;
 pub mod coordinator;

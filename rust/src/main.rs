@@ -67,6 +67,12 @@ fn cmd_run(argv: &[String]) -> i32 {
             "auto",
             "client fan-out: seq | auto | <threads> (bit-identical results either way)",
         )
+        .opt(
+            "server-shards",
+            "1",
+            "server shard count k (OC/CSE only): k copies + k event loops, \
+             cross-shard FedAvg every aggregation; changes results (cached per k)",
+        )
         .flag("shuffled-arrivals", "randomize server consumption order (Fig. 6)");
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -113,6 +119,7 @@ fn cmd_run(argv: &[String]) -> i32 {
             parallelism: args
                 .parse_as::<Parallelism>("parallelism")
                 .map_err(|e| e.to_string())?,
+            server_shards: args.parse_as("server-shards").map_err(|e| e.to_string())?,
         };
         let mut harness = Harness::new(args.get("out").unwrap())?;
         let rec = harness.run_cached(&spec)?;
@@ -135,6 +142,13 @@ fn cmd_run(argv: &[String]) -> i32 {
             rec.sim_time,
             rec.server_idle_fraction * 100.0,
         );
+        if spec.server_shards > 1 {
+            println!(
+                "server updates per shard: {:?} (total {})",
+                rec.server_updates_per_shard,
+                rec.server_updates(),
+            );
+        }
         let csv = harness.out_dir.join(format!("run_{}.csv", rec.label.replace([' ', '='], "_")));
         rec.write_csv(&csv).map_err(|e| e.to_string())?;
         println!("per-round CSV: {}", csv.display());

@@ -9,42 +9,67 @@ use std::path::Path;
 use crate::util::csvio::Csv;
 use crate::util::json::Json;
 
+/// Everything measured in one communication round.
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// 1-based communication-round index.
     pub round: usize,
     /// Simulated wall-clock at round end (seconds).
     pub sim_time: f64,
+    /// Learning rate in effect this round.
     pub lr: f64,
     /// Mean client local loss this round (auxiliary loss for AN/CSE,
     /// split loss for MC/OC).
     pub train_loss: f64,
     /// Mean server loss over this round's event-triggered updates.
     pub server_loss: f64,
-    /// Cumulative wire bytes.
+    /// Cumulative uplink wire bytes.
     pub up_bytes: u64,
+    /// Cumulative downlink wire bytes.
     pub down_bytes: u64,
     /// Test accuracy if evaluated this round.
     pub accuracy: Option<f64>,
-    /// Mean gradient-norm traces (Props 1-2 probes), if tracked.
+    /// Mean client gradient norm (Props 1-2 probe), if tracked.
     pub client_grad_norm: Option<f64>,
+    /// Mean server gradient norm (Props 1-2 probe), if tracked.
     pub server_grad_norm: Option<f64>,
 }
 
+/// A whole training run: per-round records plus the final summary the
+/// figure/table drivers and the results cache consume.
 #[derive(Clone, Debug)]
 pub struct RunRecord {
+    /// Human-readable run label (method + h).
     pub label: String,
+    /// One record per communication round, in order.
     pub rounds: Vec<RoundRecord>,
+    /// Full-test-set accuracy after the last round.
     pub final_accuracy: f64,
+    /// Total uplink bytes over the run.
     pub total_up_bytes: u64,
+    /// Total downlink bytes over the run.
     pub total_down_bytes: u64,
+    /// Simulated end-to-end run time (seconds).
     pub sim_time: f64,
+    /// Fraction of simulated time the server spent idle.
     pub server_idle_fraction: f64,
+    /// Table-V-style server-resident parameter count (copies + buffers).
     pub server_storage_params: usize,
+    /// Event-triggered updates applied to each server copy, in canonical
+    /// shard order (length = copy count: k for the sharded single-copy
+    /// methods, n for the per-client-copy methods).
+    pub server_updates_per_shard: Vec<u64>,
 }
 
 impl RunRecord {
+    /// Total traffic in gigabytes (Table V / Fig. 9 units).
     pub fn total_gb(&self) -> f64 {
         (self.total_up_bytes + self.total_down_bytes) as f64 / 1e9
+    }
+
+    /// Total event-triggered server updates (sum over shards).
+    pub fn server_updates(&self) -> u64 {
+        self.server_updates_per_shard.iter().sum()
     }
 
     /// Accuracy series as (round, acc) points.
@@ -65,6 +90,7 @@ impl RunRecord {
             .collect()
     }
 
+    /// The per-round series as a CSV table.
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "round",
@@ -95,10 +121,12 @@ impl RunRecord {
         csv
     }
 
+    /// Write [`RunRecord::to_csv`] to `path` (creating parent dirs).
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         self.to_csv().write_to(path)
     }
 
+    /// The run summary as a JSON object (whole-run scalars only).
     pub fn summary_json(&self) -> Json {
         Json::obj(vec![
             ("label", Json::str(self.label.clone())),
@@ -108,6 +136,15 @@ impl RunRecord {
             ("sim_time", Json::num(self.sim_time)),
             ("server_idle_fraction", Json::num(self.server_idle_fraction)),
             ("server_storage_params", Json::num(self.server_storage_params as f64)),
+            (
+                "server_updates_per_shard",
+                Json::Arr(
+                    self.server_updates_per_shard
+                        .iter()
+                        .map(|&u| Json::num(u as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -151,6 +188,7 @@ mod tests {
             sim_time: 1.0,
             server_idle_fraction: 0.25,
             server_storage_params: 1_000,
+            server_updates_per_shard: vec![3, 5],
         }
     }
 
@@ -177,5 +215,8 @@ mod tests {
         let j = rec().summary_json();
         assert_eq!(j.get("final_accuracy").unwrap().as_f64().unwrap(), 0.8);
         assert!(j.get("total_gb").unwrap().as_f64().unwrap() > 0.0);
+        let shards = j.get("server_updates_per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(rec().server_updates(), 8);
     }
 }

@@ -4,12 +4,16 @@
 /// mean ± std (population std, like numpy's default ddof=0).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MeanStd {
+    /// Sample mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Number of samples.
     pub n: usize,
 }
 
 impl MeanStd {
+    /// Mean ± std of a non-empty sample.
     pub fn of(xs: &[f64]) -> MeanStd {
         assert!(!xs.is_empty());
         let n = xs.len();
@@ -23,6 +27,7 @@ impl MeanStd {
         format!("{:.2}±{:.2}", self.mean * 100.0, self.std * 100.0)
     }
 
+    /// `1.5±0.0`-style formatting with the given decimal digits.
     pub fn fmt_plain(&self, digits: usize) -> String {
         format!("{:.*}±{:.*}", digits, self.mean, digits, self.std)
     }

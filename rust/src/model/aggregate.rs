@@ -48,22 +48,27 @@ pub struct Accumulator {
 }
 
 impl Accumulator {
+    /// An empty accumulator for vectors of length `len`.
     pub fn new(len: usize) -> Self {
         Accumulator { sum: vec![0f64; len], weight: 0.0 }
     }
 
+    /// Length of the accumulated vectors.
     pub fn len(&self) -> usize {
         self.sum.len()
     }
 
+    /// Whether no contributions have been folded in.
     pub fn is_empty(&self) -> bool {
         self.weight == 0.0
     }
 
+    /// Total weight folded in so far.
     pub fn count_weight(&self) -> f64 {
         self.weight
     }
 
+    /// Fold one model in with the given positive weight.
     pub fn add(&mut self, model: &[f32], weight: f64) {
         assert_eq!(model.len(), self.sum.len());
         assert!(weight > 0.0);
@@ -84,6 +89,7 @@ impl Accumulator {
         self.reset();
     }
 
+    /// Drop all contributions (ready for the next aggregation window).
     pub fn reset(&mut self) {
         self.sum.iter_mut().for_each(|s| *s = 0.0);
         self.weight = 0.0;

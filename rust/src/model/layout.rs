@@ -7,29 +7,42 @@
 
 use crate::util::json::{Json, JsonError};
 
+/// How a tensor's parameters are initialized.
 #[derive(Clone, Debug, PartialEq)]
 pub enum InitSpec {
+    /// All zeros (biases).
     Zero,
     /// Gaussian with the given standard deviation.
-    Normal { std: f64 },
+    Normal { /** Standard deviation. */ std: f64 },
 }
 
+/// One tensor's slot in a flat parameter vector.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Tensor name (as the manifest records it).
     pub name: String,
+    /// Logical shape.
     pub shape: Vec<usize>,
+    /// Offset into the flat f32 vector.
     pub offset: usize,
+    /// Element count (= product of `shape`).
     pub size: usize,
+    /// Initialization spec.
     pub init: InitSpec,
 }
 
+/// Ordered tensor table of one model part (client / server / aux).
 #[derive(Clone, Debug)]
 pub struct Layout {
+    /// Tensors in flat-vector order (contiguous, offset-checked).
     pub tensors: Vec<TensorSpec>,
+    /// Total element count of the flat vector.
     pub total: usize,
 }
 
 impl Layout {
+    /// Parse a manifest layout array, checking shapes against sizes and
+    /// offsets against the running total.
     pub fn from_json(j: &Json) -> Result<Layout, JsonError> {
         let mut tensors = Vec::new();
         let mut total = 0usize;
@@ -63,6 +76,7 @@ impl Layout {
         Ok(Layout { tensors, total })
     }
 
+    /// Look a tensor up by name.
     pub fn tensor(&self, name: &str) -> Option<&TensorSpec> {
         self.tensors.iter().find(|t| t.name == name)
     }

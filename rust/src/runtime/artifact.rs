@@ -12,10 +12,14 @@ use std::path::{Path, PathBuf};
 use crate::model::layout::Layout;
 use crate::util::json::{Json, JsonError};
 
+/// Anything that can go wrong loading the manifest.
 #[derive(Debug)]
 pub enum ArtifactError {
+    /// Reading `manifest.json` failed.
     Io(std::io::Error),
+    /// The manifest was not valid JSON.
     Json(JsonError),
+    /// The manifest parsed but violated an invariant.
     Invalid(String),
 }
 
@@ -54,7 +58,9 @@ impl From<JsonError> for ArtifactError {
 /// dtype of a tensor argument/result.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -68,17 +74,22 @@ impl Dtype {
     }
 }
 
+/// Shape + dtype signature of one entry argument/result.
 #[derive(Clone, Debug)]
 pub struct TensorSig {
+    /// Tensor shape (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: Dtype,
 }
 
 impl TensorSig {
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -94,9 +105,13 @@ impl TensorSig {
 /// One lowered entry point: HLO file + argument/result signatures.
 #[derive(Clone, Debug)]
 pub struct Entry {
+    /// Entry-point name (e.g. `client_train_step`).
     pub name: String,
+    /// Path of the HLO text file.
     pub file: PathBuf,
+    /// Argument signatures, in call order.
     pub args: Vec<TensorSig>,
+    /// Result signatures, in tuple order.
     pub results: Vec<TensorSig>,
 }
 
@@ -122,28 +137,43 @@ impl Entry {
 /// Auxiliary-network variant: its layout + aux-specific entries.
 #[derive(Clone, Debug)]
 pub struct AuxConfig {
+    /// Architecture name (manifest key).
     pub arch: String,
+    /// Flat parameter layout.
     pub layout: Layout,
+    /// Parameter count (= layout total).
     pub size: usize,
+    /// Aux-specific entry points.
     pub entries: BTreeMap<String, Entry>,
 }
 
 /// One dataset configuration (cifar / femnist).
 #[derive(Clone, Debug)]
 pub struct DatasetConfig {
+    /// Dataset name (manifest key).
     pub name: String,
+    /// AOT-fixed batch size.
     pub batch: usize,
+    /// Input sample shape.
     pub input: Vec<usize>,
+    /// Number of output classes.
     pub classes: usize,
+    /// Smashed-data shape per sample.
     pub smashed: Vec<usize>,
+    /// Smashed elements per sample.
     pub smashed_size: usize,
+    /// Client-side model layout.
     pub client_layout: Layout,
+    /// Server-side model layout.
     pub server_layout: Layout,
+    /// Aux-independent entry points.
     pub entries: BTreeMap<String, Entry>,
+    /// Available auxiliary-network variants.
     pub aux: BTreeMap<String, AuxConfig>,
 }
 
 impl DatasetConfig {
+    /// Input elements per sample.
     pub fn input_len(&self) -> usize {
         self.input.iter().product()
     }
@@ -153,12 +183,14 @@ impl DatasetConfig {
         (self.smashed_size * 4) as u64
     }
 
+    /// Look an aux-independent entry point up by name.
     pub fn entry(&self, name: &str) -> Result<&Entry, ArtifactError> {
         self.entries
             .get(name)
             .ok_or_else(|| ArtifactError::Invalid(format!("missing entry {name:?}")))
     }
 
+    /// Look an auxiliary-network variant up by architecture name.
     pub fn aux(&self, arch: &str) -> Result<&AuxConfig, ArtifactError> {
         self.aux
             .get(arch)
@@ -166,19 +198,24 @@ impl DatasetConfig {
     }
 }
 
+/// The parsed AOT manifest: everything Python built.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Artifacts directory (HLO file paths resolve against it).
     pub dir: PathBuf,
+    /// Per-dataset configurations.
     pub configs: BTreeMap<String, DatasetConfig>,
 }
 
 impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ArtifactError> {
         let dir = dir.as_ref().to_path_buf();
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest JSON text, resolving file paths against `dir`.
     pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ArtifactError> {
         let j = Json::parse(text)?;
         let format = j.get("format")?.as_usize()?;
@@ -238,6 +275,7 @@ impl Manifest {
         Ok(Manifest { dir, configs })
     }
 
+    /// Look a dataset configuration up by name.
     pub fn config(&self, name: &str) -> Result<&DatasetConfig, ArtifactError> {
         self.configs
             .get(name)

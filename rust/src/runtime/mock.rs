@@ -18,11 +18,16 @@ use crate::util::prng::Rng;
 
 use super::{ClientStepOut, EngineError, ServerFwdBwdOut, ServerStepOut, SplitEngine};
 
+/// The linear-dynamics mock engine (see module docs).
 #[derive(Clone, Debug)]
 pub struct MockEngine {
+    /// Batch size.
     pub batch: usize,
+    /// Output classes.
     pub classes: usize,
+    /// Input elements per sample.
     pub input_len: usize,
+    /// Smashed elements per sample.
     pub smashed_len: usize,
     target_client: Vec<f32>,
     target_aux: Vec<f32>,
@@ -30,6 +35,9 @@ pub struct MockEngine {
 }
 
 impl MockEngine {
+    /// Build a mock engine with the given geometry; `seed` fixes the
+    /// target vectors (and hence the whole dynamics).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         batch: usize,
         classes: usize,
@@ -85,6 +93,7 @@ impl MockEngine {
         (&self.target_client, &self.target_aux, &self.target_server)
     }
 
+    /// Euclidean distance of a client model from its target.
     pub fn client_distance(&self, xc: &[f32]) -> f32 {
         xc.iter()
             .zip(&self.target_client)
@@ -93,6 +102,7 @@ impl MockEngine {
             .sqrt()
     }
 
+    /// Euclidean distance of a server model from its target.
     pub fn server_distance(&self, xs: &[f32]) -> f32 {
         xs.iter()
             .zip(&self.target_server)

@@ -24,10 +24,14 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Anything that can go wrong loading or executing an engine.
 #[derive(Debug)]
 pub enum EngineError {
+    /// Manifest loading/validation failed.
     Artifact(artifact::ArtifactError),
+    /// XLA/PJRT compilation or execution failed (or the stub was used).
     Xla(String),
+    /// A tensor argument/result had the wrong length or dtype.
     Shape(String),
     /// A parallel round-engine worker failed outside an engine call
     /// (lost result, poisoned channel). Never raised on the sequential
@@ -64,26 +68,37 @@ impl From<artifact::ArtifactError> for EngineError {
 /// Output of one local client step (Eq. (8)).
 #[derive(Clone, Debug)]
 pub struct ClientStepOut {
+    /// Updated client-side model.
     pub new_client: Vec<f32>,
+    /// Updated auxiliary network.
     pub new_aux: Vec<f32>,
+    /// Auxiliary loss on this batch.
     pub loss: f32,
+    /// Gradient norm of the step.
     pub grad_norm: f32,
 }
 
 /// Output of one event-triggered server step (Eq. (11)).
 #[derive(Clone, Debug)]
 pub struct ServerStepOut {
+    /// Updated server-side model.
     pub new_server: Vec<f32>,
+    /// Server loss on the arriving batch.
     pub loss: f32,
+    /// Gradient norm of the step.
     pub grad_norm: f32,
 }
 
 /// Output of the SplitFed server fwd+bwd (FSL_MC / FSL_OC).
 #[derive(Clone, Debug)]
 pub struct ServerFwdBwdOut {
+    /// Updated server-side model.
     pub new_server: Vec<f32>,
+    /// Cut-layer gradient to send back to the client.
     pub grad_smashed: Vec<f32>,
+    /// Split loss on this batch.
     pub loss: f32,
+    /// Gradient norm of the step.
     pub grad_norm: f32,
 }
 
@@ -99,12 +114,19 @@ pub struct ServerFwdBwdOut {
 /// functions of their arguments — the parallel and sequential schedules
 /// are required to produce bit-identical runs.
 pub trait SplitEngine: Sync {
+    /// AOT-fixed batch size.
     fn batch(&self) -> usize;
+    /// Number of output classes.
     fn classes(&self) -> usize;
-    fn input_len(&self) -> usize; // per sample
-    fn smashed_len(&self) -> usize; // per sample
+    /// Input elements per sample.
+    fn input_len(&self) -> usize;
+    /// Smashed-data elements per sample.
+    fn smashed_len(&self) -> usize;
+    /// Client-side model parameter count.
     fn client_size(&self) -> usize;
+    /// Server-side model parameter count.
     fn server_size(&self) -> usize;
+    /// Auxiliary-network parameter count.
     fn aux_size(&self) -> usize;
 
     /// Eq. (8): local step on (x_c, a_c) with the auxiliary loss.

@@ -64,6 +64,7 @@ mod real {
     unsafe impl Sync for PjrtRuntime {}
 
     impl PjrtRuntime {
+        /// Start the PJRT CPU client.
         pub fn new() -> Result<Arc<Self>, EngineError> {
             let client = xla::PjRtClient::cpu().map_err(xerr)?;
             Ok(Arc::new(PjrtRuntime {
@@ -101,9 +102,13 @@ mod real {
 
     /// Argument value passed to an entry.
     pub enum Arg<'a> {
+        /// Flat f32 tensor.
         F32(&'a [f32]),
+        /// Flat i32 tensor.
         I32(&'a [i32]),
+        /// f32 scalar.
         ScalarF32(f32),
+        /// i32 scalar.
         ScalarI32(i32),
     }
 
@@ -154,11 +159,14 @@ mod real {
     /// A decoded result tensor.
     #[derive(Clone, Debug)]
     pub enum Value {
+        /// Flat f32 tensor.
         F32(Vec<f32>),
+        /// Flat i32 tensor.
         I32(Vec<i32>),
     }
 
     impl Value {
+        /// Unwrap an f32 tensor result.
         pub fn into_f32(self) -> Result<Vec<f32>, EngineError> {
             match self {
                 Value::F32(v) => Ok(v),
@@ -166,6 +174,7 @@ mod real {
             }
         }
 
+        /// Read a one-element f32 result as a scalar.
         pub fn scalar_f32(&self) -> Result<f32, EngineError> {
             match self {
                 Value::F32(v) if v.len() == 1 => Ok(v[0]),
@@ -229,6 +238,7 @@ mod real {
     }
 
     impl PjrtEngine {
+        /// Bind one (dataset, aux) manifest configuration to the runtime.
         pub fn new(
             rt: Arc<PjrtRuntime>,
             manifest: &Manifest,
@@ -251,18 +261,22 @@ mod real {
                 .ok_or_else(|| EngineError::Shape(format!("missing aux entry {name:?}")))
         }
 
+        /// Dataset name this engine serves.
         pub fn dataset(&self) -> &str {
             &self.cfg.name
         }
 
+        /// Auxiliary architecture this engine serves.
         pub fn aux_arch(&self) -> &str {
             &self.aux.arch
         }
 
+        /// The bound dataset configuration.
         pub fn config(&self) -> &DatasetConfig {
             &self.cfg
         }
 
+        /// The shared runtime.
         pub fn runtime(&self) -> &Arc<PjrtRuntime> {
             &self.rt
         }
@@ -459,6 +473,7 @@ mod stub {
     }
 
     impl PjrtRuntime {
+        /// Always fails with a hint to build with `--features pjrt`.
         pub fn new() -> Result<Arc<Self>, EngineError> {
             Err(EngineError::Xla(UNAVAILABLE.into()))
         }
@@ -476,6 +491,7 @@ mod stub {
     }
 
     impl PjrtEngine {
+        /// Always fails with a hint to build with `--features pjrt`.
         pub fn new(
             _rt: Arc<PjrtRuntime>,
             _manifest: &Manifest,
@@ -485,10 +501,12 @@ mod stub {
             Err(EngineError::Xla(UNAVAILABLE.into()))
         }
 
+        /// Statically unreachable (no stub engine can exist).
         pub fn dataset(&self) -> &str {
             match self.void {}
         }
 
+        /// Statically unreachable (no stub engine can exist).
         pub fn aux_arch(&self) -> &str {
             match self.void {}
         }

@@ -59,22 +59,27 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue with the clock at 0.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
     }
 
+    /// Current simulated time (timestamp of the last popped event).
     pub fn now(&self) -> SimTime {
         self.now
     }
 
+    /// Number of scheduled events not yet popped.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// Total events popped so far.
     pub fn processed(&self) -> u64 {
         self.processed
     }

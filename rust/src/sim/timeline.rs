@@ -7,22 +7,36 @@
 
 use super::event::SimTime;
 
+/// What an actor was doing during a span.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SpanKind {
+    /// Client-side local computation (training, fwd/bwd).
     ClientCompute,
+    /// Client → server transmission.
     Upload,
+    /// Server → client transmission.
     Download,
+    /// One event-triggered server model update.
     ServerUpdate,
+    /// Server-side FedAvg barrier.
     Aggregate,
 }
 
+/// One recorded interval of simulated activity.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Span {
+    /// What the actor was doing.
     pub kind: SpanKind,
-    /// Client id, or None for server-side spans.
+    /// Client id, or None for server-side spans. With a sharded server
+    /// (`server_shards > 1`) all shard executors share the `None` actor
+    /// and annotate their shard in the label (`… s<k>`); server spans
+    /// from different shards may then legitimately overlap in time.
     pub who: Option<usize>,
+    /// Span start (simulated seconds).
     pub start: SimTime,
+    /// Span end (>= start).
     pub end: SimTime,
+    /// Free-form annotation (rendered in the Gantt chart).
     pub label: String,
 }
 
@@ -32,10 +46,12 @@ pub struct Span {
 /// reproducing the sequential span order bit-for-bit.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Timeline {
+    /// Recorded spans, in recording order.
     pub spans: Vec<Span>,
 }
 
 impl Timeline {
+    /// Record one span (end must not precede start).
     pub fn record(
         &mut self,
         kind: SpanKind,
@@ -53,6 +69,7 @@ impl Timeline {
         self.spans.append(&mut other.spans);
     }
 
+    /// Latest span end (the simulated run time).
     pub fn end_time(&self) -> SimTime {
         self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
     }
@@ -89,7 +106,9 @@ impl Timeline {
         worst
     }
 
-    /// Total busy time of the server (update + aggregate spans).
+    /// Total busy time of the server (update + aggregate spans). With a
+    /// sharded server this sums across shard executors, so it can exceed
+    /// the wall-clock span — use it as aggregate work, not utilization.
     pub fn server_busy(&self) -> f64 {
         self.spans
             .iter()
@@ -98,7 +117,9 @@ impl Timeline {
             .sum()
     }
 
-    /// Server idle fraction over the full run: 1 - busy/total.
+    /// Server idle fraction over the full run: 1 - busy/total, clamped
+    /// to [0, 1] (a k-shard server summing k busy executors can exceed
+    /// the wall clock; the clamp reports "never idle" in that regime).
     pub fn server_idle_fraction(&self) -> f64 {
         let total = self.end_time();
         if total <= 0.0 {

@@ -1,38 +1,71 @@
 //! Storage accounting (paper Table II "Server storage" column and the
-//! Table V "Storage (M)" comparison).
+//! Table V "Storage (M)" comparison), generalized to sharded servers.
 //!
 //! The paper measures storage in *millions of parameters*: everything the
 //! server must hold during training — server-side model copies (n for
 //! FSL_MC / FSL_AN, 1 for FSL_OC / CSE_FSL), plus the client-side models
-//! and auxiliary networks it receives at aggregation time.
+//! and auxiliary networks it receives at aggregation time. The sharded
+//! server phase (`TrainConfig::server_shards = k`) interpolates the copy
+//! count of the single-copy methods between those endpoints: k copies,
+//! reducing to the paper's Table II at k = 1 and matching FSL_MC's
+//! server-copy storage at k = n. The copies term itself is the closed
+//! form in [`crate::comm::accounting::storage`].
 
+use crate::comm::accounting::storage as storage_form;
 use crate::coordinator::methods::Method;
 
 /// Parameter counts of the three model parts.
 #[derive(Clone, Copy, Debug)]
 pub struct ModelSizes {
+    /// Client-side partial model |w_c|.
     pub client: usize,
+    /// Server-side partial model |w_s|.
     pub server: usize,
+    /// Auxiliary network |a|.
     pub aux: usize,
 }
 
-/// Server-side model copies held during training.
-pub fn server_model_copies(method: Method, n_clients: usize) -> usize {
+/// Server-side model copies held during training with `server_shards`
+/// shard copies for the single-copy methods (the per-client-copy methods
+/// always hold n).
+pub fn server_model_copies_sharded(
+    method: Method,
+    n_clients: usize,
+    server_shards: usize,
+) -> usize {
     if method.per_client_server_model() {
         n_clients
     } else {
-        1
+        server_shards
     }
 }
 
-/// Total parameters resident at the server (Table V accounting):
-/// server-side copies + n client models (aggregation) + n aux models
-/// (methods with auxiliary networks).
-pub fn server_storage_params(method: Method, n_clients: usize, sizes: &ModelSizes) -> usize {
-    let server = server_model_copies(method, n_clients) * sizes.server;
+/// Server-side model copies at the paper's operating point (k = 1).
+pub fn server_model_copies(method: Method, n_clients: usize) -> usize {
+    server_model_copies_sharded(method, n_clients, 1)
+}
+
+/// Total parameters resident at the server (Table V accounting) with
+/// `server_shards` shard copies: server-side copies + n client models
+/// (aggregation) + n aux models (methods with auxiliary networks).
+pub fn server_storage_params_sharded(
+    method: Method,
+    n_clients: usize,
+    server_shards: usize,
+    sizes: &ModelSizes,
+) -> usize {
+    let copies = server_model_copies_sharded(method, n_clients, server_shards);
+    let server =
+        storage_form::server_copies_params(copies as u64, sizes.server as u64) as usize;
     let clients = n_clients * sizes.client;
     let aux = if method.uses_aux() { n_clients * sizes.aux } else { 0 };
     server + clients + aux
+}
+
+/// Total parameters resident at the server at the paper's operating
+/// point (k = 1 — Table V accounting).
+pub fn server_storage_params(method: Method, n_clients: usize, sizes: &ModelSizes) -> usize {
+    server_storage_params_sharded(method, n_clients, 1, sizes)
 }
 
 /// In millions of parameters, as Table V reports.
@@ -87,6 +120,30 @@ mod tests {
                 - server_storage_params(Method::CseFsl, n, &CIFAR)
         };
         assert!(gap(100) > gap(10));
+    }
+
+    #[test]
+    fn sharded_copies_interpolate_between_paper_endpoints() {
+        // k = 1 is Table II's single copy; k = n matches FSL_MC's copy
+        // count; intermediate k interpolates linearly.
+        for k in 1..=5usize {
+            assert_eq!(server_model_copies_sharded(Method::CseFsl, 5, k), k);
+            assert_eq!(server_model_copies_sharded(Method::FslOc, 5, k), k);
+            // Per-client-copy methods ignore the shard knob.
+            assert_eq!(server_model_copies_sharded(Method::FslMc, 5, k), 5);
+            assert_eq!(server_model_copies_sharded(Method::FslAn, 5, k), 5);
+        }
+        // Totals: the k = 1 reduction is exactly the historical fn, and
+        // each extra shard adds exactly one server-side model.
+        assert_eq!(
+            server_storage_params_sharded(Method::CseFsl, 5, 1, &CIFAR),
+            server_storage_params(Method::CseFsl, 5, &CIFAR)
+        );
+        let at = |k| server_storage_params_sharded(Method::CseFsl, 5, k, &CIFAR);
+        assert_eq!(at(3) - at(2), CIFAR.server);
+        // k = n: the server-side copy term equals FSL_MC's n·|w_s|.
+        let copy_term = |m, k| server_model_copies_sharded(m, 5, k) * CIFAR.server;
+        assert_eq!(copy_term(Method::CseFsl, 5), copy_term(Method::FslMc, 1));
     }
 
     #[test]

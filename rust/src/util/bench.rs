@@ -10,17 +10,24 @@ use std::time::{Duration, Instant};
 /// One measured statistic set, all in nanoseconds per iteration.
 #[derive(Clone, Debug)]
 pub struct Stats {
+    /// `group/name` of the benchmark.
     pub name: String,
+    /// Measured iterations.
     pub iters: u64,
+    /// Mean ns per iteration.
     pub mean_ns: f64,
+    /// Median ns per iteration.
     pub median_ns: f64,
+    /// 10th-percentile ns per iteration.
     pub p10_ns: f64,
+    /// 90th-percentile ns per iteration.
     pub p90_ns: f64,
     /// Optional user-supplied throughput denominator (items per iter).
     pub items_per_iter: Option<f64>,
 }
 
 impl Stats {
+    /// Items per second, if a denominator was supplied.
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n * 1e9 / self.mean_ns)
     }
@@ -48,6 +55,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// A new group with CI-friendly default warmup/measure budgets.
     pub fn new(group: &str) -> Self {
         // Keep total bench time bounded: these run in CI on one core.
         Bench {
@@ -59,6 +67,7 @@ impl Bench {
         }
     }
 
+    /// Override the warmup and measurement budgets.
     pub fn with_times(mut self, warmup: Duration, measure: Duration) -> Self {
         self.warmup = warmup;
         self.measure = measure;
@@ -144,6 +153,7 @@ impl Bench {
         }
     }
 
+    /// All results measured in this group so far.
     pub fn results(&self) -> &[Stats] {
         &self.results
     }

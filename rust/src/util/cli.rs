@@ -6,12 +6,25 @@
 
 use std::collections::BTreeMap;
 
+/// Anything that can go wrong parsing a command line.
 #[derive(Debug)]
 pub enum CliError {
+    /// An option not declared on the command.
     Unknown(String),
+    /// A value-taking option appeared without a value.
     MissingValue(String),
-    Invalid { key: String, value: String, why: String },
+    /// A value failed to parse.
+    Invalid {
+        /// Option name.
+        key: String,
+        /// Raw offending value.
+        value: String,
+        /// Parse-failure reason.
+        why: String,
+    },
+    /// More positional arguments than declared.
     UnexpectedPositional(String),
+    /// A required positional argument was absent.
     MissingPositional(String),
 }
 
@@ -63,6 +76,7 @@ pub struct Args {
 }
 
 impl Command {
+    /// A new command with the given name and one-line description.
     pub fn new(name: &str, about: &str) -> Self {
         Command { name: name.into(), about: about.into(), ..Default::default() }
     }
@@ -112,6 +126,7 @@ impl Command {
         self
     }
 
+    /// Render the generated `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
         for (p, _, req) in &self.positionals {
@@ -202,18 +217,23 @@ impl Command {
 }
 
 impl Args {
+    /// The raw value of a `--key value` option (None if no default and
+    /// not given).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Whether a boolean `--flag` was passed.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.get(key).copied().unwrap_or(false)
     }
 
+    /// The raw value of a positional argument by declared name.
     pub fn positional(&self, name: &str) -> Option<&str> {
         self.pos_names.get(name).map(|&i| self.positionals[i].as_str())
     }
 
+    /// Parse an option value via `FromStr`, with a descriptive error.
     pub fn parse_as<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError>
     where
         T::Err: std::fmt::Display,

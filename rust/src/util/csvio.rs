@@ -14,10 +14,12 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// An empty table with the given column header.
     pub fn new(header: &[&str]) -> Self {
         Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (width must match the header).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(
             cells.len(),
@@ -35,6 +37,7 @@ impl Csv {
         self.row(&v);
     }
 
+    /// Number of data rows (header excluded).
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }
@@ -47,6 +50,7 @@ impl Csv {
         }
     }
 
+    /// Serialize to `path`, creating parent directories.
     pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;

@@ -13,17 +13,31 @@ use std::fmt;
 /// output is deterministic (stable diffs in EXPERIMENTS.md).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Anything that can go wrong parsing or accessing JSON.
 #[derive(Debug)]
 pub enum JsonError {
-    Parse { pos: usize, msg: String },
+    /// Malformed input at a byte position.
+    Parse {
+        /// Byte offset of the failure.
+        pos: usize,
+        /// What went wrong.
+        msg: String,
+    },
+    /// A typed accessor was used on the wrong shape of value.
     Access(String),
 }
 
@@ -43,6 +57,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ------------------------------------------------------- accessors
 
+    /// Required object field (error on missing key or non-object).
     pub fn get(&self, key: &str) -> Result<&Json, JsonError> {
         match self {
             Json::Obj(m) => m
@@ -52,6 +67,7 @@ impl Json {
         }
     }
 
+    /// Optional object field (None on missing key or non-object).
     pub fn opt(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -59,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The value as an object map.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>, JsonError> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -66,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json], JsonError> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -73,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64, JsonError> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -80,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize, JsonError> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 || x > u64::MAX as f64 {
@@ -88,6 +108,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The value as a string.
     pub fn as_str(&self) -> Result<&str, JsonError> {
         match self {
             Json::Str(s) => Ok(s),
@@ -95,6 +116,7 @@ impl Json {
         }
     }
 
+    /// The value as a boolean.
     pub fn as_bool(&self) -> Result<bool, JsonError> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -109,24 +131,29 @@ impl Json {
 
     // ----------------------------------------------------- construction
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Build an array.
     pub fn arr(v: Vec<Json>) -> Json {
         Json::Arr(v)
     }
 
     // ------------------------------------------------------------ parse
 
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.skip_ws();

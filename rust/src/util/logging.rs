@@ -5,13 +5,19 @@
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
 
+/// Log severity, ordered from most to least severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but non-fatal conditions.
     Warn = 1,
+    /// Run-level progress (the default).
     Info = 2,
+    /// Per-round detail.
     Debug = 3,
+    /// Per-message detail.
     Trace = 4,
 }
 
@@ -19,10 +25,12 @@ static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
+/// Set the global maximum level (messages above it are dropped).
 pub fn set_level(level: Level) {
     MAX_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Parse a level name (unknown names fall back to Info).
 pub fn level_from_str(s: &str) -> Level {
     match s.to_ascii_lowercase().as_str() {
         "error" => Level::Error,
@@ -33,10 +41,12 @@ pub fn level_from_str(s: &str) -> Level {
     }
 }
 
+/// Whether messages at `level` currently pass the global filter.
 pub fn enabled(level: Level) -> bool {
     (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one timestamped message (prefer the `log_*!` macros).
 pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
@@ -53,6 +63,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     eprintln!("[{secs:9.3}s {tag} {module}] {msg}");
 }
 
+/// Log at Info level with `format!` arguments.
 #[macro_export]
 macro_rules! log_info {
     ($($arg:tt)+) => {
@@ -61,6 +72,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at Warn level with `format!` arguments.
 #[macro_export]
 macro_rules! log_warn {
     ($($arg:tt)+) => {
@@ -69,6 +81,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at Debug level with `format!` arguments.
 #[macro_export]
 macro_rules! log_debug {
     ($($arg:tt)+) => {
@@ -77,6 +90,7 @@ macro_rules! log_debug {
     };
 }
 
+/// Log at Error level with `format!` arguments.
 #[macro_export]
 macro_rules! log_error {
     ($($arg:tt)+) => {

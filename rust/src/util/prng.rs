@@ -8,10 +8,22 @@
 //! self-contained xoshiro256++ with SplitMix64 seeding (public-domain
 //! reference algorithms by Blackman & Vigna).
 
+/// SplitMix64 avalanche finalizer — shared by [`Rng::new`]'s seeding
+/// and the property harness's sub-seed derivation (`util::prop`).
+pub(crate) fn splitmix64_mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256++ PRNG with SplitMix64 seeding.
 #[derive(Clone, Debug)]
 pub struct Rng {
     s: [u64; 4],
+    /// Range-shrink divisor for [`Rng::below`] (1 = off). Used by the
+    /// property harness (`util::prop`) to bias generated sizes/choices
+    /// toward small values when hunting a minimal counterexample.
+    shrink: u64,
 }
 
 impl Rng {
@@ -21,12 +33,22 @@ impl Rng {
         let mut sm = seed;
         let mut next = || {
             sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-            z ^ (z >> 31)
+            splitmix64_mix(sm)
         };
-        Rng { s: [next(), next(), next(), next()] }
+        Rng { s: [next(), next(), next(), next()], shrink: 1 }
+    }
+
+    /// Seed like [`Rng::new`] but cap every [`Rng::below`] range to
+    /// `max(n / shrink, 1)`, biasing draws toward small sizes and
+    /// first-listed choices. `shrink = 1` is exactly [`Rng::new`].
+    /// Derived streams ([`Rng::split`] / [`Rng::split_str`]) do NOT
+    /// inherit the cap: it shrinks the *generator* stream the property
+    /// harness drives, never the simulation streams seeded from it.
+    pub fn with_shrink(seed: u64, shrink: u64) -> Self {
+        assert!(shrink >= 1, "shrink factor must be >= 1");
+        let mut r = Rng::new(seed);
+        r.shrink = shrink;
+        r
     }
 
     /// Derive an independent stream for a named subcomponent. Streams
@@ -50,6 +72,7 @@ impl Rng {
         self.split(h)
     }
 
+    /// The next raw 64-bit output of the stream.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = (self.s[0].wrapping_add(self.s[3]))
@@ -77,8 +100,11 @@ impl Rng {
     }
 
     /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection.
+    /// Under a shrink factor ([`Rng::with_shrink`]) the range is capped
+    /// to `max(n / shrink, 1)`.
     pub fn below(&mut self, n: u64) -> u64 {
         assert!(n > 0, "below(0)");
+        let n = if self.shrink > 1 { (n / self.shrink).max(1) } else { n };
         let mut x = self.next_u64();
         let mut m = (x as u128) * (n as u128);
         let mut l = m as u64;
@@ -219,6 +245,31 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shrink_caps_ranges_and_spares_derived_streams() {
+        // shrink = 1 is byte-for-byte Rng::new.
+        let mut plain = Rng::new(42);
+        let mut s1 = Rng::with_shrink(42, 1);
+        for _ in 0..32 {
+            assert_eq!(plain.next_u64(), s1.next_u64());
+        }
+        // A factor caps below() draws; choices collapse toward 0.
+        let mut s8 = Rng::with_shrink(7, 8);
+        for _ in 0..256 {
+            assert!(s8.below(100) < 13, "100/8 = 12 caps the range");
+            assert_eq!(s8.below(4), 0, "4/8 -> max(0,1) = 1 forces the first choice");
+        }
+        // Derived streams do not inherit the cap.
+        let mut child = Rng::with_shrink(7, 8).split(3);
+        let mut seen_big = false;
+        for _ in 0..256 {
+            if child.below(100) >= 13 {
+                seen_big = true;
+            }
+        }
+        assert!(seen_big, "split streams must sample the full range");
+    }
 
     #[test]
     fn deterministic_across_instances() {

@@ -1,12 +1,29 @@
 //! Mini property-testing harness (proptest is unavailable offline).
 //!
-//! Coordinator invariants (routing, batching, accounting, aggregation) are
-//! checked over many random cases drawn from a seeded generator. On
-//! failure the harness re-runs with a bisected input size to report a
-//! smaller counterexample seed, then panics with the reproduction seed —
-//! `PROP_SEED=<n> cargo test <name>` replays it exactly.
+//! Coordinator invariants (routing, batching, accounting, aggregation)
+//! are checked over many random cases drawn from a seeded generator.
+//!
+//! # Shrinking strategy
+//!
+//! On failure the harness does not just replay the failing seed — it
+//! hunts for a **smaller** counterexample by rerunning the property with
+//! *derived sub-seeds* under a range-shrink factor
+//! ([`Rng::with_shrink`]): every `below(n)` draw on the generator stream
+//! is capped to `max(n / factor, 1)`, which biases sizes (client counts,
+//! rounds, model lengths) toward their minima and enum-style choices
+//! toward the first variant — the same "prefer simpler" ordering
+//! QuickCheck-family shrinkers use. Factors are tried most-aggressive
+//! first (16, 8, 4, 2), a handful of sub-seeds each; the first capped
+//! rerun that still fails is reported next to the original, with an
+//! exact reproduction line. Derived simulation streams
+//! ([`Rng::split`]) are deliberately *not* capped, so the property still
+//! exercises the real system — only the generated inputs shrink.
+//!
+//! Reproduction: `PROP_SEED=<n> cargo test <name>` replays an original
+//! failure exactly; `PROP_SEED=<n> PROP_SHRINK=<factor> PROP_CASES=1`
+//! replays a shrunk one. `PROP_CASES` overrides the case count.
 
-use super::prng::Rng;
+use super::prng::{splitmix64_mix, Rng};
 
 /// Number of random cases per property (override with PROP_CASES).
 pub fn default_cases() -> u64 {
@@ -23,23 +40,98 @@ fn base_seed() -> u64 {
         .unwrap_or(0xC5EF_51D0_2024_0001)
 }
 
+/// Range-shrink factor applied to every case (replay knob for shrunk
+/// counterexamples; 1 = off).
+fn shrink_factor() -> u64 {
+    std::env::var("PROP_SHRINK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&f| f >= 1)
+        .unwrap_or(1)
+}
+
+/// Shrink factors tried on failure, most aggressive first.
+const SHRINK_FACTORS: [u64; 4] = [16, 8, 4, 2];
+
+/// Derived sub-seeds tried per factor.
+const SHRINK_TRIES: u64 = 6;
+
+/// Distinct, deterministic sub-seed streams per (failing seed, factor,
+/// attempt), finalized with the prng's shared SplitMix64 mix.
+fn derive_sub_seed(seed: u64, factor: u64, attempt: u64) -> u64 {
+    splitmix64_mix(
+        seed ^ factor.wrapping_mul(0xA076_1D64_78BD_642F)
+            ^ attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("panicked: {s}")
+    } else {
+        "panicked".to_string()
+    }
+}
+
+/// Hunt for a smaller failing input: rerun `prop` with derived sub-seeds
+/// under descending shrink factors; the first capped rerun that fails
+/// (by `Err` or by panic) wins. Returns `(factor, sub_seed, message)`.
+fn shrink<F>(prop: &mut F, seed: u64) -> Option<(u64, u64, String)>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for &factor in &SHRINK_FACTORS {
+        for attempt in 0..SHRINK_TRIES {
+            let sub = derive_sub_seed(seed, factor, attempt);
+            let mut srng = Rng::with_shrink(sub, factor);
+            let outcome =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut srng)));
+            let failure = match outcome {
+                Ok(Ok(())) => None,
+                Ok(Err(msg)) => Some(msg),
+                Err(p) => Some(panic_message(p)),
+            };
+            if let Some(msg) = failure {
+                return Some((factor, sub, msg));
+            }
+        }
+    }
+    None
+}
+
 /// Run `prop` for `default_cases()` seeded cases. The closure receives a
-/// per-case RNG and returns `Err(description)` to fail the property.
+/// per-case RNG and returns `Err(description)` to fail the property; on
+/// failure the shrinker (module docs) searches for a smaller
+/// counterexample before panicking with reproduction lines for both.
 pub fn check<F>(name: &str, mut prop: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
     let cases = default_cases();
     let base = base_seed();
+    let replay_factor = shrink_factor();
     for case in 0..cases {
         let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut rng = Rng::new(seed);
+        let mut rng = Rng::with_shrink(seed, replay_factor);
         if let Err(msg) = prop(&mut rng) {
-            panic!(
+            let mut report = format!(
                 "property {name:?} failed on case {case}/{cases}: {msg}\n\
                  reproduce with: PROP_SEED={base} PROP_CASES={} (case index {case})",
                 case + 1
             );
+            // Only shrink original-size failures; a capped replay is
+            // already minimal-ish and reruns would double-shrink.
+            if replay_factor == 1 {
+                if let Some((factor, sub, smsg)) = shrink(&mut prop, seed) {
+                    report.push_str(&format!(
+                        "\nshrunk counterexample (ranges capped ~1/{factor}): {smsg}\n\
+                         reproduce shrunk: PROP_SEED={sub} PROP_SHRINK={factor} PROP_CASES=1"
+                    ));
+                }
+            }
+            panic!("{report}");
         }
     }
 }
@@ -77,6 +169,42 @@ mod tests {
     #[should_panic(expected = "property")]
     fn failing_property_panics_with_seed() {
         check("always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn shrinker_reports_a_smaller_counterexample() {
+        // Fails for any draw >= 1 out of a huge range — the capped
+        // reruns still fail (ranges never shrink below 1 draw of
+        // below(62500) here), so a shrunk reproduction line must appear.
+        check("big-draw-fails", |rng| {
+            let n = rng.below(1_000_000);
+            prop_assert!(n == 0, "drew {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrunk_failures_replay_exactly() {
+        // A shrunk counterexample's reproduction line pins (sub_seed,
+        // factor); Rng::with_shrink must replay the identical stream.
+        let sub = derive_sub_seed(0xDEAD_BEEF, 8, 3);
+        let mut a = Rng::with_shrink(sub, 8);
+        let mut b = Rng::with_shrink(sub, 8);
+        for _ in 0..64 {
+            assert_eq!(a.below(1000), b.below(1000));
+        }
+    }
+
+    #[test]
+    fn sub_seeds_are_distinct_per_factor_and_attempt() {
+        let mut seen = std::collections::BTreeSet::new();
+        for &f in &SHRINK_FACTORS {
+            for t in 0..SHRINK_TRIES {
+                seen.insert(derive_sub_seed(1, f, t));
+            }
+        }
+        assert_eq!(seen.len(), SHRINK_FACTORS.len() * SHRINK_TRIES as usize);
     }
 
     #[test]

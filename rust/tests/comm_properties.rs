@@ -1,11 +1,13 @@
-//! Wire-accounting properties (util/prop harness): across random
-//! `(method, n, h, agg_every, rounds, parallelism)` configurations the
-//! live `CommLedger` must equal the generalized closed forms in
-//! `comm::accounting::predict` (which reduce to the paper's Table II
-//! per-epoch forms), and the ledger's client-side and server-side views
-//! must conserve bytes per message kind.
+//! Wire- and storage-accounting properties (util/prop harness): across
+//! random `(method, n, h, agg_every, rounds, parallelism, server_shards)`
+//! configurations the live `CommLedger` must equal the generalized
+//! closed forms in `comm::accounting::predict` (which reduce to the
+//! paper's Table II per-epoch forms), the ledger's client-side and
+//! server-side views must conserve bytes per message kind, and the
+//! server's resident parameters must equal the
+//! `comm::accounting::storage` closed form for every shard count k.
 
-use cse_fsl::comm::accounting::{predict, table2, MsgKind, WireSizes};
+use cse_fsl::comm::accounting::{predict, storage as storage_form, table2, MsgKind, WireSizes};
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
 use cse_fsl::coordinator::methods::Method;
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
@@ -38,9 +40,13 @@ struct RandomRun {
     h: usize,
     rounds: usize,
     agg_every: usize,
+    server_shards: usize,
     batch: usize,
+    server_size: usize,
     wires: WireSizes,
     ledger: cse_fsl::comm::accounting::CommLedger,
+    resident_params: usize,
+    record: cse_fsl::metrics::recorder::RunRecord,
 }
 
 fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> {
@@ -49,6 +55,13 @@ fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> 
     let h = if method.supports_h() { 1 + rng.below(4) as usize } else { 1 };
     let rounds = 1 + rng.below(10) as usize;
     let agg_every = 1 + rng.below(rounds as u64 + 3) as usize;
+    // Random shard count for the single-copy methods (wire traffic must
+    // be shard-independent; storage must follow the closed form).
+    let server_shards = if method.per_client_server_model() {
+        1
+    } else {
+        1 + rng.below(n as u64) as usize
+    };
     let e = MockEngine::small(rng.next_u64());
     let train = generate(&spec(), n * 16, rng.next_u64());
     let test = generate(&spec(), 8, rng.next_u64());
@@ -59,6 +72,7 @@ fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> 
         eval_every: 0,
         participation: participation.min(n),
         parallelism: random_parallelism(rng),
+        server_shards,
         ..TrainConfig::new(method)
     };
     let setup = TrainerSetup {
@@ -72,16 +86,20 @@ fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> 
         label: "prop".into(),
     };
     let mut tr = Trainer::new(&e, cfg, setup)?;
-    tr.run().map_err(|e| e.to_string())?;
+    let record = tr.run().map_err(|e| e.to_string())?;
     Ok(RandomRun {
         method,
         n,
         h,
         rounds,
         agg_every,
+        server_shards,
         batch: e.batch,
+        server_size: e.server_size(),
         wires: WireSizes::new(e.smashed_len, e.client_size(), e.aux_size()),
         ledger: tr.ledger.clone(),
+        resident_params: tr.server.resident_params(),
+        record,
     })
 }
 
@@ -203,6 +221,64 @@ fn prop_generalized_forms_reduce_to_table2_epoch_forms() {
         let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
         let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
         prop_assert!(up + down == table2::fsl_an(n, d1, &w), "AN mismatch");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_storage_matches_closed_form_for_all_k() {
+    prop::check("resident storage == copies x |w_s| closed form", |rng| {
+        let r = run_random(rng, 0)?;
+        let copies = cse_fsl::storage::server_model_copies_sharded(
+            r.method,
+            r.n,
+            r.server_shards,
+        );
+        // Live server-resident parameters equal the closed form
+        // (copies × partial-model size) for every shard count k —
+        // reducing to Table II at k = 1 and k = n.
+        let expect =
+            storage_form::server_copies_params(copies as u64, r.server_size as u64);
+        prop_assert!(
+            r.resident_params as u64 == expect,
+            "{} n={} k={}: resident {} != closed form {expect}",
+            r.method,
+            r.n,
+            r.server_shards,
+            r.resident_params
+        );
+        // The RunRecord reports the full Table-V-style total for the
+        // same (method, n, k).
+        let sizes = cse_fsl::storage::ModelSizes {
+            client: (r.wires.client_model / 4) as usize,
+            server: r.server_size,
+            aux: (r.wires.aux_model / 4) as usize,
+        };
+        let total = cse_fsl::storage::server_storage_params_sharded(
+            r.method,
+            r.n,
+            r.server_shards,
+            &sizes,
+        );
+        prop_assert!(
+            r.record.server_storage_params == total,
+            "{} n={} k={}: recorded {} != accounted {total}",
+            r.method,
+            r.n,
+            r.server_shards,
+            r.record.server_storage_params
+        );
+        // Per-shard update counts conserve the total and match the copy
+        // count.
+        prop_assert!(
+            r.record.server_updates_per_shard.len() == copies,
+            "per-shard vector has {} entries for {copies} copies",
+            r.record.server_updates_per_shard.len()
+        );
+        // Wire-traffic shard-independence is covered by
+        // `prop_ledger_matches_generalized_closed_forms`: it runs the
+        // same random-k configurations against closed forms that have
+        // no k term, so any k-dependent ledger regression fails there.
         Ok(())
     });
 }

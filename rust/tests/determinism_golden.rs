@@ -1,11 +1,15 @@
 //! Golden determinism: the parallel round engine must be invisible.
 //!
-//! The contract (coordinator/README.md): for any method and any thread
-//! count, `Parallelism::Threads(n)` produces a **bit-identical** run to
-//! `Parallelism::Sequential` — same `RunRecord` JSON (every loss, byte
-//! count, and simulated timestamp), same timeline span sequence, same
-//! communication ledger, same final model states. These tests pin that
-//! contract over the mock engine for all four methods.
+//! The contract (coordinator/README.md): for any method, any server
+//! shard count, and any thread count, `Parallelism::Threads(n)` produces
+//! a **bit-identical** run to `Parallelism::Sequential` — same
+//! `RunRecord` JSON (every loss, byte count, and simulated timestamp),
+//! same timeline span sequence, same communication ledger, same final
+//! model states. These tests pin that contract over the mock engine for
+//! all four methods and for the sharded server phase
+//! (`server_shards` ∈ {1, 2, n}). Changing the *shard count* is allowed
+//! (and expected) to change results — which is exactly why it is part of
+//! `RunSpec::key` — but the thread count never may.
 
 use cse_fsl::comm::accounting::CommLedger;
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
@@ -51,6 +55,7 @@ struct Fingerprint {
     client_aux: Vec<Vec<f32>>,
     server_copies: Vec<Vec<f32>>,
     server_updates: u64,
+    shard_updates: Vec<u64>,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -61,6 +66,7 @@ fn run(
     arrival: ArrivalOrder,
     parallelism: Parallelism,
     rounds: usize,
+    server_shards: usize,
     train: &Dataset,
     test: &Dataset,
 ) -> Fingerprint {
@@ -70,6 +76,7 @@ fn run(
         participation,
         arrival,
         parallelism,
+        server_shards,
         agg_every: 4,
         eval_every: 3,
         eval_max_batches: 2,
@@ -88,6 +95,7 @@ fn run(
         client_aux: tr.clients.iter().map(|c| c.ac.clone()).collect(),
         server_copies: tr.server.copies.clone(),
         server_updates: tr.server.updates,
+        shard_updates: tr.server.shard_updates.clone(),
     }
 }
 
@@ -100,6 +108,7 @@ fn assert_identical(seq: &Fingerprint, par: &Fingerprint, ctx: &str) {
     assert_eq!(seq.client_aux, par.client_aux, "{ctx}: aux models diverged");
     assert_eq!(seq.server_copies, par.server_copies, "{ctx}: server copies diverged");
     assert_eq!(seq.server_updates, par.server_updates, "{ctx}: update count diverged");
+    assert_eq!(seq.shard_updates, par.shard_updates, "{ctx}: per-shard counts diverged");
 }
 
 #[test]
@@ -115,6 +124,7 @@ fn threads_bit_identical_to_sequential_for_all_methods() {
             ArrivalOrder::ByDelay,
             Parallelism::Sequential,
             10,
+            1,
             &train,
             &test,
         );
@@ -126,12 +136,137 @@ fn threads_bit_identical_to_sequential_for_all_methods() {
                 ArrivalOrder::ByDelay,
                 Parallelism::Threads(threads),
                 10,
+                1,
                 &train,
                 &test,
             );
             assert_identical(&seq, &par, &format!("{method} threads={threads}"));
         }
     }
+}
+
+#[test]
+fn sharded_golden_bit_identical_across_thread_counts() {
+    // The sharded server phase (k copies, k event-loop executors) must
+    // keep the contract at every k for both single-copy methods —
+    // including k = n, where each client has a private shard.
+    let train = dataset(120, 9);
+    let test = dataset(24, 10);
+    for method in [Method::CseFsl, Method::FslOc] {
+        let h = if method.supports_h() { 2 } else { 1 };
+        for shards in [1usize, 2, 5] {
+            let seq = run(
+                method,
+                h,
+                0,
+                ArrivalOrder::ByDelay,
+                Parallelism::Sequential,
+                10,
+                shards,
+                &train,
+                &test,
+            );
+            for threads in [1usize, 4] {
+                let par = run(
+                    method,
+                    h,
+                    0,
+                    ArrivalOrder::ByDelay,
+                    Parallelism::Threads(threads),
+                    10,
+                    shards,
+                    &train,
+                    &test,
+                );
+                assert_identical(
+                    &seq,
+                    &par,
+                    &format!("{method} shards={shards} threads={threads}"),
+                );
+            }
+            // Per-shard counts: one counter per copy, conserving the
+            // total, and every shard actually serves its client group.
+            assert_eq!(seq.shard_updates.len(), shards);
+            assert_eq!(seq.shard_updates.iter().sum::<u64>(), seq.server_updates);
+            assert!(
+                seq.shard_updates.iter().all(|&u| u > 0),
+                "{method} shards={shards}: idle shard in {:?}",
+                seq.shard_updates
+            );
+            assert_eq!(seq.server_copies.len(), shards);
+        }
+    }
+}
+
+#[test]
+fn shards_one_bit_identical_to_default_single_copy() {
+    // --server-shards 1 must be the historical single-copy run exactly:
+    // the default config (which never mentions shards) and an explicit
+    // k=1 produce the same fingerprint.
+    let train = dataset(120, 11);
+    let test = dataset(24, 12);
+    let explicit = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        8,
+        1,
+        &train,
+        &test,
+    );
+    let e = MockEngine::small(42);
+    // Built without touching server_shards at all.
+    let cfg = TrainConfig {
+        h: 2,
+        agg_every: 4,
+        eval_every: 3,
+        eval_max_batches: 2,
+        lr0: 1.0,
+        track_grad_norms: true,
+        ..TrainConfig::new(Method::CseFsl)
+    }
+    .with_rounds(8);
+    let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 5)).unwrap();
+    let rec = tr.run().unwrap();
+    assert_eq!(
+        explicit.json,
+        run_to_json(&rec).pretty(),
+        "default config must equal explicit k=1"
+    );
+}
+
+#[test]
+fn shard_count_changes_results() {
+    // Sharding is a *semantic* knob (disjoint shard trajectories between
+    // aggregations), not a scheduling knob — this is why server_shards
+    // is part of RunSpec::key while parallelism is not.
+    let train = dataset(120, 13);
+    let test = dataset(24, 14);
+    let k1 = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        10,
+        1,
+        &train,
+        &test,
+    );
+    let k2 = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        10,
+        2,
+        &train,
+        &test,
+    );
+    assert_ne!(k1.json, k2.json, "k=2 must not silently replay the k=1 run");
 }
 
 #[test]
@@ -148,6 +283,7 @@ fn golden_holds_under_partial_participation() {
             ArrivalOrder::ByDelay,
             Parallelism::Sequential,
             12,
+            1,
             &train,
             &test,
         );
@@ -158,11 +294,37 @@ fn golden_holds_under_partial_participation() {
             ArrivalOrder::ByDelay,
             Parallelism::Threads(4),
             12,
+            1,
             &train,
             &test,
         );
         assert_identical(&seq, &par, &format!("{method} participation=3"));
     }
+    // Sharded + partial participation: some shards may sit idle in a
+    // round; determinism must survive the uneven lane loads.
+    let seq = run(
+        Method::CseFsl,
+        2,
+        2,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        12,
+        2,
+        &train,
+        &test,
+    );
+    let par = run(
+        Method::CseFsl,
+        2,
+        2,
+        ArrivalOrder::ByDelay,
+        Parallelism::Threads(4),
+        12,
+        2,
+        &train,
+        &test,
+    );
+    assert_identical(&seq, &par, "CSE_FSL shards=2 participation=2");
 }
 
 #[test]
@@ -178,6 +340,7 @@ fn golden_holds_under_shuffled_arrival_order() {
         ArrivalOrder::Shuffled,
         Parallelism::Sequential,
         9,
+        1,
         &train,
         &test,
     );
@@ -188,6 +351,7 @@ fn golden_holds_under_shuffled_arrival_order() {
         ArrivalOrder::Shuffled,
         Parallelism::Threads(3),
         9,
+        1,
         &train,
         &test,
     );
@@ -207,6 +371,7 @@ fn parallel_runs_are_reproducible_across_invocations() {
         ArrivalOrder::ByDelay,
         Parallelism::Threads(4),
         8,
+        2,
         &train,
         &test,
     );
@@ -217,8 +382,9 @@ fn parallel_runs_are_reproducible_across_invocations() {
         ArrivalOrder::ByDelay,
         Parallelism::Threads(4),
         8,
+        2,
         &train,
         &test,
     );
-    assert_identical(&a, &b, "Threads(4) repeat");
+    assert_identical(&a, &b, "Threads(4) shards=2 repeat");
 }
