@@ -2,9 +2,10 @@
 //! bottleneck): full mock-engine rounds per method, FedAvg aggregation at
 //! paper model sizes, the event queue, and the accounting ledger.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use cse_fsl::comm::accounting::{table2, CommLedger, MsgKind, WireSizes};
+use cse_fsl::sched::{fanout, SchedPolicy};
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
 use cse_fsl::coordinator::methods::Method;
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
@@ -68,13 +69,14 @@ fn main() {
     // batch 16, input 512, smashed 256; client 262k / aux 32k / server 64k params.
     let heavy = MockEngine::new(16, 10, 512, 256, 262_144, 32_768, 65_536, 9);
     let n_clients = 8;
-    let run_fanout = |par: Parallelism| {
+    let run_fanout = |par: Parallelism, sched: SchedPolicy| {
         let cfg = TrainConfig {
             h: 2,
             eval_every: 0,
             agg_every: 1000,
             lr0: 0.05,
             parallelism: par,
+            sched,
             ..TrainConfig::new(Method::CseFsl)
         }
         .with_rounds(6);
@@ -93,23 +95,86 @@ fn main() {
     };
     let mut bench = Bench::new("coordinator/parallelism")
         .with_times(Duration::from_millis(300), Duration::from_millis(1500));
-    let seq_ns =
-        bench.run("seq_8clients_h2_6rounds", || run_fanout(Parallelism::Sequential)).median_ns;
+    let seq_ns = bench
+        .run("seq_8clients_h2_6rounds", || {
+            run_fanout(Parallelism::Sequential, SchedPolicy::RoundRobin)
+        })
+        .median_ns;
     let thr2_ns = bench
-        .run("threads2_8clients_h2_6rounds", || run_fanout(Parallelism::Threads(2)))
+        .run("threads2_8clients_h2_6rounds", || {
+            run_fanout(Parallelism::Threads(2), SchedPolicy::RoundRobin)
+        })
         .median_ns;
     let thr4_ns = bench
-        .run("threads4_8clients_h2_6rounds", || run_fanout(Parallelism::Threads(4)))
+        .run("threads4_8clients_h2_6rounds", || {
+            run_fanout(Parallelism::Threads(4), SchedPolicy::RoundRobin)
+        })
         .median_ns;
     let thr8_ns = bench
-        .run("threads8_8clients_h2_6rounds", || run_fanout(Parallelism::Threads(8)))
+        .run("threads8_8clients_h2_6rounds", || {
+            run_fanout(Parallelism::Threads(8), SchedPolicy::RoundRobin)
+        })
+        .median_ns;
+    // Work stealing through the full trainer: same results (golden
+    // contract), so this row measures pure dealing overhead vs the
+    // round-robin threads4 row.
+    let steal4_ns = bench
+        .run("threads4_steal_8clients_h2_6rounds", || {
+            run_fanout(Parallelism::Threads(4), SchedPolicy::WorkStealing)
+        })
         .median_ns;
     bench.report();
     println!(
-        "\nfan-out scaling at 8 clients (median): threads2 {:.2}x, threads4 {:.2}x, threads8 {:.2}x vs sequential",
+        "\nfan-out scaling at 8 clients (median): threads2 {:.2}x, threads4 {:.2}x, threads8 {:.2}x vs sequential; steal/rr at threads4 {:.2}x",
         seq_ns / thr2_ns,
         seq_ns / thr4_ns,
         seq_ns / thr8_ns,
+        thr4_ns / steal4_ns,
+    );
+
+    // --- scheduling policies over the raw fan-out: the makespan of 16
+    // busy-spin items on 4 workers, dealt per policy. The heavy-tailed
+    // profile is adversarial for round-robin: the two 8 ms items sit at
+    // positions 0 and 4, so `pos % 4` stacks both on worker 0 (~17 ms
+    // makespan) while cost-weighted LPT and work stealing spread them
+    // (~8.5 ms). On uniform costs all policies tie — the dealing is
+    // free. Results are identical either way; only wall-clock moves.
+    let spin = |us: u64| -> u64 {
+        let d = Duration::from_micros(us);
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        while t0.elapsed() < d {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        }
+        acc
+    };
+    let uniform: Vec<u64> = vec![1_000; 16];
+    let heavytail: Vec<u64> =
+        (0..16).map(|i| if i == 0 || i == 4 { 8_000 } else { 500 }).collect();
+    let sched_workers = 4;
+    let mut bench = Bench::new("coordinator/sched")
+        .with_times(Duration::from_millis(200), Duration::from_millis(1200));
+    let mut medians = std::collections::BTreeMap::new();
+    for (profile, spins) in [("uniform", &uniform), ("heavytail", &heavytail)] {
+        for policy in SchedPolicy::ALL {
+            let costs: Vec<f64> = spins.iter().map(|&us| us as f64).collect();
+            let stats = bench.run(&format!("{policy}_{profile}_16items_4workers"), || {
+                let out = fanout(policy, sched_workers, spins.clone(), &costs, |_pos, us| {
+                    Ok::<_, String>(spin(us))
+                })
+                .unwrap();
+                assert_eq!(out.len(), spins.len());
+                out
+            });
+            medians.insert((policy.to_string(), profile), stats.median_ns);
+        }
+    }
+    bench.report();
+    println!(
+        "\nheavy-tailed profile (median makespan): cost-weighted {:.2}x, work-stealing {:.2}x vs round-robin",
+        medians[&("rr".to_string(), "heavytail")] / medians[&("cost".to_string(), "heavytail")],
+        medians[&("rr".to_string(), "heavytail")] / medians[&("steal".to_string(), "heavytail")],
     );
 
     // --- the sharded server phase: k server shards (k copies + k event

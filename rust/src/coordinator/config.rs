@@ -1,5 +1,7 @@
 //! Training-run configuration + validation.
 
+use crate::sched::SchedPolicy;
+
 use super::methods::Method;
 
 /// Client fan-out strategy for the local-training phase of a round.
@@ -61,6 +63,59 @@ impl std::str::FromStr for Parallelism {
                     "bad parallelism {s:?} (expected seq | auto | <threads>)"
                 )),
             },
+        }
+    }
+}
+
+/// Client → shard assignment flavor for the sharded server phase.
+///
+/// Unlike [`SchedPolicy`] (pure scheduling, bit-identical results) the
+/// shard map decides *which clients share a server copy* between
+/// aggregations — that changes results, so the kind is part of
+/// `RunSpec::key` and of run labels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardMapKind {
+    /// Contiguous equal-count groups in canonical client-id order (the
+    /// historical assignment; a pure function of `(n_clients, k)`).
+    #[default]
+    Contiguous,
+    /// LPT bin packing on estimated per-client costs
+    /// (`ShardMap::balanced`): balances shard executor load under
+    /// heterogeneous clients. Requires `server_shards >= 2`.
+    Balanced,
+}
+
+impl ShardMapKind {
+    /// Short cache-key tag (the `-m` segment of `RunSpec::key`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            ShardMapKind::Contiguous => "cont",
+            ShardMapKind::Balanced => "bal",
+        }
+    }
+}
+
+impl std::fmt::Display for ShardMapKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ShardMapKind::Contiguous => "contiguous",
+            ShardMapKind::Balanced => "balanced",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl std::str::FromStr for ShardMapKind {
+    type Err = String;
+
+    /// `contiguous` / `cont`; `balanced` / `bal`.
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "contiguous" | "cont" => Ok(ShardMapKind::Contiguous),
+            "balanced" | "bal" => Ok(ShardMapKind::Balanced),
+            other => {
+                Err(format!("bad shard map {other:?} (expected contiguous | balanced)"))
+            }
         }
     }
 }
@@ -130,6 +185,16 @@ pub struct TrainConfig {
     /// Unlike `parallelism`, shard count **changes results** and is part
     /// of the experiment cache key.
     pub server_shards: usize,
+    /// Work-dealing policy of the parallel fan-out. Like `parallelism`
+    /// this is a wall-clock-only knob: results are bit-identical for
+    /// every policy (merged in canonical order), so it is excluded from
+    /// the experiment cache key.
+    pub sched: SchedPolicy,
+    /// Client → shard assignment for the sharded server phase.
+    /// `Balanced` regroups clients across shard copies by estimated
+    /// cost — that **changes results** (like `server_shards`, unlike
+    /// `sched`) and requires `server_shards >= 2`.
+    pub shard_map: ShardMapKind,
 }
 
 impl TrainConfig {
@@ -153,6 +218,8 @@ impl TrainConfig {
             track_grad_norms: false,
             parallelism: Parallelism::Sequential,
             server_shards: 1,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Contiguous,
         }
     }
 
@@ -183,6 +250,18 @@ impl TrainConfig {
     /// Builder: set the server shard count k.
     pub fn with_server_shards(mut self, server_shards: usize) -> Self {
         self.server_shards = server_shards;
+        self
+    }
+
+    /// Builder: set the fan-out dealing policy.
+    pub fn with_sched(mut self, sched: SchedPolicy) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    /// Builder: set the client → shard assignment flavor.
+    pub fn with_shard_map(mut self, shard_map: ShardMapKind) -> Self {
+        self.shard_map = shard_map;
         self
     }
 
@@ -228,6 +307,13 @@ impl TrainConfig {
                  --server-shards applies to the single-copy methods (FSL_OC / CSE_FSL)",
                 self.method
             ));
+        }
+        if self.shard_map == ShardMapKind::Balanced && self.server_shards < 2 {
+            return Err(
+                "--shard-map balanced requires --server-shards >= 2 \
+                 (it reassigns clients across shard copies)"
+                    .into(),
+            );
         }
         if self.lr0 <= 0.0 || self.lr_decay_rate <= 0.0 || self.lr_decay_rate > 1.0 {
             return Err("bad learning-rate schedule".into());
@@ -322,6 +408,33 @@ mod tests {
         assert_eq!(TrainConfig::new(Method::CseFsl).parallelism, Parallelism::Sequential);
         let c = TrainConfig::new(Method::CseFsl).with_parallelism(Parallelism::Threads(2));
         assert_eq!(c.parallelism, Parallelism::Threads(2));
+    }
+
+    #[test]
+    fn sched_and_shard_map_knobs() {
+        use std::str::FromStr;
+        // Defaults are the historical behavior.
+        let c = TrainConfig::new(Method::CseFsl);
+        assert_eq!(c.sched, SchedPolicy::RoundRobin);
+        assert_eq!(c.shard_map, ShardMapKind::Contiguous);
+        // Builders.
+        let c = c.with_sched(SchedPolicy::WorkStealing).with_shard_map(ShardMapKind::Balanced);
+        assert_eq!(c.sched, SchedPolicy::WorkStealing);
+        assert_eq!(c.shard_map, ShardMapKind::Balanced);
+        // Balanced needs a sharded server...
+        assert!(c.clone().with_server_shards(1).validate(5).is_err());
+        assert!(c.clone().with_server_shards(2).validate(5).is_ok());
+        // ...and any sched policy is valid anywhere (wall-clock only).
+        for p in SchedPolicy::ALL {
+            assert!(TrainConfig::new(Method::FslMc).with_sched(p).validate(5).is_ok());
+        }
+        // Parse / display / tag.
+        assert_eq!(ShardMapKind::from_str("balanced"), Ok(ShardMapKind::Balanced));
+        assert_eq!(ShardMapKind::from_str("cont"), Ok(ShardMapKind::Contiguous));
+        assert!(ShardMapKind::from_str("diagonal").is_err());
+        assert_eq!(ShardMapKind::Balanced.to_string(), "balanced");
+        assert_eq!(ShardMapKind::Balanced.tag(), "bal");
+        assert_eq!(ShardMapKind::default(), ShardMapKind::Contiguous);
     }
 
     #[test]

@@ -27,6 +27,18 @@
 //! streams, recording spans and wire bytes into worker-local
 //! [`Timeline`]/[`CommLedger`]s.
 //!
+//! *Which worker runs which client when* is decided by the pluggable
+//! [`SchedPolicy`] (`crate::sched`): round-robin (the historical
+//! dealing), cost-weighted LPT on per-client cost estimates, or
+//! work-stealing over a shared atomic-index queue. Cost estimates come
+//! from each client's persistent [`ClientProfile`] prior blended with
+//! an EWMA of the simulated spans it produced in earlier rounds
+//! ([`CostTracker`]); they steer dealing only and can never change
+//! results, so — like `Parallelism` — the policy is excluded from the
+//! experiment cache key.
+//!
+//! [`ClientProfile`]: crate::sim::netmodel::ClientProfile
+//!
 //! # The sharded server phase
 //!
 //! With `TrainConfig::server_shards = k` (single-copy methods only), the
@@ -51,8 +63,6 @@
 //!
 //! [`ShardMap`]: super::server::ShardMap
 
-use std::sync::mpsc;
-
 use crate::comm::accounting::{CommLedger, MsgKind, WireSizes};
 use crate::data::partition::Partition;
 use crate::data::Dataset;
@@ -62,15 +72,16 @@ use crate::model::aggregate::fedavg;
 use crate::model::init::init_flat;
 use crate::model::layout::Layout;
 use crate::runtime::{EngineError, SplitEngine};
+use crate::sched::{self, CostTracker, SchedPolicy};
 use crate::sim::netmodel::NetModel;
 use crate::sim::timeline::{SpanKind, Timeline};
 use crate::storage;
 use crate::util::prng::Rng;
 
 use super::client::ClientState;
-use super::config::{ArrivalOrder, Parallelism, TrainConfig};
+use super::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 
-use super::server::{ServerState, SmashedMsg, Topology};
+use super::server::{ServerState, ShardMap, SmashedMsg, Topology};
 
 /// Drives one full training run over an engine: owns the clients, the
 /// (possibly sharded) server, the wire ledger, and the timeline.
@@ -91,6 +102,9 @@ pub struct Trainer<'a, E: SplitEngine> {
     pub timeline: Timeline,
     wires: WireSizes,
     rng: Rng,
+    /// Per-client cost estimates steering the cost-aware dealing
+    /// policies (profile priors + EWMA of observed round spans).
+    cost_tracker: CostTracker,
     records: Vec<RoundRecord>,
     /// Clients that contributed training since the last aggregation.
     dirty: Vec<bool>,
@@ -118,15 +132,20 @@ pub struct TrainerSetup<'a> {
 }
 
 /// Run `work(position, item)` once per owned work item, fanned out
-/// according to `parallelism`, and return the results **in item order**
-/// (the canonical merge order of the deterministic parallel engine).
+/// according to `parallelism` and dealt to workers according to the
+/// scheduling `policy` (`sched::fanout`), and return the results **in
+/// item order** (the canonical merge order of the deterministic
+/// parallel engine).
 ///
-/// Work items are dealt round-robin to scoped worker threads. The first
-/// error in canonical order wins, matching sequential error reporting: a
-/// worker stops after its first error, so any unfilled slot can only
-/// follow an error at an earlier canonical position.
+/// `costs` are per-item estimates for the cost-aware policies (empty =
+/// uniform); they steer dealing only and can never change results. The
+/// first error in canonical order wins, matching sequential error
+/// reporting (see `sched::fanout` for the exact contract under work
+/// stealing).
 fn fanout_owned<I, T, F>(
     parallelism: Parallelism,
+    policy: SchedPolicy,
+    costs: &[f64],
     items: Vec<I>,
     work: F,
 ) -> Result<Vec<T>, EngineError>
@@ -136,67 +155,28 @@ where
     F: Fn(usize, I) -> Result<T, EngineError> + Sync,
 {
     let workers = parallelism.worker_count(items.len());
-    if workers <= 1 {
-        // Reference schedule: no thread machinery at all.
-        let mut out = Vec::with_capacity(items.len());
-        for (pos, item) in items.into_iter().enumerate() {
-            out.push(work(pos, item)?);
+    sched::fanout(policy, workers, items, costs, work).map_err(|f| match f {
+        sched::FanoutFailure::Work(e) => e,
+        // Defensive: unreachable with the shipped policies.
+        sched::FanoutFailure::Lost => {
+            EngineError::Parallel("worker dropped a result".into())
         }
-        return Ok(out);
-    }
-    let n = items.len();
-    let work = &work;
-    let mut slots: Vec<Option<Result<T, EngineError>>> = std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::channel::<(usize, Result<T, EngineError>)>();
-        let mut buckets: Vec<Vec<(usize, I)>> = (0..workers).map(|_| Vec::new()).collect();
-        for (pos, item) in items.into_iter().enumerate() {
-            buckets[pos % workers].push((pos, item));
-        }
-        for bucket in buckets {
-            let tx = tx.clone();
-            scope.spawn(move || {
-                for (pos, item) in bucket {
-                    let result = work(pos, item);
-                    let failed = result.is_err();
-                    if tx.send((pos, result)).is_err() || failed {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(tx);
-        let mut slots: Vec<Option<Result<T, EngineError>>> = (0..n).map(|_| None).collect();
-        for (pos, result) in rx {
-            slots[pos] = Some(result);
-        }
-        slots
-    });
-    let mut out = Vec::with_capacity(n);
-    for slot in slots.iter_mut() {
-        match slot.take() {
-            Some(Ok(v)) => out.push(v),
-            Some(Err(e)) => return Err(e),
-            // A worker only skips positions after reporting an error at
-            // an earlier canonical position, so this is unreachable; keep
-            // it as a defensive invariant rather than a panic.
-            None => {
-                return Err(EngineError::Parallel("worker dropped a result".into()))
-            }
-        }
-    }
-    Ok(out)
+    })
 }
 
 /// Run `work(position, client_id, client)` once per participant, fanned
-/// out according to `parallelism`, and return the results **in
-/// participant order** (ascending client id — the canonical merge order
-/// of the deterministic parallel engine).
+/// out according to `parallelism` / `policy`, and return the results
+/// **in participant order** (ascending client id — the canonical merge
+/// order of the deterministic parallel engine).
 ///
 /// `participants` must be sorted and duplicate-free (guaranteed by
-/// `select_participants`). Each worker owns disjoint `&mut ClientState`s,
+/// `select_participants`); `costs` holds one estimate per participant,
+/// in participant order. Each worker owns disjoint `&mut ClientState`s,
 /// so no client state is ever shared.
 fn fanout_clients<T, F>(
     parallelism: Parallelism,
+    policy: SchedPolicy,
+    costs: &[f64],
     clients: &mut [ClientState],
     participants: &[usize],
     work: F,
@@ -221,7 +201,7 @@ where
         }
         assert!(want.peek().is_none(), "participant id out of range");
     }
-    fanout_owned(parallelism, refs, |pos, c| work(pos, participants[pos], c))
+    fanout_owned(parallelism, policy, costs, refs, |pos, c| work(pos, participants[pos], c))
 }
 
 impl<'a, E: SplitEngine> Trainer<'a, E> {
@@ -271,15 +251,36 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             })
             .collect();
 
+        let wires =
+            WireSizes::new(engine.smashed_len(), engine.client_size(), engine.aux_size());
+        // Cost priors: predicted simulated seconds of one client round
+        // (h local batches + the smashed upload). They steer the
+        // cost-aware dealing policies and the balanced shard map and
+        // never touch results.
+        let payload = engine.batch() as u64 * (wires.smashed_per_sample + wires.label);
+        let costs: Vec<f64> = clients
+            .iter()
+            .map(|c| sched::profile_cost(&c.profile, cfg.h, payload))
+            .collect();
         let topology = if cfg.method.per_client_server_model() {
             Topology::PerClient
         } else {
             Topology::Sharded(cfg.server_shards)
         };
-        let server =
-            ServerState::new(xs0, n, topology, engine.client_size(), engine.aux_size());
-        let wires =
-            WireSizes::new(engine.smashed_len(), engine.client_size(), engine.aux_size());
+        let shard_map = match topology {
+            Topology::PerClient => ShardMap::contiguous(n, n.max(1)),
+            Topology::Sharded(k) => match cfg.shard_map {
+                ShardMapKind::Contiguous => ShardMap::contiguous(n, k),
+                ShardMapKind::Balanced => ShardMap::balanced(n, k, &costs),
+            },
+        };
+        let server = ServerState::with_map(
+            xs0,
+            topology,
+            shard_map,
+            engine.client_size(),
+            engine.aux_size(),
+        );
         Ok(Trainer {
             engine,
             cfg,
@@ -291,6 +292,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             timeline: Timeline::default(),
             wires,
             rng: root.split_str("trainer"),
+            cost_tracker: CostTracker::new(costs),
             records: Vec::new(),
             dirty: vec![false; n],
             label: setup.label,
@@ -341,6 +343,8 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             total_down_bytes: self.ledger.down_bytes(),
             sim_time: self.timeline.end_time(),
             server_idle_fraction: self.timeline.server_idle_fraction(),
+            critical_path: self.timeline.critical_path(self.server.lanes()),
+            lane_busy: self.timeline.lane_busy(self.server.lanes()),
             server_storage_params: storage::server_storage_params_sharded(
                 self.cfg.method,
                 self.clients.len(),
@@ -432,8 +436,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         // without mutating, so every worker sees exactly the state the
         // sequential loop would.
         let round_rng = self.rng.clone();
+        let costs: Vec<f64> =
+            participants.iter().map(|&i| self.cost_tracker.estimate(i)).collect();
         let outcomes = fanout_clients(
             self.cfg.parallelism,
+            self.cfg.sched,
+            &costs,
             &mut self.clients,
             participants,
             |_pos, i, c: &mut ClientState| {
@@ -489,7 +497,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg })
             },
         )?;
-        for o in outcomes {
+        for (pos, o) in outcomes.into_iter().enumerate() {
+            // Feed the measured span total (compute + upload, simulated
+            // seconds) back into the cost tracker — in canonical order,
+            // so the tracker state is as deterministic as the results.
+            let observed: f64 = o.timeline.spans.iter().map(|s| s.end - s.start).sum();
+            self.cost_tracker.observe(participants[pos], observed);
             train_losses.extend_from_slice(&o.losses);
             client_gnorms.extend_from_slice(&o.gnorms);
             self.timeline.append(o.timeline);
@@ -531,8 +544,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let label_bytes = self.label_bytes();
         let payload = smashed_bytes + label_bytes;
         let round_rng = self.rng.clone();
+        let costs: Vec<f64> =
+            participants.iter().map(|&i| self.cost_tracker.estimate(i)).collect();
         let outcomes = fanout_clients(
             self.cfg.parallelism,
+            self.cfg.sched,
+            &costs,
             &mut self.clients,
             participants,
             |_pos, i, c: &mut ClientState| {
@@ -561,7 +578,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             },
         )?;
         let mut pend: Vec<Pending> = Vec::with_capacity(outcomes.len());
-        for o in outcomes {
+        for (pos, o) in outcomes.into_iter().enumerate() {
+            // Only phase 1 fans out, so only its spans feed the tracker.
+            let observed: f64 = o.timeline.spans.iter().map(|s| s.end - s.start).sum();
+            self.cost_tracker.observe(participants[pos], observed);
             self.timeline.append(o.timeline);
             self.ledger.merge(&o.ledger);
             pend.push(o.pend);
@@ -606,7 +626,8 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 } else {
                     format!("fwd/bwd s{lane}")
                 };
-                self.timeline.record(SpanKind::ServerUpdate, None, start, done, label);
+                self.timeline
+                    .record_in_lane(SpanKind::ServerUpdate, None, lane, start, done, label);
 
                 let mut drng = self.rng.split(i as u64 ^ 0xA3);
                 let grad_bytes = self.smashed_bytes();
@@ -691,6 +712,11 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let engine = self.engine;
         let net_server = NetModel::edge_default().server_update_time;
         let shard_map = self.server.shard_map.clone();
+        // Lane cost = queued work on that executor (message count times
+        // the per-update cost) — exact, so even CostWeighted dealing is
+        // as balanced as the lane loads allow.
+        let lane_costs: Vec<f64> =
+            lane_msgs.iter().map(|m| m.len() as f64 * net_server).collect();
         let items: Vec<_> = lane_copies
             .into_iter()
             .zip(self.server.free_at.iter().copied())
@@ -699,6 +725,8 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             .collect();
         let outcomes = fanout_owned(
             self.cfg.parallelism,
+            self.cfg.sched,
+            &lane_costs,
             items,
             |lane, item: (usize, Vec<Vec<f32>>, f64, Vec<SmashedMsg>)| {
                 let (base, mut copies, mut free_at, msgs) = item;
@@ -727,7 +755,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     } else {
                         format!("update c{} s{lane}", m.client)
                     };
-                    timeline.record(SpanKind::ServerUpdate, None, start, done, label);
+                    timeline.record_in_lane(SpanKind::ServerUpdate, None, lane, start, done, label);
                 }
                 Ok(LaneOutcome { copies, free_at, updates, losses, gnorms, timeline })
             },

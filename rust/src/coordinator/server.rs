@@ -31,13 +31,16 @@ pub struct SmashedMsg {
     pub seed: i32,
 }
 
-/// Deterministic client → shard assignment: canonical client-id order,
-/// contiguous groups, sizes as equal as possible (the first
-/// `n mod k` shards hold one extra client).
+/// Deterministic client → shard assignment.
 ///
-/// The assignment is a pure function of `(n_clients, shards)` — never of
-/// arrival order or scheduling — which is what lets the sharded server
-/// phase keep the bit-determinism contract (see `coordinator/README.md`).
+/// Two constructors: [`ShardMap::contiguous`] (equal-count groups in
+/// canonical client-id order) and [`ShardMap::balanced`] (LPT bin
+/// packing on per-client cost estimates). Either way the assignment is
+/// a pure function of its inputs — never of arrival order or thread
+/// scheduling — which is what lets the sharded server phase keep the
+/// bit-determinism contract (see `coordinator/README.md`). Changing the
+/// *map* (like changing the shard count) legitimately changes results,
+/// which is why the map kind is part of `RunSpec::key`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardMap {
     shard_of: Vec<usize>,
@@ -67,6 +70,35 @@ impl ShardMap {
         ShardMap { shard_of, shards }
     }
 
+    /// Load-balanced client → shard assignment: LPT
+    /// (longest-processing-time) bin packing of the per-client cost
+    /// estimates over `shards` bins (`sched::lpt`) — heaviest client
+    /// first into the least-loaded shard, deterministic tie-breaks.
+    ///
+    /// Groups are generally **non-contiguous**, and which clients share
+    /// a copy changes the training trajectory — so the map kind joins
+    /// `RunSpec::key`, unlike the dealing policy. Non-finite or
+    /// non-positive costs are replaced by the mean positive cost
+    /// (`sched::sanitize_costs`), so every shard is guaranteed at least
+    /// one client whenever `shards <= n_clients`.
+    pub fn balanced(n_clients: usize, shards: usize, costs: &[f64]) -> Self {
+        assert!(shards >= 1, "at least one shard required");
+        assert!(
+            shards <= n_clients.max(1),
+            "more shards ({shards}) than clients ({n_clients})"
+        );
+        assert_eq!(costs.len(), n_clients, "one cost estimate per client");
+        let sane = crate::sched::sanitize_costs(costs);
+        let bins = crate::sched::lpt(&sane, shards);
+        let mut shard_of = vec![0usize; n_clients];
+        for (s, bin) in bins.iter().enumerate() {
+            for &c in bin {
+                shard_of[c] = s;
+            }
+        }
+        ShardMap { shard_of, shards }
+    }
+
     /// Number of shards.
     pub fn shards(&self) -> usize {
         self.shards
@@ -82,7 +114,9 @@ impl ShardMap {
         self.shard_of[client]
     }
 
-    /// Client ids of one shard, ascending (contiguous by construction).
+    /// Client ids of one shard, ascending (contiguous for
+    /// [`ShardMap::contiguous`]; generally scattered for
+    /// [`ShardMap::balanced`]).
     pub fn clients_of(&self, shard: usize) -> Vec<usize> {
         (0..self.shard_of.len()).filter(|&c| self.shard_of[c] == shard).collect()
     }
@@ -125,7 +159,8 @@ pub struct ServerState {
 
 impl ServerState {
     /// Build the server from the initial server-side model `xs`, the
-    /// client count, and the copy/executor [`Topology`].
+    /// client count, and the copy/executor [`Topology`], with the
+    /// default contiguous [`ShardMap`].
     pub fn new(
         xs: Vec<f32>,
         n_clients: usize,
@@ -133,9 +168,37 @@ impl ServerState {
         client_size: usize,
         aux_size: usize,
     ) -> Self {
-        let (shard_map, lanes) = match topology {
-            Topology::PerClient => (ShardMap::contiguous(n_clients, n_clients.max(1)), 1),
-            Topology::Sharded(k) => (ShardMap::contiguous(n_clients, k), k),
+        let shard_map = match topology {
+            Topology::PerClient => ShardMap::contiguous(n_clients, n_clients.max(1)),
+            Topology::Sharded(k) => ShardMap::contiguous(n_clients, k),
+        };
+        Self::with_map(xs, topology, shard_map, client_size, aux_size)
+    }
+
+    /// Build the server with an explicit client → copy [`ShardMap`]
+    /// (contiguous or balanced). The map's shard count must match the
+    /// topology's copy count: `k` for [`Topology::Sharded`], one copy
+    /// per client for [`Topology::PerClient`].
+    pub fn with_map(
+        xs: Vec<f32>,
+        topology: Topology,
+        shard_map: ShardMap,
+        client_size: usize,
+        aux_size: usize,
+    ) -> Self {
+        let lanes = match topology {
+            Topology::PerClient => {
+                assert_eq!(
+                    shard_map.shards(),
+                    shard_map.n_clients().max(1),
+                    "per-client topology needs the identity shard map"
+                );
+                1
+            }
+            Topology::Sharded(k) => {
+                assert_eq!(shard_map.shards(), k, "shard map does not match topology");
+                k
+            }
         };
         let copies = shard_map.shards();
         ServerState {
@@ -283,6 +346,67 @@ mod tests {
     #[should_panic(expected = "more shards")]
     fn shard_map_rejects_oversharding() {
         ShardMap::contiguous(3, 4);
+    }
+
+    #[test]
+    fn balanced_map_spreads_heavy_clients() {
+        // Contiguous over 5 clients / 2 shards is {0,1,2} | {3,4}; with
+        // clients 0 and 4 heavy, LPT must split the heavy pair instead.
+        let costs = [10.0, 1.0, 1.0, 1.0, 9.0];
+        let bal = ShardMap::balanced(5, 2, &costs);
+        assert_eq!(bal.shards(), 2);
+        assert_eq!(bal.n_clients(), 5);
+        assert_ne!(bal.shard_of(0), bal.shard_of(4), "heavy clients must not share a shard");
+        assert_ne!(bal, ShardMap::contiguous(5, 2));
+        // The partition is a permutation of the clients: every client in
+        // exactly one shard, every shard non-empty.
+        let mut all: Vec<usize> = (0..2).flat_map(|s| bal.clients_of(s)).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        assert!((0..2).all(|s| !bal.clients_of(s).is_empty()));
+        // Max shard load respects the greedy LPT bound.
+        let load = |s: usize| bal.clients_of(s).iter().map(|&c| costs[c]).sum::<f64>();
+        let max_load = (0..2).map(load).fold(0.0f64, f64::max);
+        assert!(max_load <= crate::sched::greedy_bound(&costs, 2) + 1e-12, "{max_load}");
+    }
+
+    #[test]
+    fn balanced_map_degenerate_inputs() {
+        // k = 1 collapses to the single shared copy, like contiguous.
+        let one = ShardMap::balanced(4, 1, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(one, ShardMap::contiguous(4, 1));
+        // All-zero costs sanitize to uniform: every shard still serves
+        // at least one client.
+        let z = ShardMap::balanced(4, 2, &[0.0; 4]);
+        assert!((0..2).all(|s| !z.clients_of(s).is_empty()));
+        // Empty map.
+        let empty = ShardMap::balanced(0, 1, &[]);
+        assert_eq!(empty.n_clients(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "one cost estimate per client")]
+    fn balanced_map_rejects_cost_mismatch() {
+        ShardMap::balanced(3, 2, &[1.0]);
+    }
+
+    #[test]
+    fn with_map_routes_through_custom_assignment() {
+        let map = ShardMap::balanced(5, 2, &[10.0, 1.0, 1.0, 1.0, 9.0]);
+        let s = ServerState::with_map(vec![0.0; 4], Topology::Sharded(2), map.clone(), 2, 2);
+        assert_eq!(s.lanes(), 2);
+        assert_eq!(s.copies.len(), 2);
+        for c in 0..5 {
+            assert_eq!(s.copy_for(c), map.shard_of(c));
+            assert_eq!(s.lane_for(c), map.shard_of(c));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match topology")]
+    fn with_map_rejects_mismatched_shards() {
+        let map = ShardMap::contiguous(4, 2);
+        ServerState::with_map(vec![0.0; 4], Topology::Sharded(3), map, 2, 2);
     }
 
     #[test]

@@ -10,8 +10,9 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
+use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 use crate::coordinator::methods::Method;
+use crate::sched::SchedPolicy;
 use crate::coordinator::round::{Trainer, TrainerSetup};
 use crate::data::partition::{by_writer, dirichlet, equalize, iid, Partition};
 use crate::data::synthetic::{train_test, SyntheticSpec};
@@ -191,6 +192,15 @@ pub struct RunSpec {
     /// client groups between aggregations — so by the Harness contract
     /// it MUST be part of the cache key.
     pub server_shards: usize,
+    /// Fan-out dealing policy. Deliberately NOT part of the cache key:
+    /// like `parallelism`, every policy produces bit-identical results
+    /// (the determinism contract), so all policies share one cached
+    /// `RunRecord`.
+    pub sched: SchedPolicy,
+    /// Client → shard assignment flavor. `Balanced` regroups clients
+    /// across shard copies, which **changes results** — so, like
+    /// `server_shards`, it is part of the cache key and of run labels.
+    pub shard_map: ShardMapKind,
 }
 
 impl RunSpec {
@@ -204,7 +214,7 @@ impl RunSpec {
             ArrivalOrder::Shuffled => "shuf",
         };
         format!(
-            "{}-{}-{}-h{}-n{}-p{}-{}-{}-lr{}-r{}-d{}-t{}-k{}-s{}",
+            "{}-{}-{}-h{}-n{}-p{}-{}-{}-lr{}-r{}-d{}-t{}-k{}-m{}-s{}",
             self.dataset,
             self.aux,
             self.method,
@@ -218,6 +228,7 @@ impl RunSpec {
             self.workload.train_per_client,
             self.workload.test,
             self.server_shards,
+            self.shard_map.tag(),
             self.seed
         )
     }
@@ -232,6 +243,9 @@ impl RunSpec {
         };
         if self.server_shards > 1 {
             l.push_str(&format!(" k={}", self.server_shards));
+        }
+        if self.shard_map == ShardMapKind::Balanced {
+            l.push_str(" bal");
         }
         l
     }
@@ -317,7 +331,6 @@ impl Harness {
                 // Train/test share the glyph alphabet; test uses unseen
                 // writers (writer split) or fresh styles (IID).
                 let test_writers = (w.test / spw).max(1);
-                let _ = &test_writers;
                 let (train, test) = match spec.dist {
                     Dist::NonIidWriter => femnist::train_test(&fs, test_writers, data_seed),
                     _ => femnist::train_test_iid(&fs, w.test, data_seed),
@@ -369,6 +382,8 @@ impl Harness {
             track_grad_norms: true,
             parallelism: spec.parallelism,
             server_shards: spec.server_shards,
+            sched: spec.sched,
+            shard_map: spec.shard_map,
         };
         let setup = TrainerSetup {
             train: &train,
@@ -431,6 +446,11 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ("total_down_bytes", Json::num(r.total_down_bytes as f64)),
         ("sim_time", Json::num(r.sim_time)),
         ("server_idle_fraction", Json::num(r.server_idle_fraction)),
+        ("critical_path", Json::num(r.critical_path)),
+        (
+            "lane_busy",
+            Json::Arr(r.lane_busy.iter().map(|&b| Json::num(b)).collect()),
+        ),
         ("server_storage_params", Json::num(r.server_storage_params as f64)),
         (
             "server_updates_per_shard",
@@ -474,6 +494,23 @@ pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
             .map_err(err)?
             .as_f64()
             .map_err(err)?,
+        // Absent in pre-scheduling cache entries; default to "unknown"
+        // (but a present-yet-malformed value is an error, like every
+        // other field, so corrupt cache entries fall through to a re-run).
+        critical_path: match j.opt("critical_path") {
+            Some(v) => v.as_f64().map_err(err)?,
+            None => 0.0,
+        },
+        lane_busy: match j.opt("lane_busy") {
+            Some(v) => v
+                .as_arr()
+                .map_err(err)?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Result<_, _>>()
+                .map_err(err)?,
+            None => Vec::new(),
+        },
         server_storage_params: j
             .get("server_storage_params")
             .map_err(err)?
@@ -562,6 +599,8 @@ mod tests {
             workload: cifar_workload(Scale::Quick),
             parallelism: Parallelism::Sequential,
             server_shards: 1,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Contiguous,
         };
         let mut other = base.clone();
         other.h = 10;
@@ -571,12 +610,27 @@ mod tests {
         let mut other = base.clone();
         other.parallelism = Parallelism::Threads(4);
         assert_eq!(base.key(), other.key());
+        // Neither may the dealing policy (same determinism contract).
+        for sched in SchedPolicy::ALL {
+            let mut other = base.clone();
+            other.sched = sched;
+            assert_eq!(base.key(), other.key(), "{sched} must share the cache");
+        }
         // Shard count MUST change the key: sharding changes results.
         let mut other = base.clone();
         other.server_shards = 2;
         assert_ne!(base.key(), other.key());
         assert!(other.label().contains("k=2"));
         assert!(!base.label().contains("k="));
+        // So must the shard-map flavor (different shard cohorts).
+        let mut balanced = base.clone();
+        balanced.server_shards = 2;
+        balanced.shard_map = ShardMapKind::Balanced;
+        assert_ne!(other.key(), balanced.key());
+        assert!(balanced.key().contains("-mbal-"), "{}", balanced.key());
+        assert!(other.key().contains("-mcont-"), "{}", other.key());
+        assert!(balanced.label().contains("bal"));
+        assert!(!other.label().contains("bal"));
         let mut other = base.clone();
         other.dist = Dist::NonIidDirichlet;
         assert_ne!(base.key(), other.key());
@@ -606,6 +660,8 @@ mod tests {
             total_down_bytes: 20,
             sim_time: 0.25,
             server_idle_fraction: 0.9,
+            critical_path: 0.2,
+            lane_busy: vec![0.1, 0.2],
             server_storage_params: 123,
             server_updates_per_shard: vec![4, 6],
         };
@@ -616,6 +672,16 @@ mod tests {
         assert_eq!(rt.rounds[0].client_grad_norm, None);
         assert_eq!(rt.server_storage_params, 123);
         assert_eq!(rt.server_updates_per_shard, vec![4, 6]);
+        assert_eq!(rt.critical_path, 0.2);
+        assert_eq!(rt.lane_busy, vec![0.1, 0.2]);
+        // Pre-scheduling cache entries (no fields) still parse.
+        let legacy = run_to_json(&rec)
+            .pretty()
+            .replace("\"critical_path\"", "\"legacy_cp\"")
+            .replace("\"lane_busy\"", "\"legacy_lb\"");
+        let rt = run_from_json(&legacy).unwrap();
+        assert_eq!(rt.critical_path, 0.0);
+        assert!(rt.lane_busy.is_empty());
         // Pre-shard cache entries (no field) still parse.
         let legacy = run_to_json(&rec).pretty().replace(
             "\"server_updates_per_shard\"",
@@ -646,6 +712,8 @@ mod tests {
             total_down_bytes: 0,
             sim_time: 0.0,
             server_idle_fraction: 0.0,
+            critical_path: 0.0,
+            lane_busy: Vec::new(),
             server_storage_params: 0,
             server_updates_per_shard: Vec::new(),
         };

@@ -6,9 +6,10 @@
 //! data — DESIGN.md §Substitutions); the reproduction targets are the
 //! paper's *orderings and trends*, restated in each driver's doc.
 
-use crate::coordinator::config::{ArrivalOrder, Parallelism};
+use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
 use crate::coordinator::methods::Method;
 use crate::metrics::recorder::RunRecord;
+use crate::sched::SchedPolicy;
 use crate::util::csvio::Csv;
 
 use super::common::{
@@ -28,10 +29,13 @@ fn base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
         lr0: if dataset == "cifar" { 0.01 } else { 0.05 },
         seed: 1,
         workload: w,
-        // Figure sweeps default to the full-machine fan-out; results are
-        // bit-identical to Sequential (coordinator/README.md).
+        // Figure sweeps default to the full-machine fan-out with
+        // work-stealing dealing; results are bit-identical to Sequential
+        // round-robin (coordinator/README.md), only wall-clock changes.
         parallelism: Parallelism::auto(),
         server_shards: 1,
+        sched: SchedPolicy::WorkStealing,
+        shard_map: ShardMapKind::Contiguous,
     }
 }
 
@@ -306,6 +310,80 @@ pub fn fig9(harness: &mut Harness, scale: Scale) -> Result<String, String> {
     }
     let refs: Vec<&RunRecord> = runs.iter().collect();
     write_series_csv(harness, "fig9_femnist", &refs);
+    Ok(out)
+}
+
+/// ROADMAP figure (no paper counterpart): accuracy vs server shard
+/// count k — the **staleness cost of sharding** that completes the
+/// storage/staleness/throughput story. k = 1 is the paper's shared
+/// copy (minimum storage, one serialized event loop); growing k buys
+/// executor throughput at k·|w_s| storage while shard trajectories
+/// diverge between aggregations (staleness), which is what the
+/// accuracy column measures. The contiguous and balanced shard maps
+/// run side by side at every k > 1, so the figure also shows what
+/// load-balanced assignment does to the same trade-off.
+pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, String> {
+    let w = cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale });
+    let n_clients = 8usize;
+    let h = match scale {
+        Scale::Quick => 2usize,
+        _ => 5,
+    };
+    let mut specs = Vec::new();
+    for &k in &[1usize, 2, 4, 8] {
+        let base = RunSpec {
+            h,
+            n_clients,
+            server_shards: k,
+            shard_map: ShardMapKind::Contiguous,
+            ..base_spec("cifar", "cnn27", w)
+        };
+        specs.push(base.clone());
+        if k > 1 {
+            specs.push(RunSpec { shard_map: ShardMapKind::Balanced, ..base });
+        }
+    }
+    let mut out = String::from(
+        "== Accuracy vs server shards k (staleness cost of sharding) ==\n",
+    );
+    out.push_str(&format!(
+        "{:<16} {:>10} {:>12} {:>12} {:>10}\n",
+        "series", "final_acc", "storage_Mp", "sim_time_s", "sched_eff"
+    ));
+    let mut csv = Csv::new(&[
+        "series",
+        "k",
+        "shard_map",
+        "final_accuracy",
+        "server_storage_params",
+        "sim_time",
+        "sched_efficiency",
+    ]);
+    for spec in &specs {
+        let rec = harness.run_cached(spec)?;
+        out.push_str(&format!(
+            "{:<16} {:>9.1}% {:>12.3} {:>12.2} {:>10.2}\n",
+            rec.label,
+            rec.final_accuracy * 100.0,
+            rec.server_storage_params as f64 / 1e6,
+            rec.sim_time,
+            rec.sched_efficiency(),
+        ));
+        csv.row(&[
+            rec.label.clone(),
+            spec.server_shards.to_string(),
+            spec.shard_map.to_string(),
+            format!("{:.4}", rec.final_accuracy),
+            rec.server_storage_params.to_string(),
+            format!("{:.4}", rec.sim_time),
+            format!("{:.4}", rec.sched_efficiency()),
+        ]);
+    }
+    out.push_str(
+        "(k=1 = paper's shared copy; accuracy drift at larger k is the staleness cost,\n\
+         \x20storage grows as k·|w_s|, sim time falls as lanes parallelize arrivals)\n",
+    );
+    let _ = csv.write_to(&harness.out_dir.join("fig_staleness.csv"));
     Ok(out)
 }
 

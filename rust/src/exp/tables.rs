@@ -1,8 +1,9 @@
 //! Drivers for the paper's tables (II, III, IV, V).
 
 use crate::comm::accounting::{table2, WireSizes};
-use crate::coordinator::config::{ArrivalOrder, Parallelism};
+use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
 use crate::coordinator::methods::Method;
+use crate::sched::SchedPolicy;
 use crate::storage::{server_storage_m, ModelSizes};
 
 use super::common::{cifar_workload, femnist_workload, Dist, Harness, RunSpec, Scale};
@@ -176,5 +177,7 @@ fn fig_base(dataset: &str, aux: &str, w: super::common::Workload) -> RunSpec {
         workload: w,
         parallelism: Parallelism::auto(),
         server_shards: 1,
+        sched: SchedPolicy::WorkStealing,
+        shard_map: ShardMapKind::Contiguous,
     }
 }

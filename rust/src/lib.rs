@@ -15,6 +15,10 @@
 //!   engine.
 //! * [`runtime`] — the `SplitEngine` compute interface, its PJRT and
 //!   mock implementations, and the AOT artifact manifest.
+//! * [`sched`] — cost-aware scheduling for the parallel engine: dealing
+//!   policies (round-robin / cost-weighted / work-stealing), the LPT
+//!   bin packer behind the load-balanced shard map, and per-client cost
+//!   estimation.
 //! * [`comm`] / [`storage`] — measured wire ledger, Table II closed
 //!   forms, and server-storage accounting.
 //! * [`sim`] — deterministic clock, network/heterogeneity models, and
@@ -39,6 +43,7 @@ pub mod exp;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod sched;
 pub mod storage;
 pub mod sim;
 pub mod util;

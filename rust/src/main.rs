@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   run      one training run (any method/dataset/aux/h), prints the
 //!            round table and summary
-//!   figure   regenerate a paper figure (3|4|5|6|7|8|9|all)
+//!   figure   regenerate a paper figure (3|4|5|6|7|8|9|k|all; `k` is the
+//!            repo's accuracy-vs-shards staleness figure)
 //!   table    regenerate a paper table (2|3|4|5|all)
 //!   inspect  show the AOT artifact manifest
 //!
@@ -73,6 +74,18 @@ fn cmd_run(argv: &[String]) -> i32 {
             "server shard count k (OC/CSE only): k copies + k event loops, \
              cross-shard FedAvg every aggregation; changes results (cached per k)",
         )
+        .opt(
+            "sched",
+            "rr",
+            "fan-out dealing policy: rr | cost | steal \
+             (bit-identical results for every policy; wall-clock only)",
+        )
+        .opt(
+            "shard-map",
+            "contiguous",
+            "client -> shard assignment: contiguous | balanced \
+             (balanced needs --server-shards >= 2 and changes results, cached per map)",
+        )
         .flag("shuffled-arrivals", "randomize server consumption order (Fig. 6)");
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -120,6 +133,8 @@ fn cmd_run(argv: &[String]) -> i32 {
                 .parse_as::<Parallelism>("parallelism")
                 .map_err(|e| e.to_string())?,
             server_shards: args.parse_as("server-shards").map_err(|e| e.to_string())?,
+            sched: args.parse_as("sched").map_err(|e| e.to_string())?,
+            shard_map: args.parse_as("shard-map").map_err(|e| e.to_string())?,
         };
         let mut harness = Harness::new(args.get("out").unwrap())?;
         let rec = harness.run_cached(&spec)?;
@@ -142,12 +157,21 @@ fn cmd_run(argv: &[String]) -> i32 {
             rec.sim_time,
             rec.server_idle_fraction * 100.0,
         );
+        println!(
+            "sched: critical path {:.2}s / makespan {:.2}s -> efficiency {:.0}%",
+            rec.critical_path,
+            rec.sim_time,
+            rec.sched_efficiency() * 100.0,
+        );
         if spec.server_shards > 1 {
             println!(
                 "server updates per shard: {:?} (total {})",
                 rec.server_updates_per_shard,
                 rec.server_updates(),
             );
+            let lanes: Vec<String> =
+                rec.lane_busy.iter().map(|b| format!("{b:.2}")).collect();
+            println!("lane busy (s): [{}]", lanes.join(", "));
         }
         let csv = harness.out_dir.join(format!("run_{}.csv", rec.label.replace([' ', '='], "_")));
         rec.write_csv(&csv).map_err(|e| e.to_string())?;
@@ -174,7 +198,7 @@ fn cmd_figure(argv: &[String]) -> i32 {
         let (id, scale, out) = figure_table_args(argv, "figure")?;
         let mut harness = Harness::new(&out)?;
         let ids: Vec<&str> = if id == "all" {
-            vec!["3", "4", "5", "6", "7", "8", "9"]
+            vec!["3", "4", "5", "6", "7", "8", "9", "k"]
         } else {
             vec![id.as_str()]
         };
@@ -187,7 +211,8 @@ fn cmd_figure(argv: &[String]) -> i32 {
                 "7" => figures::fig7(&mut harness, scale)?,
                 "8" => figures::fig8(&mut harness, scale)?,
                 "9" => figures::fig9(&mut harness, scale)?,
-                other => return Err(format!("no figure {other} (have 3-9)")),
+                "k" | "staleness" => figures::fig_staleness(&mut harness, scale)?,
+                other => return Err(format!("no figure {other} (have 3-9, k)")),
             };
             println!("{report}");
         }

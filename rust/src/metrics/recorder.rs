@@ -53,6 +53,14 @@ pub struct RunRecord {
     pub sim_time: f64,
     /// Fraction of simulated time the server spent idle.
     pub server_idle_fraction: f64,
+    /// Critical-path lower bound on the simulated makespan: the busiest
+    /// single actor (client or server executor lane). `sim_time` can
+    /// never undercut it; their ratio is [`RunRecord::sched_efficiency`].
+    pub critical_path: f64,
+    /// Busy seconds per server executor lane, in canonical lane order
+    /// (length = executor count: `k` for the sharded single-copy
+    /// methods, 1 otherwise).
+    pub lane_busy: Vec<f64>,
     /// Table-V-style server-resident parameter count (copies + buffers).
     pub server_storage_params: usize,
     /// Event-triggered updates applied to each server copy, in canonical
@@ -70,6 +78,18 @@ impl RunRecord {
     /// Total event-triggered server updates (sum over shards).
     pub fn server_updates(&self) -> u64 {
         self.server_updates_per_shard.iter().sum()
+    }
+
+    /// Scheduling efficiency of the simulated schedule: critical path
+    /// over makespan, in (0, 1]. 1.0 means the run is as short as its
+    /// busiest actor allows; small values mean idle executors or
+    /// straggler gaps dominate the wall clock.
+    pub fn sched_efficiency(&self) -> f64 {
+        if self.sim_time > 0.0 {
+            (self.critical_path / self.sim_time).clamp(0.0, 1.0)
+        } else {
+            0.0
+        }
     }
 
     /// Accuracy series as (round, acc) points.
@@ -135,6 +155,12 @@ impl RunRecord {
             ("total_gb", Json::num(self.total_gb())),
             ("sim_time", Json::num(self.sim_time)),
             ("server_idle_fraction", Json::num(self.server_idle_fraction)),
+            ("critical_path", Json::num(self.critical_path)),
+            ("sched_efficiency", Json::num(self.sched_efficiency())),
+            (
+                "lane_busy",
+                Json::Arr(self.lane_busy.iter().map(|&b| Json::num(b)).collect()),
+            ),
             ("server_storage_params", Json::num(self.server_storage_params as f64)),
             (
                 "server_updates_per_shard",
@@ -187,6 +213,8 @@ mod tests {
             total_down_bytes: 100,
             sim_time: 1.0,
             server_idle_fraction: 0.25,
+            critical_path: 0.75,
+            lane_busy: vec![0.5, 0.75],
             server_storage_params: 1_000,
             server_updates_per_shard: vec![3, 5],
         }
@@ -218,5 +246,21 @@ mod tests {
         let shards = j.get("server_updates_per_shard").unwrap().as_arr().unwrap();
         assert_eq!(shards.len(), 2);
         assert_eq!(rec().server_updates(), 8);
+        assert_eq!(j.get("critical_path").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(j.get("sched_efficiency").unwrap().as_f64().unwrap(), 0.75);
+        assert_eq!(j.get("lane_busy").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn sched_efficiency_bounds() {
+        let r = rec();
+        assert!((r.sched_efficiency() - 0.75).abs() < 1e-12);
+        let mut degenerate = rec();
+        degenerate.sim_time = 0.0;
+        assert_eq!(degenerate.sched_efficiency(), 0.0);
+        // A (numerically) oversized critical path clamps to 1.
+        let mut over = rec();
+        over.critical_path = 2.0;
+        assert_eq!(over.sched_efficiency(), 1.0);
     }
 }

@@ -1,0 +1,111 @@
+//! Per-client cost estimates feeding the cost-aware policies.
+//!
+//! Estimates only steer *dealing*; they never touch results (the
+//! bit-determinism contract), so they can be cheap and approximate. The
+//! prior is a closed form over the client's persistent
+//! [`ClientProfile`]; once a client has actually run, an exponentially
+//! weighted moving average of its measured per-round span total takes
+//! over ([`CostTracker`]) — "last-round timeline spans" in the
+//! scheduling docs.
+
+use crate::sim::netmodel::ClientProfile;
+
+/// EWMA weight of the newest observation (0.5 reacts within a couple of
+/// rounds while smoothing per-round jitter).
+const EWMA_ALPHA: f64 = 0.5;
+
+/// Predicted simulated cost (seconds) of one client round from the
+/// persistent profile alone: `h` local batches of compute plus one
+/// smashed+label upload of `payload_bytes`. Deliberately jitter-free —
+/// the scheduler wants the expectation, not a sample (and must not
+/// consume any random stream).
+pub fn profile_cost(profile: &ClientProfile, h: usize, payload_bytes: u64) -> f64 {
+    profile.batch_time * h.max(1) as f64
+        + profile.rtt
+        + payload_bytes as f64 / profile.up_bps
+}
+
+/// Exponentially weighted moving average of measured per-client round
+/// costs, seeded from the [`profile_cost`] priors.
+///
+/// The trainer calls [`CostTracker::observe`] with each participant's
+/// measured span total after every round (in canonical merge order, so
+/// the tracker state is as deterministic as everything else), and
+/// [`CostTracker::estimate`] when dealing the next round's work.
+#[derive(Clone, Debug)]
+pub struct CostTracker {
+    est: Vec<f64>,
+}
+
+impl CostTracker {
+    /// Start from per-client priors (index = client id).
+    pub fn new(priors: Vec<f64>) -> Self {
+        CostTracker { est: priors }
+    }
+
+    /// Number of tracked clients.
+    pub fn len(&self) -> usize {
+        self.est.len()
+    }
+
+    /// Whether the tracker tracks no clients.
+    pub fn is_empty(&self) -> bool {
+        self.est.is_empty()
+    }
+
+    /// Current cost estimate for `client`.
+    pub fn estimate(&self, client: usize) -> f64 {
+        self.est[client]
+    }
+
+    /// Fold one measured round cost into `client`'s estimate. Non-finite
+    /// or negative measurements are ignored (a skipped round is not
+    /// evidence the client got faster).
+    pub fn observe(&mut self, client: usize, measured: f64) {
+        if measured.is_finite() && measured >= 0.0 {
+            let e = &mut self.est[client];
+            *e = (1.0 - EWMA_ALPHA) * *e + EWMA_ALPHA * measured;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::netmodel::NetModel;
+    use crate::util::prng::Rng;
+
+    fn profile() -> ClientProfile {
+        NetModel::homogeneous().sample_profile(&mut Rng::new(1))
+    }
+
+    #[test]
+    fn profile_cost_closed_form() {
+        let p = profile();
+        let c = profile_cost(&p, 3, 1_000_000);
+        let expect = p.batch_time * 3.0 + p.rtt + 1_000_000.0 / p.up_bps;
+        assert!((c - expect).abs() < 1e-12, "{c} vs {expect}");
+        // h = 0 is treated as one batch (a participant always does work).
+        assert_eq!(profile_cost(&p, 0, 0), profile_cost(&p, 1, 0));
+        // More batches cost more; bigger payloads cost more.
+        assert!(profile_cost(&p, 5, 0) > profile_cost(&p, 1, 0));
+        assert!(profile_cost(&p, 1, 1 << 20) > profile_cost(&p, 1, 1 << 10));
+    }
+
+    #[test]
+    fn tracker_converges_toward_observations() {
+        let mut t = CostTracker::new(vec![1.0, 10.0]);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        for _ in 0..16 {
+            t.observe(0, 4.0);
+        }
+        assert!((t.estimate(0) - 4.0).abs() < 1e-3, "{}", t.estimate(0));
+        // Untouched clients keep their prior.
+        assert_eq!(t.estimate(1), 10.0);
+        // Degenerate observations are ignored.
+        t.observe(1, f64::NAN);
+        t.observe(1, -3.0);
+        assert_eq!(t.estimate(1), 10.0);
+    }
+}

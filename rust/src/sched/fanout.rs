@@ -1,0 +1,314 @@
+//! The policy-driven fan-out executor.
+//!
+//! One function, [`fanout`], runs `work(position, item)` once per item
+//! over scoped worker threads and returns the results **in item order**
+//! — the canonical merge order of the deterministic parallel engine.
+//! The [`SchedPolicy`] only decides which worker runs which item when;
+//! nothing about the dealing can leak into the results because every
+//! result lands in its position-indexed slot and the merge walks slots
+//! in canonical order.
+//!
+//! Error contract: a worker stops taking new work after its first
+//! error; the merge reports the error at the smallest canonical
+//! position among the items actually attempted. With the static
+//! policies every earlier-position item in the failing worker's bucket
+//! was attempted first, so this is exactly sequential error reporting;
+//! under [`SchedPolicy::WorkStealing`] the attempted set can depend on
+//! timing when *several* items fail, but some failing item is always
+//! reported and the caller discards the run either way.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use super::policy::{lpt, sanitize_costs, SchedPolicy};
+
+/// Why a fan-out did not return a full result set.
+#[derive(Debug)]
+pub enum FanoutFailure<E> {
+    /// The work closure failed; this is the error at the smallest
+    /// canonical position among the attempted items.
+    Work(E),
+    /// A worker dropped a result without reporting an error. Defensive:
+    /// unreachable with the shipped policies.
+    Lost,
+}
+
+/// Run `work(position, item)` once per item, dealt to (at most)
+/// `workers` scoped threads according to `policy`, and return the
+/// results in item order.
+///
+/// `costs` are per-item cost estimates (same length as `items`, or
+/// empty for uniform). Only the cost-aware policies read them, and only
+/// to steer dealing — any estimates, even wildly wrong ones, yield the
+/// same results. `workers <= 1` runs the reference sequential loop with
+/// no thread machinery at all.
+pub fn fanout<I, T, E, F>(
+    policy: SchedPolicy,
+    workers: usize,
+    items: Vec<I>,
+    costs: &[f64],
+    work: F,
+) -> Result<Vec<T>, FanoutFailure<E>>
+where
+    I: Send,
+    T: Send,
+    E: Send,
+    F: Fn(usize, I) -> Result<T, E> + Sync,
+{
+    let n = items.len();
+    assert!(
+        costs.is_empty() || costs.len() == n,
+        "cost vector length {} != item count {n}",
+        costs.len()
+    );
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        let mut out = Vec::with_capacity(n);
+        for (pos, item) in items.into_iter().enumerate() {
+            match work(pos, item) {
+                Ok(v) => out.push(v),
+                Err(e) => return Err(FanoutFailure::Work(e)),
+            }
+        }
+        return Ok(out);
+    }
+    let slots = match policy {
+        SchedPolicy::WorkStealing => run_stealing(workers, items, costs, &work),
+        SchedPolicy::RoundRobin | SchedPolicy::CostWeighted => {
+            run_static(policy, workers, items, costs, &work)
+        }
+    };
+    merge(slots)
+}
+
+/// Positions each worker owns under a static policy, each bucket
+/// ascending (workers process their bucket in canonical order, which is
+/// what makes the error contract sequential-exact for these policies).
+fn static_buckets(policy: SchedPolicy, workers: usize, costs: &[f64], n: usize) -> Vec<Vec<usize>> {
+    match policy {
+        SchedPolicy::RoundRobin => {
+            let mut buckets: Vec<Vec<usize>> = (0..workers).map(|_| Vec::new()).collect();
+            for pos in 0..n {
+                buckets[pos % workers].push(pos);
+            }
+            buckets
+        }
+        SchedPolicy::CostWeighted => {
+            let c = if costs.is_empty() { vec![1.0; n] } else { sanitize_costs(costs) };
+            lpt(&c, workers)
+        }
+        SchedPolicy::WorkStealing => unreachable!("work stealing has no static buckets"),
+    }
+}
+
+fn run_static<I, T, E, F>(
+    policy: SchedPolicy,
+    workers: usize,
+    items: Vec<I>,
+    costs: &[f64],
+    work: &F,
+) -> Vec<Option<Result<T, E>>>
+where
+    I: Send,
+    T: Send,
+    E: Send,
+    F: Fn(usize, I) -> Result<T, E> + Sync,
+{
+    let n = items.len();
+    let dealing = static_buckets(policy, workers, costs, n);
+    // Move each item into the bucket that owns its position.
+    let mut cells: Vec<Option<I>> = items.into_iter().map(Some).collect();
+    let mut buckets: Vec<Vec<(usize, I)>> = Vec::with_capacity(dealing.len());
+    for positions in dealing {
+        let mut bucket = Vec::with_capacity(positions.len());
+        for pos in positions {
+            bucket.push((pos, cells[pos].take().expect("position dealt twice")));
+        }
+        buckets.push(bucket);
+    }
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, E>)>();
+        for bucket in buckets {
+            let tx = tx.clone();
+            scope.spawn(move || {
+                for (pos, item) in bucket {
+                    let result = work(pos, item);
+                    let failed = result.is_err();
+                    if tx.send((pos, result)).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<T, E>>> = (0..n).map(|_| None).collect();
+        for (pos, result) in rx {
+            slots[pos] = Some(result);
+        }
+        slots
+    })
+}
+
+fn run_stealing<I, T, E, F>(
+    workers: usize,
+    items: Vec<I>,
+    costs: &[f64],
+    work: &F,
+) -> Vec<Option<Result<T, E>>>
+where
+    I: Send,
+    T: Send,
+    E: Send,
+    F: Fn(usize, I) -> Result<T, E> + Sync,
+{
+    let n = items.len();
+    let c = if costs.is_empty() { vec![1.0; n] } else { sanitize_costs(costs) };
+    // Claim order: cost-descending (heavy items first, so no worker is
+    // left finishing a giant item alone at the end), ties by ascending
+    // canonical position.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| c[b].total_cmp(&c[a]).then(a.cmp(&b)));
+    // Each position's item is claimed exactly once (the atomic cursor
+    // hands every order index to exactly one worker); the mutex is just
+    // the safe ownership handoff for that single take.
+    let cells: Vec<Mutex<Option<I>>> = items.into_iter().map(|i| Mutex::new(Some(i))).collect();
+    let cursor = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let (order, cells, cursor, failed) = (&order, &cells, &cursor, &failed);
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::channel::<(usize, Result<T, E>)>();
+        for _ in 0..workers {
+            let tx = tx.clone();
+            scope.spawn(move || loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let k = cursor.fetch_add(1, Ordering::Relaxed);
+                if k >= order.len() {
+                    break;
+                }
+                let pos = order[k];
+                let item = cells[pos]
+                    .lock()
+                    .expect("fanout cell poisoned")
+                    .take()
+                    .expect("item claimed twice");
+                let result = work(pos, item);
+                let stop = result.is_err();
+                if stop {
+                    failed.store(true, Ordering::Relaxed);
+                }
+                if tx.send((pos, result)).is_err() || stop {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<T, E>>> = (0..n).map(|_| None).collect();
+        for (pos, result) in rx {
+            slots[pos] = Some(result);
+        }
+        slots
+    })
+}
+
+/// Walk slots in canonical order: the first error wins; a missing slot
+/// with no error anywhere is [`FanoutFailure::Lost`].
+fn merge<T, E>(mut slots: Vec<Option<Result<T, E>>>) -> Result<Vec<T>, FanoutFailure<E>> {
+    let mut out = Vec::with_capacity(slots.len());
+    let mut lost = false;
+    for slot in slots.iter_mut() {
+        match slot.take() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => return Err(FanoutFailure::Work(e)),
+            None => lost = true,
+        }
+    }
+    if lost {
+        return Err(FanoutFailure::Lost);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn double(pos: usize, x: usize) -> Result<usize, String> {
+        assert_eq!(pos, x, "work sees its canonical position");
+        Ok(x * 2)
+    }
+
+    #[test]
+    fn all_policies_return_canonical_order() {
+        let costs: Vec<f64> = (0..13).map(|i| ((i * 7) % 5) as f64 + 0.5).collect();
+        for policy in SchedPolicy::ALL {
+            for workers in [1usize, 2, 3, 8, 32] {
+                let items: Vec<usize> = (0..13).collect();
+                let out = fanout(policy, workers, items, &costs, double).unwrap();
+                assert_eq!(out, (0..13).map(|x| x * 2).collect::<Vec<_>>(), "{policy} w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_uniform_costs_accepted() {
+        for policy in SchedPolicy::ALL {
+            let out = fanout(policy, 4, (0..6).collect::<Vec<usize>>(), &[], double).unwrap();
+            assert_eq!(out.len(), 6);
+            let out = fanout(policy, 4, Vec::<usize>::new(), &[], double).unwrap();
+            assert!(out.is_empty());
+        }
+    }
+
+    #[test]
+    fn errors_propagate_for_every_policy() {
+        for policy in SchedPolicy::ALL {
+            let items: Vec<usize> = (0..9).collect();
+            let r = fanout(policy, 3, items, &[], |_pos, x: usize| {
+                if x == 4 {
+                    Err(format!("boom {x}"))
+                } else {
+                    Ok(x)
+                }
+            });
+            match r {
+                Err(FanoutFailure::Work(e)) => assert_eq!(e, "boom 4", "{policy}"),
+                other => panic!("{policy}: expected Work error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn static_error_reporting_is_sequential_exact() {
+        // Positions 2 and 5 both fail; the smallest canonical failing
+        // position must be reported for the static policies (each worker
+        // walks its bucket ascending).
+        for policy in [SchedPolicy::RoundRobin, SchedPolicy::CostWeighted] {
+            let items: Vec<usize> = (0..8).collect();
+            let r = fanout(policy, 3, items, &[], |_pos, x: usize| {
+                if x == 2 || x == 5 {
+                    Err(x)
+                } else {
+                    Ok(x)
+                }
+            });
+            match r {
+                Err(FanoutFailure::Work(e)) => assert_eq!(e, 2, "{policy}"),
+                other => panic!("{policy}: expected Work(2), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cost vector length")]
+    fn mismatched_costs_panic() {
+        let _ = fanout(SchedPolicy::CostWeighted, 2, vec![1usize, 2], &[1.0], double);
+    }
+
+    #[test]
+    fn round_robin_buckets_match_modulo() {
+        let b = static_buckets(SchedPolicy::RoundRobin, 3, &[], 7);
+        assert_eq!(b, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+    }
+}

@@ -1,0 +1,52 @@
+//! Cost-aware scheduling for the deterministic parallel round engine.
+//!
+//! The coordinator fans per-client (and per-shard-executor) work out
+//! over scoped worker threads. *Which worker runs which item when* is
+//! this module's job; *what the run computes* never depends on it —
+//! results are always merged back in canonical item order, so every
+//! [`SchedPolicy`] produces bit-identical output and only wall-clock
+//! changes (the determinism contract of `coordinator::round`, enforced
+//! by `tests/determinism_golden.rs`).
+//!
+//! Three pieces:
+//!
+//! * [`policy`] — [`SchedPolicy`] (round-robin / cost-weighted /
+//!   work-stealing), the [`lpt`] longest-processing-time bin packer it
+//!   shares with `ShardMap::balanced`, and the greedy makespan bound
+//!   the property suite checks against.
+//! * [`cost`] — per-client cost estimates: a prior from the persistent
+//!   [`ClientProfile`](crate::sim::netmodel::ClientProfile)
+//!   (compute + uplink closed form) blended with an EWMA of the spans
+//!   the client actually produced in earlier rounds ([`CostTracker`]).
+//! * [`mod@fanout`] — the [`fanout()`] executor: static dealing for the
+//!   two static policies, and an atomic-index queue over
+//!   cost-descending items for [`SchedPolicy::WorkStealing`].
+//!
+//! # Example
+//!
+//! ```
+//! use cse_fsl::sched::{fanout, lpt, SchedPolicy};
+//!
+//! // Two heavy items (8.0) among six light ones (1.0): LPT puts the
+//! // heavy pair in different bins...
+//! let costs = [8.0, 1.0, 1.0, 1.0, 8.0, 1.0, 1.0, 1.0];
+//! let bins = lpt(&costs, 2);
+//! assert_ne!(bins[0].contains(&0), bins[0].contains(&4));
+//!
+//! // ...and whatever the policy, fan-out results come back in
+//! // canonical item order (the bit-determinism contract).
+//! let items: Vec<usize> = (0..8).collect();
+//! let out = fanout(SchedPolicy::WorkStealing, 2, items, &costs, |_pos, x| {
+//!     Ok::<_, String>(x * 10)
+//! })
+//! .unwrap();
+//! assert_eq!(out, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+//! ```
+
+pub mod cost;
+pub mod fanout;
+pub mod policy;
+
+pub use cost::{profile_cost, CostTracker};
+pub use fanout::{fanout, FanoutFailure};
+pub use policy::{greedy_bound, lpt, sanitize_costs, SchedPolicy};

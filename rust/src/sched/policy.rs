@@ -1,0 +1,196 @@
+//! Work-dealing policies and the LPT bin packer they share with the
+//! load-balanced `ShardMap`.
+
+/// Work-dealing policy of the deterministic parallel fan-out.
+///
+/// The policy decides only *which worker runs which item when* — results
+/// are always merged in canonical item order, so every policy produces
+/// bit-identical output (the determinism contract of
+/// `coordinator::round`); only wall-clock changes. Like
+/// `coordinator::config::Parallelism`, the policy is therefore excluded
+/// from the experiment cache key (`exp::common::RunSpec::key`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Deal item `i` to worker `i mod workers` — the historical dealing.
+    /// Ignores costs; can stack several heavy items on one worker.
+    #[default]
+    RoundRobin,
+    /// LPT bin packing on the cost estimates ([`lpt`]): heaviest item
+    /// first into the least-loaded worker. Static like `RoundRobin`, but
+    /// balanced when costs are heterogeneous *and the estimates are
+    /// good*.
+    CostWeighted,
+    /// Dynamic: workers claim the next item from a shared atomic-index
+    /// queue over the items pre-sorted cost-descending. Balances even
+    /// when cost estimates are wrong, at one atomic increment (plus one
+    /// mutex handoff) per item.
+    WorkStealing,
+}
+
+impl SchedPolicy {
+    /// Every policy, in the order benches and sweeps report them.
+    pub const ALL: [SchedPolicy; 3] =
+        [SchedPolicy::RoundRobin, SchedPolicy::CostWeighted, SchedPolicy::WorkStealing];
+}
+
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            SchedPolicy::RoundRobin => "rr",
+            SchedPolicy::CostWeighted => "cost",
+            SchedPolicy::WorkStealing => "steal",
+        };
+        write!(f, "{s}")
+    }
+}
+
+impl std::str::FromStr for SchedPolicy {
+    type Err = String;
+
+    /// `rr` / `roundrobin` / `round-robin`; `cost` / `costweighted` /
+    /// `cost-weighted`; `steal` / `worksteal` / `workstealing` /
+    /// `work-stealing`.
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "rr" | "roundrobin" | "round-robin" => Ok(SchedPolicy::RoundRobin),
+            "cost" | "costweighted" | "cost-weighted" => Ok(SchedPolicy::CostWeighted),
+            "steal" | "worksteal" | "workstealing" | "work-stealing" => {
+                Ok(SchedPolicy::WorkStealing)
+            }
+            other => Err(format!("bad sched policy {other:?} (expected rr | cost | steal)")),
+        }
+    }
+}
+
+/// Replace non-finite or non-positive costs with the mean of the
+/// positive ones (or 1.0 when there are none), so degenerate estimates
+/// cannot produce empty LPT bins or a useless claim order.
+pub fn sanitize_costs(costs: &[f64]) -> Vec<f64> {
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for &c in costs {
+        if c.is_finite() && c > 0.0 {
+            sum += c;
+            count += 1;
+        }
+    }
+    let fallback = if count > 0 { sum / count as f64 } else { 1.0 };
+    costs
+        .iter()
+        .map(|&c| if c.is_finite() && c > 0.0 { c } else { fallback })
+        .collect()
+}
+
+/// Longest-processing-time (LPT) bin packing: items sorted
+/// cost-descending (ties broken by ascending index) are greedily placed
+/// into the currently least-loaded bin (ties broken by ascending bin
+/// index). Returns one ascending-sorted index list per bin.
+///
+/// Deterministic in `(costs, bins)` — which is what lets both
+/// [`SchedPolicy::CostWeighted`] dealing and `ShardMap::balanced` use
+/// it without touching any randomness or the bit-determinism contract.
+/// Callers with untrusted costs should [`sanitize_costs`] first: with
+/// all-zero costs every item ties into bin 0.
+pub fn lpt(costs: &[f64], bins: usize) -> Vec<Vec<usize>> {
+    assert!(bins >= 1, "lpt needs at least one bin");
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].total_cmp(&costs[a]).then(a.cmp(&b)));
+    let mut out: Vec<Vec<usize>> = (0..bins).map(|_| Vec::new()).collect();
+    let mut loads = vec![0.0f64; bins];
+    for idx in order {
+        let mut best = 0;
+        for (b, &load) in loads.iter().enumerate() {
+            if load < loads[best] {
+                best = b;
+            }
+        }
+        out[best].push(idx);
+        loads[best] += costs[idx];
+    }
+    for bin in &mut out {
+        bin.sort_unstable();
+    }
+    out
+}
+
+/// The greedy list-scheduling makespan bound: any greedy placement
+/// (LPT included) has `max bin load <= total/bins + (1 - 1/bins) * max
+/// cost`. The scheduling property suite checks [`lpt`]'s output against
+/// it.
+pub fn greedy_bound(costs: &[f64], bins: usize) -> f64 {
+    assert!(bins >= 1, "greedy_bound needs at least one bin");
+    let total: f64 = costs.iter().sum();
+    let cmax = costs.iter().copied().fold(0.0f64, f64::max);
+    total / bins as f64 + (1.0 - 1.0 / bins as f64) * cmax
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::str::FromStr;
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for p in SchedPolicy::ALL {
+            assert_eq!(SchedPolicy::from_str(&p.to_string()), Ok(p));
+        }
+        assert_eq!(SchedPolicy::from_str("round-robin"), Ok(SchedPolicy::RoundRobin));
+        assert_eq!(SchedPolicy::from_str("WorkStealing"), Ok(SchedPolicy::WorkStealing));
+        assert_eq!(SchedPolicy::from_str("cost-weighted"), Ok(SchedPolicy::CostWeighted));
+        assert!(SchedPolicy::from_str("sideways").is_err());
+        assert_eq!(SchedPolicy::default(), SchedPolicy::RoundRobin);
+    }
+
+    #[test]
+    fn lpt_spreads_heavy_items() {
+        // Two heavy items must land in different bins.
+        let costs = [8.0, 1.0, 1.0, 1.0, 9.0];
+        let bins = lpt(&costs, 2);
+        assert_eq!(bins.len(), 2);
+        let bin_of = |i: usize| bins.iter().position(|b| b.contains(&i)).unwrap();
+        assert_ne!(bin_of(0), bin_of(4));
+        // Every item exactly once.
+        let mut all: Vec<usize> = bins.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4]);
+        // Bins come back ascending.
+        for b in &bins {
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+        // Max load respects the greedy bound.
+        let load = |b: &Vec<usize>| b.iter().map(|&i| costs[i]).sum::<f64>();
+        let max_load = bins.iter().map(load).fold(0.0f64, f64::max);
+        assert!(max_load <= greedy_bound(&costs, 2) + 1e-12, "{max_load}");
+    }
+
+    #[test]
+    fn lpt_uniform_costs_balance_counts() {
+        let costs = vec![1.0; 10];
+        let bins = lpt(&costs, 3);
+        let sizes: Vec<usize> = bins.iter().map(|b| b.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4), "{sizes:?}");
+    }
+
+    #[test]
+    fn lpt_more_bins_than_items_leaves_empties() {
+        let bins = lpt(&[2.0, 1.0], 4);
+        assert_eq!(bins.iter().filter(|b| !b.is_empty()).count(), 2);
+        assert!(lpt(&[], 2).iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn sanitize_replaces_degenerate_costs() {
+        let s = sanitize_costs(&[2.0, 0.0, f64::NAN, 4.0, -1.0]);
+        assert_eq!(s[0], 2.0);
+        assert_eq!(s[3], 4.0);
+        // Degenerates become the mean of the positives (3.0).
+        assert_eq!(s[1], 3.0);
+        assert_eq!(s[2], 3.0);
+        assert_eq!(s[4], 3.0);
+        // No positives at all: everything becomes 1.0 (so LPT still
+        // spreads items over bins instead of stacking bin 0).
+        assert_eq!(sanitize_costs(&[0.0, 0.0]), vec![1.0, 1.0]);
+        assert!(sanitize_costs(&[]).is_empty());
+    }
+}

@@ -71,6 +71,19 @@ impl NetModel {
         }
     }
 
+    /// Heavy-tailed heterogeneity: a much wider log-normal spread of
+    /// per-client speed and bandwidth than [`NetModel::edge_default`]
+    /// (a few clients are order-of-magnitude stragglers). This is the
+    /// regime the cost-aware scheduling policies and the balanced shard
+    /// map are for — used by the scheduler benches and tests.
+    pub fn heavy_tailed() -> Self {
+        NetModel {
+            speed_sigma: 1.5,
+            bw_sigma: 1.0,
+            ..Self::edge_default()
+        }
+    }
+
     /// Draw a persistent profile for one client.
     pub fn sample_profile(&self, rng: &mut Rng) -> ClientProfile {
         let spd = if self.speed_sigma > 0.0 { rng.lognormal(1.0, self.speed_sigma) } else { 1.0 };
@@ -136,6 +149,17 @@ mod tests {
         let min = speeds.iter().cloned().fold(f64::MAX, f64::min);
         let max = speeds.iter().cloned().fold(f64::MIN, f64::max);
         assert!(max / min > 2.0, "expected heterogeneity, got {min}..{max}");
+    }
+
+    #[test]
+    fn heavy_tailed_spreads_wider_than_default() {
+        let base = NetModel::edge_default();
+        let heavy = NetModel::heavy_tailed();
+        assert!(heavy.speed_sigma > base.speed_sigma);
+        assert!(heavy.bw_sigma > base.bw_sigma);
+        // Same means: only the spread changes.
+        assert_eq!(heavy.mean_batch_time, base.mean_batch_time);
+        assert_eq!(heavy.mean_up_bps, base.mean_up_bps);
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct Span {
     /// and annotate their shard in the label (`… s<k>`); server spans
     /// from different shards may then legitimately overlap in time.
     pub who: Option<usize>,
+    /// Server executor lane that produced the span
+    /// ([`Timeline::record_in_lane`]); `None` for client spans and for
+    /// server-side barriers that occupy every lane (aggregation).
+    pub lane: Option<usize>,
     /// Span start (simulated seconds).
     pub start: SimTime,
     /// Span end (>= start).
@@ -61,7 +65,24 @@ impl Timeline {
         label: impl Into<String>,
     ) {
         debug_assert!(end >= start);
-        self.spans.push(Span { kind, who, start, end, label: label.into() });
+        self.spans.push(Span { kind, who, lane: None, start, end, label: label.into() });
+    }
+
+    /// Record one span attributed to a server executor lane (the
+    /// sharded server phase; `who` stays the server actor `None`).
+    /// Lane attribution feeds the per-lane busy/idle accounting
+    /// ([`Timeline::lane_busy`]).
+    pub fn record_in_lane(
+        &mut self,
+        kind: SpanKind,
+        who: Option<usize>,
+        lane: usize,
+        start: SimTime,
+        end: SimTime,
+        label: impl Into<String>,
+    ) {
+        debug_assert!(end >= start);
+        self.spans.push(Span { kind, who, lane: Some(lane), start, end, label: label.into() });
     }
 
     /// Append another timeline's spans (in their recorded order).
@@ -104,6 +125,56 @@ impl Timeline {
             frontier = frontier.max(end);
         }
         worst
+    }
+
+    /// Total busy time of one actor: the sum of its span durations.
+    /// Actor `None` is the server as a whole; with a sharded server that
+    /// sums across lanes (use [`Timeline::lane_busy`] for per-executor
+    /// accounting).
+    pub fn actor_busy(&self, who: Option<usize>) -> f64 {
+        self.spans.iter().filter(|s| s.who == who).map(|s| s.end - s.start).sum()
+    }
+
+    /// Busy seconds per server executor lane over the run (`lanes` =
+    /// executor count; at least one). Lane-tagged server spans count
+    /// toward their lane; untagged server-side spans — the aggregation
+    /// barrier, or records from before lane attribution — occupy every
+    /// executor, so they count toward all lanes.
+    pub fn lane_busy(&self, lanes: usize) -> Vec<f64> {
+        let lanes = lanes.max(1);
+        let mut busy = vec![0.0f64; lanes];
+        for s in &self.spans {
+            if !matches!(s.kind, SpanKind::ServerUpdate | SpanKind::Aggregate) {
+                continue;
+            }
+            let d = s.end - s.start;
+            match s.lane {
+                Some(l) if l < lanes => busy[l] += d,
+                Some(_) => {}
+                None => busy.iter_mut().for_each(|b| *b += d),
+            }
+        }
+        busy
+    }
+
+    /// Critical-path lower bound on the makespan: the busiest single
+    /// actor. No schedule, however well packed, can finish before its
+    /// busiest client or its busiest server executor lane — each actor's
+    /// spans are serialized (`max_overlap` invariant), so its busy total
+    /// bounds the wall clock from below. The run summary reports
+    /// `critical_path / end_time` as scheduling efficiency (1.0 = the
+    /// schedule is as short as its busiest actor allows).
+    pub fn critical_path(&self, lanes: usize) -> f64 {
+        let mut per_client: std::collections::BTreeMap<usize, f64> =
+            std::collections::BTreeMap::new();
+        for s in &self.spans {
+            if let Some(c) = s.who {
+                *per_client.entry(c).or_insert(0.0) += s.end - s.start;
+            }
+        }
+        let client_max = per_client.values().fold(0.0f64, |a, &b| a.max(b));
+        let lane_max = self.lane_busy(lanes).into_iter().fold(0.0f64, f64::max);
+        client_max.max(lane_max)
     }
 
     /// Total busy time of the server (update + aggregate spans). With a
@@ -241,6 +312,38 @@ mod tests {
         merged.append(part2);
         assert_eq!(merged, whole);
         assert_eq!(merged.client_ids(), vec![0, 1]);
+    }
+
+    #[test]
+    fn lane_accounting_and_critical_path() {
+        let mut t = Timeline::default();
+        // Client 0 busy for 1.5s total; client 1 for 1.0s.
+        t.record(SpanKind::ClientCompute, Some(0), 0.0, 1.0, "c0 train");
+        t.record(SpanKind::Upload, Some(0), 1.0, 1.5, "c0 up");
+        t.record(SpanKind::Upload, Some(1), 0.0, 1.0, "c1 up");
+        // Two server lanes: lane 0 busy 0.5s, lane 1 busy 2.0s, plus a
+        // 0.25s aggregation barrier that occupies both.
+        t.record_in_lane(SpanKind::ServerUpdate, None, 0, 1.5, 2.0, "u s0");
+        t.record_in_lane(SpanKind::ServerUpdate, None, 1, 1.0, 3.0, "u s1");
+        t.record(SpanKind::Aggregate, None, 3.0, 3.25, "fedavg");
+        assert_eq!(t.spans[0].lane, None);
+        assert_eq!(t.spans[3].lane, Some(0));
+        let busy = t.lane_busy(2);
+        assert!((busy[0] - 0.75).abs() < 1e-12, "{busy:?}");
+        assert!((busy[1] - 2.25).abs() < 1e-12, "{busy:?}");
+        assert!((t.actor_busy(Some(0)) - 1.5).abs() < 1e-12);
+        assert!((t.actor_busy(None) - 2.75).abs() < 1e-12);
+        // Busiest actor: lane 1 at 2.25s. Always <= makespan.
+        let cp = t.critical_path(2);
+        assert!((cp - 2.25).abs() < 1e-12, "{cp}");
+        assert!(cp <= t.end_time());
+        // A narrower lane view keeps in-range and untagged spans and
+        // drops out-of-range lanes (a caller mismatch, not a panic).
+        let one = t.lane_busy(1);
+        assert!((one[0] - 0.75).abs() < 1e-12, "{one:?}");
+        // Empty timeline is benign.
+        assert_eq!(Timeline::default().critical_path(3), 0.0);
+        assert_eq!(Timeline::default().lane_busy(2), vec![0.0, 0.0]);
     }
 
     #[test]

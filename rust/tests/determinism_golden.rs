@@ -1,18 +1,20 @@
 //! Golden determinism: the parallel round engine must be invisible.
 //!
 //! The contract (coordinator/README.md): for any method, any server
-//! shard count, and any thread count, `Parallelism::Threads(n)` produces
-//! a **bit-identical** run to `Parallelism::Sequential` — same
+//! shard count, any scheduling policy, and any thread count,
+//! `Parallelism::Threads(n)` with any `SchedPolicy` produces a
+//! **bit-identical** run to `Parallelism::Sequential` — same
 //! `RunRecord` JSON (every loss, byte count, and simulated timestamp),
 //! same timeline span sequence, same communication ledger, same final
 //! model states. These tests pin that contract over the mock engine for
-//! all four methods and for the sharded server phase
-//! (`server_shards` ∈ {1, 2, n}). Changing the *shard count* is allowed
-//! (and expected) to change results — which is exactly why it is part of
-//! `RunSpec::key` — but the thread count never may.
+//! all four methods, for the sharded server phase
+//! (`server_shards` ∈ {1, 2, n}), and for every dealing policy.
+//! Changing the *shard count* or the *shard map* is allowed (and
+//! expected) to change results — which is exactly why both are part of
+//! `RunSpec::key` — but the thread count and dealing policy never may.
 
 use cse_fsl::comm::accounting::CommLedger;
-use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 use cse_fsl::coordinator::methods::Method;
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
@@ -20,6 +22,7 @@ use cse_fsl::data::synthetic::{generate, SyntheticSpec};
 use cse_fsl::data::Dataset;
 use cse_fsl::exp::common::run_to_json;
 use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::sched::SchedPolicy;
 use cse_fsl::sim::netmodel::NetModel;
 use cse_fsl::sim::timeline::Timeline;
 use cse_fsl::util::prng::Rng;
@@ -32,18 +35,27 @@ fn dataset(n: usize, seed: u64) -> Dataset {
     generate(&spec(), n, seed)
 }
 
-fn setup<'a>(train: &'a Dataset, test: &'a Dataset, n_clients: usize) -> TrainerSetup<'a> {
+fn setup_net<'a>(
+    train: &'a Dataset,
+    test: &'a Dataset,
+    n_clients: usize,
+    net: NetModel,
+) -> TrainerSetup<'a> {
     let mut rng = Rng::new(7);
     TrainerSetup {
         train,
         test,
         partition: iid(train, n_clients, &mut rng),
-        net: NetModel::edge_default(),
+        net,
         client_layout: None,
         server_layout: None,
         aux_layout: None,
         label: "golden".to_string(),
     }
+}
+
+fn setup<'a>(train: &'a Dataset, test: &'a Dataset, n_clients: usize) -> TrainerSetup<'a> {
+    setup_net(train, test, n_clients, NetModel::edge_default())
 }
 
 /// Everything observable about a finished run.
@@ -56,6 +68,54 @@ struct Fingerprint {
     server_copies: Vec<Vec<f32>>,
     server_updates: u64,
     shard_updates: Vec<u64>,
+    shard_of: Vec<usize>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_sched(
+    method: Method,
+    h: usize,
+    participation: usize,
+    arrival: ArrivalOrder,
+    parallelism: Parallelism,
+    rounds: usize,
+    server_shards: usize,
+    sched: SchedPolicy,
+    shard_map: ShardMapKind,
+    net: NetModel,
+    train: &Dataset,
+    test: &Dataset,
+) -> Fingerprint {
+    let e = MockEngine::small(42);
+    let cfg = TrainConfig {
+        h,
+        participation,
+        arrival,
+        parallelism,
+        server_shards,
+        sched,
+        shard_map,
+        agg_every: 4,
+        eval_every: 3,
+        eval_max_batches: 2,
+        lr0: 1.0,
+        track_grad_norms: true,
+        ..TrainConfig::new(method)
+    }
+    .with_rounds(rounds);
+    let mut tr = Trainer::new(&e, cfg, setup_net(train, test, 5, net)).unwrap();
+    let rec = tr.run().unwrap();
+    Fingerprint {
+        json: run_to_json(&rec).pretty(),
+        timeline: tr.timeline.clone(),
+        ledger: tr.ledger.clone(),
+        client_models: tr.clients.iter().map(|c| c.xc.clone()).collect(),
+        client_aux: tr.clients.iter().map(|c| c.ac.clone()).collect(),
+        server_copies: tr.server.copies.clone(),
+        server_updates: tr.server.updates,
+        shard_updates: tr.server.shard_updates.clone(),
+        shard_of: (0..tr.clients.len()).map(|c| tr.server.shard_map.shard_of(c)).collect(),
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -70,33 +130,20 @@ fn run(
     train: &Dataset,
     test: &Dataset,
 ) -> Fingerprint {
-    let e = MockEngine::small(42);
-    let cfg = TrainConfig {
+    run_sched(
+        method,
         h,
         participation,
         arrival,
         parallelism,
+        rounds,
         server_shards,
-        agg_every: 4,
-        eval_every: 3,
-        eval_max_batches: 2,
-        lr0: 1.0,
-        track_grad_norms: true,
-        ..TrainConfig::new(method)
-    }
-    .with_rounds(rounds);
-    let mut tr = Trainer::new(&e, cfg, setup(train, test, 5)).unwrap();
-    let rec = tr.run().unwrap();
-    Fingerprint {
-        json: run_to_json(&rec).pretty(),
-        timeline: tr.timeline.clone(),
-        ledger: tr.ledger.clone(),
-        client_models: tr.clients.iter().map(|c| c.xc.clone()).collect(),
-        client_aux: tr.clients.iter().map(|c| c.ac.clone()).collect(),
-        server_copies: tr.server.copies.clone(),
-        server_updates: tr.server.updates,
-        shard_updates: tr.server.shard_updates.clone(),
-    }
+        SchedPolicy::RoundRobin,
+        ShardMapKind::Contiguous,
+        NetModel::edge_default(),
+        train,
+        test,
+    )
 }
 
 fn assert_identical(seq: &Fingerprint, par: &Fingerprint, ctx: &str) {
@@ -109,6 +156,7 @@ fn assert_identical(seq: &Fingerprint, par: &Fingerprint, ctx: &str) {
     assert_eq!(seq.server_copies, par.server_copies, "{ctx}: server copies diverged");
     assert_eq!(seq.server_updates, par.server_updates, "{ctx}: update count diverged");
     assert_eq!(seq.shard_updates, par.shard_updates, "{ctx}: per-shard counts diverged");
+    assert_eq!(seq.shard_of, par.shard_of, "{ctx}: shard map diverged");
 }
 
 #[test]
@@ -356,6 +404,148 @@ fn golden_holds_under_shuffled_arrival_order() {
         &test,
     );
     assert_identical(&seq, &par, "CSE_FSL shuffled arrivals");
+}
+
+#[test]
+fn sched_policies_bit_identical_across_threads() {
+    // Acceptance pin: RoundRobin / CostWeighted / WorkStealing produce
+    // bit-identical RunRecords at threads {1, 4}, for a local-update
+    // method and a SplitFed baseline (both fan-out shapes).
+    let train = dataset(120, 15);
+    let test = dataset(24, 16);
+    for method in [Method::CseFsl, Method::FslMc] {
+        let h = if method.supports_h() { 2 } else { 1 };
+        let reference = run(
+            method,
+            h,
+            0,
+            ArrivalOrder::ByDelay,
+            Parallelism::Sequential,
+            10,
+            1,
+            &train,
+            &test,
+        );
+        for sched in SchedPolicy::ALL {
+            for threads in [1usize, 4] {
+                let par = run_sched(
+                    method,
+                    h,
+                    0,
+                    ArrivalOrder::ByDelay,
+                    Parallelism::Threads(threads),
+                    10,
+                    1,
+                    sched,
+                    ShardMapKind::Contiguous,
+                    NetModel::edge_default(),
+                    &train,
+                    &test,
+                );
+                assert_identical(
+                    &reference,
+                    &par,
+                    &format!("{method} sched={sched} threads={threads}"),
+                );
+            }
+        }
+    }
+    // The sharded server phase fans its drain loops through the same
+    // scheduler: pin the policies there too.
+    let reference = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        10,
+        2,
+        &train,
+        &test,
+    );
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let par = run_sched(
+                Method::CseFsl,
+                2,
+                0,
+                ArrivalOrder::ByDelay,
+                Parallelism::Threads(threads),
+                10,
+                2,
+                sched,
+                ShardMapKind::Contiguous,
+                NetModel::edge_default(),
+                &train,
+                &test,
+            );
+            assert_identical(
+                &reference,
+                &par,
+                &format!("CSE_FSL shards=2 sched={sched} threads={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn balanced_shard_map_deterministic_and_result_changing() {
+    // The balanced ShardMap (LPT on client costs) keeps the
+    // bit-determinism contract — sequential and threaded runs agree for
+    // every policy — while its *assignment* (and therefore results)
+    // legitimately differs from contiguous, which is why the map kind
+    // joins RunSpec::key.
+    let train = dataset(120, 17);
+    let test = dataset(24, 18);
+    let run_map = |map: ShardMapKind, par: Parallelism, sched: SchedPolicy| {
+        run_sched(
+            Method::CseFsl,
+            2,
+            0,
+            ArrivalOrder::ByDelay,
+            par,
+            10,
+            2,
+            sched,
+            map,
+            NetModel::heavy_tailed(),
+            &train,
+            &test,
+        )
+    };
+    let bal = run_map(ShardMapKind::Balanced, Parallelism::Sequential, SchedPolicy::RoundRobin);
+    // The balanced partition covers every client and leaves no shard
+    // empty (LPT over sanitized positive costs).
+    assert_eq!(bal.shard_of.len(), 5);
+    for shard in 0..2 {
+        assert!(
+            bal.shard_of.iter().any(|&s| s == shard),
+            "empty shard {shard} in {:?}",
+            bal.shard_of
+        );
+    }
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let par = run_map(ShardMapKind::Balanced, Parallelism::Threads(threads), sched);
+            assert_identical(
+                &bal,
+                &par,
+                &format!("balanced sched={sched} threads={threads}"),
+            );
+        }
+    }
+    let cont =
+        run_map(ShardMapKind::Contiguous, Parallelism::Sequential, SchedPolicy::RoundRobin);
+    // Under the heavy-tailed profile the LPT assignment regroups the
+    // clients; whenever it does, results must change with it (the
+    // RunSpec::key argument). With 5 heterogeneous client costs the
+    // assignments virtually always differ — but guard anyway so the
+    // assertion can never go stale silently.
+    if bal.shard_of != cont.shard_of {
+        assert_ne!(bal.json, cont.json, "regrouped shards must change results");
+    } else {
+        assert_eq!(bal.json, cont.json, "identical maps must replay identical runs");
+    }
 }
 
 #[test]

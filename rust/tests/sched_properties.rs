@@ -1,0 +1,220 @@
+//! Scheduling invariants (util/prop harness).
+//!
+//! 1. **Policy invisibility** — across random configurations, the
+//!    `RunRecord` JSON is bit-identical for every `SchedPolicy` at
+//!    every thread count (the determinism contract that keeps `sched`
+//!    out of `RunSpec::key`).
+//! 2. **Balanced shard map** — `ShardMap::balanced` partitions are a
+//!    permutation of the clients (every client in exactly one shard,
+//!    no shard empty) and the max shard load respects the greedy LPT
+//!    bound `total/k + (1 - 1/k)·c_max`.
+//! 3. **Fan-out order** — `sched::fanout` returns results in canonical
+//!    item order for every policy and worker count.
+//! 4. **Timeline efficiency metrics** — the critical-path lower bound
+//!    never exceeds the makespan, and per-lane busy accounting matches
+//!    the executor count.
+
+use cse_fsl::coordinator::config::{Parallelism, ShardMapKind, TrainConfig};
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::coordinator::server::ShardMap;
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::exp::common::run_to_json;
+use cse_fsl::prop_assert;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::sched::{self, SchedPolicy};
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+/// One run at a given parallelism/policy over a shared random scenario.
+struct Scenario {
+    method: Method,
+    n: usize,
+    h: usize,
+    rounds: usize,
+    server_shards: usize,
+    shard_map: ShardMapKind,
+    engine_seed: u64,
+    data_seed: u64,
+    part_seed: u64,
+}
+
+fn random_scenario(rng: &mut Rng) -> Scenario {
+    let n = 2 + rng.below(4) as usize; // 2..=5 clients
+    let method = Method::ALL[rng.below(4) as usize];
+    let h = if method.supports_h() { 1 + rng.below(3) as usize } else { 1 };
+    let rounds = 2 + rng.below(5) as usize;
+    let server_shards = if method.per_client_server_model() {
+        1
+    } else {
+        1 + rng.below(n as u64) as usize
+    };
+    // Balanced maps need k >= 2; mix them in whenever sharded.
+    let shard_map = if server_shards >= 2 && rng.below(2) == 1 {
+        ShardMapKind::Balanced
+    } else {
+        ShardMapKind::Contiguous
+    };
+    Scenario {
+        method,
+        n,
+        h,
+        rounds,
+        server_shards,
+        shard_map,
+        engine_seed: rng.next_u64(),
+        data_seed: rng.next_u64(),
+        part_seed: rng.next_u64(),
+    }
+}
+
+fn run_scenario(
+    s: &Scenario,
+    parallelism: Parallelism,
+    sched: SchedPolicy,
+) -> Result<cse_fsl::metrics::recorder::RunRecord, String> {
+    let e = MockEngine::small(s.engine_seed);
+    let train = generate(&spec(), s.n * 16, s.data_seed);
+    let test = generate(&spec(), 8, s.data_seed ^ 0x5A);
+    let cfg = TrainConfig {
+        h: s.h,
+        rounds: s.rounds,
+        agg_every: 3,
+        eval_every: 2,
+        eval_max_batches: 1,
+        parallelism,
+        sched,
+        server_shards: s.server_shards,
+        shard_map: s.shard_map,
+        ..TrainConfig::new(s.method)
+    };
+    let setup = TrainerSetup {
+        train: &train,
+        test: &test,
+        partition: iid(&train, s.n, &mut Rng::new(s.part_seed)),
+        net: NetModel::heavy_tailed(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "sched-prop".into(),
+    };
+    let mut tr = Trainer::new(&e, cfg, setup)?;
+    tr.run().map_err(|e| e.to_string())
+}
+
+#[test]
+fn prop_runrecord_bit_identical_across_policies_and_threads() {
+    prop::check("RunRecord identical across SchedPolicy x threads", |rng| {
+        let s = random_scenario(rng);
+        let threads = 2 + rng.below(3) as usize; // 2..=4 workers
+        let reference = run_to_json(&run_scenario(
+            &s,
+            Parallelism::Sequential,
+            SchedPolicy::RoundRobin,
+        )?)
+        .pretty();
+        for sched in SchedPolicy::ALL {
+            for par in [Parallelism::Threads(1), Parallelism::Threads(threads)] {
+                let json = run_to_json(&run_scenario(&s, par, sched)?).pretty();
+                prop_assert!(
+                    json == reference,
+                    "{} n={} h={} rounds={} k={} map={:?}: {sched} at {par:?} diverged",
+                    s.method,
+                    s.n,
+                    s.h,
+                    s.rounds,
+                    s.server_shards,
+                    s.shard_map
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balanced_shard_map_is_bounded_permutation() {
+    prop::check("ShardMap::balanced permutation + LPT bound", |rng| {
+        let n = 1 + rng.below(24) as usize;
+        let k = 1 + rng.below(n as u64) as usize;
+        let costs: Vec<f64> = (0..n).map(|_| rng.lognormal(1.0, 1.2)).collect();
+        let map = ShardMap::balanced(n, k, &costs);
+        prop_assert!(map.shards() == k, "shard count {} != {k}", map.shards());
+        prop_assert!(map.n_clients() == n, "client count {} != {n}", map.n_clients());
+        // Permutation: the union of shard cohorts is 0..n, each exactly
+        // once, and no shard is empty.
+        let mut seen: Vec<usize> = (0..k).flat_map(|s| map.clients_of(s)).collect();
+        seen.sort_unstable();
+        prop_assert!(
+            seen == (0..n).collect::<Vec<_>>(),
+            "cohorts are not a permutation: {seen:?}"
+        );
+        for shard in 0..k {
+            prop_assert!(!map.clients_of(shard).is_empty(), "shard {shard} empty (k={k} n={n})");
+        }
+        // Load balance: max shard load within the greedy LPT bound.
+        let load = |s: usize| map.clients_of(s).iter().map(|&c| costs[c]).sum::<f64>();
+        let max_load = (0..k).map(load).fold(0.0f64, f64::max);
+        let bound = sched::greedy_bound(&costs, k);
+        prop_assert!(
+            max_load <= bound + 1e-9,
+            "max load {max_load} exceeds LPT bound {bound} (n={n} k={k})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fanout_returns_canonical_order() {
+    prop::check("fanout canonical order", |rng| {
+        let n = rng.below(40) as usize;
+        let workers = 1 + rng.below(8) as usize;
+        let policy = SchedPolicy::ALL[rng.below(3) as usize];
+        let costs: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 10.0)).collect();
+        let items: Vec<usize> = (0..n).collect();
+        let out = sched::fanout(policy, workers, items, &costs, |pos, x| {
+            if pos != x {
+                return Err(format!("work saw pos {pos} for item {x}"));
+            }
+            Ok(x.wrapping_mul(3))
+        })
+        .map_err(|e| format!("{policy} w={workers} n={n}: {e:?}"))?;
+        prop_assert!(
+            out == (0..n).map(|x| x.wrapping_mul(3)).collect::<Vec<_>>(),
+            "{policy} w={workers} n={n}: out of order"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_critical_path_bounds_makespan() {
+    prop::check("critical path <= makespan; lanes sized to executors", |rng| {
+        let s = random_scenario(rng);
+        let rec = run_scenario(&s, Parallelism::Sequential, SchedPolicy::RoundRobin)?;
+        prop_assert!(
+            rec.critical_path <= rec.sim_time + 1e-9,
+            "critical path {} exceeds makespan {} ({} k={})",
+            rec.critical_path,
+            rec.sim_time,
+            s.method,
+            s.server_shards
+        );
+        prop_assert!(rec.critical_path > 0.0, "critical path must be positive after a run");
+        let lanes = if s.method.per_client_server_model() { 1 } else { s.server_shards };
+        prop_assert!(
+            rec.lane_busy.len() == lanes,
+            "lane_busy len {} != executor count {lanes}",
+            rec.lane_busy.len()
+        );
+        let eff = rec.sched_efficiency();
+        prop_assert!((0.0..=1.0).contains(&eff), "efficiency {eff} out of range");
+        Ok(())
+    });
+}
