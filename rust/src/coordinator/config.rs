@@ -83,6 +83,13 @@ pub enum ShardMapKind {
     /// (`ShardMap::balanced`): balances shard executor load under
     /// heterogeneous clients. Requires `server_shards >= 2`.
     Balanced,
+    /// Label-distribution stratification (`ShardMap::locality`): each
+    /// shard's aggregate label histogram approximates the global one,
+    /// cost-balanced within each dealing wave. Built for the non-IID
+    /// arms — requires `server_shards >= 2` **and** a non-IID partition
+    /// (enforced where the data distribution is known:
+    /// `exp::common::RunSpec::validate`).
+    Locality,
 }
 
 impl ShardMapKind {
@@ -91,7 +98,15 @@ impl ShardMapKind {
         match self {
             ShardMapKind::Contiguous => "cont",
             ShardMapKind::Balanced => "bal",
+            ShardMapKind::Locality => "loc",
         }
+    }
+
+    /// Whether this map reassigns clients across shard copies (anything
+    /// but the historical contiguous grouping). Such maps need a sharded
+    /// server (`server_shards >= 2`) to have anything to reassign.
+    pub fn regroups_clients(self) -> bool {
+        !matches!(self, ShardMapKind::Contiguous)
     }
 }
 
@@ -100,6 +115,7 @@ impl std::fmt::Display for ShardMapKind {
         let s = match self {
             ShardMapKind::Contiguous => "contiguous",
             ShardMapKind::Balanced => "balanced",
+            ShardMapKind::Locality => "locality",
         };
         write!(f, "{s}")
     }
@@ -108,14 +124,15 @@ impl std::fmt::Display for ShardMapKind {
 impl std::str::FromStr for ShardMapKind {
     type Err = String;
 
-    /// `contiguous` / `cont`; `balanced` / `bal`.
+    /// `contiguous` / `cont`; `balanced` / `bal`; `locality` / `loc`.
     fn from_str(s: &str) -> Result<Self, String> {
         match s.to_ascii_lowercase().as_str() {
             "contiguous" | "cont" => Ok(ShardMapKind::Contiguous),
             "balanced" | "bal" => Ok(ShardMapKind::Balanced),
-            other => {
-                Err(format!("bad shard map {other:?} (expected contiguous | balanced)"))
-            }
+            "locality" | "loc" => Ok(ShardMapKind::Locality),
+            other => Err(format!(
+                "bad shard map {other:?} (expected contiguous | balanced | locality)"
+            )),
         }
     }
 }
@@ -192,8 +209,11 @@ pub struct TrainConfig {
     pub sched: SchedPolicy,
     /// Client → shard assignment for the sharded server phase.
     /// `Balanced` regroups clients across shard copies by estimated
-    /// cost — that **changes results** (like `server_shards`, unlike
-    /// `sched`) and requires `server_shards >= 2`.
+    /// cost, `Locality` by label distribution (non-IID arms) — either
+    /// **changes results** (like `server_shards`, unlike `sched`) and
+    /// requires `server_shards >= 2`. `Locality` additionally requires a
+    /// non-IID partition, enforced where the distribution is known
+    /// (`exp::common::RunSpec::validate`).
     pub shard_map: ShardMapKind,
 }
 
@@ -308,12 +328,12 @@ impl TrainConfig {
                 self.method
             ));
         }
-        if self.shard_map == ShardMapKind::Balanced && self.server_shards < 2 {
-            return Err(
-                "--shard-map balanced requires --server-shards >= 2 \
-                 (it reassigns clients across shard copies)"
-                    .into(),
-            );
+        if self.shard_map.regroups_clients() && self.server_shards < 2 {
+            return Err(format!(
+                "--shard-map {} requires --server-shards >= 2 \
+                 (it reassigns clients across shard copies)",
+                self.shard_map
+            ));
         }
         if self.lr0 <= 0.0 || self.lr_decay_rate <= 0.0 || self.lr_decay_rate > 1.0 {
             return Err("bad learning-rate schedule".into());
@@ -431,10 +451,56 @@ mod tests {
         // Parse / display / tag.
         assert_eq!(ShardMapKind::from_str("balanced"), Ok(ShardMapKind::Balanced));
         assert_eq!(ShardMapKind::from_str("cont"), Ok(ShardMapKind::Contiguous));
+        assert_eq!(ShardMapKind::from_str("locality"), Ok(ShardMapKind::Locality));
+        assert_eq!(ShardMapKind::from_str("loc"), Ok(ShardMapKind::Locality));
         assert!(ShardMapKind::from_str("diagonal").is_err());
         assert_eq!(ShardMapKind::Balanced.to_string(), "balanced");
         assert_eq!(ShardMapKind::Balanced.tag(), "bal");
+        assert_eq!(ShardMapKind::Locality.to_string(), "locality");
+        assert_eq!(ShardMapKind::Locality.tag(), "loc");
         assert_eq!(ShardMapKind::default(), ShardMapKind::Contiguous);
+    }
+
+    #[test]
+    fn shard_map_validation_messages_consistent() {
+        // Every regrouping map needs a sharded server, with one message
+        // shape naming the offending map; contiguous never does.
+        assert!(!ShardMapKind::Contiguous.regroups_clients());
+        for (map, name) in
+            [(ShardMapKind::Balanced, "balanced"), (ShardMapKind::Locality, "locality")]
+        {
+            assert!(map.regroups_clients());
+            for k in [1usize, 0] {
+                let err = TrainConfig::new(Method::CseFsl)
+                    .with_shard_map(map)
+                    .with_server_shards(k)
+                    .validate(5)
+                    .unwrap_err();
+                if k >= 1 {
+                    assert!(
+                        err.contains(&format!(
+                            "--shard-map {name} requires --server-shards >= 2"
+                        )),
+                        "{map}: {err}"
+                    );
+                }
+            }
+            // With k >= 2 the config-level check passes (the locality
+            // map's non-IID requirement lives at the RunSpec level,
+            // where the data distribution is known).
+            assert!(TrainConfig::new(Method::CseFsl)
+                .with_shard_map(map)
+                .with_server_shards(2)
+                .validate(5)
+                .is_ok());
+            // ...but never on the per-client-copy methods (sharding
+            // itself is rejected there).
+            assert!(TrainConfig::new(Method::FslMc)
+                .with_shard_map(map)
+                .with_server_shards(2)
+                .validate(5)
+                .is_err());
+        }
     }
 
     #[test]

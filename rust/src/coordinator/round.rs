@@ -42,9 +42,10 @@
 //! # The sharded server phase
 //!
 //! With `TrainConfig::server_shards = k` (single-copy methods only), the
-//! server holds `k` model copies, each serving a contiguous client group
-//! ([`ShardMap`]) on its **own event-loop executor** with its own
-//! simulated clock. The event-triggered drain loop runs once per shard —
+//! server holds `k` model copies, each serving a client group
+//! ([`ShardMap`]: contiguous canonical-id ranges, cost-balanced LPT, or
+//! locality-stratified by label distribution) on its **own event-loop
+//! executor** with its own simulated clock. The event-triggered drain loop runs once per shard —
 //! fanned over the same scoped-thread machinery as the client phase —
 //! and shard results (losses, spans, clocks, per-shard update counts)
 //! are merged in canonical shard order. Every `agg_every` rounds the
@@ -105,6 +106,10 @@ pub struct Trainer<'a, E: SplitEngine> {
     /// Per-client cost estimates steering the cost-aware dealing
     /// policies (profile priors + EWMA of observed round spans).
     cost_tracker: CostTracker,
+    /// Shard-skew metric of the configured shard map: mean per-shard
+    /// label-histogram divergence from the global mix (see
+    /// `ShardMap::label_divergence`), fixed at construction.
+    shard_divergence: f64,
     records: Vec<RoundRecord>,
     /// Clients that contributed training since the last aggregation.
     dirty: Vec<bool>,
@@ -267,13 +272,18 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         } else {
             Topology::Sharded(cfg.server_shards)
         };
+        // Per-client label histograms: the locality map clusters on
+        // them, and every map reports its label-skew metric over them.
+        let hists = setup.partition.label_histograms(setup.train);
         let shard_map = match topology {
             Topology::PerClient => ShardMap::contiguous(n, n.max(1)),
             Topology::Sharded(k) => match cfg.shard_map {
                 ShardMapKind::Contiguous => ShardMap::contiguous(n, k),
                 ShardMapKind::Balanced => ShardMap::balanced(n, k, &costs),
+                ShardMapKind::Locality => ShardMap::locality(n, k, &hists, &costs),
             },
         };
+        let shard_divergence = shard_map.label_divergence(&hists);
         let server = ServerState::with_map(
             xs0,
             topology,
@@ -293,6 +303,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             wires,
             rng: root.split_str("trainer"),
             cost_tracker: CostTracker::new(costs),
+            shard_divergence,
             records: Vec::new(),
             dirty: vec![false; n],
             label: setup.label,
@@ -352,6 +363,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 &sizes,
             ),
             server_updates_per_shard: self.server.shard_updates.clone(),
+            shard_label_divergence: self.shard_divergence,
         })
     }
 

@@ -33,9 +33,11 @@ pub struct SmashedMsg {
 
 /// Deterministic client → shard assignment.
 ///
-/// Two constructors: [`ShardMap::contiguous`] (equal-count groups in
-/// canonical client-id order) and [`ShardMap::balanced`] (LPT bin
-/// packing on per-client cost estimates). Either way the assignment is
+/// Three constructors: [`ShardMap::contiguous`] (equal-count groups in
+/// canonical client-id order), [`ShardMap::balanced`] (LPT bin
+/// packing on per-client cost estimates), and [`ShardMap::locality`]
+/// (label-distribution stratification for non-IID arms, cost-balanced
+/// within each dealing wave). Either way the assignment is
 /// a pure function of its inputs — never of arrival order or thread
 /// scheduling — which is what lets the sharded server phase keep the
 /// bit-determinism contract (see `coordinator/README.md`). Changing the
@@ -97,6 +99,171 @@ impl ShardMap {
             }
         }
         ShardMap { shard_of, shards }
+    }
+
+    /// Locality-aware client → shard assignment for non-IID data:
+    /// stratify clients over shards by **label distribution** so every
+    /// shard's aggregate label histogram approximates the global one,
+    /// while staying cost-balanced.
+    ///
+    /// Under label-skew non-IID data (Dirichlet / by-writer splits) a
+    /// cost-only map can pack statistically identical clients onto one
+    /// shard copy and starve it of label diversity; this constructor
+    /// co-locates clients *by data distribution*. Algorithm
+    /// (deterministic — a pure function of `(histograms, costs, shards)`,
+    /// with client ids only breaking ties between data-identical
+    /// clients, so the grouping is invariant to input permutation up to
+    /// shard relabeling):
+    ///
+    /// 1. order clients by similarity: dominant label, then the full
+    ///    histogram (descending lexicographic), then sanitized cost
+    ///    (descending), then client id;
+    /// 2. deal the ordering in **waves** of `shards` consecutive
+    ///    clients: within a wave, clients go heaviest-cost-first to the
+    ///    least-loaded shard not yet used in that wave (`sched::lpt`'s
+    ///    greedy rule, restricted to one client per shard per wave).
+    ///
+    /// Statistically similar clients sit adjacent in the ordering, and a
+    /// wave never puts two of its clients on one shard — so each shard
+    /// receives a cross-section of the similarity spectrum (for one-hot
+    /// clients, each shard gets between `⌊m/k⌋` and `⌈m/k⌉` clients of a
+    /// label held by `m` clients — the minimum achievable skew). Shard
+    /// client counts differ by at most one, every shard is non-empty,
+    /// and per-shard cost stays near the [`crate::sched::greedy_bound`]
+    /// the balanced map obeys (cost-greedy within each wave). Costs are
+    /// sanitized exactly as in [`ShardMap::balanced`]
+    /// ([`crate::sched::sanitize_costs`]).
+    ///
+    /// # Example
+    ///
+    /// Four clients, two labels: clients 0 and 1 hold only label 0,
+    /// clients 2 and 3 only label 1. The contiguous map packs the two
+    /// label-0 clients onto one shard (maximal skew); the locality map
+    /// pairs opposite-skew clients so each shard sees both labels:
+    ///
+    /// ```
+    /// use cse_fsl::coordinator::server::ShardMap;
+    ///
+    /// let hists = vec![vec![8, 0], vec![8, 0], vec![0, 8], vec![0, 8]];
+    /// let costs = vec![1.0; 4];
+    /// let loc = ShardMap::locality(4, 2, &hists, &costs);
+    /// assert_ne!(loc.shard_of(0), loc.shard_of(1), "same-skew clients split");
+    /// assert_ne!(loc.shard_of(2), loc.shard_of(3));
+    /// // Each shard's label mix now matches the global mix exactly...
+    /// assert_eq!(loc.label_divergence(&hists), 0.0);
+    /// // ...where the contiguous grouping is maximally skewed.
+    /// assert_eq!(ShardMap::contiguous(4, 2).label_divergence(&hists), 0.5);
+    /// ```
+    pub fn locality(
+        n_clients: usize,
+        shards: usize,
+        histograms: &[Vec<usize>],
+        costs: &[f64],
+    ) -> Self {
+        assert!(shards >= 1, "at least one shard required");
+        assert!(
+            shards <= n_clients.max(1),
+            "more shards ({shards}) than clients ({n_clients})"
+        );
+        assert_eq!(histograms.len(), n_clients, "one label histogram per client");
+        assert_eq!(costs.len(), n_clients, "one cost estimate per client");
+        let sane = crate::sched::sanitize_costs(costs);
+        fn dominant(h: &[usize]) -> usize {
+            let mut best = 0usize;
+            for (c, &v) in h.iter().enumerate() {
+                if v > h[best] {
+                    best = c;
+                }
+            }
+            best
+        }
+        // Similarity ordering: every key component before the final
+        // client-id tie-break is derived from the client's *data*, so
+        // permuting the input permutes only data-identical clients.
+        let mut order: Vec<usize> = (0..n_clients).collect();
+        order.sort_by(|&a, &b| {
+            dominant(&histograms[a])
+                .cmp(&dominant(&histograms[b]))
+                .then_with(|| histograms[b].cmp(&histograms[a]))
+                .then_with(|| sane[b].total_cmp(&sane[a]))
+                .then_with(|| a.cmp(&b))
+        });
+        let mut shard_of = vec![0usize; n_clients];
+        let mut loads = vec![0f64; shards];
+        for wave in order.chunks(shards) {
+            // Cost-descending within the wave (LPT's greedy rule), each
+            // client to the least-loaded shard not yet used this wave.
+            let mut wave_items: Vec<usize> = wave.to_vec();
+            wave_items.sort_by(|&a, &b| {
+                sane[b]
+                    .total_cmp(&sane[a])
+                    .then_with(|| histograms[b].cmp(&histograms[a]))
+                    .then_with(|| a.cmp(&b))
+            });
+            let mut used = vec![false; shards];
+            for c in wave_items {
+                let mut best = usize::MAX;
+                for s in 0..shards {
+                    if !used[s] && (best == usize::MAX || loads[s] < loads[best]) {
+                        best = s;
+                    }
+                }
+                used[best] = true;
+                loads[best] += sane[c];
+                shard_of[c] = best;
+            }
+        }
+        ShardMap { shard_of, shards }
+    }
+
+    /// Shard-skew metric: mean over shards of the total-variation
+    /// distance between the shard's aggregate label distribution and the
+    /// global one, in `[0, 1]`.
+    ///
+    /// `0` means every shard sees exactly the global label mix (a single
+    /// shard always scores 0); `1` is maximal skew. A shard with no
+    /// samples counts the full distance 1 (it is maximally
+    /// unrepresentative of the global mix). This is the
+    /// `shard_label_divergence` surfaced in `RunRecord` / summary JSON
+    /// and compared across map kinds by `exp::figures::fig_staleness`.
+    pub fn label_divergence(&self, histograms: &[Vec<usize>]) -> f64 {
+        assert_eq!(
+            histograms.len(),
+            self.shard_of.len(),
+            "one label histogram per client"
+        );
+        let classes = histograms.first().map(|h| h.len()).unwrap_or(0);
+        if classes == 0 || self.shards == 0 {
+            return 0.0;
+        }
+        let mut global = vec![0f64; classes];
+        let mut shard_h = vec![vec![0f64; classes]; self.shards];
+        for (c, h) in histograms.iter().enumerate() {
+            assert_eq!(h.len(), classes, "ragged label histograms");
+            let s = self.shard_of[c];
+            for (k, &v) in h.iter().enumerate() {
+                global[k] += v as f64;
+                shard_h[s][k] += v as f64;
+            }
+        }
+        let g_tot: f64 = global.iter().sum();
+        if g_tot == 0.0 {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        for sh in &shard_h {
+            let s_tot: f64 = sh.iter().sum();
+            if s_tot == 0.0 {
+                acc += 1.0;
+                continue;
+            }
+            let mut tv = 0.0;
+            for k in 0..classes {
+                tv += (sh[k] / s_tot - global[k] / g_tot).abs();
+            }
+            acc += 0.5 * tv;
+        }
+        acc / self.shards as f64
     }
 
     /// Number of shards.
@@ -388,6 +555,99 @@ mod tests {
     #[should_panic(expected = "one cost estimate per client")]
     fn balanced_map_rejects_cost_mismatch() {
         ShardMap::balanced(3, 2, &[1.0]);
+    }
+
+    #[test]
+    fn locality_map_stratifies_label_sorted_clients() {
+        // Five clients whose shards were filled label-by-label (the
+        // pathological non-IID grouping): contiguous packs same-label
+        // neighbours onto one shard; locality deals each similarity
+        // block across shards so both shard mixes match the global one.
+        let h = vec![
+            vec![24, 0, 0],
+            vec![16, 8, 0],
+            vec![0, 24, 0],
+            vec![0, 8, 16],
+            vec![0, 0, 24],
+        ];
+        let costs = [1.0; 5];
+        let loc = ShardMap::locality(5, 2, &h, &costs);
+        // Deterministic stratification: shard 0 = {0, 2, 4}, shard 1 =
+        // {1, 3} — each shard's aggregate is exactly the global mix.
+        assert_eq!(loc.clients_of(0), vec![0, 2, 4]);
+        assert_eq!(loc.clients_of(1), vec![1, 3]);
+        assert!(loc.label_divergence(&h) < 1e-12, "{}", loc.label_divergence(&h));
+        let cont = ShardMap::contiguous(5, 2);
+        let cd = cont.label_divergence(&h);
+        assert!((cd - 0.41666).abs() < 1e-3, "{cd}");
+        assert!(loc.label_divergence(&h) < cd);
+    }
+
+    #[test]
+    fn locality_beats_balanced_on_skewed_arms() {
+        // Two label-0 clients (0, 2) carry the heavy costs, two label-1
+        // clients (1, 3) the light ones. Cost-only LPT isolates client 0
+        // on its own shard (pure label 0 — maximal skew); the locality
+        // map pairs opposite-skew clients on both shards while staying
+        // within the greedy cost bound.
+        let h = vec![vec![8, 0], vec![0, 8], vec![8, 0], vec![0, 8]];
+        let costs = [10.0, 0.6, 9.0, 0.5];
+        let bal = ShardMap::balanced(4, 2, &costs);
+        let loc = ShardMap::locality(4, 2, &h, &costs);
+        let bd = bal.label_divergence(&h);
+        let ld = loc.label_divergence(&h);
+        assert!((bd - 1.0 / 3.0).abs() < 1e-9, "balanced divergence {bd}");
+        assert!(ld < 1e-12, "locality divergence {ld}");
+        assert!(ld < bd, "locality must beat cost-only packing on skewed arms");
+        // Opposite-skew pairing on both shards.
+        assert_ne!(loc.shard_of(0), loc.shard_of(2));
+        assert_ne!(loc.shard_of(1), loc.shard_of(3));
+        // Cost balance: within the greedy list-scheduling bound.
+        let load = |s: usize| loc.clients_of(s).iter().map(|&c| costs[c]).sum::<f64>();
+        let max_load = (0..2).map(load).fold(0.0f64, f64::max);
+        assert!(max_load <= crate::sched::greedy_bound(&costs, 2) + 1e-12, "{max_load}");
+    }
+
+    #[test]
+    fn locality_counts_balanced_and_all_shards_covered() {
+        // Shard client counts differ by at most one (each dealing wave
+        // uses every shard at most once), so no shard is ever empty.
+        let h: Vec<Vec<usize>> =
+            (0..7).map(|c| vec![c, 7 - c, (c * 3) % 5]).collect();
+        let costs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0];
+        let m = ShardMap::locality(7, 3, &h, &costs);
+        let counts: Vec<usize> = (0..3).map(|s| m.clients_of(s).len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 7);
+        assert!(counts.iter().all(|&c| c == 2 || c == 3), "{counts:?}");
+        let mut all: Vec<usize> = (0..3).flat_map(|s| m.clients_of(s)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn locality_degenerate_inputs() {
+        // k = 1 collapses to the single shared copy with zero skew.
+        let h = vec![vec![4, 0], vec![0, 4]];
+        let one = ShardMap::locality(2, 1, &h, &[1.0, 2.0]);
+        assert_eq!(one, ShardMap::contiguous(2, 1));
+        assert_eq!(one.label_divergence(&h), 0.0);
+        // Degenerate costs sanitize exactly like the balanced map.
+        let z = ShardMap::locality(2, 2, &h, &[0.0, f64::NAN]);
+        assert_ne!(z.shard_of(0), z.shard_of(1));
+        // All-empty histograms: defined (no labels, no skew).
+        let empty_h = vec![vec![0usize; 3]; 2];
+        let m = ShardMap::locality(2, 2, &empty_h, &[1.0, 1.0]);
+        assert_eq!(m.label_divergence(&empty_h), 0.0);
+        // Empty map.
+        let none = ShardMap::locality(0, 1, &[], &[]);
+        assert_eq!(none.n_clients(), 0);
+        assert_eq!(none.label_divergence(&[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "one label histogram per client")]
+    fn locality_rejects_histogram_mismatch() {
+        ShardMap::locality(3, 2, &[vec![1, 2]], &[1.0, 1.0, 1.0]);
     }
 
     #[test]

@@ -18,8 +18,11 @@ use crate::data::partition::{by_writer, dirichlet, equalize, iid, Partition};
 use crate::data::synthetic::{train_test, SyntheticSpec};
 use crate::data::{femnist, Dataset};
 use crate::metrics::recorder::{RoundRecord, RunRecord};
+use crate::model::layout::Layout;
 use crate::runtime::artifact::Manifest;
+use crate::runtime::mock::MockEngine;
 use crate::runtime::pjrt::{PjrtEngine, PjrtRuntime};
+use crate::runtime::SplitEngine;
 use crate::sim::netmodel::NetModel;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -233,8 +236,8 @@ impl RunSpec {
         )
     }
 
-    /// Human-readable series label (method, plus h for CSE_FSL and the
-    /// shard count when sharded).
+    /// Human-readable series label (method, plus h for CSE_FSL, the
+    /// shard count when sharded, and the map tag for non-default maps).
     pub fn label(&self) -> String {
         let mut l = if self.method == Method::CseFsl {
             format!("{} h={}", self.method, self.h)
@@ -244,53 +247,213 @@ impl RunSpec {
         if self.server_shards > 1 {
             l.push_str(&format!(" k={}", self.server_shards));
         }
-        if self.shard_map == ShardMapKind::Balanced {
-            l.push_str(" bal");
+        if self.shard_map != ShardMapKind::Contiguous {
+            l.push_str(&format!(" {}", self.shard_map.tag()));
         }
         l
     }
+
+    /// Spec-level validation for knobs `TrainConfig::validate` cannot
+    /// see: the locality shard map clusters clients by label
+    /// distribution, which is meaningless under IID data (every client's
+    /// histogram already matches the global one), so it requires a
+    /// non-IID partition. Checked by [`Harness::run_cached`] before
+    /// anything runs (or is read from cache).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shard_map == ShardMapKind::Locality && self.dist == Dist::Iid {
+            return Err(
+                "--shard-map locality requires a non-IID partition (--dist dir | writer): \
+                 under IID data every client sees the global label mix already, so there \
+                 is no locality to exploit"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Which compute backend the [`Harness`] drives.
+///
+/// The backend changes results, so the two backends never share cached
+/// records: mock runs are cached under `cache/mock/`, PJRT runs under
+/// `cache/` (the historical location).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Use the real PJRT engine when the AOT artifacts and runtime are
+    /// available, otherwise fall back to the deterministic mock engine
+    /// (with a note on stderr).
+    Auto,
+    /// Require the real PJRT engine; error out when unavailable.
+    Pjrt,
+    /// Force the deterministic linear-dynamics mock engine — no
+    /// artifacts or Python toolchain needed, bit-reproducible runs.
+    Mock,
+}
+
+impl EngineChoice {
+    /// Parse `auto` / `pjrt` / `mock`.
+    pub fn parse(s: &str) -> Option<EngineChoice> {
+        match s {
+            "auto" => Some(EngineChoice::Auto),
+            "pjrt" => Some(EngineChoice::Pjrt),
+            "mock" => Some(EngineChoice::Mock),
+            _ => None,
+        }
+    }
+}
+
+/// FNV-1a over a string — stable seeds for per-(dataset, aux) mock
+/// engines, so different aux arms train visibly differently.
+fn fnv64(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 /// Engine + manifest cache shared by all drivers in one process.
 pub struct Harness {
-    /// The AOT artifact manifest.
-    pub manifest: Manifest,
-    /// The shared PJRT runtime.
-    pub rt: Arc<PjrtRuntime>,
+    /// The AOT artifact manifest (`None` on the mock backend).
+    pub manifest: Option<Manifest>,
+    /// The shared PJRT runtime (`None` on the mock backend).
+    pub rt: Option<Arc<PjrtRuntime>>,
     engines: BTreeMap<(String, String), Arc<PjrtEngine>>,
+    mocks: BTreeMap<(String, String), Arc<MockEngine>>,
     /// Output directory (tables, CSVs, and the `cache/` subdirectory).
     pub out_dir: PathBuf,
 }
 
 impl Harness {
-    /// Load the manifest, start the PJRT runtime, and prepare `out_dir`.
+    /// [`Harness::with_engine`] at [`EngineChoice::Auto`]: PJRT when the
+    /// artifacts are present, the mock engine otherwise.
     pub fn new(out_dir: impl AsRef<Path>) -> Result<Self, String> {
-        let dir = crate::runtime::artifacts_dir();
-        let manifest = Manifest::load(&dir)
-            .map_err(|e| format!("{e}\nhint: run `make artifacts` first"))?;
-        let rt = PjrtRuntime::new().map_err(|e| e.to_string())?;
-        std::fs::create_dir_all(out_dir.as_ref().join("cache"))
+        Harness::with_engine(out_dir, EngineChoice::Auto)
+    }
+
+    /// Resolve the compute backend, load the manifest + PJRT runtime
+    /// when applicable, and prepare `out_dir` (including the
+    /// backend-separated cache directories).
+    pub fn with_engine(
+        out_dir: impl AsRef<Path>,
+        choice: EngineChoice,
+    ) -> Result<Self, String> {
+        let pjrt = if choice == EngineChoice::Mock {
+            None
+        } else {
+            let dir = crate::runtime::artifacts_dir();
+            let loaded = Manifest::load(&dir).map_err(|e| e.to_string()).and_then(|m| {
+                PjrtRuntime::new().map(|rt| (m, rt)).map_err(|e| e.to_string())
+            });
+            match loaded {
+                Ok(pair) => Some(pair),
+                Err(e) => {
+                    if choice == EngineChoice::Pjrt {
+                        return Err(format!("{e}\nhint: run `make artifacts` first"));
+                    }
+                    eprintln!(
+                        "note: PJRT backend unavailable ({e}); falling back to the \
+                         deterministic mock engine (results cached under cache/mock/). \
+                         Pass --engine pjrt to make this an error."
+                    );
+                    None
+                }
+            }
+        };
+        let (manifest, rt) = match pjrt {
+            Some((m, rt)) => (Some(m), Some(rt)),
+            None => (None, None),
+        };
+        std::fs::create_dir_all(out_dir.as_ref().join("cache").join("mock"))
             .map_err(|e| e.to_string())?;
         Ok(Harness {
             manifest,
             rt,
             engines: BTreeMap::new(),
+            mocks: BTreeMap::new(),
             out_dir: out_dir.as_ref().to_path_buf(),
         })
     }
 
-    /// The (cached) engine for one (dataset, aux) configuration.
+    /// Whether runs execute on the mock backend.
+    pub fn mock_mode(&self) -> bool {
+        self.manifest.is_none()
+    }
+
+    /// Short backend name for reports: `"pjrt"` or `"mock"`.
+    pub fn backend(&self) -> &'static str {
+        if self.mock_mode() {
+            "mock"
+        } else {
+            "pjrt"
+        }
+    }
+
+    /// The AOT manifest, or a clear error on the mock backend (the
+    /// closed-form table drivers need the real layout sizes).
+    pub fn manifest(&self) -> Result<&Manifest, String> {
+        self.manifest.as_ref().ok_or_else(|| {
+            "this command needs the AOT artifact manifest: run `make artifacts` \
+             and retry (the mock backend has no real layouts)"
+                .to_string()
+        })
+    }
+
+    /// The (cached) PJRT engine for one (dataset, aux) configuration.
     pub fn engine(&mut self, dataset: &str, aux: &str) -> Result<Arc<PjrtEngine>, String> {
         let key = (dataset.to_string(), aux.to_string());
         if let Some(e) = self.engines.get(&key) {
             return Ok(e.clone());
         }
+        let (manifest, rt) = match (&self.manifest, &self.rt) {
+            (Some(m), Some(rt)) => (m, rt.clone()),
+            _ => return Err("no PJRT backend (mock mode); use mock_engine".into()),
+        };
         let e = Arc::new(
-            PjrtEngine::new(self.rt.clone(), &self.manifest, dataset, aux)
-                .map_err(|e| e.to_string())?,
+            PjrtEngine::new(rt, manifest, dataset, aux).map_err(|e| e.to_string())?,
         );
         self.engines.insert(key, e.clone());
         Ok(e)
+    }
+
+    /// The (cached) mock engine for one (dataset, aux) configuration:
+    /// geometry matches the dataset (input length, class count), target
+    /// dynamics are seeded from the (dataset, aux) names so different
+    /// aux arms train visibly differently — a deterministic stand-in
+    /// for the real engines. Model-part sizes are fixed (every aux arch
+    /// gets the same small aux network), so the aux-parameter *axis* of
+    /// the architecture sweeps (figs. 7/8) is degenerate on this
+    /// backend; [`Harness::aux_params`] reports the true (constant)
+    /// mock size rather than inventing per-arch numbers.
+    pub fn mock_engine(&mut self, dataset: &str, aux: &str) -> Result<Arc<MockEngine>, String> {
+        let key = (dataset.to_string(), aux.to_string());
+        if let Some(e) = self.mocks.get(&key) {
+            return Ok(e.clone());
+        }
+        let (input_len, classes) = match dataset {
+            "cifar" => (32 * 32 * 3, 10),
+            "femnist" => (femnist::SIDE * femnist::SIDE, femnist::CLASSES),
+            other => return Err(format!("unknown dataset {other}")),
+        };
+        let seed = 0xC5EF5C ^ fnv64(dataset) ^ fnv64(aux).rotate_left(17);
+        let e = Arc::new(MockEngine::new(20, classes, input_len, 32, 96, 24, 64, seed));
+        self.mocks.insert(key, e.clone());
+        Ok(e)
+    }
+
+    /// Parameter count of one auxiliary architecture: manifest-backed on
+    /// the PJRT backend, the mock engine's fixed aux size otherwise.
+    pub fn aux_params(&mut self, dataset: &str, aux: &str) -> Result<usize, String> {
+        if let Some(m) = &self.manifest {
+            return Ok(m
+                .config(dataset)
+                .map_err(|e| e.to_string())?
+                .aux(aux)
+                .map_err(|e| e.to_string())?
+                .size);
+        }
+        Ok(self.mock_engine(dataset, aux)?.aux_size())
     }
 
     /// Build train/test datasets + partition for a spec (deterministic in
@@ -347,64 +510,101 @@ impl Harness {
         }
     }
 
-    /// Run (or load from cache) one spec.
+    /// Cache file of one spec — backend-separated, since the backend
+    /// changes results (the `RunSpec::key` contract, applied one level
+    /// up: the two backends never share a cache namespace).
+    fn cache_path(&self, spec: &RunSpec) -> PathBuf {
+        let dir = self.out_dir.join("cache");
+        let dir = if self.mock_mode() { dir.join("mock") } else { dir };
+        dir.join(format!("{}.json", spec.key()))
+    }
+
+    /// Run (or load from cache) one spec on the resolved backend.
     pub fn run_cached(&mut self, spec: &RunSpec) -> Result<RunRecord, String> {
-        let cache = self.out_dir.join("cache").join(format!("{}.json", spec.key()));
+        spec.validate()?;
+        let cache = self.cache_path(spec);
         if let Ok(text) = std::fs::read_to_string(&cache) {
             if let Ok(rec) = run_from_json(&text) {
                 return Ok(rec);
             }
         }
-        let engine = self.engine(&spec.dataset, &spec.aux)?;
         let (train, test, partition) = self.data(spec);
-        let ds_cfg = self.manifest.config(&spec.dataset).map_err(|e| e.to_string())?;
-        let aux_cfg = ds_cfg.aux(&spec.aux).map_err(|e| e.to_string())?;
-        let w = &spec.workload;
-        // Aggregate once per local epoch (paper setting): epoch =
-        // batches_per_epoch local batches = bpe/h rounds.
-        let bpe = (w.train_per_client / engine_batch(&engine)).max(1);
-        let agg_every = (bpe / spec.h).max(1);
-        let cfg = TrainConfig {
-            method: spec.method,
-            h: spec.h,
-            rounds: w.rounds,
-            agg_every,
-            lr0: spec.lr0,
-            lr_decay_rate: 0.99,
-            lr_decay_every: 10,
-            server_lr_scale: 0.25,
-            clip: spec.method.default_clip(),
-            participation: spec.participation,
-            seed: spec.seed,
-            eval_every: w.eval_every,
-            eval_max_batches: w.eval_max_batches,
-            arrival: spec.arrival,
-            track_grad_norms: true,
-            parallelism: spec.parallelism,
-            server_shards: spec.server_shards,
-            sched: spec.sched,
-            shard_map: spec.shard_map,
+        let rec = if self.mock_mode() {
+            let engine = self.mock_engine(&spec.dataset, &spec.aux)?;
+            execute_spec(engine.as_ref(), spec, &train, &test, partition, None, None, None)?
+        } else {
+            let engine = self.engine(&spec.dataset, &spec.aux)?;
+            let ds_cfg =
+                self.manifest()?.config(&spec.dataset).map_err(|e| e.to_string())?;
+            let aux_cfg = ds_cfg.aux(&spec.aux).map_err(|e| e.to_string())?;
+            execute_spec(
+                engine.as_ref(),
+                spec,
+                &train,
+                &test,
+                partition,
+                Some(&ds_cfg.client_layout),
+                Some(&ds_cfg.server_layout),
+                Some(&aux_cfg.layout),
+            )?
         };
-        let setup = TrainerSetup {
-            train: &train,
-            test: &test,
-            partition,
-            net: NetModel::edge_default(),
-            client_layout: Some(&ds_cfg.client_layout),
-            server_layout: Some(&ds_cfg.server_layout),
-            aux_layout: Some(&aux_cfg.layout),
-            label: spec.label(),
-        };
-        let mut trainer = Trainer::new(engine.as_ref(), cfg, setup)?;
-        let rec = trainer.run().map_err(|e| e.to_string())?;
         let _ = std::fs::write(&cache, run_to_json(&rec).pretty());
         Ok(rec)
     }
 }
 
-fn engine_batch(e: &PjrtEngine) -> usize {
-    use crate::runtime::SplitEngine;
-    e.batch()
+/// Build the `TrainConfig` + `TrainerSetup` for one spec and run it over
+/// any [`SplitEngine`] (PJRT or mock — the backends share every line of
+/// driver logic, only layouts and the engine differ).
+#[allow(clippy::too_many_arguments)]
+fn execute_spec<E: SplitEngine>(
+    engine: &E,
+    spec: &RunSpec,
+    train: &Dataset,
+    test: &Dataset,
+    partition: Partition,
+    client_layout: Option<&Layout>,
+    server_layout: Option<&Layout>,
+    aux_layout: Option<&Layout>,
+) -> Result<RunRecord, String> {
+    let w = &spec.workload;
+    // Aggregate once per local epoch (paper setting): epoch =
+    // batches_per_epoch local batches = bpe/h rounds.
+    let bpe = (w.train_per_client / engine.batch()).max(1);
+    let agg_every = (bpe / spec.h).max(1);
+    let cfg = TrainConfig {
+        method: spec.method,
+        h: spec.h,
+        rounds: w.rounds,
+        agg_every,
+        lr0: spec.lr0,
+        lr_decay_rate: 0.99,
+        lr_decay_every: 10,
+        server_lr_scale: 0.25,
+        clip: spec.method.default_clip(),
+        participation: spec.participation,
+        seed: spec.seed,
+        eval_every: w.eval_every,
+        eval_max_batches: w.eval_max_batches,
+        arrival: spec.arrival,
+        track_grad_norms: true,
+        parallelism: spec.parallelism,
+        server_shards: spec.server_shards,
+        sched: spec.sched,
+        shard_map: spec.shard_map,
+    };
+    let setup = TrainerSetup {
+        train,
+        test,
+        partition,
+        net: NetModel::edge_default(),
+        client_layout,
+        server_layout,
+        aux_layout,
+        label: spec.label(),
+    };
+    let mut trainer = Trainer::new(engine, cfg, setup)?;
+    trainer.run().map_err(|e| e.to_string())
 }
 
 // ------------------------------------------------ RunRecord <-> JSON
@@ -458,6 +658,7 @@ pub fn run_to_json(r: &RunRecord) -> Json {
                 r.server_updates_per_shard.iter().map(|&u| Json::num(u as f64)).collect(),
             ),
         ),
+        ("shard_label_divergence", Json::num(r.shard_label_divergence)),
     ])
 }
 
@@ -527,6 +728,17 @@ pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
                 .map_err(err)?,
             None => Vec::new(),
         },
+        // Absent in pre-locality cache entries — treated as corrupt so
+        // the entry falls through to a (deterministic) re-run. Unlike
+        // the observability-only fields above, this metric feeds the
+        // fig_staleness placement comparison: defaulting it to 0 would
+        // report the best possible placement score for records that
+        // never measured it.
+        shard_label_divergence: j
+            .get("shard_label_divergence")
+            .map_err(err)?
+            .as_f64()
+            .map_err(err)?,
     })
 }
 
@@ -584,6 +796,111 @@ mod tests {
     }
 
     #[test]
+    fn engine_choice_parse() {
+        assert_eq!(EngineChoice::parse("auto"), Some(EngineChoice::Auto));
+        assert_eq!(EngineChoice::parse("pjrt"), Some(EngineChoice::Pjrt));
+        assert_eq!(EngineChoice::parse("mock"), Some(EngineChoice::Mock));
+        assert_eq!(EngineChoice::parse("cuda"), None);
+    }
+
+    #[test]
+    fn locality_spec_requires_non_iid() {
+        let mut spec = RunSpec {
+            dataset: "cifar".into(),
+            aux: "cnn27".into(),
+            method: Method::CseFsl,
+            h: 5,
+            n_clients: 8,
+            participation: 0,
+            dist: Dist::Iid,
+            arrival: ArrivalOrder::ByDelay,
+            lr0: 0.05,
+            seed: 1,
+            workload: cifar_workload(Scale::Quick),
+            parallelism: Parallelism::Sequential,
+            server_shards: 2,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Locality,
+        };
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("non-IID"), "{err}");
+        assert!(err.contains("locality"), "{err}");
+        // Any non-IID distribution satisfies the requirement...
+        for dist in [Dist::NonIidDirichlet, Dist::NonIidWriter] {
+            spec.dist = dist;
+            assert!(spec.validate().is_ok(), "{dist:?}");
+        }
+        // ...and the other maps never trip it.
+        for map in [ShardMapKind::Contiguous, ShardMapKind::Balanced] {
+            spec.shard_map = map;
+            spec.dist = Dist::Iid;
+            assert!(spec.validate().is_ok(), "{map:?}");
+        }
+    }
+
+    #[test]
+    fn mock_harness_runs_locality_end_to_end() {
+        // The mock backend makes the full figure pipeline runnable with
+        // no artifacts: spec → engine → trainer → cached RunRecord. This
+        // is the end-to-end path for `--shard-map locality` on a real
+        // non-IID split (by-writer: every client holds whole writers,
+        // so no client is ever empty).
+        let dir = std::env::temp_dir().join(format!(
+            "cse_fsl_mock_harness_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+        assert!(h.mock_mode());
+        assert_eq!(h.backend(), "mock");
+        assert!(h.manifest().is_err(), "mock mode must not fake a manifest");
+        let mut wl = femnist_workload(Scale::Quick);
+        wl.rounds = 3;
+        let spec = RunSpec {
+            dataset: "femnist".into(),
+            aux: "cnn8".into(),
+            method: Method::CseFsl,
+            h: 2,
+            n_clients: 6,
+            participation: 0,
+            dist: Dist::NonIidWriter,
+            arrival: ArrivalOrder::ByDelay,
+            lr0: 0.05,
+            seed: 1,
+            workload: wl,
+            parallelism: Parallelism::Sequential,
+            server_shards: 2,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Locality,
+        };
+        let loc = h.run_cached(&spec).unwrap();
+        assert_eq!(loc.rounds.len(), 3);
+        assert!(loc.label.contains("loc"), "{}", loc.label);
+        // The skew metric is live and well-formed (the strict
+        // locality-vs-balanced ordering is pinned on a crafted partition
+        // in tests/determinism_golden.rs, where it is provable).
+        assert!(
+            (0.0..=1.0).contains(&loc.shard_label_divergence),
+            "{}",
+            loc.shard_label_divergence
+        );
+        // Cached under the mock namespace, and the cache replays.
+        assert!(dir.join("cache").join("mock").join(format!("{}.json", spec.key())).is_file());
+        let replay = h.run_cached(&spec).unwrap();
+        assert_eq!(run_to_json(&loc).pretty(), run_to_json(&replay).pretty());
+        // The balanced map on the same spec is a distinct cached run.
+        let bal = h
+            .run_cached(&RunSpec { shard_map: ShardMapKind::Balanced, ..spec.clone() })
+            .unwrap();
+        assert!(bal.label.contains("bal"), "{}", bal.label);
+        // An IID locality spec is rejected before it can run.
+        let iid = RunSpec { dist: Dist::Iid, ..spec };
+        assert!(h.run_cached(&iid).unwrap_err().contains("non-IID"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn runspec_keys_unique_per_field() {
         let base = RunSpec {
             dataset: "cifar".into(),
@@ -631,6 +948,15 @@ mod tests {
         assert!(other.key().contains("-mcont-"), "{}", other.key());
         assert!(balanced.label().contains("bal"));
         assert!(!other.label().contains("bal"));
+        // The locality map is a third cohort assignment: own key segment
+        // (`-mloc`), own label tag, distinct from both other maps.
+        let mut locality = balanced.clone();
+        locality.shard_map = ShardMapKind::Locality;
+        locality.dist = Dist::NonIidDirichlet;
+        assert_ne!(locality.key(), balanced.key());
+        assert!(locality.key().contains("-mloc-"), "{}", locality.key());
+        assert!(locality.label().contains("loc"));
+        assert!(!balanced.label().contains("loc"));
         let mut other = base.clone();
         other.dist = Dist::NonIidDirichlet;
         assert_ne!(base.key(), other.key());
@@ -664,6 +990,7 @@ mod tests {
             lane_busy: vec![0.1, 0.2],
             server_storage_params: 123,
             server_updates_per_shard: vec![4, 6],
+            shard_label_divergence: 0.125,
         };
         let rt = run_from_json(&run_to_json(&rec).pretty()).unwrap();
         assert_eq!(rt.label, "x");
@@ -674,6 +1001,15 @@ mod tests {
         assert_eq!(rt.server_updates_per_shard, vec![4, 6]);
         assert_eq!(rt.critical_path, 0.2);
         assert_eq!(rt.lane_busy, vec![0.1, 0.2]);
+        assert_eq!(rt.shard_label_divergence, 0.125);
+        // Pre-locality cache entries (no skew field) must NOT parse:
+        // the skew metric feeds a comparison figure, so a record that
+        // never measured it falls through to a re-run instead of
+        // claiming the perfect score 0.
+        let legacy = run_to_json(&rec)
+            .pretty()
+            .replace("\"shard_label_divergence\"", "\"legacy_skew\"");
+        assert!(run_from_json(&legacy).is_err(), "pre-locality entry must re-run");
         // Pre-scheduling cache entries (no fields) still parse.
         let legacy = run_to_json(&rec)
             .pretty()
@@ -716,6 +1052,7 @@ mod tests {
             lane_busy: Vec::new(),
             server_storage_params: 0,
             server_updates_per_shard: Vec::new(),
+            shard_label_divergence: 0.0,
         };
         let t = curve_table("fig", &[&rec]);
         assert!(t.contains("42.0%"));

@@ -185,13 +185,7 @@ pub fn fig7(harness: &mut Harness, scale: Scale) -> Result<String, String> {
                 ..base_spec("cifar", arch, w)
             };
             let mut rec = harness.run_cached(&spec)?;
-            let aux_params = harness
-                .manifest
-                .config("cifar")
-                .map_err(|e| e.to_string())?
-                .aux(arch)
-                .map_err(|e| e.to_string())?
-                .size;
+            let aux_params = harness.aux_params("cifar", arch)?;
             rec.label = format!("{arch} ({aux_params})");
             runs.push(rec);
         }
@@ -230,13 +224,7 @@ pub fn fig8(harness: &mut Harness, scale: Scale) -> Result<String, String> {
                 ..base_spec("femnist", arch, w)
             };
             let mut rec = harness.run_cached(&spec)?;
-            let aux_params = harness
-                .manifest
-                .config("femnist")
-                .map_err(|e| e.to_string())?
-                .aux(arch)
-                .map_err(|e| e.to_string())?
-                .size;
+            let aux_params = harness.aux_params("femnist", arch)?;
             rec.label = format!("{arch} ({aux_params})");
             runs.push(rec);
         }
@@ -320,8 +308,14 @@ pub fn fig9(harness: &mut Harness, scale: Scale) -> Result<String, String> {
 /// executor throughput at k·|w_s| storage while shard trajectories
 /// diverge between aggregations (staleness), which is what the
 /// accuracy column measures. The contiguous and balanced shard maps
-/// run side by side at every k > 1, so the figure also shows what
-/// load-balanced assignment does to the same trade-off.
+/// run side by side at every k > 1 on the IID sweep, and a second arm
+/// compares all three maps (contiguous / balanced / locality) on the
+/// non-IID splits — Dirichlet CIFAR and by-writer F-EMNIST — where the
+/// `skew` column (mean per-shard label divergence from the global mix,
+/// `RunRecord::shard_label_divergence`) shows what each placement does
+/// to the gradient mix every shard copy sees. Workloads are pinned to
+/// the `ci` preset even at `--scale paper` (the full paper workload is
+/// hours on one box; EXPERIMENTS.md documents the protocol).
 pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, String> {
     let w = cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale });
     let n_clients = 8usize;
@@ -347,8 +341,8 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
         "== Accuracy vs server shards k (staleness cost of sharding) ==\n",
     );
     out.push_str(&format!(
-        "{:<16} {:>10} {:>12} {:>12} {:>10}\n",
-        "series", "final_acc", "storage_Mp", "sim_time_s", "sched_eff"
+        "{:<16} {:>10} {:>12} {:>12} {:>10} {:>8}\n",
+        "series", "final_acc", "storage_Mp", "sim_time_s", "sched_eff", "skew"
     ));
     let mut csv = Csv::new(&[
         "series",
@@ -358,16 +352,18 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
         "server_storage_params",
         "sim_time",
         "sched_efficiency",
+        "shard_divergence",
     ]);
     for spec in &specs {
         let rec = harness.run_cached(spec)?;
         out.push_str(&format!(
-            "{:<16} {:>9.1}% {:>12.3} {:>12.2} {:>10.2}\n",
+            "{:<16} {:>9.1}% {:>12.3} {:>12.2} {:>10.2} {:>8.3}\n",
             rec.label,
             rec.final_accuracy * 100.0,
             rec.server_storage_params as f64 / 1e6,
             rec.sim_time,
             rec.sched_efficiency(),
+            rec.shard_label_divergence,
         ));
         csv.row(&[
             rec.label.clone(),
@@ -377,6 +373,7 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
             rec.server_storage_params.to_string(),
             format!("{:.4}", rec.sim_time),
             format!("{:.4}", rec.sched_efficiency()),
+            format!("{:.4}", rec.shard_label_divergence),
         ]);
     }
     out.push_str(
@@ -384,6 +381,73 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
          \x20storage grows as k·|w_s|, sim time falls as lanes parallelize arrivals)\n",
     );
     let _ = csv.write_to(&harness.out_dir.join("fig_staleness.csv"));
+
+    // Shard placement on the non-IID arms: which clients share a copy
+    // decides the label mix that copy trains on between aggregations.
+    out.push_str(
+        "\n== Shard placement on non-IID splits (contiguous / balanced / locality) ==\n",
+    );
+    out.push_str(&format!(
+        "{:<24} {:>8} {:>10} {:>8} {:>12}\n",
+        "series", "dist", "final_acc", "skew", "sim_time_s"
+    ));
+    let mut csv = Csv::new(&[
+        "series",
+        "dataset",
+        "dist",
+        "k",
+        "shard_map",
+        "final_accuracy",
+        "shard_divergence",
+        "sim_time",
+    ]);
+    for (dataset, aux, dist, h) in [
+        ("cifar", "cnn27", Dist::NonIidDirichlet, h),
+        ("femnist", "cnn8", Dist::NonIidWriter, 2),
+    ] {
+        let w = match dataset {
+            "cifar" => cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale }),
+            _ => femnist_workload(if scale == Scale::Paper { Scale::Ci } else { scale }),
+        };
+        for &k in &[2usize, 4] {
+            for map in
+                [ShardMapKind::Contiguous, ShardMapKind::Balanced, ShardMapKind::Locality]
+            {
+                let spec = RunSpec {
+                    h,
+                    n_clients,
+                    dist,
+                    server_shards: k,
+                    shard_map: map,
+                    ..base_spec(dataset, aux, w)
+                };
+                let rec = harness.run_cached(&spec)?;
+                out.push_str(&format!(
+                    "{:<24} {:>8} {:>9.1}% {:>8.3} {:>12.2}\n",
+                    format!("{} {}", dataset, rec.label),
+                    dist.tag(),
+                    rec.final_accuracy * 100.0,
+                    rec.shard_label_divergence,
+                    rec.sim_time,
+                ));
+                csv.row(&[
+                    rec.label.clone(),
+                    dataset.to_string(),
+                    dist.tag().to_string(),
+                    k.to_string(),
+                    map.to_string(),
+                    format!("{:.4}", rec.final_accuracy),
+                    format!("{:.4}", rec.shard_label_divergence),
+                    format!("{:.4}", rec.sim_time),
+                ]);
+            }
+        }
+    }
+    out.push_str(
+        "(skew = mean per-shard label divergence from the global mix, 0 = every copy\n\
+         \x20trains on the global label distribution; locality minimizes it by design)\n",
+    );
+    let _ = csv.write_to(&harness.out_dir.join("fig_staleness_noniid.csv"));
     Ok(out)
 }
 

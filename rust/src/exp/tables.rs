@@ -12,7 +12,7 @@ use super::common::{cifar_workload, femnist_workload, Dist, Harness, RunSpec, Sc
 /// storage, evaluated at the paper's CIFAR-10 operating point
 /// (n=5, |D_i|=10k, q=6·6·64·4 B) — plus the n-scaling the paper argues.
 pub fn table2_report(harness: &mut Harness) -> Result<String, String> {
-    let cfg = harness.manifest.config("cifar").map_err(|e| e.to_string())?;
+    let cfg = harness.manifest()?.config("cifar").map_err(|e| e.to_string())?;
     let aux = cfg.aux("mlp").map_err(|e| e.to_string())?;
     let w = WireSizes::new(cfg.smashed_size, cfg.client_layout.total, aux.size);
     let sizes = ModelSizes {
@@ -62,7 +62,7 @@ pub fn table34_report(harness: &mut Harness) -> Result<String, String> {
         ("femnist", "Table IV: F-EMNIST auxiliary networks",
          vec!["mlp", "cnn64", "cnn32", "cnn8", "cnn2"]),
     ] {
-        let cfg = harness.manifest.config(ds).map_err(|e| e.to_string())?;
+        let cfg = harness.manifest()?.config(ds).map_err(|e| e.to_string())?;
         let whole = cfg.client_layout.total + cfg.server_layout.total;
         out.push_str(&format!("== {title} ==\n"));
         out.push_str(&format!(

@@ -12,7 +12,9 @@
 
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism};
 use cse_fsl::coordinator::methods::Method;
-use cse_fsl::exp::common::{cifar_workload, femnist_workload, Dist, Harness, RunSpec, Scale};
+use cse_fsl::exp::common::{
+    cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale,
+};
 use cse_fsl::exp::{figures, tables};
 use cse_fsl::util::cli::Command;
 use cse_fsl::util::logging;
@@ -83,8 +85,15 @@ fn cmd_run(argv: &[String]) -> i32 {
         .opt(
             "shard-map",
             "contiguous",
-            "client -> shard assignment: contiguous | balanced \
-             (balanced needs --server-shards >= 2 and changes results, cached per map)",
+            "client -> shard assignment: contiguous | balanced | locality \
+             (balanced/locality need --server-shards >= 2; locality also needs a \
+             non-IID --dist; both change results, cached per map)",
+        )
+        .opt(
+            "engine",
+            "auto",
+            "compute backend: auto | pjrt | mock (mock = deterministic \
+             linear-dynamics engine, no AOT artifacts needed; cached under cache/mock/)",
         )
         .flag("shuffled-arrivals", "randomize server consumption order (Fig. 6)");
     let args = match cmd.parse(argv) {
@@ -136,9 +145,11 @@ fn cmd_run(argv: &[String]) -> i32 {
             sched: args.parse_as("sched").map_err(|e| e.to_string())?,
             shard_map: args.parse_as("shard-map").map_err(|e| e.to_string())?,
         };
-        let mut harness = Harness::new(args.get("out").unwrap())?;
+        let engine =
+            EngineChoice::parse(args.get("engine").unwrap()).ok_or("bad --engine")?;
+        let mut harness = Harness::with_engine(args.get("out").unwrap(), engine)?;
         let rec = harness.run_cached(&spec)?;
-        println!("== {} ==", rec.label);
+        println!("== {} [engine: {}] ==", rec.label, harness.backend());
         println!("round  train_loss  server_loss  acc");
         for r in &rec.rounds {
             println!(
@@ -172,6 +183,11 @@ fn cmd_run(argv: &[String]) -> i32 {
             let lanes: Vec<String> =
                 rec.lane_busy.iter().map(|b| format!("{b:.2}")).collect();
             println!("lane busy (s): [{}]", lanes.join(", "));
+            println!(
+                "shard label divergence: {:.4} (0 = every shard copy trains on \
+                 the global label mix)",
+                rec.shard_label_divergence,
+            );
         }
         let csv = harness.out_dir.join(format!("run_{}.csv", rec.label.replace([' ', '='], "_")));
         rec.write_csv(&csv).map_err(|e| e.to_string())?;
@@ -181,22 +197,28 @@ fn cmd_run(argv: &[String]) -> i32 {
     run().map(|_| 0).unwrap_or_else(fail)
 }
 
-fn figure_table_args(argv: &[String], what: &str) -> Result<(String, Scale, String), String> {
+fn figure_table_args(
+    argv: &[String],
+    what: &str,
+) -> Result<(String, Scale, String, EngineChoice), String> {
     let cmd =
         Command::new(&format!("cse-fsl {what}"), &format!("regenerate a paper {what}"))
             .positional("id", "which one (or 'all')")
             .opt("scale", "ci", "quick | ci | paper")
-            .opt("out", "results", "output directory");
+            .opt("out", "results", "output directory")
+            .opt("engine", "auto", "compute backend: auto | pjrt | mock");
     let args = cmd.parse(argv).map_err(|e| format!("{e}\n\n{}", cmd.usage()))?;
     let id = args.positional("id").unwrap().to_string();
     let scale = Scale::parse(args.get("scale").unwrap()).ok_or("bad --scale")?;
-    Ok((id, scale, args.get("out").unwrap().to_string()))
+    let engine = EngineChoice::parse(args.get("engine").unwrap()).ok_or("bad --engine")?;
+    Ok((id, scale, args.get("out").unwrap().to_string(), engine))
 }
 
 fn cmd_figure(argv: &[String]) -> i32 {
     let run = || -> Result<(), String> {
-        let (id, scale, out) = figure_table_args(argv, "figure")?;
-        let mut harness = Harness::new(&out)?;
+        let (id, scale, out, engine) = figure_table_args(argv, "figure")?;
+        let mut harness = Harness::with_engine(&out, engine)?;
+        println!("(engine backend: {})", harness.backend());
         let ids: Vec<&str> = if id == "all" {
             vec!["3", "4", "5", "6", "7", "8", "9", "k"]
         } else {
@@ -224,8 +246,8 @@ fn cmd_figure(argv: &[String]) -> i32 {
 
 fn cmd_table(argv: &[String]) -> i32 {
     let run = || -> Result<(), String> {
-        let (id, scale, out) = figure_table_args(argv, "table")?;
-        let mut harness = Harness::new(&out)?;
+        let (id, scale, out, engine) = figure_table_args(argv, "table")?;
+        let mut harness = Harness::with_engine(&out, engine)?;
         let ids: Vec<&str> =
             if id == "all" { vec!["2", "3", "4", "5"] } else { vec![id.as_str()] };
         for id in ids {

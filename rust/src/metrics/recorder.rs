@@ -67,6 +67,15 @@ pub struct RunRecord {
     /// shard order (length = copy count: k for the sharded single-copy
     /// methods, n for the per-client-copy methods).
     pub server_updates_per_shard: Vec<u64>,
+    /// Shard-skew metric: mean per-shard total-variation distance
+    /// between each shard's aggregate label distribution and the global
+    /// one, in `[0, 1]` (`ShardMap::label_divergence`). 0 means every
+    /// server copy trains on the global label mix — always true for the
+    /// single-copy methods at k = 1. The per-client-copy methods
+    /// (FSL_MC / FSL_AN) report the skew of their n per-client cohorts,
+    /// which is large under any non-IID split by construction. The
+    /// locality shard map minimizes it on the sharded non-IID arms.
+    pub shard_label_divergence: f64,
 }
 
 impl RunRecord {
@@ -171,6 +180,7 @@ impl RunRecord {
                         .collect(),
                 ),
             ),
+            ("shard_label_divergence", Json::num(self.shard_label_divergence)),
         ])
     }
 }
@@ -217,6 +227,7 @@ mod tests {
             lane_busy: vec![0.5, 0.75],
             server_storage_params: 1_000,
             server_updates_per_shard: vec![3, 5],
+            shard_label_divergence: 0.25,
         }
     }
 
@@ -249,6 +260,7 @@ mod tests {
         assert_eq!(j.get("critical_path").unwrap().as_f64().unwrap(), 0.75);
         assert_eq!(j.get("sched_efficiency").unwrap().as_f64().unwrap(), 0.75);
         assert_eq!(j.get("lane_busy").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("shard_label_divergence").unwrap().as_f64().unwrap(), 0.25);
     }
 
     #[test]

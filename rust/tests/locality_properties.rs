@@ -1,0 +1,214 @@
+//! Locality shard-map invariants (util/prop harness).
+//!
+//! 1. **Permutation invariance** — permuting the client inputs
+//!    (histograms + costs) permutes the grouping with them: the induced
+//!    partition of the *original* clients is identical up to shard
+//!    relabeling (client ids only break ties between data-identical
+//!    clients).
+//! 2. **Coverage + balance** — every client lands in exactly one shard,
+//!    no shard is empty, shard client counts differ by at most one, and
+//!    per-shard cost stays within one item of the greedy
+//!    list-scheduling bound.
+//! 3. **One-hot optimality** — in the α → 0 limit of the Dirichlet
+//!    protocol (every client holds a single label, equal sample
+//!    counts, uniform costs, k | n) the wave dealing provably minimizes
+//!    the shard-skew metric: per (shard, label) counts are the balanced
+//!    ⌊m/k⌋/⌈m/k⌉ allocation, so no equal-size grouping — contiguous
+//!    and cost-balanced included — can score lower. Checked per case.
+//! 4. **Dirichlet(α = 0.1) splits** — over fixed real `dirichlet`
+//!    partitions (harsher skew than the α = 0.3 the CIFAR figure arm
+//!    runs) the locality map's skew is lower than the contiguous
+//!    and balanced maps' *on average*, with a solid pointwise win rate
+//!    (pointwise ≤ on arbitrary mixed histograms is not a theorem — a
+//!    lucky id ordering can hand contiguous a near-optimal grouping —
+//!    which is exactly why the per-case guarantee is stated and checked
+//!    in the one-hot limit above).
+
+use cse_fsl::coordinator::server::ShardMap;
+use cse_fsl::data::partition::dirichlet;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::prop_assert;
+use cse_fsl::sched;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+/// Shard cohorts as a canonical set-of-sets (sorted members, sorted
+/// groups, empties dropped) — the "up to relabeling" comparison form.
+fn canon(groups: Vec<Vec<usize>>) -> Vec<Vec<usize>> {
+    let mut g: Vec<Vec<usize>> = groups
+        .into_iter()
+        .map(|mut v| {
+            v.sort_unstable();
+            v
+        })
+        .filter(|v| !v.is_empty())
+        .collect();
+    g.sort();
+    g
+}
+
+/// Random label-skewed histograms: every client gets a dominant label
+/// plus light noise on the others (a Dirichlet-small-α caricature).
+fn skewed_hists(rng: &mut Rng, n: usize, classes: usize) -> Vec<Vec<usize>> {
+    (0..n)
+        .map(|_| {
+            let mut h = vec![0usize; classes];
+            for v in h.iter_mut() {
+                *v = rng.below(4) as usize;
+            }
+            let dom = rng.below(classes as u64) as usize;
+            h[dom] += 30 + rng.below(20) as usize;
+            h
+        })
+        .collect()
+}
+
+#[test]
+fn prop_locality_permutation_invariant_up_to_relabeling() {
+    prop::check("locality invariant to client permutation", |rng| {
+        let n = 2 + rng.below(10) as usize; // 2..=11 clients
+        let k = 2 + rng.below(n as u64 - 1) as usize; // 2..=n shards
+        let classes = 2 + rng.below(5) as usize;
+        let hists = skewed_hists(rng, n, classes);
+        // Continuous costs: ties between distinct clients have measure
+        // zero, so the id tie-break never decides between them.
+        let costs: Vec<f64> = (0..n).map(|_| rng.uniform_in(0.1, 10.0)).collect();
+        let m1 = ShardMap::locality(n, k, &hists, &costs);
+        let perm = rng.permutation(n);
+        let ph: Vec<Vec<usize>> = (0..n).map(|i| hists[perm[i]].clone()).collect();
+        let pc: Vec<f64> = (0..n).map(|i| costs[perm[i]]).collect();
+        let m2 = ShardMap::locality(n, k, &ph, &pc);
+        // Map the permuted grouping back to original client ids.
+        let g1 = canon((0..k).map(|s| m1.clients_of(s)).collect());
+        let g2 = canon(
+            (0..k)
+                .map(|s| m2.clients_of(s).iter().map(|&i| perm[i]).collect())
+                .collect(),
+        );
+        prop_assert!(
+            g1 == g2,
+            "groupings diverged under permutation (n={n} k={k}): {g1:?} vs {g2:?}"
+        );
+        let d1 = m1.label_divergence(&hists);
+        let d2 = m2.label_divergence(&ph);
+        prop_assert!((d1 - d2).abs() < 1e-9, "divergence diverged: {d1} vs {d2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_locality_covers_balances_and_bounds_cost() {
+    prop::check("locality coverage + count balance + cost bound", |rng| {
+        let n = 1 + rng.below(24) as usize;
+        let k = 1 + rng.below(n as u64) as usize;
+        let classes = 1 + rng.below(6) as usize;
+        let hists = skewed_hists(rng, n, classes);
+        let costs: Vec<f64> = (0..n).map(|_| rng.lognormal(1.0, 1.2)).collect();
+        let map = ShardMap::locality(n, k, &hists, &costs);
+        prop_assert!(map.shards() == k, "shard count {} != {k}", map.shards());
+        // Permutation of the clients: everyone exactly once, no shard
+        // empty, counts within one of each other.
+        let mut seen: Vec<usize> = (0..k).flat_map(|s| map.clients_of(s)).collect();
+        seen.sort_unstable();
+        prop_assert!(seen == (0..n).collect::<Vec<_>>(), "not a partition: {seen:?}");
+        let counts: Vec<usize> = (0..k).map(|s| map.clients_of(s).len()).collect();
+        prop_assert!(counts.iter().all(|&c| c > 0), "empty shard (n={n} k={k})");
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        prop_assert!(max - min <= 1, "unbalanced counts {counts:?}");
+        // Cost balance: the wave dealing is cost-greedy under a
+        // one-per-shard-per-wave restriction, so allow the greedy bound
+        // plus one item of slack.
+        let load = |s: usize| map.clients_of(s).iter().map(|&c| costs[c]).sum::<f64>();
+        let max_load = (0..k).map(load).fold(0.0f64, f64::max);
+        let cmax = costs.iter().copied().fold(0.0f64, f64::max);
+        let bound = sched::greedy_bound(&costs, k) + cmax;
+        prop_assert!(
+            max_load <= bound + 1e-9,
+            "max load {max_load} exceeds bound {bound} (n={n} k={k})"
+        );
+        // The skew metric is always a valid mean TV distance.
+        let d = map.label_divergence(&hists);
+        prop_assert!((0.0..=1.0).contains(&d), "divergence {d} out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_locality_minimizes_skew_in_one_hot_limit() {
+    prop::check("locality optimal for one-hot clients", |rng| {
+        let k = 2 + rng.below(3) as usize; // 2..=4 shards
+        let n = k * (1 + rng.below(6) as usize); // k | n, n <= 24
+        let classes = 2 + rng.below(4) as usize;
+        let w = 10usize;
+        let hists: Vec<Vec<usize>> = (0..n)
+            .map(|_| {
+                let mut h = vec![0usize; classes];
+                h[rng.below(classes as u64) as usize] = w;
+                h
+            })
+            .collect();
+        let costs = vec![1.0; n];
+        let loc = ShardMap::locality(n, k, &hists, &costs).label_divergence(&hists);
+        let cont = ShardMap::contiguous(n, k).label_divergence(&hists);
+        let bal = ShardMap::balanced(n, k, &costs).label_divergence(&hists);
+        // Equal-mass one-hot clients, uniform costs, k | n: the wave
+        // dealing hands every (shard, label) pair the balanced
+        // ⌊m/k⌋/⌈m/k⌉ client count, which minimizes the mean per-shard
+        // TV distance over ALL equal-size groupings — contiguous and
+        // LPT included.
+        prop_assert!(loc <= cont + 1e-9, "one-hot: locality {loc} > contiguous {cont}");
+        prop_assert!(loc <= bal + 1e-9, "one-hot: locality {loc} > balanced {bal}");
+        Ok(())
+    });
+}
+
+#[test]
+fn locality_stratifies_dirichlet_splits_on_average() {
+    // Real Dirichlet(α = 0.1) splits — the FedLite benchmark protocol
+    // at harsher skew than the shipped CIFAR figure arm (which runs
+    // α = 0.3 in `Harness::data`) — fixed seeds → fully deterministic
+    // outcome. Across 64
+    // splits × k ∈ {2, 4}: the locality map's mean skew is strictly
+    // below the contiguous and cost-only balanced maps', and it wins
+    // pointwise against contiguous in well over half the cases (the
+    // pointwise guarantee itself lives in the one-hot property above).
+    let spec = SyntheticSpec {
+        height: 2,
+        width: 2,
+        channels: 2,
+        classes: 3,
+        ..SyntheticSpec::cifar_like()
+    };
+    let n = 8usize;
+    let mut sums = (0.0f64, 0.0f64, 0.0f64); // (locality, contiguous, balanced)
+    let mut cases = 0usize;
+    let mut wins_vs_cont = 0usize;
+    for seed in 0..64u64 {
+        let ds = generate(&spec, 400, 1000 + seed);
+        let mut rng = Rng::new(seed);
+        let part = dirichlet(&ds, n, 0.1, &mut rng);
+        let hists = part.label_histograms(&ds);
+        let costs: Vec<f64> = (0..n).map(|_| rng.lognormal(1.0, 0.8)).collect();
+        for k in [2usize, 4] {
+            let loc = ShardMap::locality(n, k, &hists, &costs).label_divergence(&hists);
+            let cont = ShardMap::contiguous(n, k).label_divergence(&hists);
+            let bal = ShardMap::balanced(n, k, &costs).label_divergence(&hists);
+            sums.0 += loc;
+            sums.1 += cont;
+            sums.2 += bal;
+            cases += 1;
+            if loc <= cont + 1e-12 {
+                wins_vs_cont += 1;
+            }
+        }
+    }
+    let (ml, mc, mb) =
+        (sums.0 / cases as f64, sums.1 / cases as f64, sums.2 / cases as f64);
+    assert!(ml < mc, "mean skew: locality {ml} !< contiguous {mc}");
+    assert!(ml < mb, "mean skew: locality {ml} !< balanced {mb}");
+    assert!(
+        wins_vs_cont * 2 > cases,
+        "locality won only {wins_vs_cont}/{cases} splits vs contiguous"
+    );
+}

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# In-repo markdown link check: every relative [text](path) link in the
+# repo's top-level docs (and the coordinator contract doc) must resolve
+# to a file or directory in the tree. External links (scheme://),
+# pure anchors (#...), and absolute paths are skipped. Run from anywhere;
+# CI runs it after checkout.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+docs=(
+  README.md
+  ARCHITECTURE.md
+  EXPERIMENTS.md
+  ROADMAP.md
+  rust/src/coordinator/README.md
+)
+
+fail=0
+for doc in "${docs[@]}"; do
+  if [ ! -f "$doc" ]; then
+    echo "MISSING DOC: $doc"
+    fail=1
+    continue
+  fi
+  dir=$(dirname "$doc")
+  # Extract (target) of every inline markdown link, one per line.
+  targets=$(grep -oE '\]\([^)#[:space:]]+[^)]*\)' "$doc" | sed -E 's/^\]\(//; s/\)$//' || true)
+  while IFS= read -r t; do
+    [ -z "$t" ] && continue
+    case "$t" in
+      *://*|mailto:*|\#*|/*) continue ;;
+    esac
+    # Drop trailing anchors: path.md#section -> path.md
+    p="${t%%#*}"
+    [ -z "$p" ] && continue
+    if [ ! -e "$dir/$p" ]; then
+      echo "BROKEN LINK: $doc -> $t"
+      fail=1
+    fi
+  done <<< "$targets"
+done
+
+if [ "$fail" -ne 0 ]; then
+  echo "markdown link check failed"
+  exit 1
+fi
+echo "markdown link check passed"
