@@ -31,12 +31,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for (method, h, rounds) in [(Method::CseFsl, 5usize, 2usize), (Method::FslMc, 1, 6)] {
         let partition = iid(&train, 5, &mut Rng::new(4));
         let cfg = TrainConfig {
-            h,
             rounds,
             agg_every: rounds,
             lr0: 0.01,
             eval_every: 0,
-            ..TrainConfig::new(method)
+            ..TrainConfig::new(method).with_h(h)
         };
         let setup = TrainerSetup {
             train: &train,

@@ -45,14 +45,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     let cfg = TrainConfig {
-        h,
         rounds,
         agg_every: 4,
         lr0: 0.01,
         eval_every: 4,
         eval_max_batches: 4,
         track_grad_norms: true,
-        ..TrainConfig::new(Method::CseFsl)
+        ..TrainConfig::new(Method::CseFsl).with_h(h)
     };
     let setup = TrainerSetup {
         train: &train,

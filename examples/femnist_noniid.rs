@@ -59,13 +59,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         };
         equalize(&mut partition);
         let cfg = TrainConfig {
-            h: 2,
             rounds: 120,
             agg_every: 5,
             lr0: 0.05,
             eval_every: 30,
             eval_max_batches: 20,
-            ..TrainConfig::new(Method::CseFsl)
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
         };
         let setup = TrainerSetup {
             train: &train,

@@ -38,13 +38,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     equalize(&mut partition);
 
     let cfg = TrainConfig {
-        h: 2,
         rounds: 12,
         agg_every: 3,
         lr0: 0.02,
         eval_every: 3,
         eval_max_batches: 10,
-        ..TrainConfig::new(Method::CseFsl)
+        ..TrainConfig::new(Method::CseFsl).with_h(2)
     };
     let setup = TrainerSetup {
         train: &train,

@@ -71,13 +71,12 @@ fn main() {
     let n_clients = 8;
     let run_fanout = |par: Parallelism, sched: SchedPolicy| {
         let cfg = TrainConfig {
-            h: 2,
             eval_every: 0,
             agg_every: 1000,
             lr0: 0.05,
             parallelism: par,
             sched,
-            ..TrainConfig::new(Method::CseFsl)
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
         }
         .with_rounds(6);
         let setup = TrainerSetup {
@@ -184,13 +183,12 @@ fn main() {
     // trade-off (k=1 = CSE-FSL's shared copy, k=8 = FSL_MC-like copies).
     let run_sharded = |shards: usize, par: Parallelism| {
         let cfg = TrainConfig {
-            h: 2,
             eval_every: 0,
             agg_every: 3,
             lr0: 0.05,
             parallelism: par,
             server_shards: shards,
-            ..TrainConfig::new(Method::CseFsl)
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
         }
         .with_rounds(6);
         let setup = TrainerSetup {

@@ -284,22 +284,28 @@ pub mod storage {
 /// let w = WireSizes::new(2304, 107_328, 23_050); // paper CIFAR-10 sizes
 /// let (n, batch, h, rounds) = (5u64, 50u64, 5u64, 8u64);
 /// let d_i = batch * h * rounds; // |D_i|: samples walked once per epoch
-/// let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+/// let p = predict::TrafficProfile::AuxLocal;
 /// let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
 /// assert_eq!(up + down, table2::cse_fsl(n, d_i, h, &w));
 /// ```
 pub mod predict {
     use super::{MsgKind, WireSizes};
 
-    /// The two wire-relevant method capabilities (decoupled from
-    /// `coordinator::methods::Method` so `comm` stays a leaf module).
-    #[derive(Clone, Copy, Debug)]
-    pub struct TrafficProfile {
-        /// Server returns cut-layer gradients per batch (FSL_MC/FSL_OC).
-        pub grad_downlink: bool,
-        /// Client aux nets ride along with model aggregation
-        /// (FSL_AN/CSE_FSL).
-        pub uses_aux: bool,
+    /// The wire-relevant projection of a method spec (decoupled from
+    /// `coordinator::methods::MethodSpec` so `comm` stays a leaf
+    /// module; build one via `MethodSpec::traffic`). Of the three spec
+    /// axes only the **client-update rule** moves bytes: the upload
+    /// schedule changes how many rounds an epoch takes (never bytes per
+    /// round — each round is one smashed upload whatever h is), and the
+    /// server topology moves storage only.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum TrafficProfile {
+        /// Server returns cut-layer gradients per batch; no aux nets in
+        /// the model exchange (the SplitFed rule — FSL_MC / FSL_OC).
+        ServerGrad,
+        /// No gradient downlink; client aux nets ride along with model
+        /// aggregation (the local-update rule — FSL_AN / CSE_FSL).
+        AuxLocal,
     }
 
     /// Expected bytes per message kind over a whole run, full
@@ -319,17 +325,25 @@ pub mod predict {
             (MsgKind::LabelUpload, rounds * per_round_up * w.label),
             (
                 MsgKind::GradDownload,
-                if p.grad_downlink { rounds * per_round_up * w.smashed_per_sample } else { 0 },
+                match p {
+                    TrafficProfile::ServerGrad => {
+                        rounds * per_round_up * w.smashed_per_sample
+                    }
+                    TrafficProfile::AuxLocal => 0,
+                },
             ),
             (MsgKind::ClientModelUpload, aggs * n * w.client_model),
             (MsgKind::ClientModelDownload, aggs * n * w.client_model),
         ];
-        if p.uses_aux {
-            out.push((MsgKind::AuxModelUpload, aggs * n * w.aux_model));
-            out.push((MsgKind::AuxModelDownload, aggs * n * w.aux_model));
-        } else {
-            out.push((MsgKind::AuxModelUpload, 0));
-            out.push((MsgKind::AuxModelDownload, 0));
+        match p {
+            TrafficProfile::AuxLocal => {
+                out.push((MsgKind::AuxModelUpload, aggs * n * w.aux_model));
+                out.push((MsgKind::AuxModelDownload, aggs * n * w.aux_model));
+            }
+            TrafficProfile::ServerGrad => {
+                out.push((MsgKind::AuxModelUpload, 0));
+                out.push((MsgKind::AuxModelDownload, 0));
+            }
         }
         out
     }
@@ -416,18 +430,18 @@ mod tests {
         for h in [1u64, 5, 10] {
             let rounds = 8;
             let d_i = batch * h * rounds;
-            let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+            let p = predict::TrafficProfile::AuxLocal;
             let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
             assert_eq!(up + down, table2::cse_fsl(n, d_i, h, &w), "h={h}");
         }
         // One epoch of FSL_MC: h=1, rounds = |D_i|/batch.
         let rounds = 12;
         let d_i = batch * rounds;
-        let p = predict::TrafficProfile { grad_downlink: true, uses_aux: false };
+        let p = predict::TrafficProfile::ServerGrad;
         let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
         assert_eq!(up + down, table2::fsl_mc(n, d_i, &w));
         // One epoch of FSL_AN: no grad downlink, aux rides along.
-        let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+        let p = predict::TrafficProfile::AuxLocal;
         let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
         assert_eq!(up + down, table2::fsl_an(n, d_i, &w));
     }

@@ -2,7 +2,7 @@
 
 use crate::sched::SchedPolicy;
 
-use super::methods::Method;
+use super::methods::{Method, MethodSpec, ServerTopology};
 
 /// Client fan-out strategy for the local-training phase of a round.
 ///
@@ -150,18 +150,19 @@ pub enum ArrivalOrder {
     Shuffled,
 }
 
-/// Full configuration of one training run (all methods).
+/// Full configuration of one training run (any [`MethodSpec`] point).
 ///
-/// Built with [`TrainConfig::new`] (per-method defaults), adjusted via
-/// the `with_*` builders or struct update syntax, and checked by
+/// Built with [`TrainConfig::new`] (preset defaults) or
+/// [`TrainConfig::from_spec`] (any spec point), adjusted via the
+/// `with_*` builders or struct update syntax, and checked by
 /// [`TrainConfig::validate`] before any training happens.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
-    /// Which of the four compared FSL methods to run.
-    pub method: Method,
-    /// Batches of local training per smashed upload (CSE_FSL's h;
-    /// must be 1 for the other methods).
-    pub h: usize,
+    /// The algorithm point to run: client-update rule × upload schedule
+    /// × server topology. The paper's four methods are the preset
+    /// points ([`Method::spec`]); everything the trainer branches on
+    /// comes from these axes — there is no separate method identity.
+    pub spec: MethodSpec,
     /// Communication rounds to run (one round = one upload wave).
     pub rounds: usize,
     /// Aggregate every k rounds (paper: once per epoch).
@@ -177,8 +178,6 @@ pub struct TrainConfig {
     /// larger fan-in than the client stack; the paper uses one eta, but
     /// stability on the synthetic tasks wants a cooler server step).
     pub server_lr_scale: f64,
-    /// Gradient clip for the MC/OC grad path (0 = off).
-    pub clip: f32,
     /// Clients sampled per round (k of n; n = partition size).
     pub participation: usize,
     /// Experiment seed: every random stream in the run derives from it.
@@ -193,12 +192,12 @@ pub struct TrainConfig {
     pub track_grad_norms: bool,
     /// Client fan-out strategy (bit-deterministic either way).
     pub parallelism: Parallelism,
-    /// Server shard count k for the single-copy methods (FSL_OC /
-    /// CSE_FSL): k server-side copies, each serving a contiguous
-    /// client group on its own event-loop executor, FedAvg'd together
-    /// every `agg_every` rounds. k = 1 (the default) is the paper's
-    /// shared copy; k = n matches FSL_MC's storage. Rejected (> 1) for
-    /// the per-client-copy methods, which fix their own copy count.
+    /// Server shard count k for the shared topology: k server-side
+    /// copies, each serving a client group on its own event-loop
+    /// executor, FedAvg'd together every `agg_every` rounds. k = 1 (the
+    /// default) is the paper's shared copy; k = n matches the
+    /// per-client topology's storage. Rejected (> 1) for
+    /// [`ServerTopology::PerClient`], which fixes its own copy count.
     /// Unlike `parallelism`, shard count **changes results** and is part
     /// of the experiment cache key.
     pub server_shards: usize,
@@ -218,18 +217,24 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    /// Per-method defaults (paper Section VI-A operating points).
+    /// Preset defaults (paper Section VI-A operating points):
+    /// [`TrainConfig::from_spec`] at the preset's spec point.
     pub fn new(method: Method) -> Self {
+        Self::from_spec(method.spec())
+    }
+
+    /// Defaults for any spec point (the open-API constructor — this is
+    /// how spec-only scenarios like `AuxLocal × Period(h) × PerClient`
+    /// get a config).
+    pub fn from_spec(spec: MethodSpec) -> Self {
         TrainConfig {
-            method,
-            h: 1,
+            spec,
             rounds: 40,
             agg_every: 10,
             lr0: 0.05,
             lr_decay_rate: 0.99,
             lr_decay_every: 10,
             server_lr_scale: 0.25,
-            clip: method.default_clip(),
             participation: 0, // 0 = all clients
             seed: 1,
             eval_every: 5,
@@ -249,9 +254,11 @@ impl TrainConfig {
         self
     }
 
-    /// Builder: set CSE_FSL's local batches per upload.
+    /// Builder: set the upload period to a fixed `h` batches per upload
+    /// ([`MethodSpec::with_period`]; validation decides whether the
+    /// update rule can amortize it).
     pub fn with_h(mut self, h: usize) -> Self {
-        self.h = h;
+        self.spec = self.spec.with_period(h);
         self
     }
 
@@ -292,14 +299,12 @@ impl TrainConfig {
     }
 
     /// Check the configuration against the client count; returns a
-    /// human-readable reason when it cannot run.
+    /// human-readable reason when it cannot run. Axis coherence is
+    /// [`MethodSpec::validate`]; the cross-cutting checks here are the
+    /// ones that need the rest of the config (shards vs topology, maps
+    /// vs shards, participation vs n).
     pub fn validate(&self, n_clients: usize) -> Result<(), String> {
-        if self.h == 0 {
-            return Err("h must be >= 1".into());
-        }
-        if self.h > 1 && !self.method.supports_h() {
-            return Err(format!("{} does not support h > 1 (got {})", self.method, self.h));
-        }
+        self.spec.validate()?;
         if self.rounds == 0 {
             return Err("rounds must be >= 1".into());
         }
@@ -321,11 +326,12 @@ impl TrainConfig {
                 self.server_shards
             ));
         }
-        if self.server_shards > 1 && self.method.per_client_server_model() {
+        if self.server_shards > 1 && self.spec.topology == ServerTopology::PerClient {
             return Err(format!(
-                "{} already keeps one server copy per client; \
-                 --server-shards applies to the single-copy methods (FSL_OC / CSE_FSL)",
-                self.method
+                "the per-client topology ({}) already keeps one server copy per \
+                 client; --server-shards applies to the shared topology \
+                 (FSL_OC / CSE_FSL, or --topology shared)",
+                self.spec
             ));
         }
         if self.shard_map.regroups_clients() && self.server_shards < 2 {
@@ -354,6 +360,7 @@ impl TrainConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::methods::{ClientUpdate, UploadSchedule};
 
     #[test]
     fn lr_schedule_decays() {
@@ -366,12 +373,15 @@ mod tests {
 
     #[test]
     fn validation_rules() {
-        let mut c = TrainConfig::new(Method::FslMc);
+        let c = TrainConfig::new(Method::FslMc);
         assert!(c.validate(5).is_ok());
-        c.h = 5;
-        assert!(c.validate(5).is_err(), "MC must reject h>1");
+        assert!(
+            c.clone().with_h(5).validate(5).is_err(),
+            "server-grad updates must reject a period"
+        );
         let mut c = TrainConfig::new(Method::CseFsl).with_h(5);
         assert!(c.validate(5).is_ok());
+        assert!(c.clone().with_h(0).validate(5).is_err(), "h = 0 must be rejected");
         c.participation = 9;
         assert!(c.validate(5).is_err());
         c.participation = 3;
@@ -382,10 +392,25 @@ mod tests {
     }
 
     #[test]
+    fn spec_only_scenarios_validate() {
+        // The point the paper never names: aux-local updates with a
+        // period on the per-client topology ("FSL_AN with h > 1").
+        let c = TrainConfig::new(Method::FslAn).with_h(4);
+        assert!(c.validate(5).is_ok(), "AuxLocal x Period x PerClient must run");
+        assert_eq!(c.spec.preset(), None);
+        // An adaptive schedule on the shared topology.
+        let c = TrainConfig::from_spec(MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 1, h_max: 8, double_every: 5 },
+            ..Method::CseFsl.spec()
+        });
+        assert!(c.validate(5).is_ok());
+    }
+
+    #[test]
     fn server_shard_validation() {
         // Default is the paper's single copy.
         assert_eq!(TrainConfig::new(Method::CseFsl).server_shards, 1);
-        // Any k in 1..=n works for the single-copy methods.
+        // Any k in 1..=n works for the shared-topology presets.
         for method in [Method::CseFsl, Method::FslOc] {
             for k in 1..=5usize {
                 let c = TrainConfig::new(method).with_server_shards(k);
@@ -394,7 +419,7 @@ mod tests {
             assert!(TrainConfig::new(method).with_server_shards(6).validate(5).is_err());
             assert!(TrainConfig::new(method).with_server_shards(0).validate(5).is_err());
         }
-        // The per-client-copy methods fix their own copy count.
+        // The per-client topology fixes its own copy count.
         for method in [Method::FslMc, Method::FslAn] {
             assert!(TrainConfig::new(method).with_server_shards(1).validate(5).is_ok());
             assert!(
@@ -470,21 +495,20 @@ mod tests {
             [(ShardMapKind::Balanced, "balanced"), (ShardMapKind::Locality, "locality")]
         {
             assert!(map.regroups_clients());
-            for k in [1usize, 0] {
-                let err = TrainConfig::new(Method::CseFsl)
-                    .with_shard_map(map)
-                    .with_server_shards(k)
-                    .validate(5)
-                    .unwrap_err();
-                if k >= 1 {
-                    assert!(
-                        err.contains(&format!(
-                            "--shard-map {name} requires --server-shards >= 2"
-                        )),
-                        "{map}: {err}"
-                    );
-                }
-            }
+            let err = TrainConfig::new(Method::CseFsl)
+                .with_shard_map(map)
+                .with_server_shards(1)
+                .validate(5)
+                .unwrap_err();
+            assert!(
+                err.contains(&format!("--shard-map {name} requires --server-shards >= 2")),
+                "{map}: {err}"
+            );
+            assert!(TrainConfig::new(Method::CseFsl)
+                .with_shard_map(map)
+                .with_server_shards(0)
+                .validate(5)
+                .is_err());
             // With k >= 2 the config-level check passes (the locality
             // map's non-IID requirement lives at the RunSpec level,
             // where the data distribution is known).
@@ -493,8 +517,8 @@ mod tests {
                 .with_server_shards(2)
                 .validate(5)
                 .is_ok());
-            // ...but never on the per-client-copy methods (sharding
-            // itself is rejected there).
+            // ...but never on the per-client topology (sharding itself
+            // is rejected there).
             assert!(TrainConfig::new(Method::FslMc)
                 .with_shard_map(map)
                 .with_server_shards(2)
@@ -504,8 +528,18 @@ mod tests {
     }
 
     #[test]
-    fn oc_gets_clip_by_default() {
-        assert!(TrainConfig::new(Method::FslOc).clip > 0.0);
-        assert_eq!(TrainConfig::new(Method::CseFsl).clip, 0.0);
+    fn clip_rides_the_update_axis() {
+        // The paper's clip lives in the spec now: FSL_OC's preset point
+        // carries clip = 1, everything else 0.
+        assert!(TrainConfig::new(Method::FslOc).spec.clip() > 0.0);
+        assert_eq!(TrainConfig::new(Method::CseFsl).spec.clip(), 0.0);
+        assert_eq!(TrainConfig::new(Method::FslMc).spec.clip(), 0.0);
+        // A custom clip is a new spec point, not a preset.
+        let custom = TrainConfig::from_spec(MethodSpec {
+            update: ClientUpdate::ServerGrad { clip: 0.25 },
+            ..Method::FslOc.spec()
+        });
+        assert!(custom.validate(5).is_ok());
+        assert_eq!(custom.spec.preset(), None);
     }
 }

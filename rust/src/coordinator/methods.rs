@@ -1,13 +1,503 @@
-//! The four FSL methods the paper compares (Section VI-A).
+//! The composable method-spec API: every federated-split-learning
+//! variant is a point in a three-axis design space, and the paper's four
+//! compared methods (Section VI-A) are named presets in it.
 //!
-//! | method  | server copies | aux net | client update source   | uploads    |
-//! |---------|---------------|---------|------------------------|------------|
-//! | FSL_MC  | n             | no      | server grad downlink   | every batch|
-//! | FSL_OC  | 1             | no      | server grad (clipped)  | every batch|
-//! | FSL_AN  | n             | yes     | local auxiliary loss   | every batch|
-//! | CSE_FSL | 1             | yes     | local auxiliary loss   | every h    |
+//! # The three axes
+//!
+//! | axis | variants | decides |
+//! |---|---|---|
+//! | [`ClientUpdate`] | `ServerGrad { clip }` / `AuxLocal` | where the client-side gradient comes from (server downlink per batch, or a local auxiliary-network loss) |
+//! | [`UploadSchedule`] | `EveryBatch` / `Period(h)` / `AdaptivePeriod { .. }` | how many local batches each smashed upload amortizes |
+//! | [`ServerTopology`] | `PerClient` / `Shared` | whether the server keeps one model copy per client or shared copies (`TrainConfig::server_shards` refines `Shared` into k shard copies) |
+//!
+//! # The paper's presets
+//!
+//! | preset | update | upload | topology |
+//! |---------|----------------------|------------|-----------|
+//! | FSL_MC  | `ServerGrad{clip:0}` | every batch| per-client|
+//! | FSL_OC  | `ServerGrad{clip:1}` | every batch| shared    |
+//! | FSL_AN  | `AuxLocal`           | every batch| per-client|
+//! | CSE_FSL | `AuxLocal`           | every h    | shared    |
+//!
+//! Any other combination is a scenario the paper never names — e.g.
+//! `AuxLocal × Period(h) × PerClient` ("FSL_AN with h > 1", the `figure
+//! h` arm) — and runs through exactly the same trainer. The only
+//! incoherent region is `ServerGrad` with a non-every-batch schedule:
+//! the SplitFed client *blocks* on the per-batch gradient round trip, so
+//! there is nothing for a period to amortize ([`MethodSpec::validate`]).
+//!
+//! This module is the single home of method parsing / display / alias
+//! handling: the CLI resolves `--method` (preset alias) and the
+//! `--update` / `--upload-every` / `--clip` / `--topology` axis flags
+//! through [`MethodSpec::from_cli`], and every axis type implements
+//! `FromStr` here.
+//!
+//! ```
+//! use cse_fsl::coordinator::methods::{
+//!     ClientUpdate, Method, MethodSpec, ServerTopology, UploadSchedule,
+//! };
+//!
+//! // The paper's method is just one point of the space...
+//! assert_eq!(Method::CseFsl.spec().with_period(5).preset(), Some(Method::CseFsl));
+//! // ...and the axes compose into points the paper never names:
+//! let an_h4 = MethodSpec {
+//!     update: ClientUpdate::AuxLocal,
+//!     upload: UploadSchedule::period(4),
+//!     topology: ServerTopology::PerClient,
+//! };
+//! assert_eq!(an_h4, Method::FslAn.spec().with_period(4));
+//! assert_eq!(an_h4.preset(), None); // spec-only scenario ("FSL_AN with h>1")
+//! assert!(an_h4.validate().is_ok());
+//! ```
 
-/// One of the four compared federated-split-learning methods.
+use crate::comm::accounting::predict::TrafficProfile;
+
+/// Where the client-side model's gradient comes from (axis 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClientUpdate {
+    /// The server runs the forward/backward over the smashed data and
+    /// sends the cut-layer gradient back every batch; the client blocks
+    /// on the round trip (the SplitFed rule). `clip` caps the gradient
+    /// norm on both sides of the cut (0 disables — the paper adds
+    /// clipping to FSL_OC to fix its gradient-explosion instability).
+    ServerGrad {
+        /// Gradient-norm clip applied server- and client-side (0 = off).
+        clip: f32,
+    },
+    /// The client trains against a local auxiliary-network loss and
+    /// never waits for server gradients (fire-and-forget — the CSE-FSL
+    /// rule). The aux networks join the model exchange at aggregation.
+    AuxLocal,
+}
+
+impl ClientUpdate {
+    /// Does this rule train (and aggregate) an auxiliary network?
+    pub fn uses_aux(self) -> bool {
+        matches!(self, ClientUpdate::AuxLocal)
+    }
+
+    /// The gradient clip in effect (0 for the aux-local rule, which
+    /// never touches the server-grad path).
+    pub fn clip(self) -> f32 {
+        match self {
+            ClientUpdate::ServerGrad { clip } => clip,
+            ClientUpdate::AuxLocal => 0.0,
+        }
+    }
+
+    /// Short cache-key tag (`sg{clip}` / `aux`).
+    pub fn tag(self) -> String {
+        match self {
+            ClientUpdate::ServerGrad { clip } => format!("sg{clip}"),
+            ClientUpdate::AuxLocal => "aux".to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for ClientUpdate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientUpdate::ServerGrad { clip } => write!(f, "server-grad(clip={clip})"),
+            ClientUpdate::AuxLocal => write!(f, "aux-local"),
+        }
+    }
+}
+
+impl std::str::FromStr for ClientUpdate {
+    type Err = String;
+
+    /// `grad` / `server-grad` / `sg` (clip 0 until `--clip` composes);
+    /// `aux` / `aux-local` / `local`.
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "grad" | "server-grad" | "sg" => Ok(ClientUpdate::ServerGrad { clip: 0.0 }),
+            "aux" | "aux-local" | "local" => Ok(ClientUpdate::AuxLocal),
+            other => Err(format!(
+                "bad client update {other:?} (expected grad | server-grad | aux | aux-local)"
+            )),
+        }
+    }
+}
+
+/// How many local batches each smashed upload amortizes (axis 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UploadSchedule {
+    /// One local batch per upload (h = 1 — every baseline preset).
+    EveryBatch,
+    /// A fixed `h >= 2` local batches per upload (CSE_FSL's h).
+    /// Build via [`UploadSchedule::period`], which canonicalizes
+    /// `Period(1)` to [`UploadSchedule::EveryBatch`]; hand-built
+    /// `Period(0)` / `Period(1)` values are rejected by
+    /// [`MethodSpec::validate`] (one canonical representation per
+    /// behavior, so cache keys can never fork).
+    Period(usize),
+    /// A deterministic schedule that starts at `h0` batches per upload
+    /// and doubles every `double_every` rounds up to `h_max` — chatty
+    /// early (fresh server model while training is volatile), cheap
+    /// late, mirroring the lr decay. A pure function of the round
+    /// index, so the bit-determinism contract is untouched.
+    AdaptivePeriod {
+        /// Batches per upload in round 1.
+        h0: usize,
+        /// Upper bound on the period.
+        h_max: usize,
+        /// Rounds between doublings.
+        double_every: usize,
+    },
+}
+
+impl UploadSchedule {
+    /// The canonical fixed-period constructor: `h = 1` is
+    /// [`UploadSchedule::EveryBatch`] (so `Period(1)` never aliases it),
+    /// any other `h` is `Period(h)` (`h = 0` is rejected by
+    /// [`MethodSpec::validate`]).
+    pub fn period(h: usize) -> UploadSchedule {
+        if h == 1 {
+            UploadSchedule::EveryBatch
+        } else {
+            UploadSchedule::Period(h)
+        }
+    }
+
+    /// Local batches trained before the upload of (1-based) `round`.
+    pub fn batches_at(self, round: usize) -> usize {
+        match self {
+            UploadSchedule::EveryBatch => 1,
+            UploadSchedule::Period(h) => h,
+            UploadSchedule::AdaptivePeriod { h0, h_max, double_every } => {
+                let steps = (round.saturating_sub(1) / double_every.max(1)).min(64);
+                let mut h = h0;
+                for _ in 0..steps {
+                    if h >= h_max {
+                        break;
+                    }
+                    h = h.saturating_mul(2).min(h_max);
+                }
+                h.min(h_max)
+            }
+        }
+    }
+
+    /// Static period estimate: the exact h for the fixed schedules, the
+    /// initial h0 for the adaptive one. Feeds scheduling cost priors,
+    /// the per-epoch aggregation cadence, and the `h{}` key segment.
+    pub fn h_hint(self) -> usize {
+        match self {
+            UploadSchedule::EveryBatch => 1,
+            UploadSchedule::Period(h) => h,
+            UploadSchedule::AdaptivePeriod { h0, .. } => h0,
+        }
+    }
+
+    /// Short cache-key tag (`b` / `p{h}` / `ap{h0}x{h_max}e{k}`).
+    pub fn tag(self) -> String {
+        match self {
+            UploadSchedule::EveryBatch => "b".to_string(),
+            UploadSchedule::Period(h) => format!("p{h}"),
+            UploadSchedule::AdaptivePeriod { h0, h_max, double_every } => {
+                format!("ap{h0}x{h_max}e{double_every}")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for UploadSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UploadSchedule::EveryBatch => write!(f, "every-batch"),
+            UploadSchedule::Period(h) => write!(f, "every {h} batches"),
+            UploadSchedule::AdaptivePeriod { h0, h_max, double_every } => {
+                write!(f, "adaptive ({h0}..{h_max}, x2 every {double_every} rounds)")
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for UploadSchedule {
+    type Err = String;
+
+    /// An integer `h` (`1` = every batch), or
+    /// `adaptive:<h0>:<h_max>:<double_every>`.
+    fn from_str(s: &str) -> Result<Self, String> {
+        let low = s.to_ascii_lowercase();
+        if let Some(rest) = low.strip_prefix("adaptive:") {
+            let parts: Vec<&str> = rest.split(':').collect();
+            if parts.len() != 3 {
+                return Err(format!(
+                    "bad adaptive schedule {s:?} (expected adaptive:<h0>:<h_max>:<double_every>)"
+                ));
+            }
+            let num = |p: &str| {
+                p.parse::<usize>()
+                    .map_err(|_| format!("bad adaptive schedule component {p:?} in {s:?}"))
+            };
+            return Ok(UploadSchedule::AdaptivePeriod {
+                h0: num(parts[0])?,
+                h_max: num(parts[1])?,
+                double_every: num(parts[2])?,
+            });
+        }
+        match low.as_str() {
+            "batch" | "every-batch" => Ok(UploadSchedule::EveryBatch),
+            other => match other.parse::<usize>() {
+                Ok(h) => Ok(UploadSchedule::period(h)),
+                Err(_) => Err(format!(
+                    "bad upload schedule {s:?} (expected <h> | adaptive:<h0>:<h_max>:<k>)"
+                )),
+            },
+        }
+    }
+}
+
+/// How server-side model copies map to clients (axis 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerTopology {
+    /// One server-side copy per client behind a single executor (the
+    /// FSL_MC / FSL_AN storage point). Incompatible with
+    /// `--server-shards > 1`, which refines the shared topology.
+    PerClient,
+    /// Shared server-side copies: 1 by default (the paper's FSL_OC /
+    /// CSE_FSL server), or k shard copies with their own executors via
+    /// `TrainConfig::server_shards` and a `ShardMapKind` placement.
+    Shared,
+}
+
+impl ServerTopology {
+    /// Short cache-key tag (`pc` / `sh`).
+    pub fn tag(self) -> &'static str {
+        match self {
+            ServerTopology::PerClient => "pc",
+            ServerTopology::Shared => "sh",
+        }
+    }
+}
+
+impl std::fmt::Display for ServerTopology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServerTopology::PerClient => write!(f, "per-client"),
+            ServerTopology::Shared => write!(f, "shared"),
+        }
+    }
+}
+
+impl std::str::FromStr for ServerTopology {
+    type Err = String;
+
+    /// `per-client` / `pc`; `shared` / `sh`.
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "per-client" | "pc" => Ok(ServerTopology::PerClient),
+            "shared" | "sh" => Ok(ServerTopology::Shared),
+            other => Err(format!(
+                "bad server topology {other:?} (expected per-client | shared)"
+            )),
+        }
+    }
+}
+
+/// One fully-specified algorithm point: update rule × upload schedule ×
+/// server topology. The four paper methods are presets
+/// ([`Method::spec`]); everything else is a spec-only scenario served by
+/// the same trainer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MethodSpec {
+    /// Where the client-side gradient comes from.
+    pub update: ClientUpdate,
+    /// How many local batches each smashed upload amortizes.
+    pub upload: UploadSchedule,
+    /// Server-side copy layout.
+    pub topology: ServerTopology,
+}
+
+impl MethodSpec {
+    /// Axis-coherence validation; returns a human-readable reason when
+    /// the point is not runnable.
+    pub fn validate(&self) -> Result<(), String> {
+        match self.update {
+            ClientUpdate::ServerGrad { clip } => {
+                if !clip.is_finite() || clip < 0.0 {
+                    return Err(format!("clip must be finite and >= 0 (got {clip})"));
+                }
+                if self.upload != UploadSchedule::EveryBatch {
+                    return Err(format!(
+                        "the server-grad update rule requires every-batch uploads \
+                         (got {}): the client blocks on the per-batch gradient \
+                         round trip, so there is no local period to amortize",
+                        self.upload
+                    ));
+                }
+            }
+            ClientUpdate::AuxLocal => {}
+        }
+        match self.upload {
+            UploadSchedule::EveryBatch => {}
+            UploadSchedule::Period(h) => {
+                if h == 0 {
+                    return Err("h must be >= 1".into());
+                }
+                if h == 1 {
+                    // One canonical representation per behavior, so cache
+                    // keys and preset detection can never fork: h = 1 IS
+                    // EveryBatch (the period() constructor maps it there).
+                    return Err(
+                        "Period(1) is not canonical: build schedules via \
+                         UploadSchedule::period(h), which maps h = 1 to EveryBatch"
+                            .into(),
+                    );
+                }
+            }
+            UploadSchedule::AdaptivePeriod { h0, h_max, double_every } => {
+                if h0 == 0 || double_every == 0 {
+                    return Err("adaptive schedule needs h0 >= 1 and double_every >= 1".into());
+                }
+                if h_max < h0 {
+                    return Err(format!(
+                        "adaptive schedule needs h_max >= h0 (got h0={h0}, h_max={h_max})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The preset this spec is a point of, if any — the exact inverse of
+    /// [`Method::spec`] (CSE_FSL absorbs every fixed period on the
+    /// shared topology; non-preset clips and the adaptive schedule are
+    /// spec-only).
+    pub fn preset(&self) -> Option<Method> {
+        match (self.update, self.upload, self.topology) {
+            (
+                ClientUpdate::ServerGrad { clip },
+                UploadSchedule::EveryBatch,
+                ServerTopology::PerClient,
+            ) if clip == 0.0 => Some(Method::FslMc),
+            (
+                ClientUpdate::ServerGrad { clip },
+                UploadSchedule::EveryBatch,
+                ServerTopology::Shared,
+            ) if clip == 1.0 => Some(Method::FslOc),
+            (ClientUpdate::AuxLocal, UploadSchedule::EveryBatch, ServerTopology::PerClient) => {
+                Some(Method::FslAn)
+            }
+            (
+                ClientUpdate::AuxLocal,
+                UploadSchedule::EveryBatch | UploadSchedule::Period(_),
+                ServerTopology::Shared,
+            ) => Some(Method::CseFsl),
+            _ => None,
+        }
+    }
+
+    /// The cache-key segment: the preset's historical name when the spec
+    /// is a preset point (cache compatibility — `RunSpec::key` strings
+    /// are unchanged for the four paper methods), a canonical
+    /// `{update}+{upload}+{topology}` tag otherwise.
+    pub fn tag(&self) -> String {
+        match self.preset() {
+            Some(m) => m.to_string(),
+            None => format!(
+                "{}+{}+{}",
+                self.update.tag(),
+                self.upload.tag(),
+                self.topology.tag()
+            ),
+        }
+    }
+
+    /// Human-readable series label: historical preset labels
+    /// (`CSE_FSL h=5`), the canonical tag for spec-only points.
+    pub fn label(&self) -> String {
+        match self.preset() {
+            Some(Method::CseFsl) => format!("{} h={}", Method::CseFsl, self.h_hint()),
+            Some(m) => m.to_string(),
+            None => self.tag(),
+        }
+    }
+
+    /// Static upload-period estimate ([`UploadSchedule::h_hint`]).
+    pub fn h_hint(&self) -> usize {
+        self.upload.h_hint()
+    }
+
+    /// The gradient clip in effect ([`ClientUpdate::clip`]).
+    pub fn clip(&self) -> f32 {
+        self.update.clip()
+    }
+
+    /// The wire-relevant projection of this spec
+    /// (`comm::accounting::predict` closed forms): only the update axis
+    /// moves bytes — the upload schedule changes rounds per epoch, not
+    /// bytes per round, and the topology moves storage only.
+    pub fn traffic(&self) -> TrafficProfile {
+        match self.update {
+            ClientUpdate::ServerGrad { .. } => TrafficProfile::ServerGrad,
+            ClientUpdate::AuxLocal => TrafficProfile::AuxLocal,
+        }
+    }
+
+    /// Builder: replace the upload schedule with a fixed period
+    /// ([`UploadSchedule::period`] canonicalization applies).
+    pub fn with_period(mut self, h: usize) -> Self {
+        self.upload = UploadSchedule::period(h);
+        self
+    }
+
+    /// Resolve a spec from CLI flags — THE one home of method/axis flag
+    /// handling. `method` names the preset base (`--method`, historical
+    /// aliases preserved); each `Some` axis flag then overrides that
+    /// axis (`--update`, `--upload-every`, `--clip`, `--topology`). The
+    /// result is validated.
+    pub fn from_cli(
+        method: &str,
+        update: Option<&str>,
+        upload: Option<&str>,
+        clip: Option<&str>,
+        topology: Option<&str>,
+    ) -> Result<MethodSpec, String> {
+        let mut spec = Method::parse(method)
+            .ok_or_else(|| format!("bad method {method:?} (expected mc | oc | an | cse)"))?
+            .spec();
+        if let Some(u) = update {
+            spec.update = u.parse()?;
+        }
+        if let Some(u) = upload {
+            spec.upload = u.parse()?;
+        }
+        if let Some(c) = clip {
+            let v: f32 = c
+                .parse()
+                .map_err(|_| format!("bad clip {c:?} (expected a number)"))?;
+            match &mut spec.update {
+                ClientUpdate::ServerGrad { clip } => *clip = v,
+                ClientUpdate::AuxLocal => {
+                    if v != 0.0 {
+                        return Err(
+                            "--clip composes with the server-grad update rule \
+                             (--update grad); the aux-local rule never touches \
+                             the server-grad path"
+                                .into(),
+                        );
+                    }
+                }
+            }
+        }
+        if let Some(t) = topology {
+            spec.topology = t.parse()?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+/// The four compared paper methods, as named preset points of the spec
+/// space ([`Method::spec`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Method {
     /// SplitFed baseline with one server-side copy per client.
@@ -22,40 +512,40 @@ pub enum Method {
 }
 
 impl Method {
-    /// Every method, in the paper's comparison order.
+    /// Every preset, in the paper's comparison order.
     pub const ALL: [Method; 4] = [Method::FslMc, Method::FslOc, Method::FslAn, Method::CseFsl];
 
-    /// Does the server keep one model copy per client?
-    pub fn per_client_server_model(self) -> bool {
-        matches!(self, Method::FslMc | Method::FslAn)
-    }
-
-    /// Does the client train an auxiliary network and update locally?
-    pub fn uses_aux(self) -> bool {
-        matches!(self, Method::FslAn | Method::CseFsl)
-    }
-
-    /// Does the server send cut-layer gradients back per batch?
-    pub fn grad_downlink(self) -> bool {
-        matches!(self, Method::FslMc | Method::FslOc)
-    }
-
-    /// Can h exceed 1 (periodic smashed upload)?
-    pub fn supports_h(self) -> bool {
-        matches!(self, Method::CseFsl)
-    }
-
-    /// Default gradient clip (the paper adds clipping to FSL_OC to fix
-    /// its gradient-explosion instability; 0 disables elsewhere).
-    pub fn default_clip(self) -> f32 {
-        if self == Method::FslOc {
-            1.0
-        } else {
-            0.0
+    /// The preset's spec point. CSE_FSL starts at h = 1
+    /// ([`UploadSchedule::EveryBatch`]); compose
+    /// [`MethodSpec::with_period`] for h > 1.
+    pub fn spec(self) -> MethodSpec {
+        match self {
+            Method::FslMc => MethodSpec {
+                update: ClientUpdate::ServerGrad { clip: 0.0 },
+                upload: UploadSchedule::EveryBatch,
+                topology: ServerTopology::PerClient,
+            },
+            Method::FslOc => MethodSpec {
+                // The paper adds clipping to FSL_OC to fix its
+                // gradient-explosion instability.
+                update: ClientUpdate::ServerGrad { clip: 1.0 },
+                upload: UploadSchedule::EveryBatch,
+                topology: ServerTopology::Shared,
+            },
+            Method::FslAn => MethodSpec {
+                update: ClientUpdate::AuxLocal,
+                upload: UploadSchedule::EveryBatch,
+                topology: ServerTopology::PerClient,
+            },
+            Method::CseFsl => MethodSpec {
+                update: ClientUpdate::AuxLocal,
+                upload: UploadSchedule::EveryBatch,
+                topology: ServerTopology::Shared,
+            },
         }
     }
 
-    /// Parse a method name (`fsl_mc`/`mc`, …, `cse_fsl`/`cse`).
+    /// Parse a preset name (`fsl_mc`/`mc`, …, `cse_fsl`/`cse`).
     pub fn parse(s: &str) -> Option<Method> {
         match s.to_ascii_lowercase().replace('-', "_").as_str() {
             "fsl_mc" | "mc" => Some(Method::FslMc),
@@ -84,24 +574,35 @@ mod tests {
     use super::*;
 
     #[test]
-    fn capability_matrix_matches_paper() {
-        assert!(Method::FslMc.per_client_server_model());
-        assert!(!Method::FslOc.per_client_server_model());
-        assert!(Method::FslAn.per_client_server_model());
-        assert!(!Method::CseFsl.per_client_server_model());
-
-        assert!(!Method::FslMc.uses_aux());
-        assert!(!Method::FslOc.uses_aux());
-        assert!(Method::FslAn.uses_aux());
-        assert!(Method::CseFsl.uses_aux());
-
-        assert!(Method::FslMc.grad_downlink());
-        assert!(Method::FslOc.grad_downlink());
-        assert!(!Method::FslAn.grad_downlink());
-        assert!(!Method::CseFsl.grad_downlink());
-
-        assert!(Method::CseFsl.supports_h());
-        assert!(!Method::FslAn.supports_h());
+    fn preset_specs_match_paper_matrix() {
+        // The pre-refactor capability matrix, verbatim: (per-client
+        // server model, uses aux, grad downlink, supports h>1, clip).
+        // "Supports h" maps onto the open API as *h > 1 stays the same
+        // preset point*: only CSE_FSL absorbs a period — the SplitFed
+        // presets reject it outright, and FSL_AN × Period(h) is a valid
+        // but spec-only scenario (the point the paper never names).
+        let matrix = [
+            (Method::FslMc, true, false, true, false, 0.0f32),
+            (Method::FslOc, false, false, true, false, 1.0),
+            (Method::FslAn, true, true, false, false, 0.0),
+            (Method::CseFsl, false, true, false, true, 0.0),
+        ];
+        for (m, per_client, aux, grad, h_stays_preset, clip) in matrix {
+            let s = m.spec();
+            assert_eq!(s.topology == ServerTopology::PerClient, per_client, "{m}");
+            assert_eq!(s.update.uses_aux(), aux, "{m}");
+            assert_eq!(
+                matches!(s.update, ClientUpdate::ServerGrad { .. }),
+                grad,
+                "{m}"
+            );
+            assert_eq!(s.with_period(3).preset() == Some(m), h_stays_preset, "{m} h=3");
+            // Exactly the old supports_h + uses_aux semantics: a period
+            // is *runnable* iff the update rule is aux-local.
+            assert_eq!(s.with_period(3).validate().is_ok(), aux, "{m} h=3 validity");
+            assert_eq!(s.clip(), clip, "{m}");
+            assert_eq!(s.preset(), Some(m), "{m} must round-trip through preset()");
+        }
     }
 
     #[test]
@@ -110,13 +611,180 @@ mod tests {
             assert_eq!(Method::parse(&m.to_string()), Some(m));
         }
         assert_eq!(Method::parse("cse"), Some(Method::CseFsl));
+        assert_eq!(Method::parse("fsl-an"), Some(Method::FslAn));
         assert_eq!(Method::parse("bogus"), None);
     }
 
     #[test]
-    fn only_oc_clips_by_default() {
-        assert!(Method::FslOc.default_clip() > 0.0);
-        assert_eq!(Method::FslMc.default_clip(), 0.0);
-        assert_eq!(Method::CseFsl.default_clip(), 0.0);
+    fn period_canonicalizes_and_schedules() {
+        assert_eq!(UploadSchedule::period(1), UploadSchedule::EveryBatch);
+        assert_eq!(UploadSchedule::period(5), UploadSchedule::Period(5));
+        assert_eq!(UploadSchedule::period(5).batches_at(1), 5);
+        assert_eq!(UploadSchedule::period(5).batches_at(99), 5);
+        assert_eq!(UploadSchedule::EveryBatch.batches_at(7), 1);
+        assert_eq!(UploadSchedule::period(5).h_hint(), 5);
+        // Adaptive: h0=2, doubling every 3 rounds, capped at 8.
+        let a = UploadSchedule::AdaptivePeriod { h0: 2, h_max: 8, double_every: 3 };
+        assert_eq!(a.batches_at(1), 2);
+        assert_eq!(a.batches_at(3), 2);
+        assert_eq!(a.batches_at(4), 4);
+        assert_eq!(a.batches_at(7), 8);
+        assert_eq!(a.batches_at(1000), 8, "cap must hold far out");
+        assert_eq!(a.h_hint(), 2);
+    }
+
+    #[test]
+    fn spec_validation_rules() {
+        // ServerGrad requires every-batch uploads...
+        assert!(Method::FslMc.spec().with_period(2).validate().is_err());
+        assert!(Method::FslOc.spec().with_period(2).validate().is_err());
+        // ...AuxLocal composes with any schedule and either topology.
+        assert!(Method::FslAn.spec().with_period(4).validate().is_ok());
+        assert!(Method::CseFsl.spec().with_period(4).validate().is_ok());
+        let adaptive = MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 1, h_max: 8, double_every: 4 },
+            ..Method::CseFsl.spec()
+        };
+        assert!(adaptive.validate().is_ok());
+        // Degenerate parameters are rejected.
+        assert!(MethodSpec {
+            upload: UploadSchedule::Period(0),
+            ..Method::CseFsl.spec()
+        }
+        .validate()
+        .is_err());
+        // Non-canonical Period(1) is rejected too (it would fork the
+        // cache key / preset identity of an EveryBatch-identical run).
+        let err = MethodSpec { upload: UploadSchedule::Period(1), ..Method::CseFsl.spec() }
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("not canonical"), "{err}");
+        assert!(Method::CseFsl.spec().with_period(1).validate().is_ok(), "period(1) canonicalizes");
+        assert!(MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 0, h_max: 4, double_every: 2 },
+            ..Method::CseFsl.spec()
+        }
+        .validate()
+        .is_err());
+        assert!(MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 4, h_max: 2, double_every: 2 },
+            ..Method::CseFsl.spec()
+        }
+        .validate()
+        .is_err());
+        assert!(MethodSpec {
+            update: ClientUpdate::ServerGrad { clip: -1.0 },
+            ..Method::FslMc.spec()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn preset_detection_edges() {
+        // CSE_FSL absorbs every fixed period on the shared topology.
+        assert_eq!(Method::CseFsl.spec().with_period(10).preset(), Some(Method::CseFsl));
+        // The spec-only scenarios the paper never names:
+        assert_eq!(Method::FslAn.spec().with_period(2).preset(), None);
+        let oc_no_clip = MethodSpec {
+            update: ClientUpdate::ServerGrad { clip: 0.0 },
+            ..Method::FslOc.spec()
+        };
+        assert_eq!(oc_no_clip.preset(), None, "non-default clip is its own point");
+        let adaptive = MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 1, h_max: 8, double_every: 4 },
+            ..Method::CseFsl.spec()
+        };
+        assert_eq!(adaptive.preset(), None);
+    }
+
+    #[test]
+    fn tags_and_labels() {
+        // Presets keep their historical names (cache-key compatibility).
+        assert_eq!(Method::CseFsl.spec().with_period(5).tag(), "CSE_FSL");
+        assert_eq!(Method::FslMc.spec().tag(), "FSL_MC");
+        assert_eq!(Method::CseFsl.spec().with_period(5).label(), "CSE_FSL h=5");
+        assert_eq!(Method::FslAn.spec().label(), "FSL_AN");
+        // Spec-only points get the canonical axis tag.
+        assert_eq!(Method::FslAn.spec().with_period(4).tag(), "aux+p4+pc");
+        assert_eq!(Method::FslAn.spec().with_period(4).label(), "aux+p4+pc");
+        let oc_custom = MethodSpec {
+            update: ClientUpdate::ServerGrad { clip: 0.5 },
+            ..Method::FslOc.spec()
+        };
+        assert_eq!(oc_custom.tag(), "sg0.5+b+sh");
+        let adaptive = MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 2, h_max: 8, double_every: 5 },
+            ..Method::CseFsl.spec()
+        };
+        assert_eq!(adaptive.tag(), "aux+ap2x8e5+sh");
+    }
+
+    #[test]
+    fn axis_parsing() {
+        assert_eq!("aux".parse::<ClientUpdate>(), Ok(ClientUpdate::AuxLocal));
+        assert_eq!(
+            "server-grad".parse::<ClientUpdate>(),
+            Ok(ClientUpdate::ServerGrad { clip: 0.0 })
+        );
+        assert!("sideways".parse::<ClientUpdate>().is_err());
+        assert_eq!("1".parse::<UploadSchedule>(), Ok(UploadSchedule::EveryBatch));
+        assert_eq!("4".parse::<UploadSchedule>(), Ok(UploadSchedule::Period(4)));
+        assert_eq!(
+            "adaptive:2:8:5".parse::<UploadSchedule>(),
+            Ok(UploadSchedule::AdaptivePeriod { h0: 2, h_max: 8, double_every: 5 })
+        );
+        assert!("adaptive:2:8".parse::<UploadSchedule>().is_err());
+        assert!("x".parse::<UploadSchedule>().is_err());
+        assert_eq!("per-client".parse::<ServerTopology>(), Ok(ServerTopology::PerClient));
+        assert_eq!("sh".parse::<ServerTopology>(), Ok(ServerTopology::Shared));
+        assert!("ring".parse::<ServerTopology>().is_err());
+    }
+
+    #[test]
+    fn cli_resolution_composes() {
+        // --method alone is the historical preset path.
+        assert_eq!(
+            MethodSpec::from_cli("cse", None, None, None, None).unwrap(),
+            Method::CseFsl.spec()
+        );
+        assert_eq!(
+            MethodSpec::from_cli("mc", None, None, None, None).unwrap(),
+            Method::FslMc.spec()
+        );
+        // --upload-every composes onto the preset base...
+        assert_eq!(
+            MethodSpec::from_cli("cse", None, Some("5"), None, None).unwrap(),
+            Method::CseFsl.spec().with_period(5)
+        );
+        // ...including the spec-only "FSL_AN with h>1" point.
+        assert_eq!(
+            MethodSpec::from_cli("an", None, Some("4"), None, None).unwrap(),
+            Method::FslAn.spec().with_period(4)
+        );
+        // Axis flags compose without any preset semantics.
+        assert_eq!(
+            MethodSpec::from_cli("cse", Some("aux"), Some("4"), None, Some("per-client"))
+                .unwrap(),
+            Method::FslAn.spec().with_period(4)
+        );
+        // --clip composes with the server-grad rule only.
+        let oc = MethodSpec::from_cli("oc", None, None, Some("2.5"), None).unwrap();
+        assert_eq!(oc.clip(), 2.5);
+        assert_eq!(oc.preset(), None, "non-default clip leaves the preset");
+        assert!(MethodSpec::from_cli("cse", None, None, Some("1.0"), None).is_err());
+        assert!(MethodSpec::from_cli("cse", None, None, Some("0"), None).is_ok());
+        // Incoherent compositions are rejected at resolution time.
+        assert!(MethodSpec::from_cli("mc", None, Some("2"), None, None).is_err());
+        assert!(MethodSpec::from_cli("warp", None, None, None, None).is_err());
+        assert!(MethodSpec::from_cli("cse", None, Some("bogus"), None, None).is_err());
+    }
+
+    #[test]
+    fn traffic_projection_follows_update_axis() {
+        assert_eq!(Method::FslMc.spec().traffic(), TrafficProfile::ServerGrad);
+        assert_eq!(Method::FslOc.spec().traffic(), TrafficProfile::ServerGrad);
+        assert_eq!(Method::FslAn.spec().traffic(), TrafficProfile::AuxLocal);
+        assert_eq!(Method::CseFsl.spec().traffic(), TrafficProfile::AuxLocal);
     }
 }

@@ -1,10 +1,12 @@
 //! The L3 coordinator — the paper's system contribution.
 //!
-//! [`methods`] defines the four compared FSL variants; [`config`] the run
-//! configuration; [`client`]/[`server`] the per-party state (including
-//! the event-triggered `dataQueue` of Algorithm 2); [`round`] the trainer
-//! that drives communication rounds, asynchronous server updates,
-//! aggregation, and all accounting.
+//! [`methods`] defines the composable `MethodSpec` API (client-update
+//! rule × upload schedule × server topology, with the paper's four
+//! methods as presets); [`config`] the run configuration; [`client`]/
+//! [`server`] the per-party state (including the event-triggered
+//! `dataQueue` of Algorithm 2); [`round`] the trainer that drives
+//! communication rounds, asynchronous server updates, aggregation, and
+//! all accounting — branching only on the spec's axes.
 
 pub mod client;
 pub mod config;

@@ -1,15 +1,32 @@
 //! The training loop: rounds, event-triggered server updates, and
-//! aggregation — Algorithms 1 & 2 of the paper, for all four methods.
+//! aggregation — Algorithms 1 & 2 of the paper, for **any**
+//! [`MethodSpec`] point (the four paper methods are presets of it).
+//!
+//! The trainer branches exclusively on the spec's three axes:
+//!
+//! - [`ClientUpdate`] picks the round shape — `AuxLocal` runs the
+//!   fire-and-forget local round (Algorithm 1), `ServerGrad { clip }`
+//!   the blocking SplitFed round trip;
+//! - [`UploadSchedule`] decides how many local batches each round's
+//!   upload amortizes (`batches_at(t)` — h per round, possibly
+//!   adaptive);
+//! - [`ServerTopology`] (refined by `TrainConfig::server_shards`)
+//!   decides the server-side copy layout.
 //!
 //! One **communication round** = one upload wave: each participating
-//! client trains `h` local batches (h = 1 except CSE_FSL) and uploads its
-//! smashed data once ("when client i sends the smashed data to the
-//! server, it completes one communication round"). The server consumes
-//! arrivals from the dataQueue in arrival order (configurable for the
-//! Fig. 6 ablation) and updates its server-side model(s) event-triggered,
+//! client trains its scheduled local batches and uploads its smashed
+//! data once ("when client i sends the smashed data to the server, it
+//! completes one communication round"). The server consumes arrivals
+//! from the dataQueue in arrival order (configurable for the Fig. 6
+//! ablation) and updates its server-side model(s) event-triggered,
 //! never waiting for a barrier. Every `agg_every` rounds the clients
-//! upload their client-side models (+ aux) for FedAvg (Eq. (14)) and
-//! download the aggregate.
+//! upload their client-side models (+ aux for the aux-local rule) for
+//! FedAvg (Eq. (14)) and download the aggregate.
+//!
+//! [`MethodSpec`]: super::methods::MethodSpec
+//! [`ClientUpdate`]: super::methods::ClientUpdate
+//! [`UploadSchedule`]: super::methods::UploadSchedule
+//! [`ServerTopology`]: super::methods::ServerTopology
 //!
 //! Timing is simulated deterministically (sim/netmodel): client compute,
 //! uplink/downlink transmission, and server update costs all advance the
@@ -81,6 +98,7 @@ use crate::util::prng::Rng;
 
 use super::client::ClientState;
 use super::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
+use super::methods::{ClientUpdate, ServerTopology};
 
 use super::server::{ServerState, ShardMap, SmashedMsg, Topology};
 
@@ -212,8 +230,8 @@ where
 impl<'a, E: SplitEngine> Trainer<'a, E> {
     /// Validate `cfg` against the setup and build the initial state:
     /// globally-initialized models (Step 1), per-client profiles and RNG
-    /// streams, and the server topology implied by the method and
-    /// `cfg.server_shards`.
+    /// streams, and the server topology implied by the spec's topology
+    /// axis and `cfg.server_shards`.
     pub fn new(engine: &'a E, cfg: TrainConfig, setup: TrainerSetup<'a>) -> Result<Self, String> {
         let n = setup.partition.n_clients();
         cfg.validate(n)?;
@@ -265,12 +283,11 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let payload = engine.batch() as u64 * (wires.smashed_per_sample + wires.label);
         let costs: Vec<f64> = clients
             .iter()
-            .map(|c| sched::profile_cost(&c.profile, cfg.h, payload))
+            .map(|c| sched::profile_cost(&c.profile, cfg.spec.h_hint(), payload))
             .collect();
-        let topology = if cfg.method.per_client_server_model() {
-            Topology::PerClient
-        } else {
-            Topology::Sharded(cfg.server_shards)
+        let topology = match cfg.spec.topology {
+            ServerTopology::PerClient => Topology::PerClient,
+            ServerTopology::Shared => Topology::Sharded(cfg.server_shards),
         };
         // Per-client label histograms: the locality map clusters on
         // them, and every map reports its label-skew metric over them.
@@ -357,7 +374,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             critical_path: self.timeline.critical_path(self.server.lanes()),
             lane_busy: self.timeline.lane_busy(self.server.lanes()),
             server_storage_params: storage::server_storage_params_sharded(
-                self.cfg.method,
+                &self.cfg.spec,
                 self.clients.len(),
                 self.cfg.server_shards,
                 &sizes,
@@ -375,10 +392,28 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let mut client_gnorms = Vec::new();
         let mut msgs: Vec<SmashedMsg> = Vec::new();
 
-        if self.cfg.method.grad_downlink() {
-            self.splitfed_round(&participants, lr, server_lr, &mut train_losses, &mut client_gnorms)?;
-        } else {
-            self.local_round(&participants, lr, &mut train_losses, &mut client_gnorms, &mut msgs)?;
+        // The update axis picks the round shape; the upload axis the
+        // local batch count this round's upload amortizes.
+        match self.cfg.spec.update {
+            ClientUpdate::ServerGrad { clip } => self.splitfed_round(
+                &participants,
+                lr,
+                server_lr,
+                clip,
+                &mut train_losses,
+                &mut client_gnorms,
+            )?,
+            ClientUpdate::AuxLocal => {
+                let h = self.cfg.spec.upload.batches_at(t);
+                self.local_round(
+                    &participants,
+                    h,
+                    lr,
+                    &mut train_losses,
+                    &mut client_gnorms,
+                    &mut msgs,
+                )?
+            }
         }
 
         // Event-triggered server updates over the arrival queue.
@@ -417,15 +452,18 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         Ok(())
     }
 
-    /// FSL_AN / CSE_FSL round: h local auxiliary-loss batches per client,
-    /// then one smashed upload (Algorithm 1). Client work fans out
-    /// according to `cfg.parallelism`; every per-client artifact (spans,
-    /// wire bytes, the smashed message) is produced worker-locally and
-    /// merged back in canonical client-id order, so the fan-out is
-    /// invisible in the run record.
+    /// The aux-local round (`ClientUpdate::AuxLocal` — FSL_AN / CSE_FSL
+    /// and every spec-only point on that axis): `h` local
+    /// auxiliary-loss batches per client (the upload schedule's batch
+    /// count for this round), then one smashed upload (Algorithm 1).
+    /// Client work fans out according to `cfg.parallelism`; every
+    /// per-client artifact (spans, wire bytes, the smashed message) is
+    /// produced worker-locally and merged back in canonical client-id
+    /// order, so the fan-out is invisible in the run record.
     fn local_round(
         &mut self,
         participants: &[usize],
+        h: usize,
         lr: f32,
         train_losses: &mut Vec<f32>,
         client_gnorms: &mut Vec<f32>,
@@ -440,7 +478,6 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         }
         let engine = self.engine;
         let train = self.train;
-        let h = self.cfg.h;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         let payload = smashed_bytes + label_bytes;
@@ -524,17 +561,20 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         Ok(())
     }
 
-    /// FSL_MC / FSL_OC round: one interactive split batch per client —
-    /// forward, smashed upload, server fwd/bwd, gradient downlink, client
-    /// backward. The client *blocks* on the server round trip, so only
-    /// phase 1 (forward + upload) fans out; phase 2 is the serialized
-    /// server loop — one global loop for the per-client-copy methods, or
-    /// one loop per shard executor for sharded FSL_OC.
+    /// The server-grad round (`ClientUpdate::ServerGrad` — FSL_MC /
+    /// FSL_OC): one interactive split batch per client — forward,
+    /// smashed upload, server fwd/bwd, gradient downlink (norm-clipped
+    /// by `clip`; 0 = off), client backward. The client *blocks* on the
+    /// server round trip, so only phase 1 (forward + upload) fans out;
+    /// phase 2 is the serialized server loop — one global loop for the
+    /// per-client topology, or one loop per shard executor when the
+    /// shared topology is sharded.
     fn splitfed_round(
         &mut self,
         participants: &[usize],
         lr: f32,
         server_lr: f32,
+        clip: f32,
         train_losses: &mut Vec<f32>,
         client_gnorms: &mut Vec<f32>,
     ) -> Result<(), EngineError> {
@@ -626,7 +666,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     &labels,
                     server_lr,
                     p.seed,
-                    self.cfg.clip,
+                    clip,
                 )?;
                 self.server.copies[copy] = out.new_server;
                 self.server.record_update(copy);
@@ -654,7 +694,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     &out.grad_smashed,
                     lr,
                     p.seed,
-                    self.cfg.clip,
+                    clip,
                 )?;
                 c.xc = new_xc;
                 client_gnorms.push(gnorm);
@@ -805,6 +845,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         if contributors.is_empty() {
             return Ok(());
         }
+        // Aux networks ride along with the model exchange exactly when
+        // the update axis trains them.
+        let aux_riders = matches!(self.cfg.spec.update, ClientUpdate::AuxLocal);
         // Upload client models (+ aux) — wire cost + arrival times.
         let mut last_arrival = self.server.free_at_max();
         for &i in &contributors {
@@ -812,7 +855,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             let mut drng = self.rng.split(i as u64 ^ 0xC4);
             let mut bytes = self.wires.client_model;
             self.ledger.record(i, MsgKind::ClientModelUpload, self.wires.client_model);
-            if self.cfg.method.uses_aux() {
+            if aux_riders {
                 bytes += self.wires.aux_model;
                 self.ledger.record(i, MsgKind::AuxModelUpload, self.wires.aux_model);
             }
@@ -826,7 +869,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             );
             last_arrival = last_arrival.max(c.ready_at + t_up);
             self.server.client_acc.add(&c.xc, 1.0);
-            if self.cfg.method.uses_aux() {
+            if aux_riders {
                 self.server.aux_acc.add(&c.ac, 1.0);
             }
         }
@@ -840,7 +883,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
 
         let mut xc_new = vec![0.0f32; self.engine.client_size()];
         self.server.client_acc.finish_into(&mut xc_new);
-        let ac_new = if self.cfg.method.uses_aux() {
+        let ac_new = if aux_riders {
             let mut v = vec![0.0f32; self.engine.aux_size()];
             self.server.aux_acc.finish_into(&mut v);
             Some(v)

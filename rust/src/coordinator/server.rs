@@ -227,6 +227,26 @@ impl ShardMap {
     /// `shard_label_divergence` surfaced in `RunRecord` / summary JSON
     /// and compared across map kinds by `exp::figures::fig_staleness`.
     pub fn label_divergence(&self, histograms: &[Vec<usize>]) -> f64 {
+        let Some((global, shard_h, g_tot)) = self.label_mix(histograms) else {
+            return 0.0;
+        };
+        let mut acc = 0.0;
+        for sh in &shard_h {
+            let s_tot: f64 = sh.iter().sum();
+            if s_tot == 0.0 {
+                acc += 1.0;
+                continue;
+            }
+            acc += 0.5 * Self::tv_distance(sh, s_tot, &global, g_tot);
+        }
+        acc / self.shards as f64
+    }
+
+    /// Shared accumulation behind both skew metrics: the global and
+    /// per-shard label mixes, plus the global sample total. `None` when
+    /// there is nothing to measure (no classes, no shards, or no
+    /// samples) — both metrics define that as zero skew.
+    fn label_mix(&self, histograms: &[Vec<usize>]) -> Option<(Vec<f64>, Vec<Vec<f64>>, f64)> {
         assert_eq!(
             histograms.len(),
             self.shard_of.len(),
@@ -234,7 +254,7 @@ impl ShardMap {
         );
         let classes = histograms.first().map(|h| h.len()).unwrap_or(0);
         if classes == 0 || self.shards == 0 {
-            return 0.0;
+            return None;
         }
         let mut global = vec![0f64; classes];
         let mut shard_h = vec![vec![0f64; classes]; self.shards];
@@ -248,22 +268,47 @@ impl ShardMap {
         }
         let g_tot: f64 = global.iter().sum();
         if g_tot == 0.0 {
-            return 0.0;
+            return None;
         }
+        Some((global, shard_h, g_tot))
+    }
+
+    /// Total-variation distance between one shard's label mix and the
+    /// global one (callers multiply by ½ and weight as their metric
+    /// defines).
+    fn tv_distance(sh: &[f64], s_tot: f64, global: &[f64], g_tot: f64) -> f64 {
+        sh.iter().zip(global).map(|(&s, &g)| (s / s_tot - g / g_tot).abs()).sum()
+    }
+
+    /// Sample-mass-weighted shard-skew: each shard's TV distance from
+    /// the global label mix, weighted by the fraction of all samples
+    /// the shard serves — `Σ_s (|D_s| / |D|) · TV_s` — instead of the
+    /// per-shard mean [`ShardMap::label_divergence`] takes.
+    ///
+    /// The two metrics agree when shard sample masses are equal and
+    /// diverge when they are not: the unweighted mean lets a tiny
+    /// pathological shard dominate the score (it counts as much as a
+    /// shard serving half the data), while the weighted form scores
+    /// what a *sample-weighted* cross-shard FedAvg actually mixes.
+    /// An empty shard carries zero mass and therefore zero weighted
+    /// contribution (the unweighted metric charges it the full
+    /// distance 1). The unweighted form remains the recorded
+    /// `RunRecord::shard_label_divergence` (pinned by goldens and
+    /// EXPERIMENTS.md); this is the ROADMAP follow-up metric for
+    /// materially uneven shard sizes.
+    pub fn label_divergence_weighted(&self, histograms: &[Vec<usize>]) -> f64 {
+        let Some((global, shard_h, g_tot)) = self.label_mix(histograms) else {
+            return 0.0;
+        };
         let mut acc = 0.0;
         for sh in &shard_h {
             let s_tot: f64 = sh.iter().sum();
             if s_tot == 0.0 {
-                acc += 1.0;
-                continue;
+                continue; // zero mass, zero weighted contribution
             }
-            let mut tv = 0.0;
-            for k in 0..classes {
-                tv += (sh[k] / s_tot - global[k] / g_tot).abs();
-            }
-            acc += 0.5 * tv;
+            acc += (s_tot / g_tot) * 0.5 * Self::tv_distance(sh, s_tot, &global, g_tot);
         }
-        acc / self.shards as f64
+        acc
     }
 
     /// Number of shards.
@@ -648,6 +693,52 @@ mod tests {
     #[should_panic(expected = "one label histogram per client")]
     fn locality_rejects_histogram_mismatch() {
         ShardMap::locality(3, 2, &[vec![1, 2]], &[1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn weighted_divergence_diverges_from_mean_on_unbalanced_shards() {
+        // Deliberately unbalanced shard masses: contiguous(3, 2) puts
+        // clients {0, 1} (32 well-mixed samples) on shard 0 and the
+        // tiny pure-label client {2} (2 samples) on shard 1. Global
+        // mix: (18, 16)/34.
+        //   TV_0 = ½(|16/32 − 18/34| + |16/32 − 16/34|) ≈ 0.0294
+        //   TV_1 = ½(|1 − 18/34| + |0 − 16/34|)        ≈ 0.4706
+        // Unweighted mean = (TV_0 + TV_1)/2 = 0.25 — the 2-sample shard
+        // dominates. Weighted = (32/34)·TV_0 + (2/34)·TV_1 ≈ 0.0554 —
+        // proportional to what a sample-weighted FedAvg actually mixes.
+        let h = vec![vec![8, 8], vec![8, 8], vec![2, 0]];
+        let m = ShardMap::contiguous(3, 2);
+        let mean = m.label_divergence(&h);
+        let weighted = m.label_divergence_weighted(&h);
+        assert!((mean - 0.25).abs() < 1e-9, "mean {mean}");
+        assert!((weighted - 0.0554).abs() < 1e-3, "weighted {weighted}");
+        assert!(
+            weighted < mean / 4.0,
+            "the metrics must diverge on unbalanced masses: {weighted} vs {mean}"
+        );
+        // On equal (non-zero) shard masses the two metrics agree
+        // exactly: contiguous(4, 2) packs the pure-label pairs, both
+        // shards score TV = 0.5, and the weights are uniform.
+        let h_eq = vec![vec![8, 0], vec![8, 0], vec![0, 8], vec![0, 8]];
+        let m_eq = ShardMap::contiguous(4, 2);
+        assert_eq!(m_eq.label_divergence(&h_eq), 0.5);
+        assert!(
+            (m_eq.label_divergence(&h_eq) - m_eq.label_divergence_weighted(&h_eq)).abs()
+                < 1e-12
+        );
+        // Empty-shard semantics differ by design: the unweighted form
+        // charges the full distance, the weighted form zero mass. A
+        // 1-client, 2-shard map cannot be built via the constructors
+        // (shards <= clients), so exercise degenerate masses instead:
+        // an all-empty histogram shard.
+        let h_zero = vec![vec![4, 4], vec![0, 0]];
+        let m2 = ShardMap::contiguous(2, 2);
+        assert_eq!(m2.label_divergence(&h_zero), 0.5, "mean charges the empty shard");
+        assert_eq!(
+            m2.label_divergence_weighted(&h_zero),
+            0.0,
+            "weighted gives the empty shard zero mass"
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
-use crate::coordinator::methods::Method;
+use crate::coordinator::methods::MethodSpec;
 use crate::sched::SchedPolicy;
 use crate::coordinator::round::{Trainer, TrainerSetup};
 use crate::data::partition::{by_writer, dirichlet, equalize, iid, Partition};
@@ -39,10 +39,10 @@ pub enum Scale {
 }
 
 impl Scale {
-    /// Parse `quick` / `ci` / `paper`.
+    /// Parse `quick` (alias `smoke`) / `ci` / `paper`.
     pub fn parse(s: &str) -> Option<Scale> {
         match s {
-            "quick" => Some(Scale::Quick),
+            "quick" | "smoke" => Some(Scale::Quick),
             "ci" => Some(Scale::Ci),
             "paper" => Some(Scale::Paper),
             _ => None,
@@ -158,6 +158,17 @@ impl Dist {
             Dist::NonIidWriter => "writer",
         }
     }
+
+    /// Parse a distribution name — the one home of `--dist` alias
+    /// handling (tags round-trip: `Dist::parse(d.tag()) == Some(d)`).
+    pub fn parse(s: &str) -> Option<Dist> {
+        match s.to_ascii_lowercase().as_str() {
+            "iid" => Some(Dist::Iid),
+            "dir" | "dirichlet" => Some(Dist::NonIidDirichlet),
+            "writer" | "by-writer" => Some(Dist::NonIidWriter),
+            _ => None,
+        }
+    }
 }
 
 /// One fully-specified run (the cache key).
@@ -167,10 +178,14 @@ pub struct RunSpec {
     pub dataset: String,
     /// Auxiliary architecture name (manifest key).
     pub aux: String,
-    /// Which FSL method to run.
-    pub method: Method,
-    /// CSE_FSL's local batches per upload.
-    pub h: usize,
+    /// The algorithm point to run: client-update rule × upload schedule
+    /// × server topology. The paper's methods are presets
+    /// (`Method::spec()`, e.g. `Method::CseFsl.spec().with_period(5)`);
+    /// any other spec point runs through the same harness. Every axis
+    /// changes results, so the whole spec joins [`RunSpec::key`] — with
+    /// the four presets keeping their historical key strings for cache
+    /// compatibility ([`MethodSpec::tag`]).
+    pub method: MethodSpec,
     /// Number of federated clients.
     pub n_clients: usize,
     /// Clients sampled per round (0 = all).
@@ -209,7 +224,13 @@ pub struct RunSpec {
 impl RunSpec {
     /// The results-cache key: every field that can change the run's
     /// outcome, and nothing else (`parallelism` is excluded by the
-    /// bit-determinism contract).
+    /// bit-determinism contract). The method segment is
+    /// [`MethodSpec::tag`]: the historical preset name for the four
+    /// paper methods (their key strings are **unchanged** across the
+    /// spec refactor — cached preset records replay), a canonical
+    /// `update+upload+topology` tag for spec-only points. The `h{}`
+    /// segment is the upload period hint (redundant with the tag for
+    /// custom specs, load-bearing for the preset strings).
     pub fn key(&self) -> String {
         let arr = match self.arrival {
             ArrivalOrder::ByDelay => "delay",
@@ -220,8 +241,8 @@ impl RunSpec {
             "{}-{}-{}-h{}-n{}-p{}-{}-{}-lr{}-r{}-d{}-t{}-k{}-m{}-s{}",
             self.dataset,
             self.aux,
-            self.method,
-            self.h,
+            self.method.tag(),
+            self.method.h_hint(),
             self.n_clients,
             self.participation,
             self.dist.tag(),
@@ -236,14 +257,11 @@ impl RunSpec {
         )
     }
 
-    /// Human-readable series label (method, plus h for CSE_FSL, the
-    /// shard count when sharded, and the map tag for non-default maps).
+    /// Human-readable series label ([`MethodSpec::label`] — historical
+    /// preset labels, canonical tags for spec-only points — plus the
+    /// shard count when sharded and the map tag for non-default maps).
     pub fn label(&self) -> String {
-        let mut l = if self.method == Method::CseFsl {
-            format!("{} h={}", self.method, self.h)
-        } else {
-            self.method.to_string()
-        };
+        let mut l = self.method.label();
         if self.server_shards > 1 {
             l.push_str(&format!(" k={}", self.server_shards));
         }
@@ -254,12 +272,15 @@ impl RunSpec {
     }
 
     /// Spec-level validation for knobs `TrainConfig::validate` cannot
-    /// see: the locality shard map clusters clients by label
-    /// distribution, which is meaningless under IID data (every client's
-    /// histogram already matches the global one), so it requires a
-    /// non-IID partition. Checked by [`Harness::run_cached`] before
-    /// anything runs (or is read from cache).
+    /// see: axis coherence of the method spec (so incoherent specs fail
+    /// before the cache is touched), and the locality shard map's
+    /// non-IID requirement — locality clusters clients by label
+    /// distribution, which is meaningless under IID data (every
+    /// client's histogram already matches the global one). Checked by
+    /// [`Harness::run_cached`] before anything runs (or is read from
+    /// cache).
     pub fn validate(&self) -> Result<(), String> {
+        self.method.validate()?;
         if self.shard_map == ShardMapKind::Locality && self.dist == Dist::Iid {
             return Err(
                 "--shard-map locality requires a non-IID partition (--dist dir | writer): \
@@ -569,19 +590,18 @@ fn execute_spec<E: SplitEngine>(
 ) -> Result<RunRecord, String> {
     let w = &spec.workload;
     // Aggregate once per local epoch (paper setting): epoch =
-    // batches_per_epoch local batches = bpe/h rounds.
+    // batches_per_epoch local batches = bpe/h rounds (the upload
+    // schedule's static period hint; adaptive schedules use h0).
     let bpe = (w.train_per_client / engine.batch()).max(1);
-    let agg_every = (bpe / spec.h).max(1);
+    let agg_every = (bpe / spec.method.h_hint()).max(1);
     let cfg = TrainConfig {
-        method: spec.method,
-        h: spec.h,
+        spec: spec.method,
         rounds: w.rounds,
         agg_every,
         lr0: spec.lr0,
         lr_decay_rate: 0.99,
         lr_decay_every: 10,
         server_lr_scale: 0.25,
-        clip: spec.method.default_clip(),
         participation: spec.participation,
         seed: spec.seed,
         eval_every: w.eval_every,
@@ -787,12 +807,24 @@ fn truncate(s: &str, n: usize) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::methods::Method;
 
     #[test]
     fn scale_parse() {
         assert_eq!(Scale::parse("ci"), Some(Scale::Ci));
+        assert_eq!(Scale::parse("smoke"), Some(Scale::Quick), "smoke aliases quick (CI job)");
         assert_eq!(Scale::parse("nope"), None);
         assert_eq!(Scale::Paper.to_string(), "paper");
+    }
+
+    #[test]
+    fn dist_parse_roundtrips_tags() {
+        for d in [Dist::Iid, Dist::NonIidDirichlet, Dist::NonIidWriter] {
+            assert_eq!(Dist::parse(d.tag()), Some(d), "{d:?}");
+        }
+        assert_eq!(Dist::parse("dirichlet"), Some(Dist::NonIidDirichlet));
+        assert_eq!(Dist::parse("by-writer"), Some(Dist::NonIidWriter));
+        assert_eq!(Dist::parse("pareto"), None);
     }
 
     #[test]
@@ -808,8 +840,7 @@ mod tests {
         let mut spec = RunSpec {
             dataset: "cifar".into(),
             aux: "cnn27".into(),
-            method: Method::CseFsl,
-            h: 5,
+            method: Method::CseFsl.spec().with_period(5),
             n_clients: 8,
             participation: 0,
             dist: Dist::Iid,
@@ -860,8 +891,7 @@ mod tests {
         let spec = RunSpec {
             dataset: "femnist".into(),
             aux: "cnn8".into(),
-            method: Method::CseFsl,
-            h: 2,
+            method: Method::CseFsl.spec().with_period(2),
             n_clients: 6,
             participation: 0,
             dist: Dist::NonIidWriter,
@@ -905,8 +935,7 @@ mod tests {
         let base = RunSpec {
             dataset: "cifar".into(),
             aux: "cnn27".into(),
-            method: Method::CseFsl,
-            h: 5,
+            method: Method::CseFsl.spec().with_period(5),
             n_clients: 5,
             participation: 0,
             dist: Dist::Iid,
@@ -920,8 +949,17 @@ mod tests {
             shard_map: ShardMapKind::Contiguous,
         };
         let mut other = base.clone();
-        other.h = 10;
+        other.method = other.method.with_period(10);
         assert_ne!(base.key(), other.key());
+        // Every spec axis changes the key: update rule, upload
+        // schedule, and topology each move the method segment.
+        let mut other = base.clone();
+        other.method = Method::FslOc.spec();
+        assert_ne!(base.key(), other.key());
+        let mut other = base.clone();
+        other.method.topology = crate::coordinator::methods::ServerTopology::PerClient;
+        assert_ne!(base.key(), other.key(), "topology must join the key");
+        assert!(other.key().contains("aux+p5+pc"), "{}", other.key());
         // Parallelism must NOT change the key: threaded runs are
         // bit-identical to sequential ones and share the cache.
         let mut other = base.clone();
@@ -963,6 +1001,59 @@ mod tests {
         let mut other = base.clone();
         other.seed = 2;
         assert_ne!(base.key(), other.key());
+    }
+
+    #[test]
+    fn preset_keys_match_pre_spec_refactor_strings() {
+        // Cache compatibility is a hard acceptance criterion of the
+        // MethodSpec refactor: the four paper presets must produce the
+        // exact key strings the closed Method enum produced, so every
+        // pre-refactor cache entry keeps replaying. Pinned literally.
+        let base = |method: MethodSpec| RunSpec {
+            dataset: "cifar".into(),
+            aux: "cnn27".into(),
+            method,
+            n_clients: 5,
+            participation: 0,
+            dist: Dist::Iid,
+            arrival: ArrivalOrder::ByDelay,
+            lr0: 0.05,
+            seed: 1,
+            workload: cifar_workload(Scale::Quick),
+            parallelism: Parallelism::Sequential,
+            server_shards: 1,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Contiguous,
+        };
+        let tail = "n5-p0-iid-delay-lr0.05-r4-d100-t100-k1-mcont-s1";
+        assert_eq!(
+            base(Method::FslMc.spec()).key(),
+            format!("cifar-cnn27-FSL_MC-h1-{tail}")
+        );
+        assert_eq!(
+            base(Method::FslOc.spec()).key(),
+            format!("cifar-cnn27-FSL_OC-h1-{tail}")
+        );
+        assert_eq!(
+            base(Method::FslAn.spec()).key(),
+            format!("cifar-cnn27-FSL_AN-h1-{tail}")
+        );
+        assert_eq!(
+            base(Method::CseFsl.spec()).key(),
+            format!("cifar-cnn27-CSE_FSL-h1-{tail}")
+        );
+        assert_eq!(
+            base(Method::CseFsl.spec().with_period(5)).key(),
+            format!("cifar-cnn27-CSE_FSL-h5-{tail}")
+        );
+        // Historical labels too (they name cached CSVs and series).
+        assert_eq!(base(Method::CseFsl.spec().with_period(5)).label(), "CSE_FSL h=5");
+        assert_eq!(base(Method::FslAn.spec()).label(), "FSL_AN");
+        // The spec-only scenario gets its own canonical key + label and
+        // can never collide with a preset entry.
+        let novel = base(Method::FslAn.spec().with_period(4));
+        assert_eq!(novel.key(), format!("cifar-cnn27-aux+p4+pc-h4-{tail}"));
+        assert_eq!(novel.label(), "aux+p4+pc");
     }
 
     #[test]

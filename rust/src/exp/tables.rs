@@ -2,7 +2,7 @@
 
 use crate::comm::accounting::{table2, WireSizes};
 use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
-use crate::coordinator::methods::Method;
+use crate::coordinator::methods::{Method, MethodSpec};
 use crate::sched::SchedPolicy;
 use crate::storage::{server_storage_m, ModelSizes};
 
@@ -42,7 +42,7 @@ pub fn table2_report(harness: &mut Harness) -> Result<String, String> {
             f(5) as f64 / 1e9,
             f(10) as f64 / 1e9,
             f(50) as f64 / 1e9,
-            server_storage_m(method, 50, &sizes),
+            server_storage_m(&method.spec(), 50, &sizes),
         ));
     }
     out.push_str(
@@ -118,18 +118,18 @@ pub fn table5_report(harness: &mut Harness, scale: Scale) -> Result<String, Stri
             "{:<16} {:>12} {:>12} {:>10} {:>12}\n",
             "method", "acc(IID)", "acc(nonIID)", "load(GB)", "storage(M)"
         ));
-        let specs: Vec<(String, Method, usize)> = {
+        let specs: Vec<(String, MethodSpec)> = {
             let mut v = vec![
-                ("FSL_MC".to_string(), Method::FslMc, 1),
-                ("FSL_OC".to_string(), Method::FslOc, 1),
-                ("FSL_AN".to_string(), Method::FslAn, 1),
+                ("FSL_MC".to_string(), Method::FslMc.spec()),
+                ("FSL_OC".to_string(), Method::FslOc.spec()),
+                ("FSL_AN".to_string(), Method::FslAn.spec()),
             ];
             for &h in &h_set {
-                v.push((format!("CSE_FSL h={h}"), Method::CseFsl, h));
+                v.push((format!("CSE_FSL h={h}"), Method::CseFsl.spec().with_period(h)));
             }
             v
         };
-        for (name, method, h) in specs {
+        for (name, method) in specs {
             let mut accs = Vec::new();
             let mut load_gb = 0.0;
             let mut storage_m = 0.0;
@@ -143,7 +143,7 @@ pub fn table5_report(harness: &mut Harness, scale: Scale) -> Result<String, Stri
                 } else {
                     fig_base(ds, aux, wl)
                 };
-                let spec = RunSpec { method, h, dist, ..base };
+                let spec = RunSpec { method, dist, ..base };
                 let rec = harness.run_cached(&spec)?;
                 accs.push(rec.final_accuracy);
                 load_gb = rec.total_gb();
@@ -166,8 +166,7 @@ fn fig_base(dataset: &str, aux: &str, w: super::common::Workload) -> RunSpec {
     RunSpec {
         dataset: dataset.into(),
         aux: aux.into(),
-        method: Method::CseFsl,
-        h: 1,
+        method: Method::CseFsl.spec(),
         n_clients: 5,
         participation: 0,
         dist: Dist::Iid,

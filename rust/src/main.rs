@@ -1,17 +1,19 @@
 //! `cse-fsl` — launcher for the CSE-FSL reproduction.
 //!
 //! Subcommands:
-//!   run      one training run (any method/dataset/aux/h), prints the
-//!            round table and summary
-//!   figure   regenerate a paper figure (3|4|5|6|7|8|9|k|all; `k` is the
-//!            repo's accuracy-vs-shards staleness figure)
+//!   run      one training run (any method-spec point: preset --method,
+//!            or composed --update/--upload-every/--clip/--topology),
+//!            prints the round table and summary
+//!   figure   regenerate a figure (3|4|5|6|7|8|9|k|h|all; `k` is the
+//!            repo's accuracy-vs-shards staleness figure, `h` the
+//!            upload-period x topology figure)
 //!   table    regenerate a paper table (2|3|4|5|all)
 //!   inspect  show the AOT artifact manifest
 //!
 //! Everything requires `make artifacts` to have produced `artifacts/`.
 
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::MethodSpec;
 use cse_fsl::exp::common::{
     cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale,
 };
@@ -55,15 +57,45 @@ fn cmd_run(argv: &[String]) -> i32 {
     let cmd = Command::new("cse-fsl run", "run one federated-split-learning training job")
         .opt("dataset", "femnist", "cifar | femnist")
         .opt("aux", "", "auxiliary arch (default: cnn27 for cifar, cnn8 for femnist)")
-        .opt("method", "cse", "mc | oc | an | cse")
-        .opt("h", "1", "local batches per smashed upload (CSE only for h>1)")
+        .opt(
+            "method",
+            "cse",
+            "preset base spec: mc | oc | an | cse (axis flags below override \
+             individual axes of the preset)",
+        )
+        .opt_nodefault(
+            "h",
+            "local batches per smashed upload (alias of --upload-every; the \
+             aux-local update rule only for h>1; absent = keep the --method \
+             preset's schedule, i.e. h=1 for every preset)",
+        )
+        .opt_nodefault(
+            "update",
+            "client-update axis: grad (server-grad downlink) | aux (aux-local); \
+             overrides the --method preset's axis",
+        )
+        .opt_nodefault(
+            "upload-every",
+            "upload-schedule axis: <h> | adaptive:<h0>:<h_max>:<double_every>; \
+             takes precedence over --h",
+        )
+        .opt_nodefault(
+            "clip",
+            "gradient-norm clip of the server-grad update rule (composes with \
+             --update grad / the mc|oc presets; 0 = off)",
+        )
+        .opt_nodefault(
+            "topology",
+            "server-topology axis: per-client | shared; overrides the --method \
+             preset's axis",
+        )
         .opt("clients", "5", "number of clients")
         .opt("participation", "0", "clients sampled per round (0 = all)")
         .opt("dist", "iid", "iid | dir | writer")
         .opt("rounds", "20", "communication rounds")
         .opt("lr", "0.02", "initial learning rate")
         .opt("seed", "1", "experiment seed")
-        .opt("scale", "ci", "workload preset: quick | ci | paper")
+        .opt("scale", "ci", "workload preset: quick (alias smoke) | ci | paper")
         .opt("out", "results", "output directory")
         .opt(
             "parallelism",
@@ -116,17 +148,24 @@ fn cmd_run(argv: &[String]) -> i32 {
             "" => if dataset == "cifar" { "cnn27" } else { "cnn8" }.to_string(),
             a => a.to_string(),
         };
-        let dist = match args.get("dist").unwrap() {
-            "iid" => Dist::Iid,
-            "dir" => Dist::NonIidDirichlet,
-            "writer" => Dist::NonIidWriter,
-            other => return Err(format!("unknown dist {other}")),
-        };
+        let dist = args
+            .get("dist")
+            .and_then(Dist::parse)
+            .ok_or_else(|| format!("unknown dist {:?}", args.get("dist").unwrap_or("")))?;
+        // Method-spec resolution is centralized in MethodSpec::from_cli
+        // (--method preset base, axis flags override; --upload-every
+        // wins over the historical --h alias when both are given).
+        let method = MethodSpec::from_cli(
+            args.get("method").unwrap(),
+            args.get("update"),
+            args.get("upload-every").or_else(|| args.get("h")),
+            args.get("clip"),
+            args.get("topology"),
+        )?;
         let spec = RunSpec {
             dataset,
             aux,
-            method: Method::parse(args.get("method").unwrap()).ok_or("bad --method")?,
-            h: args.parse_as("h").map_err(|e| e.to_string())?,
+            method,
             n_clients: args.parse_as("clients").map_err(|e| e.to_string())?,
             participation: args.parse_as("participation").map_err(|e| e.to_string())?,
             dist,
@@ -204,7 +243,7 @@ fn figure_table_args(
     let cmd =
         Command::new(&format!("cse-fsl {what}"), &format!("regenerate a paper {what}"))
             .positional("id", "which one (or 'all')")
-            .opt("scale", "ci", "quick | ci | paper")
+            .opt("scale", "ci", "quick (alias smoke) | ci | paper")
             .opt("out", "results", "output directory")
             .opt("engine", "auto", "compute backend: auto | pjrt | mock");
     let args = cmd.parse(argv).map_err(|e| format!("{e}\n\n{}", cmd.usage()))?;
@@ -220,7 +259,7 @@ fn cmd_figure(argv: &[String]) -> i32 {
         let mut harness = Harness::with_engine(&out, engine)?;
         println!("(engine backend: {})", harness.backend());
         let ids: Vec<&str> = if id == "all" {
-            vec!["3", "4", "5", "6", "7", "8", "9", "k"]
+            vec!["3", "4", "5", "6", "7", "8", "9", "k", "h"]
         } else {
             vec![id.as_str()]
         };
@@ -234,7 +273,8 @@ fn cmd_figure(argv: &[String]) -> i32 {
                 "8" => figures::fig8(&mut harness, scale)?,
                 "9" => figures::fig9(&mut harness, scale)?,
                 "k" | "staleness" => figures::fig_staleness(&mut harness, scale)?,
-                other => return Err(format!("no figure {other} (have 3-9, k)")),
+                "h" | "period" => figures::fig_h(&mut harness, scale)?,
+                other => return Err(format!("no figure {other} (have 3-9, k, h)")),
             };
             println!("{report}");
         }

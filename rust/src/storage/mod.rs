@@ -1,18 +1,21 @@
 //! Storage accounting (paper Table II "Server storage" column and the
-//! Table V "Storage (M)" comparison), generalized to sharded servers.
+//! Table V "Storage (M)" comparison), driven by the method spec.
 //!
 //! The paper measures storage in *millions of parameters*: everything the
-//! server must hold during training — server-side model copies (n for
-//! FSL_MC / FSL_AN, 1 for FSL_OC / CSE_FSL), plus the client-side models
-//! and auxiliary networks it receives at aggregation time. The sharded
-//! server phase (`TrainConfig::server_shards = k`) interpolates the copy
-//! count of the single-copy methods between those endpoints: k copies,
-//! reducing to the paper's Table II at k = 1 and matching FSL_MC's
-//! server-copy storage at k = n. The copies term itself is the closed
-//! form in [`crate::comm::accounting::storage`].
+//! server must hold during training — server-side model copies (n under
+//! the per-client topology, 1 under the paper's shared topology), plus
+//! the client-side models and auxiliary networks it receives at
+//! aggregation time. Of the spec's three axes, **topology** decides the
+//! server-side copy count and the **update rule** decides whether aux
+//! networks are resident; the upload schedule never touches storage.
+//! The sharded server phase (`TrainConfig::server_shards = k`)
+//! interpolates the shared topology's copy count between the endpoints:
+//! k copies, reducing to the paper's Table II at k = 1 and matching the
+//! per-client topology's storage at k = n. The copies term itself is the
+//! closed form in [`crate::comm::accounting::storage`].
 
 use crate::comm::accounting::storage as storage_form;
-use crate::coordinator::methods::Method;
+use crate::coordinator::methods::{ClientUpdate, MethodSpec, ServerTopology};
 
 /// Parameter counts of the three model parts.
 #[derive(Clone, Copy, Debug)]
@@ -26,56 +29,62 @@ pub struct ModelSizes {
 }
 
 /// Server-side model copies held during training with `server_shards`
-/// shard copies for the single-copy methods (the per-client-copy methods
-/// always hold n).
+/// shard copies on the shared topology (the per-client topology always
+/// holds n).
 pub fn server_model_copies_sharded(
-    method: Method,
+    spec: &MethodSpec,
     n_clients: usize,
     server_shards: usize,
 ) -> usize {
-    if method.per_client_server_model() {
-        n_clients
-    } else {
-        server_shards
+    match spec.topology {
+        ServerTopology::PerClient => n_clients,
+        ServerTopology::Shared => server_shards,
     }
 }
 
 /// Server-side model copies at the paper's operating point (k = 1).
-pub fn server_model_copies(method: Method, n_clients: usize) -> usize {
-    server_model_copies_sharded(method, n_clients, 1)
+pub fn server_model_copies(spec: &MethodSpec, n_clients: usize) -> usize {
+    server_model_copies_sharded(spec, n_clients, 1)
 }
 
 /// Total parameters resident at the server (Table V accounting) with
 /// `server_shards` shard copies: server-side copies + n client models
-/// (aggregation) + n aux models (methods with auxiliary networks).
+/// (aggregation) + n aux models (the aux-local update rule).
 pub fn server_storage_params_sharded(
-    method: Method,
+    spec: &MethodSpec,
     n_clients: usize,
     server_shards: usize,
     sizes: &ModelSizes,
 ) -> usize {
-    let copies = server_model_copies_sharded(method, n_clients, server_shards);
+    let copies = server_model_copies_sharded(spec, n_clients, server_shards);
     let server =
         storage_form::server_copies_params(copies as u64, sizes.server as u64) as usize;
     let clients = n_clients * sizes.client;
-    let aux = if method.uses_aux() { n_clients * sizes.aux } else { 0 };
+    let aux = match spec.update {
+        ClientUpdate::AuxLocal => n_clients * sizes.aux,
+        ClientUpdate::ServerGrad { .. } => 0,
+    };
     server + clients + aux
 }
 
 /// Total parameters resident at the server at the paper's operating
 /// point (k = 1 — Table V accounting).
-pub fn server_storage_params(method: Method, n_clients: usize, sizes: &ModelSizes) -> usize {
-    server_storage_params_sharded(method, n_clients, 1, sizes)
+pub fn server_storage_params(spec: &MethodSpec, n_clients: usize, sizes: &ModelSizes) -> usize {
+    server_storage_params_sharded(spec, n_clients, 1, sizes)
 }
 
 /// In millions of parameters, as Table V reports.
-pub fn server_storage_m(method: Method, n_clients: usize, sizes: &ModelSizes) -> f64 {
-    server_storage_params(method, n_clients, sizes) as f64 / 1e6
+pub fn server_storage_m(spec: &MethodSpec, n_clients: usize, sizes: &ModelSizes) -> f64 {
+    server_storage_params(spec, n_clients, sizes) as f64 / 1e6
 }
 
 /// Client-side storage (params a single client holds).
-pub fn client_storage_params(method: Method, sizes: &ModelSizes) -> usize {
-    sizes.client + if method.uses_aux() { sizes.aux } else { 0 }
+pub fn client_storage_params(spec: &MethodSpec, sizes: &ModelSizes) -> usize {
+    sizes.client
+        + match spec.update {
+            ClientUpdate::AuxLocal => sizes.aux,
+            ClientUpdate::ServerGrad { .. } => 0,
+        }
 }
 
 #[cfg(test)]
@@ -89,7 +98,7 @@ mod tests {
     #[test]
     fn matches_paper_table5_cifar() {
         // Paper Table V (n=5): MC 5.34M, OC 1.50M, AN 5.46M, CSE 1.61M.
-        let m = |meth| server_storage_m(meth, 5, &CIFAR);
+        let m = |meth: Method| server_storage_m(&meth.spec(), 5, &CIFAR);
         assert!((m(Method::FslMc) - 5.34).abs() < 0.01, "{}", m(Method::FslMc));
         assert!((m(Method::FslOc) - 1.50).abs() < 0.01, "{}", m(Method::FslOc));
         assert!((m(Method::FslAn) - 5.46).abs() < 0.01, "{}", m(Method::FslAn));
@@ -100,7 +109,7 @@ mod tests {
     fn matches_paper_table5_femnist() {
         // Paper Table V (n=5, aux=MLP): MC 6.03M, OC 1.28M, AN 8.89M,
         // CSE 4.14M.
-        let m = |meth| server_storage_m(meth, 5, &FEMNIST);
+        let m = |meth: Method| server_storage_m(&meth.spec(), 5, &FEMNIST);
         assert!((m(Method::FslMc) - 6.03).abs() < 0.01, "{}", m(Method::FslMc));
         assert!((m(Method::FslOc) - 1.28).abs() < 0.01, "{}", m(Method::FslOc));
         assert!((m(Method::FslAn) - 8.89).abs() < 0.01, "{}", m(Method::FslAn));
@@ -110,45 +119,63 @@ mod tests {
     #[test]
     fn cse_storage_independent_of_n_in_server_copies() {
         // The paper's headline: server-side model count does not scale
-        // with n for CSE_FSL.
-        assert_eq!(server_model_copies(Method::CseFsl, 5), 1);
-        assert_eq!(server_model_copies(Method::CseFsl, 5000), 1);
-        assert_eq!(server_model_copies(Method::FslMc, 5000), 5000);
+        // with n on the shared topology.
+        assert_eq!(server_model_copies(&Method::CseFsl.spec(), 5), 1);
+        assert_eq!(server_model_copies(&Method::CseFsl.spec(), 5000), 1);
+        assert_eq!(server_model_copies(&Method::FslMc.spec(), 5000), 5000);
         // and the *server model* storage gap grows linearly
         let gap = |n: usize| {
-            server_storage_params(Method::FslMc, n, &CIFAR)
-                - server_storage_params(Method::CseFsl, n, &CIFAR)
+            server_storage_params(&Method::FslMc.spec(), n, &CIFAR)
+                - server_storage_params(&Method::CseFsl.spec(), n, &CIFAR)
         };
         assert!(gap(100) > gap(10));
     }
 
     #[test]
     fn sharded_copies_interpolate_between_paper_endpoints() {
-        // k = 1 is Table II's single copy; k = n matches FSL_MC's copy
-        // count; intermediate k interpolates linearly.
+        // k = 1 is Table II's single copy; k = n matches the per-client
+        // topology's copy count; intermediate k interpolates linearly.
         for k in 1..=5usize {
-            assert_eq!(server_model_copies_sharded(Method::CseFsl, 5, k), k);
-            assert_eq!(server_model_copies_sharded(Method::FslOc, 5, k), k);
-            // Per-client-copy methods ignore the shard knob.
-            assert_eq!(server_model_copies_sharded(Method::FslMc, 5, k), 5);
-            assert_eq!(server_model_copies_sharded(Method::FslAn, 5, k), 5);
+            assert_eq!(server_model_copies_sharded(&Method::CseFsl.spec(), 5, k), k);
+            assert_eq!(server_model_copies_sharded(&Method::FslOc.spec(), 5, k), k);
+            // The per-client topology ignores the shard knob.
+            assert_eq!(server_model_copies_sharded(&Method::FslMc.spec(), 5, k), 5);
+            assert_eq!(server_model_copies_sharded(&Method::FslAn.spec(), 5, k), 5);
         }
         // Totals: the k = 1 reduction is exactly the historical fn, and
         // each extra shard adds exactly one server-side model.
         assert_eq!(
-            server_storage_params_sharded(Method::CseFsl, 5, 1, &CIFAR),
-            server_storage_params(Method::CseFsl, 5, &CIFAR)
+            server_storage_params_sharded(&Method::CseFsl.spec(), 5, 1, &CIFAR),
+            server_storage_params(&Method::CseFsl.spec(), 5, &CIFAR)
         );
-        let at = |k| server_storage_params_sharded(Method::CseFsl, 5, k, &CIFAR);
+        let at = |k| server_storage_params_sharded(&Method::CseFsl.spec(), 5, k, &CIFAR);
         assert_eq!(at(3) - at(2), CIFAR.server);
         // k = n: the server-side copy term equals FSL_MC's n·|w_s|.
-        let copy_term = |m, k| server_model_copies_sharded(m, 5, k) * CIFAR.server;
+        let copy_term =
+            |m: Method, k| server_model_copies_sharded(&m.spec(), 5, k) * CIFAR.server;
         assert_eq!(copy_term(Method::CseFsl, 5), copy_term(Method::FslMc, 1));
     }
 
     #[test]
+    fn storage_follows_axes_not_presets() {
+        // The upload schedule never moves storage: the spec-only
+        // "FSL_AN with h>1" point stores exactly what FSL_AN does.
+        assert_eq!(
+            server_storage_params(&Method::FslAn.spec().with_period(4), 5, &CIFAR),
+            server_storage_params(&Method::FslAn.spec(), 5, &CIFAR)
+        );
+        // The update axis alone decides the aux term.
+        let aux_term = server_storage_params(&Method::CseFsl.spec(), 5, &CIFAR)
+            - server_storage_params(&Method::FslOc.spec(), 5, &CIFAR);
+        assert_eq!(aux_term, 5 * CIFAR.aux);
+    }
+
+    #[test]
     fn client_storage() {
-        assert_eq!(client_storage_params(Method::FslMc, &CIFAR), 107_328);
-        assert_eq!(client_storage_params(Method::CseFsl, &CIFAR), 107_328 + 23_050);
+        assert_eq!(client_storage_params(&Method::FslMc.spec(), &CIFAR), 107_328);
+        assert_eq!(
+            client_storage_params(&Method::CseFsl.spec(), &CIFAR),
+            107_328 + 23_050
+        );
     }
 }

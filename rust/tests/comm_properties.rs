@@ -9,7 +9,7 @@
 
 use cse_fsl::comm::accounting::{predict, storage as storage_form, table2, MsgKind, WireSizes};
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::{Method, ServerTopology};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
@@ -52,28 +52,30 @@ struct RandomRun {
 fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> {
     let n = 1 + rng.below(5) as usize;
     let method = Method::ALL[rng.below(4) as usize];
-    let h = if method.supports_h() { 1 + rng.below(4) as usize } else { 1 };
+    // Any aux-local preset takes a random period — including FSL_AN,
+    // whose h > 1 points are the spec-only scenarios the open API
+    // unlocked (the closed forms must hold there too: bytes per round
+    // are h-independent).
+    let h = if method.spec().update.uses_aux() { 1 + rng.below(4) as usize } else { 1 };
     let rounds = 1 + rng.below(10) as usize;
     let agg_every = 1 + rng.below(rounds as u64 + 3) as usize;
-    // Random shard count for the single-copy methods (wire traffic must
-    // be shard-independent; storage must follow the closed form).
-    let server_shards = if method.per_client_server_model() {
-        1
-    } else {
-        1 + rng.below(n as u64) as usize
+    // Random shard count on the shared topology (wire traffic must be
+    // shard-independent; storage must follow the closed form).
+    let server_shards = match method.spec().topology {
+        ServerTopology::PerClient => 1,
+        ServerTopology::Shared => 1 + rng.below(n as u64) as usize,
     };
     let e = MockEngine::small(rng.next_u64());
     let train = generate(&spec(), n * 16, rng.next_u64());
     let test = generate(&spec(), 8, rng.next_u64());
     let cfg = TrainConfig {
-        h,
         rounds,
         agg_every,
         eval_every: 0,
         participation: participation.min(n),
         parallelism: random_parallelism(rng),
         server_shards,
-        ..TrainConfig::new(method)
+        ..TrainConfig::new(method).with_h(h)
     };
     let setup = TrainerSetup {
         train: &train,
@@ -109,10 +111,7 @@ fn prop_ledger_matches_generalized_closed_forms() {
         // Full participation: the closed forms count every client each
         // round and every client at each aggregation.
         let r = run_random(rng, 0)?;
-        let p = predict::TrafficProfile {
-            grad_downlink: r.method.grad_downlink(),
-            uses_aux: r.method.uses_aux(),
-        };
+        let p = r.method.spec().traffic();
         let expected = predict::run_kind_bytes(
             p,
             r.n as u64,
@@ -205,7 +204,7 @@ fn prop_generalized_forms_reduce_to_table2_epoch_forms() {
         );
         // CSE_FSL_h epoch: |D_i| = batch*h*rounds, aggregate once.
         let d_cse = batch * h * rounds;
-        let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+        let p = predict::TrafficProfile::AuxLocal;
         let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
         prop_assert!(
             up + down == table2::cse_fsl(n, d_cse, h, &w),
@@ -215,10 +214,10 @@ fn prop_generalized_forms_reduce_to_table2_epoch_forms() {
         );
         // FSL_MC / FSL_AN epochs: h = 1, |D_i| = batch*rounds.
         let d1 = batch * rounds;
-        let p = predict::TrafficProfile { grad_downlink: true, uses_aux: false };
+        let p = predict::TrafficProfile::ServerGrad;
         let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
         prop_assert!(up + down == table2::fsl_mc(n, d1, &w), "MC mismatch");
-        let p = predict::TrafficProfile { grad_downlink: false, uses_aux: true };
+        let p = predict::TrafficProfile::AuxLocal;
         let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
         prop_assert!(up + down == table2::fsl_an(n, d1, &w), "AN mismatch");
         Ok(())
@@ -230,7 +229,7 @@ fn prop_sharded_storage_matches_closed_form_for_all_k() {
     prop::check("resident storage == copies x |w_s| closed form", |rng| {
         let r = run_random(rng, 0)?;
         let copies = cse_fsl::storage::server_model_copies_sharded(
-            r.method,
+            &r.method.spec(),
             r.n,
             r.server_shards,
         );
@@ -255,7 +254,7 @@ fn prop_sharded_storage_matches_closed_form_for_all_k() {
             aux: (r.wires.aux_model / 4) as usize,
         };
         let total = cse_fsl::storage::server_storage_params_sharded(
-            r.method,
+            &r.method.spec(),
             r.n,
             r.server_shards,
             &sizes,

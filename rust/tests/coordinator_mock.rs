@@ -4,7 +4,7 @@
 
 use cse_fsl::comm::accounting::{table2, MsgKind, WireSizes};
 use cse_fsl::coordinator::config::{ArrivalOrder, TrainConfig};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::{ClientUpdate, Method};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
@@ -90,16 +90,17 @@ fn grad_downlink_only_for_splitfed_methods() {
         let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).unwrap();
         tr.run().unwrap();
         let grad_bytes = tr.ledger.bytes_of(MsgKind::GradDownload);
-        if method.grad_downlink() {
-            assert!(grad_bytes > 0, "{method} should downlink grads");
-        } else {
-            assert_eq!(grad_bytes, 0, "{method} must not downlink grads");
-        }
         let aux_bytes = tr.ledger.bytes_of(MsgKind::AuxModelUpload);
-        if method.uses_aux() {
-            assert!(aux_bytes > 0, "{method} should upload aux nets");
-        } else {
-            assert_eq!(aux_bytes, 0, "{method} must not upload aux nets");
+        // The update axis alone decides both wire behaviors.
+        match method.spec().update {
+            ClientUpdate::ServerGrad { .. } => {
+                assert!(grad_bytes > 0, "{method} should downlink grads");
+                assert_eq!(aux_bytes, 0, "{method} must not upload aux nets");
+            }
+            ClientUpdate::AuxLocal => {
+                assert_eq!(grad_bytes, 0, "{method} must not downlink grads");
+                assert!(aux_bytes > 0, "{method} should upload aux nets");
+            }
         }
     }
 }
@@ -121,11 +122,10 @@ fn measured_bytes_match_table2_closed_form() {
     let h = 2usize;
     let rounds = batches_per_epoch / h;
     let cfg = TrainConfig {
-        h,
         rounds,
         agg_every: rounds,
         eval_every: 0,
-        ..TrainConfig::new(Method::CseFsl)
+        ..TrainConfig::new(Method::CseFsl).with_h(h)
     };
     let mut tr = Trainer::new(&e, cfg, setup(&train, &test, n, "t")).unwrap();
     tr.run().unwrap();
@@ -176,11 +176,10 @@ fn larger_h_uploads_fewer_smashed_bytes_per_batchwork() {
         // same total local batches (8) for every h
         let rounds = 8 / h;
         let cfg = TrainConfig {
-            h,
             rounds,
             agg_every: rounds,
             eval_every: 0,
-            ..TrainConfig::new(Method::CseFsl)
+            ..TrainConfig::new(Method::CseFsl).with_h(h)
         };
         let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 3, "t")).unwrap();
         tr.run().unwrap();

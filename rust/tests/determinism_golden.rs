@@ -15,7 +15,9 @@
 
 use cse_fsl::comm::accounting::CommLedger;
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::{
+    ClientUpdate, Method, MethodSpec, ServerTopology, UploadSchedule,
+};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::{iid, Partition};
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
@@ -106,7 +108,6 @@ fn run_sched(
 ) -> Fingerprint {
     let e = MockEngine::small(42);
     let cfg = TrainConfig {
-        h,
         participation,
         arrival,
         parallelism,
@@ -118,7 +119,7 @@ fn run_sched(
         eval_max_batches: 2,
         lr0: 1.0,
         track_grad_norms: true,
-        ..TrainConfig::new(method)
+        ..TrainConfig::new(method).with_h(h)
     }
     .with_rounds(rounds);
     let mut tr = Trainer::new(&e, cfg, setup_net(train, test, 5, net)).unwrap();
@@ -145,7 +146,6 @@ fn run_part(
 ) -> Fingerprint {
     let e = MockEngine::small(42);
     let cfg = TrainConfig {
-        h,
         parallelism,
         server_shards,
         sched,
@@ -155,7 +155,7 @@ fn run_part(
         eval_max_batches: 2,
         lr0: 1.0,
         track_grad_norms: true,
-        ..TrainConfig::new(method)
+        ..TrainConfig::new(method).with_h(h)
     }
     .with_rounds(rounds);
     let setup = TrainerSetup {
@@ -258,7 +258,7 @@ fn threads_bit_identical_to_sequential_for_all_methods() {
     let train = dataset(120, 1);
     let test = dataset(24, 2);
     for method in Method::ALL {
-        let h = if method.supports_h() { 2 } else { 1 };
+        let h = if method == Method::CseFsl { 2 } else { 1 };
         let seq = run(
             method,
             h,
@@ -295,7 +295,7 @@ fn sharded_golden_bit_identical_across_thread_counts() {
     let train = dataset(120, 9);
     let test = dataset(24, 10);
     for method in [Method::CseFsl, Method::FslOc] {
-        let h = if method.supports_h() { 2 } else { 1 };
+        let h = if method == Method::CseFsl { 2 } else { 1 };
         for shards in [1usize, 2, 5] {
             let seq = run(
                 method,
@@ -361,13 +361,12 @@ fn shards_one_bit_identical_to_default_single_copy() {
     let e = MockEngine::small(42);
     // Built without touching server_shards at all.
     let cfg = TrainConfig {
-        h: 2,
         agg_every: 4,
         eval_every: 3,
         eval_max_batches: 2,
         lr0: 1.0,
         track_grad_norms: true,
-        ..TrainConfig::new(Method::CseFsl)
+        ..TrainConfig::new(Method::CseFsl).with_h(2)
     }
     .with_rounds(8);
     let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 5)).unwrap();
@@ -508,7 +507,7 @@ fn sched_policies_bit_identical_across_threads() {
     let train = dataset(120, 15);
     let test = dataset(24, 16);
     for method in [Method::CseFsl, Method::FslMc] {
-        let h = if method.supports_h() { 2 } else { 1 };
+        let h = if method == Method::CseFsl { 2 } else { 1 };
         let reference = run(
             method,
             h,
@@ -782,6 +781,84 @@ fn locality_beats_balanced_on_interleaved_golden_partition() {
     // And the locality run keeps the bit-determinism contract.
     let par = run_map(ShardMapKind::Locality, Parallelism::Threads(4));
     assert_identical(&loc, &par, "locality interleaved threads=4");
+}
+
+#[test]
+fn aux_period_per_client_scenario_golden() {
+    // The spec-only scenario the closed Method enum could not express:
+    // AuxLocal × Period(2) × PerClient ("FSL_AN with h = 2"). Fresh
+    // pinned goldens: (a) it runs end-to-end, (b) it keeps the
+    // bit-determinism contract across thread counts and policies,
+    // (c) it is reproducible across invocations, and (d) it is a
+    // genuinely new point — different results from both neighbouring
+    // presets (FSL_AN at h = 1, CSE_FSL shared at the same h).
+    let train = dataset(120, 23);
+    let test = dataset(24, 24);
+    let novel = MethodSpec {
+        update: ClientUpdate::AuxLocal,
+        upload: UploadSchedule::period(2),
+        topology: ServerTopology::PerClient,
+    };
+    assert_eq!(novel, Method::FslAn.spec().with_period(2));
+    assert_eq!(novel.preset(), None, "must be a spec-only point");
+    let run_novel = |parallelism: Parallelism, sched: SchedPolicy| {
+        let e = MockEngine::small(42);
+        let cfg = TrainConfig {
+            parallelism,
+            sched,
+            agg_every: 4,
+            eval_every: 3,
+            eval_max_batches: 2,
+            lr0: 1.0,
+            track_grad_norms: true,
+            ..TrainConfig::from_spec(novel)
+        }
+        .with_rounds(10);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 5)).unwrap();
+        let rec = tr.run().unwrap();
+        fingerprint(&tr, &rec)
+    };
+    let seq = run_novel(Parallelism::Sequential, SchedPolicy::RoundRobin);
+    // Per-client topology: one server copy per client, identity map.
+    assert_eq!(seq.server_copies.len(), 5);
+    assert_eq!(seq.shard_of, vec![0, 1, 2, 3, 4]);
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let par = run_novel(Parallelism::Threads(threads), sched);
+            assert_identical(
+                &seq,
+                &par,
+                &format!("aux+p2+pc sched={sched} threads={threads}"),
+            );
+        }
+    }
+    let again = run_novel(Parallelism::Sequential, SchedPolicy::RoundRobin);
+    assert_identical(&seq, &again, "aux+p2+pc repeat invocation");
+    // Distinct from both neighbouring presets on the same data.
+    let an_h1 = run(
+        Method::FslAn,
+        1,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        10,
+        1,
+        &train,
+        &test,
+    );
+    let cse_h2 = run(
+        Method::CseFsl,
+        2,
+        0,
+        ArrivalOrder::ByDelay,
+        Parallelism::Sequential,
+        10,
+        1,
+        &train,
+        &test,
+    );
+    assert_ne!(seq.json, an_h1.json, "the period must change results vs FSL_AN");
+    assert_ne!(seq.json, cse_h2.json, "the topology must change results vs CSE_FSL h=2");
 }
 
 #[test]

@@ -15,7 +15,7 @@
 //!    the executor count.
 
 use cse_fsl::coordinator::config::{Parallelism, ShardMapKind, TrainConfig};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::{Method, ServerTopology};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::coordinator::server::ShardMap;
 use cse_fsl::data::partition::iid;
@@ -48,12 +48,13 @@ struct Scenario {
 fn random_scenario(rng: &mut Rng) -> Scenario {
     let n = 2 + rng.below(4) as usize; // 2..=5 clients
     let method = Method::ALL[rng.below(4) as usize];
-    let h = if method.supports_h() { 1 + rng.below(3) as usize } else { 1 };
+    // Aux-local presets take random periods — FSL_AN's h > 1 draws
+    // exercise the spec-only AuxLocal×Period×PerClient scenario.
+    let h = if method.spec().update.uses_aux() { 1 + rng.below(3) as usize } else { 1 };
     let rounds = 2 + rng.below(5) as usize;
-    let server_shards = if method.per_client_server_model() {
-        1
-    } else {
-        1 + rng.below(n as u64) as usize
+    let server_shards = match method.spec().topology {
+        ServerTopology::PerClient => 1,
+        ServerTopology::Shared => 1 + rng.below(n as u64) as usize,
     };
     // Balanced maps need k >= 2; mix them in whenever sharded.
     let shard_map = if server_shards >= 2 && rng.below(2) == 1 {
@@ -83,7 +84,6 @@ fn run_scenario(
     let train = generate(&spec(), s.n * 16, s.data_seed);
     let test = generate(&spec(), 8, s.data_seed ^ 0x5A);
     let cfg = TrainConfig {
-        h: s.h,
         rounds: s.rounds,
         agg_every: 3,
         eval_every: 2,
@@ -92,7 +92,7 @@ fn run_scenario(
         sched,
         server_shards: s.server_shards,
         shard_map: s.shard_map,
-        ..TrainConfig::new(s.method)
+        ..TrainConfig::new(s.method).with_h(s.h)
     };
     let setup = TrainerSetup {
         train: &train,
@@ -207,7 +207,10 @@ fn prop_critical_path_bounds_makespan() {
             s.server_shards
         );
         prop_assert!(rec.critical_path > 0.0, "critical path must be positive after a run");
-        let lanes = if s.method.per_client_server_model() { 1 } else { s.server_shards };
+        let lanes = match s.method.spec().topology {
+            ServerTopology::PerClient => 1,
+            ServerTopology::Shared => s.server_shards,
+        };
         prop_assert!(
             rec.lane_busy.len() == lanes,
             "lane_busy len {} != executor count {lanes}",

@@ -1,0 +1,302 @@
+//! Spec/preset equivalence: the `MethodSpec` refactor must be invisible
+//! for the four paper presets and genuinely open everywhere else.
+//!
+//! 1. **Capability-matrix equivalence** — every `Method::ALL` preset's
+//!    spec reproduces the pre-refactor capability matrix exactly
+//!    (per-client copies?, aux?, grad downlink?, h>1?, default clip),
+//!    checked against the live trainer, not just the spec accessors.
+//! 2. **Preset-path identity** — running `TrainConfig::new(method)`
+//!    (the preset constructor) and `TrainConfig::from_spec(<the same
+//!    axes written out by hand>)` produces bit-identical `RunRecord`s:
+//!    there is no hidden method-identity branch left anywhere in the
+//!    trainer.
+//! 3. **Openness** — the spec-only `AuxLocal × Period(h) × PerClient`
+//!    scenario runs end-to-end through the experiment harness (spec →
+//!    cache key → mock engine → cached record), under its own canonical
+//!    cache key, distinct from every preset.
+
+use cse_fsl::comm::accounting::MsgKind;
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
+use cse_fsl::coordinator::methods::{
+    ClientUpdate, Method, MethodSpec, ServerTopology, UploadSchedule,
+};
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::data::Dataset;
+use cse_fsl::exp::common::{
+    femnist_workload, run_to_json, Dist, EngineChoice, Harness, RunSpec, Scale,
+};
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::sched::SchedPolicy;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    generate(&spec(), n, seed)
+}
+
+fn setup<'a>(train: &'a Dataset, test: &'a Dataset, n_clients: usize) -> TrainerSetup<'a> {
+    let mut rng = Rng::new(7);
+    TrainerSetup {
+        train,
+        test,
+        partition: iid(train, n_clients, &mut rng),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "spec-eq".to_string(),
+    }
+}
+
+/// Run one config over the mock engine; return (record JSON, trainer
+/// observables that matter for equivalence).
+fn run_cfg(
+    cfg: TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> (String, Vec<Vec<f32>>, u64, u64, u64) {
+    let e = MockEngine::small(42);
+    let mut tr = Trainer::new(&e, cfg, setup(train, test, 4)).unwrap();
+    let rec = tr.run().unwrap();
+    (
+        run_to_json(&rec).pretty(),
+        tr.server.copies.clone(),
+        tr.server.updates,
+        tr.ledger.bytes_of(MsgKind::GradDownload),
+        tr.ledger.bytes_of(MsgKind::AuxModelUpload),
+    )
+}
+
+/// The hand-written axes of each preset, copied from the paper's
+/// Section VI-A table — deliberately NOT built via `Method::spec()`, so
+/// a drifting preset definition fails here.
+fn hand_spec(method: Method) -> MethodSpec {
+    match method {
+        Method::FslMc => MethodSpec {
+            update: ClientUpdate::ServerGrad { clip: 0.0 },
+            upload: UploadSchedule::EveryBatch,
+            topology: ServerTopology::PerClient,
+        },
+        Method::FslOc => MethodSpec {
+            update: ClientUpdate::ServerGrad { clip: 1.0 },
+            upload: UploadSchedule::EveryBatch,
+            topology: ServerTopology::Shared,
+        },
+        Method::FslAn => MethodSpec {
+            update: ClientUpdate::AuxLocal,
+            upload: UploadSchedule::EveryBatch,
+            topology: ServerTopology::PerClient,
+        },
+        Method::CseFsl => MethodSpec {
+            update: ClientUpdate::AuxLocal,
+            upload: UploadSchedule::EveryBatch,
+            topology: ServerTopology::Shared,
+        },
+    }
+}
+
+#[test]
+fn preset_specs_reproduce_old_capability_matrix_live() {
+    // The matrix as the old Method enum hardcoded it, observed through
+    // live trainer behavior: copy counts, wire kinds, and h validity.
+    let train = dataset(64, 31);
+    let test = dataset(16, 32);
+    let expect = [
+        // (method, server copies at n=4, grad downlink?, aux upload?)
+        // — the pre-refactor matrix, hardcoded (NOT derived from the
+        // spec, so a drifted preset definition fails here).
+        (Method::FslMc, 4usize, true, false),
+        (Method::FslOc, 1, true, false),
+        (Method::FslAn, 4, false, true),
+        (Method::CseFsl, 1, false, true),
+    ];
+    for (method, copies, grad, aux) in expect {
+        let cfg = TrainConfig { agg_every: 3, eval_every: 0, ..TrainConfig::new(method) }
+            .with_rounds(6);
+        let (_, server_copies, updates, grad_bytes, aux_bytes) =
+            run_cfg(cfg, &train, &test);
+        assert_eq!(server_copies.len(), copies, "{method} copy count");
+        assert!(updates > 0, "{method} must update");
+        assert_eq!(grad_bytes > 0, grad, "{method} grad downlink");
+        assert_eq!(aux_bytes > 0, aux, "{method} aux exchange");
+        assert_eq!(
+            matches!(method.spec().update, ClientUpdate::ServerGrad { .. }),
+            grad,
+            "{method} update axis vs wire behavior"
+        );
+        // Old supports_h: only CSE_FSL could take h > 1 *within the
+        // preset space*; the SplitFed presets still reject it outright.
+        let h_cfg = TrainConfig::new(method).with_h(3);
+        match method {
+            Method::CseFsl => assert!(h_cfg.validate(4).is_ok()),
+            Method::FslAn => {
+                // Newly VALID (the open API), but a spec-only point.
+                assert!(h_cfg.validate(4).is_ok());
+                assert_eq!(h_cfg.spec.preset(), None);
+            }
+            _ => assert!(h_cfg.validate(4).is_err(), "{method} must reject h>1"),
+        }
+        // Default clip: the paper's OC-only stabilizer.
+        let expect_clip = if method == Method::FslOc { 1.0 } else { 0.0 };
+        assert_eq!(method.spec().clip(), expect_clip, "{method} clip");
+    }
+}
+
+#[test]
+fn preset_constructor_bit_identical_to_hand_assembled_spec() {
+    // There is no method identity left in the trainer: the preset
+    // constructor and the raw axes produce the same bits, for every
+    // preset and (for CSE_FSL) a period on top.
+    let train = dataset(96, 33);
+    let test = dataset(16, 34);
+    for method in Method::ALL {
+        let via_preset = run_cfg(
+            TrainConfig { agg_every: 4, lr0: 1.0, ..TrainConfig::new(method) }.with_rounds(8),
+            &train,
+            &test,
+        );
+        let via_spec = run_cfg(
+            TrainConfig { agg_every: 4, lr0: 1.0, ..TrainConfig::from_spec(hand_spec(method)) }
+                .with_rounds(8),
+            &train,
+            &test,
+        );
+        assert_eq!(via_preset.0, via_spec.0, "{method}: RunRecord JSON diverged");
+        assert_eq!(via_preset.1, via_spec.1, "{method}: server copies diverged");
+        assert_eq!(via_preset.2, via_spec.2, "{method}: update counts diverged");
+    }
+    // CSE_FSL with a period, both ways.
+    let via_preset = run_cfg(
+        TrainConfig { agg_every: 4, ..TrainConfig::new(Method::CseFsl).with_h(2) }
+            .with_rounds(8),
+        &train,
+        &test,
+    );
+    let via_spec = run_cfg(
+        TrainConfig {
+            agg_every: 4,
+            ..TrainConfig::from_spec(MethodSpec {
+                upload: UploadSchedule::Period(2),
+                ..hand_spec(Method::CseFsl)
+            })
+        }
+        .with_rounds(8),
+        &train,
+        &test,
+    );
+    assert_eq!(via_preset.0, via_spec.0, "CSE_FSL h=2: RunRecord JSON diverged");
+}
+
+#[test]
+fn adaptive_schedule_runs_and_differs_from_fixed_periods() {
+    // The third upload-schedule variant end-to-end: deterministic,
+    // reproducible, and a genuinely different trajectory from both
+    // fixed endpoints (h0 and h_max).
+    let train = dataset(96, 35);
+    let test = dataset(16, 36);
+    let adaptive = MethodSpec {
+        upload: UploadSchedule::AdaptivePeriod { h0: 1, h_max: 4, double_every: 3 },
+        ..Method::CseFsl.spec()
+    };
+    let run_spec = |s: MethodSpec| {
+        run_cfg(
+            TrainConfig { agg_every: 4, eval_every: 0, ..TrainConfig::from_spec(s) }
+                .with_rounds(9),
+            &train,
+            &test,
+        )
+    };
+    let a1 = run_spec(adaptive);
+    let a2 = run_spec(adaptive);
+    assert_eq!(a1.0, a2.0, "adaptive schedule must be deterministic");
+    let fixed_lo = run_spec(Method::CseFsl.spec());
+    let fixed_hi = run_spec(Method::CseFsl.spec().with_period(4));
+    assert_ne!(a1.0, fixed_lo.0, "adaptive must leave the h=1 trajectory");
+    assert_ne!(a1.0, fixed_hi.0, "adaptive must not equal the h_max trajectory");
+    assert_eq!(a1.3, 0, "aux-local rule never downlinks grads");
+}
+
+#[test]
+fn novel_scenario_runs_end_to_end_through_the_harness() {
+    // AuxLocal × Period(2) × PerClient through the full experiment
+    // path: RunSpec validation, canonical cache key, mock engine run,
+    // cache replay. This is the acceptance scenario — "FSL_AN with
+    // h > 1" — expressible only as a spec.
+    let dir = std::env::temp_dir().join(format!(
+        "cse_fsl_spec_eq_{}_{}",
+        std::process::id(),
+        line!()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    let mut wl = femnist_workload(Scale::Quick);
+    wl.rounds = 4;
+    let base = RunSpec {
+        dataset: "femnist".into(),
+        aux: "cnn8".into(),
+        method: Method::FslAn.spec().with_period(2),
+        n_clients: 4,
+        participation: 0,
+        dist: Dist::Iid,
+        arrival: ArrivalOrder::ByDelay,
+        lr0: 0.05,
+        seed: 1,
+        workload: wl,
+        parallelism: Parallelism::Sequential,
+        server_shards: 1,
+        sched: SchedPolicy::RoundRobin,
+        shard_map: ShardMapKind::Contiguous,
+    };
+    assert!(base.validate().is_ok());
+    assert!(base.key().contains("-aux+p2+pc-h2-"), "{}", base.key());
+    let novel = h.run_cached(&base).unwrap();
+    assert_eq!(novel.rounds.len(), 4);
+    assert_eq!(novel.label, "aux+p2+pc");
+    // Cached under the canonical spec key; the cache replays bitwise.
+    let cache = dir.join("cache").join("mock").join(format!("{}.json", base.key()));
+    assert!(cache.is_file(), "missing cache entry {}", cache.display());
+    let replay = h.run_cached(&base).unwrap();
+    assert_eq!(run_to_json(&novel).pretty(), run_to_json(&replay).pretty());
+    // Its preset neighbours are distinct cached runs with the
+    // historical keys.
+    let an = RunSpec { method: Method::FslAn.spec(), ..base.clone() };
+    assert!(an.key().contains("-FSL_AN-h1-"), "{}", an.key());
+    let an_rec = h.run_cached(&an).unwrap();
+    assert_ne!(
+        run_to_json(&novel).pretty(),
+        run_to_json(&an_rec).pretty(),
+        "the period must change results"
+    );
+    let cse = RunSpec { method: Method::CseFsl.spec().with_period(2), ..base.clone() };
+    assert!(cse.key().contains("-CSE_FSL-h2-"), "{}", cse.key());
+    let cse_rec = h.run_cached(&cse).unwrap();
+    assert_ne!(
+        run_to_json(&novel).pretty(),
+        run_to_json(&cse_rec).pretty(),
+        "the topology must change results"
+    );
+    // Axis separation, exactly: the topology axis moves *storage only*.
+    // Wire bytes and the simulated schedule are value-independent, so
+    // the per-client arm and its shared control at the same h match
+    // them bit-for-bit while training different models.
+    assert_eq!(novel.total_up_bytes, cse_rec.total_up_bytes, "topology must not move bytes");
+    assert_eq!(novel.total_down_bytes, cse_rec.total_down_bytes);
+    assert_eq!(novel.sim_time, cse_rec.sim_time, "topology must not move the schedule");
+    // Storage follows the topology axis: per-client pays n copies.
+    assert!(
+        novel.server_storage_params > cse_rec.server_storage_params,
+        "per-client topology must store more than shared ({} vs {})",
+        novel.server_storage_params,
+        cse_rec.server_storage_params
+    );
+    // Incoherent specs fail before the cache is touched.
+    let bad = RunSpec { method: Method::FslMc.spec().with_period(2), ..base };
+    assert!(h.run_cached(&bad).unwrap_err().contains("server-grad"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

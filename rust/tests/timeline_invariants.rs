@@ -38,7 +38,9 @@ fn prop_no_actor_ever_overlaps_itself() {
     prop::check("actor schedules are consistent", |rng| {
         let n = 2 + rng.below(4) as usize;
         let method = Method::ALL[rng.below(4) as usize];
-        let h = if method.supports_h() { 1 + rng.below(3) as usize } else { 1 };
+        // Aux-local presets take random periods (including FSL_AN's
+        // spec-only h > 1 points); server-grad presets are h = 1.
+        let h = if method.spec().update.uses_aux() { 1 + rng.below(3) as usize } else { 1 };
         let rounds = 1 + rng.below(8) as usize;
         let agg_every = 1 + rng.below(rounds as u64 + 2) as usize;
         let participation = rng.below(n as u64 + 1) as usize; // 0 = all
@@ -51,13 +53,12 @@ fn prop_no_actor_ever_overlaps_itself() {
         let train = generate(&spec(), n * 16, rng.next_u64());
         let test = generate(&spec(), 8, rng.next_u64());
         let cfg = TrainConfig {
-            h,
             rounds,
             agg_every,
             participation,
             parallelism,
             eval_every: 0,
-            ..TrainConfig::new(method)
+            ..TrainConfig::new(method).with_h(h)
         };
         let mut tr =
             Trainer::new(&e, cfg, setup(&train, &test, n, rng.next_u64()))?;
