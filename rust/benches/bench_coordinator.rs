@@ -1,6 +1,10 @@
 //! Coordinator-layer benchmarks (the L3 contribution must not be the
 //! bottleneck): full mock-engine rounds per method, FedAvg aggregation at
-//! paper model sizes, the event queue, and the accounting ledger.
+//! paper model sizes, the streaming population engine at fleet scale,
+//! the event queue, and the accounting ledger.
+//!
+//! Set `CSE_FSL_BENCH_JSON=<path>` to also write the run as a
+//! `BENCH_*.json` snapshot (the perf trajectory CI diffs).
 
 use std::time::{Duration, Instant};
 
@@ -8,6 +12,7 @@ use cse_fsl::comm::accounting::{table2, CommLedger, MsgKind, WireSizes};
 use cse_fsl::sched::{fanout, SchedPolicy};
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
 use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::population::{ClientSource, PopulationSetup};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
@@ -15,10 +20,11 @@ use cse_fsl::model::aggregate::{fedavg, Accumulator};
 use cse_fsl::sim::event::EventQueue;
 use cse_fsl::sim::netmodel::NetModel;
 use cse_fsl::runtime::mock::MockEngine;
-use cse_fsl::util::bench::Bench;
+use cse_fsl::util::bench::{write_snapshot, Bench, Stats};
 use cse_fsl::util::prng::Rng;
 
 fn main() {
+    let mut snapshot: Vec<Stats> = Vec::new();
     // --- full coordinator rounds over the mock engine, per method
     let spec = SyntheticSpec {
         height: 2,
@@ -50,6 +56,7 @@ fn main() {
         });
     }
     bench.report();
+    snapshot.extend(bench.results().iter().cloned());
 
     // --- the parallel round engine: sequential vs threaded client
     // fan-out at 8 mock clients. The engine is sized so one client's
@@ -123,6 +130,7 @@ fn main() {
         })
         .median_ns;
     bench.report();
+    snapshot.extend(bench.results().iter().cloned());
     println!(
         "\nfan-out scaling at 8 clients (median): threads2 {:.2}x, threads4 {:.2}x, threads8 {:.2}x vs sequential; steal/rr at threads4 {:.2}x",
         seq_ns / thr2_ns,
@@ -170,6 +178,7 @@ fn main() {
         }
     }
     bench.report();
+    snapshot.extend(bench.results().iter().cloned());
     println!(
         "\nheavy-tailed profile (median makespan): cost-weighted {:.2}x, work-stealing {:.2}x vs round-robin",
         medians[&("rr".to_string(), "heavytail")] / medians[&("cost".to_string(), "heavytail")],
@@ -219,6 +228,7 @@ fn main() {
         .run("shards8_threads4_8clients", || run_sharded(8, Parallelism::Threads(4)))
         .median_ns;
     bench.report();
+    snapshot.extend(bench.results().iter().cloned());
     println!(
         "\nsharded server phase at 8 clients (median): shards2 {:.2}x, shards4 {:.2}x, shards8 {:.2}x vs single copy",
         k1_ns / k2_ns,
@@ -255,6 +265,7 @@ fn main() {
         );
     }
     bench.report();
+    snapshot.extend(bench.results().iter().cloned());
 
     // --- event queue + ledger (the per-message coordination cost)
     let mut bench = Bench::new("coordinator/plumbing");
@@ -281,4 +292,87 @@ fn main() {
         (table2::fsl_mc(5, 10_000, &w), table2::cse_fsl(5, 10_000, 5, &w))
     });
     bench.report();
+    snapshot.extend(bench.results().iter().cloned());
+
+    // --- the streaming population engine: fleet-scale rounds where only
+    // the sampled cohort is ever materialized. The resident row at the
+    // same n pins the streaming overhead at small scale (results are
+    // bit-identical there — tests/population_equivalence.rs); the 100k
+    // and 1M rows are the fleet deliverable: per-round work scales with
+    // the 64-client cohort, not n (the O(n) parts — broadcast sweep at
+    // each aggregation, final eval replay, the one-off skew pass — are
+    // cheap scans), and memory stays flat in n. Throughput denominator =
+    // population size, so the printed rate reads as clients/s of fleet
+    // capacity.
+    let run_population = |n: usize, rounds: usize| {
+        let e = MockEngine::small(42);
+        let source = ClientSource::Pool {
+            n_clients: n,
+            samples_per_client: 32,
+            pool_len: train.len(),
+        };
+        let setup =
+            PopulationSetup::new(&train, &test, source, NetModel::edge_default(), "bench");
+        let cfg = TrainConfig {
+            eval_every: 0,
+            agg_every: 1,
+            participation: 64,
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
+        }
+        .with_rounds(rounds);
+        let mut tr = Trainer::new_population(&e, cfg, setup).unwrap();
+        tr.run().unwrap()
+    };
+    let mut bench = Bench::new("coordinator/population")
+        .with_times(Duration::from_millis(200), Duration::from_millis(1000));
+    bench.run("resident_64clients_4rounds", || {
+        let e = MockEngine::small(42);
+        let cfg = TrainConfig {
+            eval_every: 0,
+            agg_every: 1,
+            participation: 64,
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
+        }
+        .with_rounds(4);
+        let setup = TrainerSetup {
+            train: &train,
+            test: &test,
+            partition: iid(&train, 64, &mut Rng::new(7)),
+            net: NetModel::edge_default(),
+            client_layout: None,
+            server_layout: None,
+            aux_layout: None,
+            label: "bench".into(),
+        };
+        let mut tr = Trainer::new(&e, cfg, setup).unwrap();
+        tr.run().unwrap()
+    });
+    bench.run_with_items("population_64clients_4rounds", Some(64.0), || {
+        let e = MockEngine::small(42);
+        let source = ClientSource::Partition(iid(&train, 64, &mut Rng::new(7)));
+        let setup =
+            PopulationSetup::new(&train, &test, source, NetModel::edge_default(), "bench");
+        let cfg = TrainConfig {
+            eval_every: 0,
+            agg_every: 1,
+            participation: 64,
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
+        }
+        .with_rounds(4);
+        let mut tr = Trainer::new_population(&e, cfg, setup).unwrap();
+        tr.run().unwrap()
+    });
+    bench.run_with_items("pool_100k_cohort64_3rounds", Some(100_000.0), || {
+        run_population(100_000, 3)
+    });
+    bench.run_with_items("pool_1M_cohort64_2rounds", Some(1_000_000.0), || {
+        run_population(1_000_000, 2)
+    });
+    bench.report();
+    snapshot.extend(bench.results().iter().cloned());
+
+    if let Ok(path) = std::env::var("CSE_FSL_BENCH_JSON") {
+        write_snapshot(&path, "bench_coordinator", &snapshot).unwrap();
+        println!("\nbench snapshot written: {path}");
+    }
 }

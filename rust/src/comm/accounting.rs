@@ -96,6 +96,23 @@ impl CommLedger {
         *self.per_client_kind.entry((client, kind)).or_default() += bytes;
     }
 
+    /// Record `count` identical messages of `kind`, `bytes_each` long,
+    /// without attributing them to individual clients.
+    ///
+    /// This is the streaming population engine's broadcast path: an
+    /// aggregated-model download to n = 10⁶ clients must not grow the
+    /// per-client maps by a million entries per aggregation. The
+    /// server-side view (totals and counts per kind) stays exact — it is
+    /// what `up_bytes`/`down_bytes` and the Table II cross-checks read —
+    /// but the **client-side view is deliberately not updated**, so
+    /// `per_kind_views_are_conserved`-style conservation between the two
+    /// views holds only for ledgers that never used this method. Use
+    /// [`CommLedger::record`] whenever the client attribution matters.
+    pub fn record_bulk(&mut self, kind: MsgKind, count: u64, bytes_each: u64) {
+        *self.bytes.entry(kind).or_default() += count * bytes_each;
+        *self.counts.entry(kind).or_default() += count;
+    }
+
     /// Fold another ledger into this one (all views summed).
     pub fn merge(&mut self, other: &CommLedger) {
         for (&k, &b) in &other.bytes {
@@ -420,6 +437,32 @@ mod tests {
                 MsgKind::ALL.iter().map(|&k| l.client_kind_bytes(c, k)).sum();
             assert_eq!(kind_sum, l.client_bytes(c));
         }
+    }
+
+    #[test]
+    fn record_bulk_matches_n_records_in_the_server_view() {
+        // The population broadcast path: one bulk record must equal n
+        // individual records in every server-side total...
+        let mut bulk = CommLedger::new();
+        bulk.record_bulk(MsgKind::ClientModelDownload, 1000, 64);
+        let mut loop_ledger = CommLedger::new();
+        for c in 0..1000 {
+            loop_ledger.record(c, MsgKind::ClientModelDownload, 64);
+        }
+        assert_eq!(bulk.bytes_of(MsgKind::ClientModelDownload), 64_000);
+        assert_eq!(bulk.count_of(MsgKind::ClientModelDownload), 1000);
+        assert_eq!(bulk.bytes_of(MsgKind::ClientModelDownload), loop_ledger.bytes_of(MsgKind::ClientModelDownload));
+        assert_eq!(bulk.count_of(MsgKind::ClientModelDownload), loop_ledger.count_of(MsgKind::ClientModelDownload));
+        assert_eq!(bulk.down_bytes(), loop_ledger.down_bytes());
+        // ...while leaving the per-client view untouched (that is the
+        // point: O(1) memory per broadcast).
+        assert!(bulk.clients().is_empty());
+        assert_eq!(bulk.client_bytes(3), 0);
+        // Bulk entries merge like any others.
+        let mut merged = CommLedger::new();
+        merged.merge(&bulk);
+        merged.merge(&bulk);
+        assert_eq!(merged.count_of(MsgKind::ClientModelDownload), 2000);
     }
 
     #[test]

@@ -6,10 +6,16 @@
 //! [`server`] the per-party state (including the event-triggered
 //! `dataQueue` of Algorithm 2); [`round`] the trainer that drives
 //! communication rounds, asynchronous server updates, aggregation, and
-//! all accounting — branching only on the spec's axes.
+//! all accounting — branching only on the spec's axes; [`population`]
+//! the streaming client-population engine behind `Trainer::
+//! new_population` — clients sampled per round from a `ClientSource`
+//! distribution, materialized lazily on activation, and retired after
+//! their aggregation upload, so fleet-scale runs (`--clients 1_000_000`)
+//! hold only the sampled working set in memory.
 
 pub mod client;
 pub mod config;
 pub mod methods;
+pub mod population;
 pub mod round;
 pub mod server;

@@ -1,0 +1,450 @@
+//! Streaming client *population* for fleet-scale runs.
+//!
+//! The resident engine ([`Trainer::new`]) materializes every
+//! [`ClientState`] up front — O(n) models, batchers, and profiles —
+//! which caps it at a few thousand clients. The population engine
+//! ([`Trainer::new_population`]) instead treats clients as a
+//! *distribution*: a [`ClientSource`] describes where any client's data
+//! shard comes from, [`NetModel::profile_for`] derives any client's
+//! persistent delay profile per id, and full [`ClientState`]s are built
+//! **lazily on first activation** (sampled into a round's cohort) and
+//! **retired after their aggregation upload** (model buffers dropped,
+//! private RNG/batcher state carried). Peak memory is bounded by the
+//! working set — the clients activated at least once — independent of
+//! the population size n (`--clients 1_000_000` on the mock engine).
+//!
+//! # Bit-determinism contract
+//!
+//! A population run over a [`ClientSource::Partition`] source produces a
+//! `RunRecord` **bit-identical** to the resident engine over the same
+//! partition and config (enforced by `tests/population_equivalence.rs`),
+//! because every random stream is derived per id from non-mutated roots
+//! (never positionally), every merge happens in canonical client-id
+//! order, and every floating-point accumulation the record depends on
+//! replays the resident operation order exactly:
+//!
+//! * arrivals drain through [`EventQueue`] — min-order with FIFO ties —
+//!   which reproduces the resident engine's stable sort by arrival time
+//!   when messages are enqueued in participant order;
+//! * the O(n) aggregation broadcast is replayed as a streaming sweep
+//!   (running `dl_end_max`, per-client busy folds in span-record order)
+//!   instead of O(n) recorded `Download` spans;
+//! * the evaluation FedAvg iterates ids `0..n`, substituting the carried
+//!   diverged model where one exists and the post-aggregation global
+//!   model everywhere else — the identical `+= v * inv` f32 reduction.
+//!
+//! [`Trainer::new`]: super::round::Trainer::new
+//! [`Trainer::new_population`]: super::round::Trainer::new_population
+//! [`ClientState`]: super::client::ClientState
+//! [`NetModel::profile_for`]: crate::sim::netmodel::NetModel::profile_for
+//! [`EventQueue`]: crate::sim::event::EventQueue
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::data::partition::Partition;
+use crate::data::Dataset;
+use crate::sched::cost::EWMA_ALPHA;
+use crate::sim::netmodel::NetModel;
+use crate::util::prng::Rng;
+
+use super::client::ClientState;
+use super::server::ShardMap;
+
+/// Where a population client's data shard comes from.
+pub enum ClientSource {
+    /// An explicit per-client index partition — the resident engine's
+    /// input, offered so small-n population runs can be checked
+    /// bit-identical against [`Trainer::new`]. O(total samples) memory,
+    /// so only viable at resident scale.
+    ///
+    /// [`Trainer::new`]: super::round::Trainer::new
+    Partition(Partition),
+    /// A synthetic fleet over a shared sample pool: client `i` holds the
+    /// `samples_per_client` indices `(i * spc + j) % pool_len`. Shards
+    /// are computed on activation (O(spc) each, nothing global), so the
+    /// source itself is O(1) in n — the fleet-scale mode.
+    Pool {
+        /// Population size n.
+        n_clients: usize,
+        /// Samples per client shard.
+        samples_per_client: usize,
+        /// Shared pool size (indices cycle modulo this; must not exceed
+        /// the dataset length).
+        pool_len: usize,
+    },
+}
+
+impl ClientSource {
+    /// Population size n.
+    pub fn n_clients(&self) -> usize {
+        match self {
+            ClientSource::Partition(p) => p.n_clients(),
+            ClientSource::Pool { n_clients, .. } => *n_clients,
+        }
+    }
+
+    /// Materialize client `id`'s sample-index shard (called once per
+    /// activation).
+    pub fn shard_of(&self, id: usize) -> Vec<usize> {
+        match self {
+            ClientSource::Partition(p) => p.clients[id].clone(),
+            ClientSource::Pool { samples_per_client, pool_len, .. } => (0..*samples_per_client)
+                .map(|j| (id * samples_per_client + j) % pool_len)
+                .collect(),
+        }
+    }
+
+    /// Check the source against the backing dataset.
+    pub fn validate(&self, dataset_len: usize) -> Result<(), String> {
+        match self {
+            ClientSource::Partition(p) => p.validate(dataset_len),
+            ClientSource::Pool { n_clients, samples_per_client, pool_len } => {
+                if *n_clients == 0 {
+                    return Err("pool source: zero clients".into());
+                }
+                if *samples_per_client == 0 {
+                    return Err("pool source: zero samples per client".into());
+                }
+                if *pool_len == 0 || *pool_len > dataset_len {
+                    return Err(format!(
+                        "pool source: pool_len {pool_len} outside 1..={dataset_len}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The shard-skew metric the resident engine records
+    /// ([`ShardMap::label_divergence_weighted`]), computed without
+    /// materializing per-client histograms: one streaming pass over the
+    /// population accumulates the k × classes shard mixes directly, so
+    /// memory is O(shards · classes) at any n. For a `Partition` source
+    /// this defers to the resident metric verbatim (the bit-determinism
+    /// contract covers the recorded value).
+    pub fn label_divergence_weighted(&self, map: &ShardMap, ds: &Dataset) -> f64 {
+        match self {
+            ClientSource::Partition(p) => {
+                map.label_divergence_weighted(&p.label_histograms(ds))
+            }
+            ClientSource::Pool { n_clients, samples_per_client, pool_len } => {
+                let classes = ds.classes;
+                if classes == 0 || map.shards() == 0 || *n_clients == 0 {
+                    return 0.0;
+                }
+                let mut global = vec![0f64; classes];
+                let mut shard_h = vec![vec![0f64; classes]; map.shards()];
+                for c in 0..*n_clients {
+                    let s = map.shard_of(c);
+                    for j in 0..*samples_per_client {
+                        let idx = (c * samples_per_client + j) % pool_len;
+                        let k = ds.labels[idx] as usize;
+                        global[k] += 1.0;
+                        shard_h[s][k] += 1.0;
+                    }
+                }
+                let g_tot: f64 = global.iter().sum();
+                if g_tot == 0.0 {
+                    return 0.0;
+                }
+                let mut acc = 0.0;
+                for sh in &shard_h {
+                    let s_tot: f64 = sh.iter().sum();
+                    if s_tot == 0.0 {
+                        continue;
+                    }
+                    let tv: f64 = sh
+                        .iter()
+                        .zip(&global)
+                        .map(|(&s, &g)| (s / s_tot - g / g_tot).abs())
+                        .sum();
+                    acc += (s_tot / g_tot) * 0.5 * tv;
+                }
+                acc
+            }
+        }
+    }
+}
+
+/// Everything needed to build a population trainer
+/// ([`Trainer::new_population`]).
+///
+/// [`Trainer::new_population`]: super::round::Trainer::new_population
+pub struct PopulationSetup<'a> {
+    /// Training dataset the source's shard indices point into.
+    pub train: &'a Dataset,
+    /// Held-out evaluation dataset.
+    pub test: &'a Dataset,
+    /// The client population distribution.
+    pub source: ClientSource,
+    /// Client heterogeneity / network delay model.
+    pub net: NetModel,
+    /// Human-readable run label carried into the `RunRecord`.
+    pub label: String,
+    /// Per-round client availability in (0, 1]: each sampled participant
+    /// independently sits the round out with probability
+    /// `1 - availability` (a fresh non-mutated draw per (round, id), so
+    /// it perturbs nothing else). 1.0 — the default, and the only value
+    /// the bit-determinism contract covers — disables the filter.
+    pub availability: f64,
+    /// Straggler dropout: a round's smashed upload is dropped (never
+    /// enters the server's dataQueue) if it arrives more than this many
+    /// simulated seconds after the round's *first* arrival. `None` — the
+    /// default, and the only value the bit-determinism contract covers —
+    /// processes every arrival.
+    pub straggler_cutoff: Option<f64>,
+}
+
+impl<'a> PopulationSetup<'a> {
+    /// A setup with the contract-covered defaults: full availability,
+    /// no straggler dropout.
+    pub fn new(
+        train: &'a Dataset,
+        test: &'a Dataset,
+        source: ClientSource,
+        net: NetModel,
+        label: impl Into<String>,
+    ) -> Self {
+        PopulationSetup {
+            train,
+            test,
+            source,
+            net,
+            label: label.into(),
+            availability: 1.0,
+            straggler_cutoff: None,
+        }
+    }
+}
+
+/// One aggregation barrier's broadcast, recorded so never-yet-activated
+/// clients can replay it lazily: a client first activated at round t
+/// folds every earlier broadcast's download delay into its busy total
+/// and ready time, exactly as if it had been resident all along.
+pub struct AggEvent {
+    /// Barrier end time (downloads start here).
+    pub agg_done: f64,
+    /// Trainer-stream snapshot at the barrier (`split` is non-mutating
+    /// and aggregation never advances the stream, so
+    /// `rng.split(id ^ 0xD7)` reproduces the resident per-id download
+    /// jitter stream for *any* id, at any later time).
+    pub rng: Rng,
+    /// Broadcast payload per client (client model + aux riders).
+    pub bytes: u64,
+}
+
+/// Sparse per-client cost estimates for the cost-aware dealing policies
+/// — the population-engine counterpart of [`CostTracker`], keyed by id
+/// instead of indexed by a dense Vec, seeded on activation. Same prior,
+/// same EWMA; like the resident tracker, estimates steer dealing only
+/// and can never change results.
+///
+/// [`CostTracker`]: crate::sched::CostTracker
+#[derive(Clone, Debug, Default)]
+pub struct SparseCosts {
+    est: BTreeMap<usize, f64>,
+}
+
+impl SparseCosts {
+    /// An empty tracker (estimates are seeded per activation).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of clients with an estimate (== clients activated).
+    pub fn len(&self) -> usize {
+        self.est.len()
+    }
+
+    /// Whether no client has an estimate yet.
+    pub fn is_empty(&self) -> bool {
+        self.est.is_empty()
+    }
+
+    /// Install `prior` for `id` unless an estimate already exists.
+    pub fn seed(&mut self, id: usize, prior: f64) {
+        self.est.entry(id).or_insert(prior);
+    }
+
+    /// Current estimate for `id`; panics when the client was never
+    /// seeded (mirrors [`CostTracker::estimate`]'s out-of-bounds panic).
+    ///
+    /// [`CostTracker::estimate`]: crate::sched::CostTracker::estimate
+    pub fn estimate(&self, id: usize) -> f64 {
+        self.est[&id]
+    }
+
+    /// Fold one measured round cost into `id`'s estimate — the same
+    /// EWMA (and the same non-finite/negative guard) as
+    /// [`CostTracker::observe`].
+    ///
+    /// [`CostTracker::observe`]: crate::sched::CostTracker::observe
+    pub fn observe(&mut self, id: usize, measured: f64) {
+        if measured.is_finite() && measured >= 0.0 {
+            if let Some(e) = self.est.get_mut(&id) {
+                *e = (1.0 - EWMA_ALPHA) * *e + EWMA_ALPHA * measured;
+            }
+        }
+    }
+}
+
+/// The population engine's streaming state: the carried working set plus
+/// the O(1)-per-client aggregates that replace the resident engine's
+/// O(n) structures.
+pub struct PopulationState {
+    /// Population size n.
+    pub n: usize,
+    /// The client distribution (shards per id).
+    pub source: ClientSource,
+    /// Delay model (profiles per id via [`NetModel::profile_for`]).
+    ///
+    /// [`NetModel::profile_for`]: crate::sim::netmodel::NetModel::profile_for
+    pub net: NetModel,
+    /// Profile root stream (`root.split_str("profiles")`, never
+    /// advanced).
+    pub prof_root: Rng,
+    /// Client private-stream root (`Rng::new(seed)`; activation derives
+    /// `client_root.split(1_000 + id)` — the resident constructor arg).
+    pub client_root: Rng,
+    /// Availability root stream (`root.split_str("availability")`; only
+    /// consulted when `availability < 1.0`).
+    pub avail_root: Rng,
+    /// Per-round availability in (0, 1]; 1.0 disables the filter.
+    pub availability: f64,
+    /// Straggler dropout window (seconds past the round's first
+    /// arrival); `None` processes every arrival.
+    pub straggler_cutoff: Option<f64>,
+    /// The model every not-currently-diverged client holds (x_c after
+    /// the last aggregation; x_c^0 before the first).
+    pub global_xc: Vec<f32>,
+    /// Aux-network counterpart of `global_xc`.
+    pub global_ac: Vec<f32>,
+    /// Ever-activated clients, by id. Entries persist for the run (their
+    /// private batcher/seed streams must survive retirement) but carry
+    /// empty model buffers between divergence windows.
+    pub carry: BTreeMap<usize, ClientState>,
+    /// Clients that trained since the last aggregation (always a subset
+    /// of `carry`'s keys). Ascending iteration = the resident
+    /// contributor order.
+    pub dirty: BTreeSet<usize>,
+    /// Sparse cost estimates for the dealing policies.
+    pub costs: SparseCosts,
+    /// Every aggregation broadcast so far (O(rounds / agg_every)).
+    pub aggs: Vec<AggEvent>,
+    /// Latest broadcast download end over all n clients — the streaming
+    /// stand-in for the resident engine's O(n) `Download` spans in
+    /// `Timeline::end_time`.
+    pub dl_end_max: f64,
+    /// Per-client busy totals for ever-activated clients, accumulated in
+    /// the resident span-record order (the `Timeline::critical_path`
+    /// BTreeMap fold, replayed).
+    pub busy: BTreeMap<usize, f64>,
+    /// Smashed arrivals processed through the event queue.
+    pub arrivals: u64,
+    /// Smashed arrivals dropped by the straggler cutoff.
+    pub stragglers_dropped: u64,
+}
+
+impl PopulationState {
+    /// Clients materialized at least once (the working-set size reported
+    /// as `RunRecord::clients_activated`).
+    pub fn activated(&self) -> usize {
+        self.carry.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::CostTracker;
+
+    fn pool_ds(len: usize, classes: usize) -> Dataset {
+        Dataset {
+            images: vec![0.0; len * 4],
+            labels: (0..len).map(|i| (i % classes) as i32).collect(),
+            shape: [2, 2, 1],
+            classes,
+            writers: vec![0; len],
+        }
+    }
+
+    #[test]
+    fn pool_shards_cycle_the_pool() {
+        let src = ClientSource::Pool { n_clients: 10, samples_per_client: 3, pool_len: 7 };
+        assert_eq!(src.n_clients(), 10);
+        assert_eq!(src.shard_of(0), vec![0, 1, 2]);
+        assert_eq!(src.shard_of(2), vec![6, 0, 1]);
+        // Every index stays inside the pool.
+        for id in 0..10 {
+            assert!(src.shard_of(id).iter().all(|&i| i < 7));
+        }
+        assert!(src.validate(7).is_ok());
+        assert!(src.validate(6).is_err(), "pool larger than dataset");
+        let degenerate =
+            ClientSource::Pool { n_clients: 0, samples_per_client: 3, pool_len: 7 };
+        assert!(degenerate.validate(7).is_err());
+    }
+
+    #[test]
+    fn partition_source_mirrors_partition() {
+        let p = Partition { clients: vec![vec![0, 1], vec![2, 3]] };
+        let src = ClientSource::Partition(p);
+        assert_eq!(src.n_clients(), 2);
+        assert_eq!(src.shard_of(1), vec![2, 3]);
+        assert!(src.validate(4).is_ok());
+        assert!(src.validate(3).is_err());
+    }
+
+    #[test]
+    fn pool_divergence_matches_materialized_histograms() {
+        // Build the same population both ways: streaming vs explicit
+        // per-client histograms through the resident metric.
+        let ds = pool_ds(12, 3);
+        let (n, spc, pool) = (8usize, 3usize, 12usize);
+        let src = ClientSource::Pool { n_clients: n, samples_per_client: spc, pool_len: pool };
+        let map = ShardMap::contiguous(n, 3);
+        let streamed = src.label_divergence_weighted(&map, &ds);
+        let hists: Vec<Vec<usize>> = (0..n)
+            .map(|c| {
+                let mut h = vec![0usize; ds.classes];
+                for j in 0..spc {
+                    h[ds.labels[(c * spc + j) % pool] as usize] += 1;
+                }
+                h
+            })
+            .collect();
+        let materialized = map.label_divergence_weighted(&hists);
+        assert!(
+            (streamed - materialized).abs() < 1e-12,
+            "streamed {streamed} vs materialized {materialized}"
+        );
+        // A cycled pool spreads labels near-evenly: low but finite skew.
+        assert!((0.0..=1.0).contains(&streamed));
+    }
+
+    #[test]
+    fn sparse_costs_track_like_the_dense_tracker() {
+        let mut dense = CostTracker::new(vec![2.0, 4.0, 8.0]);
+        let mut sparse = SparseCosts::new();
+        for (id, prior) in [(0usize, 2.0), (1, 4.0), (2, 8.0)] {
+            sparse.seed(id, prior);
+        }
+        // Re-seeding never clobbers a live estimate.
+        sparse.seed(1, 999.0);
+        for (id, obs) in [(1usize, 1.0), (0, 3.5), (1, 2.0), (2, f64::NAN), (2, -1.0)] {
+            dense.observe(id, obs);
+            sparse.observe(id, obs);
+        }
+        for id in 0..3 {
+            assert_eq!(dense.estimate(id), sparse.estimate(id), "client {id}");
+        }
+        assert_eq!(sparse.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sparse_costs_panic_on_unseeded_client() {
+        let sparse = SparseCosts::new();
+        let _ = sparse.estimate(5);
+    }
+}

@@ -81,6 +81,8 @@
 //!
 //! [`ShardMap`]: super::server::ShardMap
 
+use std::collections::{BTreeMap, BTreeSet};
+
 use crate::comm::accounting::{CommLedger, MsgKind, WireSizes};
 use crate::data::partition::Partition;
 use crate::data::Dataset;
@@ -91,6 +93,7 @@ use crate::model::init::init_flat;
 use crate::model::layout::Layout;
 use crate::runtime::{EngineError, SplitEngine};
 use crate::sched::{self, CostTracker, SchedPolicy};
+use crate::sim::event::EventQueue;
 use crate::sim::netmodel::NetModel;
 use crate::sim::timeline::{SpanKind, Timeline};
 use crate::storage;
@@ -99,6 +102,7 @@ use crate::util::prng::Rng;
 use super::client::ClientState;
 use super::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 use super::methods::{ClientUpdate, ServerTopology};
+use super::population::{AggEvent, PopulationSetup, PopulationState, SparseCosts};
 
 use super::server::{ServerState, ShardMap, SmashedMsg, Topology};
 
@@ -111,8 +115,16 @@ pub struct Trainer<'a, E: SplitEngine> {
     pub cfg: TrainConfig,
     train: &'a Dataset,
     test: &'a Dataset,
-    /// Per-client state (models, batcher, delay profile).
+    /// Per-client state (models, batcher, delay profile). Holds every
+    /// client for the resident engine ([`Trainer::new`]); **empty** for
+    /// the streaming population engine ([`Trainer::new_population`]),
+    /// whose working set lives in `population`.
     pub clients: Vec<ClientState>,
+    /// Streaming-population state (`Some` iff built by
+    /// [`Trainer::new_population`]): the lazily-materialized working
+    /// set plus the streaming aggregates replacing the resident O(n)
+    /// structures.
+    pub population: Option<PopulationState>,
     /// Server-side state (shard copies, executor clocks, dataQueue).
     pub server: ServerState,
     /// Measured wire traffic.
@@ -124,9 +136,10 @@ pub struct Trainer<'a, E: SplitEngine> {
     /// Per-client cost estimates steering the cost-aware dealing
     /// policies (profile priors + EWMA of observed round spans).
     cost_tracker: CostTracker,
-    /// Shard-skew metric of the configured shard map: mean per-shard
-    /// label-histogram divergence from the global mix (see
-    /// `ShardMap::label_divergence`), fixed at construction.
+    /// Shard-skew metric of the configured shard map: sample-mass-
+    /// weighted per-shard label-histogram divergence from the global
+    /// mix (`ShardMap::label_divergence_weighted`), fixed at
+    /// construction.
     shard_divergence: f64,
     records: Vec<RoundRecord>,
     /// Clients that contributed training since the last aggregation.
@@ -227,6 +240,88 @@ where
     fanout_owned(parallelism, policy, costs, refs, |pos, c| work(pos, participants[pos], c))
 }
 
+/// Worker-local artifacts of one client's aux-local round (losses,
+/// spans, wire bytes, the smashed message) — produced by
+/// [`run_local_client`], merged in canonical participant order.
+struct LocalOutcome {
+    losses: Vec<f32>,
+    gnorms: Vec<f32>,
+    timeline: Timeline,
+    ledger: CommLedger,
+    msg: SmashedMsg,
+}
+
+/// One client's aux-local round (Algorithm 1): `h` local batches, one
+/// smashed upload. This is THE round body for **both** engines — the
+/// resident trainer fans it over `Trainer::clients`, the population
+/// trainer over the activated cohort — so their per-client arithmetic
+/// (engine steps, delay draws, span endpoints, byte records) is shared
+/// code, not merely equivalent code. `round_rng` is the trainer-stream
+/// snapshot for this round; `i` the canonical client id.
+#[allow(clippy::too_many_arguments)]
+fn run_local_client<E: SplitEngine>(
+    engine: &E,
+    train: &Dataset,
+    h: usize,
+    lr: f32,
+    smashed_bytes: u64,
+    label_bytes: u64,
+    round_rng: &Rng,
+    i: usize,
+    c: &mut ClientState,
+) -> Result<LocalOutcome, EngineError> {
+    let payload = smashed_bytes + label_bytes;
+    let start = c.ready_at;
+    let mut losses = Vec::with_capacity(h);
+    let mut gnorms = Vec::with_capacity(h);
+    let mut last_seed = 0;
+    for _ in 0..h {
+        c.load_batch(train);
+        last_seed = c.next_seed();
+        let out =
+            engine.client_train_step(&c.xc, &c.ac, &c.images, &c.labels, lr, last_seed)?;
+        c.xc = out.new_client;
+        c.ac = out.new_aux;
+        losses.push(out.loss);
+        gnorms.push(out.grad_norm);
+    }
+    // Smashed data of the *updated* model on the last batch
+    // (Algorithm 1 line 9: g_{x^{t,h}}(z)).
+    let smashed = engine.client_fwd(&c.xc, &c.images, last_seed)?;
+    let mut drng = round_rng.split(i as u64);
+    let t_compute = c.profile.compute_delay(h, &mut drng);
+    let t_up = c.profile.upload_delay(payload, &mut drng);
+    let mut timeline = Timeline::default();
+    timeline.record(
+        SpanKind::ClientCompute,
+        Some(i),
+        start,
+        start + t_compute,
+        format!("train h={h}"),
+    );
+    timeline.record(
+        SpanKind::Upload,
+        Some(i),
+        start + t_compute,
+        start + t_compute + t_up,
+        "smashed",
+    );
+    let mut ledger = CommLedger::new();
+    ledger.record(i, MsgKind::SmashedUpload, smashed_bytes);
+    ledger.record(i, MsgKind::LabelUpload, label_bytes);
+    let msg = SmashedMsg {
+        client: i,
+        smashed,
+        labels: c.labels.clone(),
+        arrival: start + t_compute + t_up,
+        seed: last_seed,
+    };
+    // Fire-and-forget: the client is free as soon as the upload leaves —
+    // it never waits for server gradients.
+    c.ready_at = start + t_compute + t_up;
+    Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg })
+}
+
 impl<'a, E: SplitEngine> Trainer<'a, E> {
     /// Validate `cfg` against the setup and build the initial state:
     /// globally-initialized models (Step 1), per-client profiles and RNG
@@ -254,14 +349,18 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             None => vec![0.0; engine.server_size()],
         };
 
-        let mut prng = root.split_str("profiles");
+        // Profiles derive *per id* from the non-mutated profile root
+        // (`NetModel::profile_for`), not from one sequential stream —
+        // so the population engine, materializing clients lazily and
+        // out of order, reconstructs the identical draws.
+        let prng = root.split_str("profiles");
         let clients: Vec<ClientState> = setup
             .partition
             .clients
             .iter()
             .enumerate()
             .map(|(i, shard)| {
-                let profile = setup.net.sample_profile(&mut prng);
+                let profile = setup.net.profile_for(&prng, i as u64);
                 ClientState::new(
                     i,
                     xc0.clone(),
@@ -300,7 +399,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 ShardMapKind::Locality => ShardMap::locality(n, k, &hists, &costs),
             },
         };
-        let shard_divergence = shard_map.label_divergence(&hists);
+        // Recorded skew is the sample-mass-weighted variant (the
+        // ROADMAP-carried fix; the experiment cache version was bumped
+        // so records carrying the old unweighted metric re-run).
+        let shard_divergence = shard_map.label_divergence_weighted(&hists);
         let server = ServerState::with_map(
             xs0,
             topology,
@@ -314,6 +416,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             train: setup.train,
             test: setup.test,
             clients,
+            population: None,
             server,
             ledger: CommLedger::new(),
             timeline: Timeline::default(),
@@ -327,6 +430,136 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         })
     }
 
+    /// Build a **streaming population** trainer: no per-client state is
+    /// materialized here — clients are sampled per round, activated
+    /// lazily, and retired after their aggregation upload (see the
+    /// `coordinator::population` module docs for the memory and
+    /// bit-determinism arguments). Restricted to the config points
+    /// whose round shape needs no resident global state: the aux-local
+    /// update rule (fire-and-forget clients), the shared server
+    /// topology, the contiguous shard map (O(1) closed form at any n),
+    /// and by-delay arrival ordering (the event queue's native order).
+    pub fn new_population(
+        engine: &'a E,
+        cfg: TrainConfig,
+        setup: PopulationSetup<'a>,
+    ) -> Result<Self, String> {
+        let n = setup.source.n_clients();
+        cfg.validate(n)?;
+        setup.source.validate(setup.train.len()).map_err(|e| format!("source: {e}"))?;
+        if !matches!(cfg.spec.update, ClientUpdate::AuxLocal) {
+            return Err(
+                "population engine: only the aux-local update rule streams \
+                 (server-grad clients block on per-client round trips)"
+                    .into(),
+            );
+        }
+        if !matches!(cfg.spec.topology, ServerTopology::Shared) {
+            return Err(
+                "population engine: per-client server copies are O(n) resident state".into()
+            );
+        }
+        if !matches!(cfg.shard_map, ShardMapKind::Contiguous) {
+            return Err(
+                "population engine: only the contiguous shard map has an O(1) closed form"
+                    .into(),
+            );
+        }
+        if !matches!(cfg.arrival, ArrivalOrder::ByDelay) {
+            return Err(
+                "population engine: arrivals drain through the event queue in time \
+                 order (ArrivalOrder::ByDelay)"
+                    .into(),
+            );
+        }
+        if !(setup.availability > 0.0 && setup.availability <= 1.0) {
+            return Err(format!(
+                "population engine: availability {} outside (0, 1]",
+                setup.availability
+            ));
+        }
+        if let Some(cut) = setup.straggler_cutoff {
+            if !(cut.is_finite() && cut >= 0.0) {
+                return Err(format!(
+                    "population engine: straggler cutoff {cut} must be finite and >= 0"
+                ));
+            }
+        }
+        let root = Rng::new(cfg.seed);
+        // Global zero-init, matching `Trainer::new` with no layouts (the
+        // population engine drives layout-free mock runs; every client
+        // starts from the same x_c^0 / a_c^0 either way).
+        let xc0 = vec![0.0; engine.client_size()];
+        let ac0 = vec![0.0; engine.aux_size()];
+        let xs0 = vec![0.0; engine.server_size()];
+        let shard_map = ShardMap::contiguous(n, cfg.server_shards);
+        // The recorded skew metric, streamed (O(shards · classes)
+        // memory) instead of materializing n client histograms.
+        let shard_divergence =
+            setup.source.label_divergence_weighted(&shard_map, setup.train);
+        let server = ServerState::with_map(
+            xs0,
+            Topology::Sharded(cfg.server_shards),
+            shard_map,
+            engine.client_size(),
+            engine.aux_size(),
+        );
+        let pop = PopulationState {
+            n,
+            source: setup.source,
+            net: setup.net,
+            prof_root: root.split_str("profiles"),
+            client_root: root.clone(),
+            avail_root: root.split_str("availability"),
+            availability: setup.availability,
+            straggler_cutoff: setup.straggler_cutoff,
+            global_xc: xc0,
+            global_ac: ac0,
+            carry: BTreeMap::new(),
+            dirty: BTreeSet::new(),
+            costs: SparseCosts::new(),
+            aggs: Vec::new(),
+            dl_end_max: 0.0,
+            busy: BTreeMap::new(),
+            arrivals: 0,
+            stragglers_dropped: 0,
+        };
+        Ok(Trainer {
+            engine,
+            cfg,
+            train: setup.train,
+            test: setup.test,
+            clients: Vec::new(),
+            population: Some(pop),
+            server,
+            ledger: CommLedger::new(),
+            timeline: Timeline::default(),
+            wires: WireSizes::new(
+                engine.smashed_len(),
+                engine.client_size(),
+                engine.aux_size(),
+            ),
+            rng: root.split_str("trainer"),
+            cost_tracker: CostTracker::new(Vec::new()),
+            shard_divergence,
+            records: Vec::new(),
+            dirty: Vec::new(),
+            label: setup.label,
+        })
+    }
+
+    /// Number of clients in the run's population (resident or
+    /// streaming).
+    pub fn n_clients(&self) -> usize {
+        self.population.as_ref().map_or(self.clients.len(), |p| p.n)
+    }
+
+    /// Clients whose state was materialized at least once — the
+    /// streaming engine's working-set size (= n for resident runs).
+    pub fn clients_activated(&self) -> usize {
+        self.population.as_ref().map_or(self.clients.len(), |p| p.activated())
+    }
+
     fn smashed_bytes(&self) -> u64 {
         self.engine.batch() as u64 * self.wires.smashed_per_sample
     }
@@ -336,8 +569,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     }
 
     /// Select this round's participants (k of n, or all when k = 0).
+    /// `Rng::choose` is sparse (O(k) memory), so sampling a cohort out
+    /// of a million-client population never materializes the id range.
     fn select_participants(&mut self) -> Vec<usize> {
-        let n = self.clients.len();
+        let n = self.n_clients();
         let k = self.cfg.active_clients(n);
         if k == n {
             (0..n).collect()
@@ -363,28 +598,80 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             server: self.engine.server_size(),
             aux: self.engine.aux_size(),
         };
+        let lanes = self.server.lanes();
+        // Timeline-derived whole-run stats. A population run's timeline
+        // holds no broadcast `Download` spans (they are streamed into
+        // `dl_end_max` and the busy folds), so the resident formulas
+        // are replayed over the streaming aggregates instead.
+        let (sim_time, server_idle_fraction, critical_path) = match &self.population {
+            Some(pop) => {
+                let end = self.timeline.end_time().max(pop.dl_end_max);
+                let idle = if end <= 0.0 {
+                    0.0
+                } else {
+                    (1.0 - self.timeline.server_busy() / end).clamp(0.0, 1.0)
+                };
+                (end, idle, self.population_critical_path(lanes))
+            }
+            None => (
+                self.timeline.end_time(),
+                self.timeline.server_idle_fraction(),
+                self.timeline.critical_path(lanes),
+            ),
+        };
         Ok(RunRecord {
             label: self.label.clone(),
             rounds: self.records.clone(),
             final_accuracy: final_acc,
             total_up_bytes: self.ledger.up_bytes(),
             total_down_bytes: self.ledger.down_bytes(),
-            sim_time: self.timeline.end_time(),
-            server_idle_fraction: self.timeline.server_idle_fraction(),
-            critical_path: self.timeline.critical_path(self.server.lanes()),
-            lane_busy: self.timeline.lane_busy(self.server.lanes()),
+            sim_time,
+            server_idle_fraction,
+            critical_path,
+            lane_busy: self.timeline.lane_busy(lanes),
             server_storage_params: storage::server_storage_params_sharded(
                 &self.cfg.spec,
-                self.clients.len(),
+                self.n_clients(),
                 self.cfg.server_shards,
                 &sizes,
             ),
             server_updates_per_shard: self.server.shard_updates.clone(),
             shard_label_divergence: self.shard_divergence,
+            clients_activated: self.clients_activated(),
         })
     }
 
+    /// Critical path of a population run: the resident
+    /// [`Timeline::critical_path`] replayed over streaming state. Busy
+    /// totals of ever-activated clients are folded incrementally in
+    /// span-record order (`PopulationState::busy`); never-activated
+    /// clients only ever accrue broadcast download spans, replayed here
+    /// per recorded aggregation — O(n · aggs) time, O(1) extra memory.
+    fn population_critical_path(&self, lanes: usize) -> f64 {
+        let pop = self.population.as_ref().expect("population run");
+        let mut client_max = pop.busy.values().fold(0.0f64, |a, &b| a.max(b));
+        if !pop.aggs.is_empty() {
+            for id in 0..pop.n {
+                if pop.busy.contains_key(&id) {
+                    continue;
+                }
+                let profile = pop.net.profile_for(&pop.prof_root, id as u64);
+                let mut b = 0.0;
+                for ev in &pop.aggs {
+                    let mut drng = ev.rng.split(id as u64 ^ 0xD7);
+                    b += profile.download_delay(ev.bytes, &mut drng);
+                }
+                client_max = client_max.max(b);
+            }
+        }
+        let lane_max = self.timeline.lane_busy(lanes).into_iter().fold(0.0f64, f64::max);
+        client_max.max(lane_max)
+    }
+
     fn run_round(&mut self, t: usize) -> Result<(), EngineError> {
+        if self.population.is_some() {
+            return self.run_round_population(t);
+        }
         let lr = self.cfg.lr_at(t - 1) as f32;
         let server_lr = (self.cfg.lr_at(t - 1) * self.cfg.server_lr_scale) as f32;
         let participants = self.select_participants();
@@ -469,18 +756,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         client_gnorms: &mut Vec<f32>,
         msgs: &mut Vec<SmashedMsg>,
     ) -> Result<(), EngineError> {
-        struct LocalOutcome {
-            losses: Vec<f32>,
-            gnorms: Vec<f32>,
-            timeline: Timeline,
-            ledger: CommLedger,
-            msg: SmashedMsg,
-        }
         let engine = self.engine;
         let train = self.train;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
-        let payload = smashed_bytes + label_bytes;
         // Snapshot of the trainer stream: `split` derives child streams
         // without mutating, so every worker sees exactly the state the
         // sequential loop would.
@@ -494,56 +773,17 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             &mut self.clients,
             participants,
             |_pos, i, c: &mut ClientState| {
-                let start = c.ready_at;
-                let mut losses = Vec::with_capacity(h);
-                let mut gnorms = Vec::with_capacity(h);
-                let mut last_seed = 0;
-                for _ in 0..h {
-                    c.load_batch(train);
-                    last_seed = c.next_seed();
-                    let out = engine.client_train_step(
-                        &c.xc, &c.ac, &c.images, &c.labels, lr, last_seed,
-                    )?;
-                    c.xc = out.new_client;
-                    c.ac = out.new_aux;
-                    losses.push(out.loss);
-                    gnorms.push(out.grad_norm);
-                }
-                // Smashed data of the *updated* model on the last batch
-                // (Algorithm 1 line 9: g_{x^{t,h}}(z)).
-                let smashed = engine.client_fwd(&c.xc, &c.images, last_seed)?;
-                let mut drng = round_rng.split(i as u64);
-                let t_compute = c.profile.compute_delay(h, &mut drng);
-                let t_up = c.profile.upload_delay(payload, &mut drng);
-                let mut timeline = Timeline::default();
-                timeline.record(
-                    SpanKind::ClientCompute,
-                    Some(i),
-                    start,
-                    start + t_compute,
-                    format!("train h={h}"),
-                );
-                timeline.record(
-                    SpanKind::Upload,
-                    Some(i),
-                    start + t_compute,
-                    start + t_compute + t_up,
-                    "smashed",
-                );
-                let mut ledger = CommLedger::new();
-                ledger.record(i, MsgKind::SmashedUpload, smashed_bytes);
-                ledger.record(i, MsgKind::LabelUpload, label_bytes);
-                let msg = SmashedMsg {
-                    client: i,
-                    smashed,
-                    labels: c.labels.clone(),
-                    arrival: start + t_compute + t_up,
-                    seed: last_seed,
-                };
-                // Fire-and-forget: the client is free as soon as the
-                // upload leaves — it never waits for server gradients.
-                c.ready_at = start + t_compute + t_up;
-                Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg })
+                run_local_client(
+                    engine,
+                    train,
+                    h,
+                    lr,
+                    smashed_bytes,
+                    label_bytes,
+                    &round_rng,
+                    i,
+                    c,
+                )
             },
         )?;
         for (pos, o) in outcomes.into_iter().enumerate() {
@@ -737,6 +977,22 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             ArrivalOrder::ClientIndex => msgs.sort_by_key(|m| m.client),
             ArrivalOrder::Shuffled => self.rng.shuffle(&mut msgs),
         }
+        self.drain_ordered(lr, msgs)
+    }
+
+    /// The lane-routing + fan-out body of the drain loop, over
+    /// **already-ordered** arrivals. The resident path orders them by
+    /// `cfg.arrival` above; the population path pops them off the
+    /// [`EventQueue`] (time order, FIFO ties — the same sequence as the
+    /// resident stable sort) before calling in here.
+    fn drain_ordered(
+        &mut self,
+        lr: f32,
+        msgs: Vec<SmashedMsg>,
+    ) -> Result<(Vec<f32>, Vec<f32>), EngineError> {
+        if msgs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
         let lanes = self.server.lanes();
         // The paper's dataQueue, materialized per executor lane: route
         // the globally-ordered arrivals to their lanes (stable: within
@@ -832,6 +1088,331 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         Ok((losses, gnorms))
     }
 
+    /// One communication round of the streaming population engine: the
+    /// same phases as `run_round` — sample, train, drain, mark dirty,
+    /// aggregate, evaluate, record — driven over a lazily-activated
+    /// cohort instead of the resident client vector.
+    fn run_round_population(&mut self, t: usize) -> Result<(), EngineError> {
+        let lr = self.cfg.lr_at(t - 1) as f32;
+        let server_lr = (self.cfg.lr_at(t - 1) * self.cfg.server_lr_scale) as f32;
+        let mut participants = self.select_participants();
+        {
+            // Availability: each sampled participant independently sits
+            // the round out. Draws come per (round, id) from a
+            // non-mutated root, so the filter perturbs no other stream;
+            // availability = 1.0 (the contract default) never draws.
+            let pop = self.population.as_ref().expect("population run");
+            if pop.availability < 1.0 {
+                let round_avail = pop.avail_root.split(t as u64);
+                let avail = pop.availability;
+                participants.retain(|&i| {
+                    let mut r = round_avail.split(i as u64);
+                    r.uniform() < avail
+                });
+            }
+        }
+        let h = self.cfg.spec.upload.batches_at(t);
+        self.activate_cohort(&participants);
+        let mut train_losses = Vec::new();
+        let mut client_gnorms = Vec::new();
+        let mut msgs: Vec<SmashedMsg> = Vec::new();
+        self.local_round_population(
+            &participants,
+            h,
+            lr,
+            &mut train_losses,
+            &mut client_gnorms,
+            &mut msgs,
+        )?;
+        // Arrivals, dropouts, stragglers: the event queue replays the
+        // upload wave in time order; late arrivals past the straggler
+        // cutoff never reach the server's dataQueue.
+        let ordered = self.order_arrivals(msgs);
+        let (server_losses, server_gnorms) = self.drain_ordered(server_lr, ordered)?;
+        {
+            let pop = self.population.as_mut().expect("population run");
+            pop.dirty.extend(participants.iter().copied());
+        }
+        if t % self.cfg.agg_every == 0 {
+            self.aggregate_population()?;
+        }
+        let do_eval = self.cfg.eval_every > 0 && t % self.cfg.eval_every == 0;
+        let acc = if do_eval { Some(self.eval_probe(self.cfg.eval_max_batches)?) } else { None };
+        let mean = |v: &[f32]| {
+            if v.is_empty() {
+                0.0
+            } else {
+                v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64
+            }
+        };
+        // Round-end clock: the timeline is missing only the broadcast
+        // `Download` spans, whose running end-max streams separately.
+        let sim_time = {
+            let pop = self.population.as_ref().expect("population run");
+            self.timeline.end_time().max(pop.dl_end_max)
+        };
+        self.records.push(RoundRecord {
+            round: t,
+            sim_time,
+            lr: lr as f64,
+            train_loss: mean(&train_losses),
+            server_loss: mean(&server_losses),
+            up_bytes: self.ledger.up_bytes(),
+            down_bytes: self.ledger.down_bytes(),
+            accuracy: acc,
+            client_grad_norm: self.cfg.track_grad_norms.then(|| mean(&client_gnorms)),
+            server_grad_norm: self.cfg.track_grad_norms.then(|| mean(&server_gnorms)),
+        });
+        Ok(())
+    }
+
+    /// Materialize any not-yet-carried participants (lazy activation):
+    /// build the [`ClientState`] exactly as `Trainer::new` would — the
+    /// same constructor arguments, the same per-id streams — then
+    /// replay every aggregation broadcast the client missed (busy fold,
+    /// ready time, current global model). Re-activating a retired
+    /// carried client only refills its model buffers from the global
+    /// model (what the resident broadcast wrote into it at the last
+    /// barrier).
+    fn activate_cohort(&mut self, participants: &[usize]) {
+        let payload =
+            self.engine.batch() as u64 * (self.wires.smashed_per_sample + self.wires.label);
+        let h_hint = self.cfg.spec.h_hint();
+        let batch = self.engine.batch();
+        let pop = self.population.as_mut().expect("population run");
+        for &id in participants {
+            if let Some(c) = pop.carry.get_mut(&id) {
+                if c.xc.is_empty() {
+                    c.xc = pop.global_xc.clone();
+                    c.ac = pop.global_ac.clone();
+                }
+                continue;
+            }
+            let profile = pop.net.profile_for(&pop.prof_root, id as u64);
+            let mut c = ClientState::new(
+                id,
+                pop.global_xc.clone(),
+                pop.global_ac.clone(),
+                pop.source.shard_of(id),
+                batch,
+                profile,
+                pop.client_root.split(1_000 + id as u64),
+            );
+            // Replay missed broadcasts in record order: the busy fold
+            // and final ready time are bit-identical to the download
+            // spans a resident client would have accrued by now.
+            let mut busy = 0.0;
+            for ev in &pop.aggs {
+                let mut drng = ev.rng.split(id as u64 ^ 0xD7);
+                let t_down = c.profile.download_delay(ev.bytes, &mut drng);
+                busy += t_down;
+                c.ready_at = ev.agg_done + t_down;
+            }
+            pop.busy.insert(id, busy);
+            pop.costs.seed(id, sched::profile_cost(&c.profile, h_hint, payload));
+            pop.carry.insert(id, c);
+        }
+    }
+
+    /// The population cohort's aux-local round: the shared round body
+    /// ([`run_local_client`]) fanned over the carried cohort states and
+    /// merged in canonical participant order — the same machinery as
+    /// the resident `local_round`, minus the resident client vector.
+    fn local_round_population(
+        &mut self,
+        participants: &[usize],
+        h: usize,
+        lr: f32,
+        train_losses: &mut Vec<f32>,
+        client_gnorms: &mut Vec<f32>,
+        msgs: &mut Vec<SmashedMsg>,
+    ) -> Result<(), EngineError> {
+        let engine = self.engine;
+        let train = self.train;
+        let smashed_bytes = self.smashed_bytes();
+        let label_bytes = self.label_bytes();
+        let round_rng = self.rng.clone();
+        let pop = self.population.as_mut().expect("population run");
+        let costs: Vec<f64> = participants.iter().map(|&i| pop.costs.estimate(i)).collect();
+        // Disjoint `&mut` cohort states in ascending id order (BTreeMap
+        // iteration), mirroring `fanout_clients`' borrow dance over the
+        // resident vector.
+        let mut refs: Vec<&mut ClientState> = Vec::with_capacity(participants.len());
+        {
+            let mut want = participants.iter().copied().peekable();
+            for (&id, c) in pop.carry.iter_mut() {
+                if want.peek() == Some(&id) {
+                    want.next();
+                    refs.push(c);
+                }
+            }
+            assert!(want.peek().is_none(), "participant not activated");
+        }
+        let outcomes = fanout_owned(
+            self.cfg.parallelism,
+            self.cfg.sched,
+            &costs,
+            refs,
+            |pos, c: &mut ClientState| {
+                run_local_client(
+                    engine,
+                    train,
+                    h,
+                    lr,
+                    smashed_bytes,
+                    label_bytes,
+                    &round_rng,
+                    participants[pos],
+                    c,
+                )
+            },
+        )?;
+        for (pos, o) in outcomes.into_iter().enumerate() {
+            let observed: f64 = o.timeline.spans.iter().map(|s| s.end - s.start).sum();
+            pop.costs.observe(participants[pos], observed);
+            // Busy fold in span-record order — the resident
+            // critical-path accumulation, replayed incrementally.
+            for s in &o.timeline.spans {
+                if let Some(who) = s.who {
+                    *pop.busy.entry(who).or_insert(0.0) += s.end - s.start;
+                }
+            }
+            train_losses.extend_from_slice(&o.losses);
+            client_gnorms.extend_from_slice(&o.gnorms);
+            self.timeline.append(o.timeline);
+            self.ledger.merge(&o.ledger);
+            msgs.push(o.msg);
+        }
+        // Retire the cohort's batch buffers between rounds: they are
+        // rebuilt by the next `load_batch` and would otherwise pin
+        // O(working set · batch · sample) floats.
+        for &i in participants {
+            let c = pop.carry.get_mut(&i).expect("activated");
+            c.idx_buf = Vec::new();
+            c.images = Vec::new();
+            c.labels = Vec::new();
+        }
+        Ok(())
+    }
+
+    /// Replay the round's upload wave through the [`EventQueue`]:
+    /// arrivals pop in time order with FIFO ties — enqueued in
+    /// participant order, that reproduces the resident engine's stable
+    /// sort bit-for-bit — and arrivals later than `straggler_cutoff`
+    /// seconds past the wave's first are dropped before they ever reach
+    /// the server's dataQueue.
+    fn order_arrivals(&mut self, msgs: Vec<SmashedMsg>) -> Vec<SmashedMsg> {
+        let pop = self.population.as_mut().expect("population run");
+        let mut q = EventQueue::new();
+        for m in msgs {
+            q.schedule_at(m.arrival, m);
+        }
+        let mut ordered = Vec::with_capacity(q.len());
+        let mut first_arrival: Option<f64> = None;
+        while let Some((at, m)) = q.pop() {
+            let first = *first_arrival.get_or_insert(at);
+            pop.arrivals += 1;
+            match pop.straggler_cutoff {
+                Some(cut) if at > first + cut => pop.stragglers_dropped += 1,
+                _ => ordered.push(m),
+            }
+        }
+        ordered
+    }
+
+    /// The population aggregation barrier: identical contributor-side
+    /// arithmetic to [`Trainer`]'s resident `aggregate` (same streams,
+    /// same span order), with the O(n) broadcast replayed as a
+    /// streaming sweep — bulk wire records, a running download-end max,
+    /// per-client busy folds, and model-buffer retirement for the
+    /// carried working set — instead of n recorded `Download` spans and
+    /// n resident model writes.
+    fn aggregate_population(&mut self) -> Result<(), EngineError> {
+        let contributors: Vec<usize> = {
+            let pop = self.population.as_ref().expect("population run");
+            pop.dirty.iter().copied().collect()
+        };
+        if contributors.is_empty() {
+            return Ok(());
+        }
+        // Contributor uploads (client model + aux riders — the aux-local
+        // rule always trains the aux net) in ascending id order.
+        let mut last_arrival = self.server.free_at_max();
+        {
+            let pop = self.population.as_mut().expect("population run");
+            for &i in &contributors {
+                let c = pop.carry.get_mut(&i).expect("dirty client not carried");
+                let mut drng = self.rng.split(i as u64 ^ 0xC4);
+                self.ledger.record(i, MsgKind::ClientModelUpload, self.wires.client_model);
+                self.ledger.record(i, MsgKind::AuxModelUpload, self.wires.aux_model);
+                let bytes = self.wires.client_model + self.wires.aux_model;
+                let t_up = c.profile.upload_delay(bytes, &mut drng);
+                self.timeline.record(
+                    SpanKind::Upload,
+                    Some(i),
+                    c.ready_at,
+                    c.ready_at + t_up,
+                    "model",
+                );
+                *pop.busy.get_mut(&i).expect("carried busy") += t_up;
+                last_arrival = last_arrival.max(c.ready_at + t_up);
+                self.server.client_acc.add(&c.xc, 1.0);
+                self.server.aux_acc.add(&c.ac, 1.0);
+            }
+        }
+        let agg_start = last_arrival.max(self.server.free_at_max());
+        let agg_cost = 1e-3; // FedAvg itself is cheap vs model transfer
+        let agg_done = agg_start + agg_cost;
+        self.server.sync_free_at(agg_done);
+        self.timeline.record(SpanKind::Aggregate, None, agg_start, agg_done, "fedavg");
+
+        let mut xc_new = vec![0.0f32; self.engine.client_size()];
+        self.server.client_acc.finish_into(&mut xc_new);
+        let mut ac_new = vec![0.0f32; self.engine.aux_size()];
+        self.server.aux_acc.finish_into(&mut ac_new);
+        self.server.aggregate_copies();
+
+        // Broadcast to all n clients, streamed. Wire totals via bulk
+        // records (the server-side view of n identical downloads);
+        // download ends via one O(n) sweep that also retires the
+        // carried working set's model buffers. The trainer stream is
+        // snapshotted so never-activated clients can replay their
+        // per-id download draw later ([`AggEvent`]).
+        let bytes = self.wires.client_model + self.wires.aux_model;
+        let snapshot = self.rng.clone();
+        let pop = self.population.as_mut().expect("population run");
+        self.ledger.record_bulk(
+            MsgKind::ClientModelDownload,
+            pop.n as u64,
+            self.wires.client_model,
+        );
+        self.ledger.record_bulk(MsgKind::AuxModelDownload, pop.n as u64, self.wires.aux_model);
+        pop.global_xc = xc_new;
+        pop.global_ac = ac_new;
+        for id in 0..pop.n {
+            let mut drng = snapshot.split(id as u64 ^ 0xD7);
+            let t_down = match pop.carry.get(&id) {
+                Some(c) => c.profile.download_delay(bytes, &mut drng),
+                None => pop
+                    .net
+                    .profile_for(&pop.prof_root, id as u64)
+                    .download_delay(bytes, &mut drng),
+            };
+            pop.dl_end_max = pop.dl_end_max.max(agg_done + t_down);
+            if let Some(c) = pop.carry.get_mut(&id) {
+                // Retire after upload: model buffers drop; the next
+                // activation refills them from the global model.
+                c.xc = Vec::new();
+                c.ac = Vec::new();
+                c.ready_at = agg_done + t_down;
+                *pop.busy.get_mut(&id).expect("carried busy") += t_down;
+            }
+        }
+        pop.aggs.push(AggEvent { agg_done, rng: snapshot, bytes });
+        pop.dirty.clear();
+        Ok(())
+    }
+
     /// Global aggregation (Step 4, Eq. (14)): dirty clients upload their
     /// client-side models (+ aux), the server averages and redistributes
     /// to everyone; the multi-copy server states (per-client copies or
@@ -921,9 +1502,34 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
 
     /// Evaluation probe: accuracy of (FedAvg of client models, mean of
     /// server copies) on the test set. No wire traffic.
+    ///
+    /// The population branch replays the resident [`fedavg`] reduction
+    /// (`+= v * inv` in id order, f32) without n resident models:
+    /// carried diverged models where they exist, the post-aggregation
+    /// global model everywhere else — bit-identical output, O(working
+    /// set) memory.
     fn eval_probe(&self, max_batches: usize) -> Result<f64, EngineError> {
-        let refs: Vec<&[f32]> = self.clients.iter().map(|c| c.xc.as_slice()).collect();
-        let xc = fedavg(&refs);
+        let xc = match &self.population {
+            Some(pop) => {
+                let mut xc = vec![0.0f32; self.engine.client_size()];
+                let inv = 1.0 / pop.n as f32;
+                for id in 0..pop.n {
+                    let m: &[f32] = match pop.carry.get(&id) {
+                        Some(c) if !c.xc.is_empty() => &c.xc,
+                        _ => &pop.global_xc,
+                    };
+                    for (o, &v) in xc.iter_mut().zip(m) {
+                        *o += v * inv;
+                    }
+                }
+                xc
+            }
+            None => {
+                let refs: Vec<&[f32]> =
+                    self.clients.iter().map(|c| c.xc.as_slice()).collect();
+                fedavg(&refs)
+            }
+        };
         let xs = self.server.eval_model();
         accuracy(self.engine, &xc, &xs, self.test, max_batches)
     }

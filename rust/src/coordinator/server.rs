@@ -43,33 +43,65 @@ pub struct SmashedMsg {
 /// bit-determinism contract (see `coordinator/README.md`). Changing the
 /// *map* (like changing the shard count) legitimately changes results,
 /// which is why the map kind is part of `RunSpec::key`.
-#[derive(Clone, Debug, PartialEq, Eq)]
+///
+/// Representation: the contiguous map is stored in **closed form**
+/// (O(1), independent of client count — a million-client population run
+/// must not materialize an 8 MB assignment vector per server), while the
+/// cost- and data-driven maps store their per-client assignment
+/// explicitly. Equality is semantic — two maps are equal iff they assign
+/// every client to the same shard — so `balanced(n, 1, ..)` still equals
+/// `contiguous(n, 1)` whatever the representations.
+#[derive(Clone, Debug)]
 pub struct ShardMap {
-    shard_of: Vec<usize>,
+    assign: ShardAssign,
     shards: usize,
 }
+
+/// Storage behind a [`ShardMap`]: closed-form or materialized.
+#[derive(Clone, Debug)]
+enum ShardAssign {
+    /// Equal-as-possible contiguous groups in client-id order, computed
+    /// on lookup — the only representation the streaming population
+    /// engine accepts (its memory must not grow with n).
+    Contiguous {
+        /// Number of clients mapped.
+        n_clients: usize,
+    },
+    /// One entry per client ([`ShardMap::balanced`] /
+    /// [`ShardMap::locality`]).
+    Explicit(Vec<usize>),
+}
+
+impl PartialEq for ShardMap {
+    fn eq(&self, other: &Self) -> bool {
+        self.shards == other.shards
+            && self.n_clients() == other.n_clients()
+            && (0..self.n_clients()).all(|c| self.shard_of(c) == other.shard_of(c))
+    }
+}
+
+impl Eq for ShardMap {}
 
 impl ShardMap {
     /// Contiguous equal-as-possible groups of `n_clients` over `shards`.
     ///
     /// `shards` must be in `1..=n_clients`; `contiguous(n, 1)` maps every
     /// client to shard 0 (the paper's shared copy) and `contiguous(n, n)`
-    /// is the identity (one copy per client, FSL_MC-style).
+    /// is the identity (one copy per client, FSL_MC-style). Stored in
+    /// closed form: building this map is O(1) in `n_clients`.
     pub fn contiguous(n_clients: usize, shards: usize) -> Self {
         assert!(shards >= 1, "at least one shard required");
         assert!(
             shards <= n_clients.max(1),
             "more shards ({shards}) than clients ({n_clients})"
         );
-        let base = n_clients / shards;
-        let extra = n_clients % shards;
-        let mut shard_of = Vec::with_capacity(n_clients);
-        for s in 0..shards {
-            let len = base + usize::from(s < extra);
-            shard_of.resize(shard_of.len() + len, s);
-        }
-        debug_assert_eq!(shard_of.len(), n_clients);
-        ShardMap { shard_of, shards }
+        ShardMap { assign: ShardAssign::Contiguous { n_clients }, shards }
+    }
+
+    /// Whether this map is the closed-form contiguous assignment (the
+    /// representation the streaming population engine requires).
+    pub fn is_contiguous_repr(&self) -> bool {
+        matches!(self.assign, ShardAssign::Contiguous { .. })
     }
 
     /// Load-balanced client → shard assignment: LPT
@@ -98,7 +130,7 @@ impl ShardMap {
                 shard_of[c] = s;
             }
         }
-        ShardMap { shard_of, shards }
+        ShardMap { assign: ShardAssign::Explicit(shard_of), shards }
     }
 
     /// Locality-aware client → shard assignment for non-IID data:
@@ -213,7 +245,7 @@ impl ShardMap {
                 shard_of[c] = best;
             }
         }
-        ShardMap { shard_of, shards }
+        ShardMap { assign: ShardAssign::Explicit(shard_of), shards }
     }
 
     /// Shard-skew metric: mean over shards of the total-variation
@@ -223,9 +255,12 @@ impl ShardMap {
     /// `0` means every shard sees exactly the global label mix (a single
     /// shard always scores 0); `1` is maximal skew. A shard with no
     /// samples counts the full distance 1 (it is maximally
-    /// unrepresentative of the global mix). This is the
-    /// `shard_label_divergence` surfaced in `RunRecord` / summary JSON
-    /// and compared across map kinds by `exp::figures::fig_staleness`.
+    /// unrepresentative of the global mix). The recorded
+    /// `shard_label_divergence` in `RunRecord` / summary JSON is the
+    /// sample-mass-weighted variant
+    /// ([`ShardMap::label_divergence_weighted`]); this unweighted mean
+    /// remains for diagnostics where a pathological small shard *should*
+    /// dominate the score.
     pub fn label_divergence(&self, histograms: &[Vec<usize>]) -> f64 {
         let Some((global, shard_h, g_tot)) = self.label_mix(histograms) else {
             return 0.0;
@@ -249,7 +284,7 @@ impl ShardMap {
     fn label_mix(&self, histograms: &[Vec<usize>]) -> Option<(Vec<f64>, Vec<Vec<f64>>, f64)> {
         assert_eq!(
             histograms.len(),
-            self.shard_of.len(),
+            self.n_clients(),
             "one label histogram per client"
         );
         let classes = histograms.first().map(|h| h.len()).unwrap_or(0);
@@ -260,7 +295,7 @@ impl ShardMap {
         let mut shard_h = vec![vec![0f64; classes]; self.shards];
         for (c, h) in histograms.iter().enumerate() {
             assert_eq!(h.len(), classes, "ragged label histograms");
-            let s = self.shard_of[c];
+            let s = self.shard_of(c);
             for (k, &v) in h.iter().enumerate() {
                 global[k] += v as f64;
                 shard_h[s][k] += v as f64;
@@ -292,10 +327,11 @@ impl ShardMap {
     /// what a *sample-weighted* cross-shard FedAvg actually mixes.
     /// An empty shard carries zero mass and therefore zero weighted
     /// contribution (the unweighted metric charges it the full
-    /// distance 1). The unweighted form remains the recorded
-    /// `RunRecord::shard_label_divergence` (pinned by goldens and
-    /// EXPERIMENTS.md); this is the ROADMAP follow-up metric for
-    /// materially uneven shard sizes.
+    /// distance 1). Since the ROADMAP-carried follow-up landed, **this
+    /// is the recorded `RunRecord::shard_label_divergence`** (the cache
+    /// version was bumped so stale unweighted records re-run); the
+    /// unweighted mean stays available via
+    /// [`ShardMap::label_divergence`].
     pub fn label_divergence_weighted(&self, histograms: &[Vec<usize>]) -> f64 {
         let Some((global, shard_h, g_tot)) = self.label_mix(histograms) else {
             return 0.0;
@@ -318,19 +354,43 @@ impl ShardMap {
 
     /// Number of clients mapped.
     pub fn n_clients(&self) -> usize {
-        self.shard_of.len()
+        match &self.assign {
+            ShardAssign::Contiguous { n_clients } => *n_clients,
+            ShardAssign::Explicit(v) => v.len(),
+        }
     }
 
     /// The shard serving `client`.
     pub fn shard_of(&self, client: usize) -> usize {
-        self.shard_of[client]
+        match &self.assign {
+            ShardAssign::Explicit(v) => v[client],
+            ShardAssign::Contiguous { n_clients } => {
+                assert!(
+                    client < *n_clients,
+                    "client {client} out of range ({n_clients} mapped)"
+                );
+                // Closed form of the original materialized fill: the
+                // first `extra` shards hold `base + 1` clients, the rest
+                // `base`. `base` can only be 0 with zero clients (the
+                // constructor rejects shards > n_clients), and then the
+                // range assert above already fired.
+                let base = n_clients / self.shards;
+                let extra = n_clients % self.shards;
+                let wide = extra * (base + 1);
+                if client < wide {
+                    client / (base + 1)
+                } else {
+                    extra + (client - wide) / base
+                }
+            }
+        }
     }
 
     /// Client ids of one shard, ascending (contiguous for
     /// [`ShardMap::contiguous`]; generally scattered for
     /// [`ShardMap::balanced`]).
     pub fn clients_of(&self, shard: usize) -> Vec<usize> {
-        (0..self.shard_of.len()).filter(|&c| self.shard_of[c] == shard).collect()
+        (0..self.n_clients()).filter(|&c| self.shard_of(c) == shard).collect()
     }
 }
 
@@ -558,6 +618,46 @@ mod tests {
     #[should_panic(expected = "more shards")]
     fn shard_map_rejects_oversharding() {
         ShardMap::contiguous(3, 4);
+    }
+
+    #[test]
+    fn contiguous_closed_form_matches_materialized_fill() {
+        // The O(1) closed form must agree with the historical
+        // materialized fill (first n%k shards get one extra client) for
+        // every (n, k), and semantic equality must hold across
+        // representations.
+        for n in 0..40usize {
+            for k in 1..=n.max(1) {
+                let m = ShardMap::contiguous(n, k);
+                assert!(m.is_contiguous_repr());
+                let base = n / k;
+                let extra = n % k;
+                let mut expect = Vec::with_capacity(n);
+                for s in 0..k {
+                    let len = base + usize::from(s < extra);
+                    expect.resize(expect.len() + len, s);
+                }
+                let got: Vec<usize> = (0..n).map(|c| m.shard_of(c)).collect();
+                assert_eq!(got, expect, "n={n} k={k}");
+            }
+        }
+        // Million-scale spot check: no allocation proportional to n.
+        let big = ShardMap::contiguous(1_000_000, 3);
+        assert_eq!(big.shard_of(0), 0);
+        assert_eq!(big.shard_of(333_333), 0);
+        assert_eq!(big.shard_of(333_334), 1);
+        assert_eq!(big.shard_of(999_999), 2);
+        // Cross-representation equality: a balanced map that happens to
+        // produce the contiguous grouping compares equal to it.
+        let bal = ShardMap::balanced(4, 1, &[1.0; 4]);
+        assert!(!bal.is_contiguous_repr());
+        assert_eq!(bal, ShardMap::contiguous(4, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn contiguous_closed_form_rejects_out_of_range_lookup() {
+        ShardMap::contiguous(5, 2).shard_of(5);
     }
 
     #[test]

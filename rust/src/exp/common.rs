@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 use crate::coordinator::methods::MethodSpec;
+use crate::coordinator::population::{ClientSource, PopulationSetup};
 use crate::sched::SchedPolicy;
 use crate::coordinator::round::{Trainer, TrainerSetup};
 use crate::data::partition::{by_writer, dirichlet, equalize, iid, Partition};
@@ -26,6 +27,20 @@ use crate::runtime::SplitEngine;
 use crate::sim::netmodel::NetModel;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
+
+/// Results-cache schema/semantics version. Bumped whenever a recorded
+/// metric changes meaning (v2: `shard_label_divergence` switched from
+/// the unweighted to the client-weighted formula); [`run_from_json`]
+/// rejects any other version so stale entries re-run deterministically.
+pub const CACHE_VERSION: u32 = 2;
+
+/// Client counts at or above this run on the streaming population
+/// engine ([`Trainer::new_population`]) instead of materializing one
+/// `ClientState` + data shard per client: memory stays flat in the
+/// fleet size, at the cost of restricting the spec to the axes the
+/// population engine supports (IID pool, aux-local update, shared
+/// server, contiguous map, delay-ordered arrivals, mock backend).
+pub const STREAM_THRESHOLD: usize = 4096;
 
 /// Experiment fidelity preset.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -549,6 +564,11 @@ impl Harness {
                 return Ok(rec);
             }
         }
+        if spec.n_clients >= STREAM_THRESHOLD {
+            let rec = self.run_streaming(spec)?;
+            let _ = std::fs::write(&cache, run_to_json(&rec).pretty());
+            return Ok(rec);
+        }
         let (train, test, partition) = self.data(spec);
         let rec = if self.mock_mode() {
             let engine = self.mock_engine(&spec.dataset, &spec.aux)?;
@@ -572,6 +592,78 @@ impl Harness {
         let _ = std::fs::write(&cache, run_to_json(&rec).pretty());
         Ok(rec)
     }
+
+    /// Run one fleet-scale spec (`n_clients >= STREAM_THRESHOLD`) on
+    /// the streaming population engine. Never materializes per-client
+    /// data or state up front: clients draw cyclic windows from a
+    /// small shared sample pool and are built lazily on activation, so
+    /// memory is flat in the fleet size.
+    fn run_streaming(&mut self, spec: &RunSpec) -> Result<RunRecord, String> {
+        if !self.mock_mode() {
+            return Err(format!(
+                "{} clients is a streaming run (>= {STREAM_THRESHOLD}) and needs the \
+                 mock backend: population runs carry no device layouts",
+                spec.n_clients
+            ));
+        }
+        if spec.dist != Dist::Iid {
+            return Err(format!(
+                "streaming runs draw IID pool shards; {} is not supported at \
+                 fleet scale",
+                spec.dist.tag()
+            ));
+        }
+        let w = &spec.workload;
+        let (train, test) = self.pool_data(spec);
+        let source = ClientSource::Pool {
+            n_clients: spec.n_clients,
+            samples_per_client: w.train_per_client,
+            pool_len: train.len(),
+        };
+        // An all-participate round is O(n) work per round; the resident
+        // semantics of participation 0 ("everyone") auto-cap to a
+        // fixed cohort at fleet scale.
+        let participation = if spec.participation == 0 {
+            spec.n_clients.min(1024)
+        } else {
+            spec.participation
+        };
+        let engine = self.mock_engine(&spec.dataset, &spec.aux)?;
+        let cfg = build_config(spec, engine.batch(), participation);
+        let setup = PopulationSetup::new(
+            &train,
+            &test,
+            source,
+            NetModel::edge_default(),
+            spec.label(),
+        );
+        let mut trainer = Trainer::new_population(engine.as_ref(), cfg, setup)?;
+        trainer.run().map_err(|e| e.to_string())
+    }
+
+    /// Train pool + test set for a streaming run: a shared sample pool
+    /// sized for at most 64 disjoint client windows (beyond that,
+    /// windows cycle the pool — statistically fine for IID draws, and
+    /// O(1) in the fleet size) instead of `train_per_client *
+    /// n_clients` materialized samples.
+    fn pool_data(&self, spec: &RunSpec) -> (Dataset, Dataset) {
+        let w = &spec.workload;
+        let data_seed = 10_000 + spec.seed;
+        let pool = w.train_per_client * spec.n_clients.min(64);
+        match spec.dataset.as_str() {
+            "cifar" => train_test(&SyntheticSpec::cifar_like(), pool, w.test, data_seed),
+            "femnist" => {
+                let spw = 40usize;
+                let fs = femnist::FemnistSpec {
+                    writers: (pool / spw).max(1),
+                    samples_per_writer: spw,
+                    ..femnist::FemnistSpec::default_like()
+                };
+                femnist::train_test_iid(&fs, w.test, data_seed)
+            }
+            other => panic!("unknown dataset {other}"),
+        }
+    }
 }
 
 /// Build the `TrainConfig` + `TrainerSetup` for one spec and run it over
@@ -588,31 +680,7 @@ fn execute_spec<E: SplitEngine>(
     server_layout: Option<&Layout>,
     aux_layout: Option<&Layout>,
 ) -> Result<RunRecord, String> {
-    let w = &spec.workload;
-    // Aggregate once per local epoch (paper setting): epoch =
-    // batches_per_epoch local batches = bpe/h rounds (the upload
-    // schedule's static period hint; adaptive schedules use h0).
-    let bpe = (w.train_per_client / engine.batch()).max(1);
-    let agg_every = (bpe / spec.method.h_hint()).max(1);
-    let cfg = TrainConfig {
-        spec: spec.method,
-        rounds: w.rounds,
-        agg_every,
-        lr0: spec.lr0,
-        lr_decay_rate: 0.99,
-        lr_decay_every: 10,
-        server_lr_scale: 0.25,
-        participation: spec.participation,
-        seed: spec.seed,
-        eval_every: w.eval_every,
-        eval_max_batches: w.eval_max_batches,
-        arrival: spec.arrival,
-        track_grad_norms: true,
-        parallelism: spec.parallelism,
-        server_shards: spec.server_shards,
-        sched: spec.sched,
-        shard_map: spec.shard_map,
-    };
+    let cfg = build_config(spec, engine.batch(), spec.participation);
     let setup = TrainerSetup {
         train,
         test,
@@ -625,6 +693,37 @@ fn execute_spec<E: SplitEngine>(
     };
     let mut trainer = Trainer::new(engine, cfg, setup)?;
     trainer.run().map_err(|e| e.to_string())
+}
+
+/// The `TrainConfig` for one spec — shared by the resident and the
+/// streaming engines (same driver knobs, only the client-state
+/// lifecycle differs).
+fn build_config(spec: &RunSpec, engine_batch: usize, participation: usize) -> TrainConfig {
+    let w = &spec.workload;
+    // Aggregate once per local epoch (paper setting): epoch =
+    // batches_per_epoch local batches = bpe/h rounds (the upload
+    // schedule's static period hint; adaptive schedules use h0).
+    let bpe = (w.train_per_client / engine_batch).max(1);
+    let agg_every = (bpe / spec.method.h_hint()).max(1);
+    TrainConfig {
+        spec: spec.method,
+        rounds: w.rounds,
+        agg_every,
+        lr0: spec.lr0,
+        lr_decay_rate: 0.99,
+        lr_decay_every: 10,
+        server_lr_scale: 0.25,
+        participation,
+        seed: spec.seed,
+        eval_every: w.eval_every,
+        eval_max_batches: w.eval_max_batches,
+        arrival: spec.arrival,
+        track_grad_norms: true,
+        parallelism: spec.parallelism,
+        server_shards: spec.server_shards,
+        sched: spec.sched,
+        shard_map: spec.shard_map,
+    }
 }
 
 // ------------------------------------------------ RunRecord <-> JSON
@@ -659,6 +758,10 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         })
         .collect();
     Json::obj(vec![
+        // Bump when a recorded metric changes meaning (not just shape):
+        // v2 switched `shard_label_divergence` from the unweighted to
+        // the client-weighted formula, so v1 records must re-run.
+        ("cache_version", Json::num(CACHE_VERSION as f64)),
         ("label", Json::str(r.label.clone())),
         ("rounds", Json::Arr(rounds)),
         ("final_accuracy", Json::num(r.final_accuracy)),
@@ -679,6 +782,7 @@ pub fn run_to_json(r: &RunRecord) -> Json {
             ),
         ),
         ("shard_label_divergence", Json::num(r.shard_label_divergence)),
+        ("clients_activated", Json::num(r.clients_activated as f64)),
     ])
 }
 
@@ -686,6 +790,19 @@ pub fn run_to_json(r: &RunRecord) -> Json {
 pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
     let j = Json::parse(text).map_err(|e| e.to_string())?;
     let err = |e: crate::util::json::JsonError| e.to_string();
+    // Version gate first: entries written before the weighted
+    // `shard_label_divergence` switch (no version field, or an older
+    // one) recorded a metric with a different meaning, so they must
+    // fall through to a deterministic re-run rather than replay.
+    let version = match j.opt("cache_version") {
+        Some(v) => v.as_f64().map_err(err)? as u32,
+        None => 0,
+    };
+    if version != CACHE_VERSION {
+        return Err(format!(
+            "cache_version {version} != {CACHE_VERSION}: stale entry, re-run"
+        ));
+    }
     let mut rounds = Vec::new();
     for rj in j.get("rounds").map_err(err)?.as_arr().map_err(err)? {
         let opt = |k: &str| rj.opt(k).and_then(|v| v.as_f64().ok());
@@ -759,6 +876,11 @@ pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
             .map_err(err)?
             .as_f64()
             .map_err(err)?,
+        clients_activated: j
+            .get("clients_activated")
+            .map_err(err)?
+            .as_f64()
+            .map_err(err)? as usize,
     })
 }
 
@@ -1082,6 +1204,7 @@ mod tests {
             server_storage_params: 123,
             server_updates_per_shard: vec![4, 6],
             shard_label_divergence: 0.125,
+            clients_activated: 4,
         };
         let rt = run_from_json(&run_to_json(&rec).pretty()).unwrap();
         assert_eq!(rt.label, "x");
@@ -1093,15 +1216,30 @@ mod tests {
         assert_eq!(rt.critical_path, 0.2);
         assert_eq!(rt.lane_busy, vec![0.1, 0.2]);
         assert_eq!(rt.shard_label_divergence, 0.125);
-        // Pre-locality cache entries (no skew field) must NOT parse:
-        // the skew metric feeds a comparison figure, so a record that
+        assert_eq!(rt.clients_activated, 4);
+        // Unversioned (pre-v2) cache entries must NOT parse: they
+        // recorded the unweighted shard-divergence formula, so every
+        // one of them falls through to a deterministic re-run.
+        let legacy = run_to_json(&rec)
+            .pretty()
+            .replace("\"cache_version\"", "\"legacy_version\"");
+        let err = run_from_json(&legacy).unwrap_err();
+        assert!(err.contains("cache_version 0"), "{err}");
+        // Wrong (future or past) versions re-run too.
+        let legacy = run_to_json(&rec)
+            .pretty()
+            .replace("\"cache_version\": 2", "\"cache_version\": 1");
+        assert!(run_from_json(&legacy).is_err(), "v1 entry must re-run");
+        // A v2 entry missing the skew field must NOT parse either: the
+        // skew metric feeds a comparison figure, so a record that
         // never measured it falls through to a re-run instead of
         // claiming the perfect score 0.
         let legacy = run_to_json(&rec)
             .pretty()
             .replace("\"shard_label_divergence\"", "\"legacy_skew\"");
-        assert!(run_from_json(&legacy).is_err(), "pre-locality entry must re-run");
-        // Pre-scheduling cache entries (no fields) still parse.
+        assert!(run_from_json(&legacy).is_err(), "skew-less entry must re-run");
+        // Observability-only fields keep their lenient defaults within
+        // v2 (a present-yet-malformed value is still an error).
         let legacy = run_to_json(&rec)
             .pretty()
             .replace("\"critical_path\"", "\"legacy_cp\"")
@@ -1109,7 +1247,6 @@ mod tests {
         let rt = run_from_json(&legacy).unwrap();
         assert_eq!(rt.critical_path, 0.0);
         assert!(rt.lane_busy.is_empty());
-        // Pre-shard cache entries (no field) still parse.
         let legacy = run_to_json(&rec).pretty().replace(
             "\"server_updates_per_shard\"",
             "\"legacy_ignored\"",
@@ -1144,6 +1281,7 @@ mod tests {
             server_storage_params: 0,
             server_updates_per_shard: Vec::new(),
             shard_label_divergence: 0.0,
+            clients_activated: 0,
         };
         let t = curve_table("fig", &[&rec]);
         assert!(t.contains("42.0%"));

@@ -311,7 +311,7 @@ pub fn fig9(harness: &mut Harness, scale: Scale) -> Result<String, String> {
 /// run side by side at every k > 1 on the IID sweep, and a second arm
 /// compares all three maps (contiguous / balanced / locality) on the
 /// non-IID splits — Dirichlet CIFAR and by-writer F-EMNIST — where the
-/// `skew` column (mean per-shard label divergence from the global mix,
+/// `skew` column (weighted per-shard label divergence from the global mix,
 /// `RunRecord::shard_label_divergence`) shows what each placement does
 /// to the gradient mix every shard copy sees. Workloads are pinned to
 /// the `ci` preset even at `--scale paper` (the full paper workload is
@@ -444,7 +444,7 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
         }
     }
     out.push_str(
-        "(skew = mean per-shard label divergence from the global mix, 0 = every copy\n\
+        "(skew = weighted per-shard label divergence from the global mix, 0 = every copy\n\
          \x20trains on the global label distribution; locality minimizes it by design)\n",
     );
     let _ = csv.write_to(&harness.out_dir.join("fig_staleness_noniid.csv"));

@@ -16,6 +16,7 @@ use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism};
 use cse_fsl::coordinator::methods::MethodSpec;
 use cse_fsl::exp::common::{
     cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale,
+    STREAM_THRESHOLD,
 };
 use cse_fsl::exp::{figures, tables};
 use cse_fsl::util::cli::Command;
@@ -51,6 +52,16 @@ fn main() {
 fn fail(e: impl std::fmt::Display) -> i32 {
     eprintln!("error: {e}");
     1
+}
+
+/// Parse a client count, accepting `_` digit separators the way Rust
+/// literals do (`--clients 1_000_000`).
+fn parse_clients(s: &str) -> Result<usize, String> {
+    if s.is_empty() || s.starts_with('_') || s.ends_with('_') {
+        return Err(format!("bad --clients {s:?}"));
+    }
+    let compact: String = s.chars().filter(|&c| c != '_').collect();
+    compact.parse().map_err(|e| format!("bad --clients {s:?}: {e}"))
 }
 
 fn cmd_run(argv: &[String]) -> i32 {
@@ -89,7 +100,13 @@ fn cmd_run(argv: &[String]) -> i32 {
             "server-topology axis: per-client | shared; overrides the --method \
              preset's axis",
         )
-        .opt("clients", "5", "number of clients")
+        .opt(
+            "clients",
+            "5",
+            "number of clients; `_` separators allowed (1_000_000). Counts >= \
+             4096 run on the streaming population engine (mock backend, IID \
+             pool): memory stays flat in the fleet size",
+        )
         .opt("participation", "0", "clients sampled per round (0 = all)")
         .opt("dist", "iid", "iid | dir | writer")
         .opt("rounds", "20", "communication rounds")
@@ -166,7 +183,7 @@ fn cmd_run(argv: &[String]) -> i32 {
             dataset,
             aux,
             method,
-            n_clients: args.parse_as("clients").map_err(|e| e.to_string())?,
+            n_clients: parse_clients(args.get("clients").unwrap())?,
             participation: args.parse_as("participation").map_err(|e| e.to_string())?,
             dist,
             arrival: if args.flag("shuffled-arrivals") {
@@ -213,6 +230,12 @@ fn cmd_run(argv: &[String]) -> i32 {
             rec.sim_time,
             rec.sched_efficiency() * 100.0,
         );
+        if spec.n_clients >= STREAM_THRESHOLD {
+            println!(
+                "fleet: {} clients, {} ever materialized (streaming population engine)",
+                spec.n_clients, rec.clients_activated,
+            );
+        }
         if spec.server_shards > 1 {
             println!(
                 "server updates per shard: {:?} (total {})",

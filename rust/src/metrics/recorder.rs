@@ -67,15 +67,23 @@ pub struct RunRecord {
     /// shard order (length = copy count: k for the sharded single-copy
     /// methods, n for the per-client-copy methods).
     pub server_updates_per_shard: Vec<u64>,
-    /// Shard-skew metric: mean per-shard total-variation distance
-    /// between each shard's aggregate label distribution and the global
-    /// one, in `[0, 1]` (`ShardMap::label_divergence`). 0 means every
+    /// Shard-skew metric: sample-mass-weighted per-shard
+    /// total-variation distance between each shard's aggregate label
+    /// distribution and the global one, in `[0, 1]`
+    /// (`ShardMap::label_divergence_weighted`; recorded weighted since
+    /// cache schema v2). 0 means every
     /// server copy trains on the global label mix — always true for the
     /// single-copy methods at k = 1. The per-client-copy methods
     /// (FSL_MC / FSL_AN) report the skew of their n per-client cohorts,
     /// which is large under any non-IID split by construction. The
     /// locality shard map minimizes it on the sharded non-IID arms.
     pub shard_label_divergence: f64,
+    /// Number of distinct clients whose state was materialized at least
+    /// once during the run. The resident engine builds every client up
+    /// front, so this equals `n`; the streaming population engine only
+    /// ever builds the sampled cohorts, so at fleet scale this is the
+    /// (much smaller) working-set size that bounds peak memory.
+    pub clients_activated: usize,
 }
 
 impl RunRecord {
@@ -181,6 +189,7 @@ impl RunRecord {
                 ),
             ),
             ("shard_label_divergence", Json::num(self.shard_label_divergence)),
+            ("clients_activated", Json::num(self.clients_activated as f64)),
         ])
     }
 }
@@ -228,6 +237,7 @@ mod tests {
             server_storage_params: 1_000,
             server_updates_per_shard: vec![3, 5],
             shard_label_divergence: 0.25,
+            clients_activated: 4,
         }
     }
 
@@ -261,6 +271,7 @@ mod tests {
         assert_eq!(j.get("sched_efficiency").unwrap().as_f64().unwrap(), 0.75);
         assert_eq!(j.get("lane_busy").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("shard_label_divergence").unwrap().as_f64().unwrap(), 0.25);
+        assert_eq!(j.get("clients_activated").unwrap().as_f64().unwrap(), 4.0);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 use crate::sim::netmodel::ClientProfile;
 
 /// EWMA weight of the newest observation (0.5 reacts within a couple of
-/// rounds while smoothing per-round jitter).
-const EWMA_ALPHA: f64 = 0.5;
+/// rounds while smoothing per-round jitter). Public so the population
+/// engine's sparse tracker (`coordinator::population::SparseCosts`)
+/// blends with the identical weight.
+pub const EWMA_ALPHA: f64 = 0.5;
 
 /// Predicted simulated cost (seconds) of one client round from the
 /// persistent profile alone: `h` local batches of compute plus one

@@ -34,12 +34,11 @@ impl<E> PartialOrd for Scheduled<E> {
 }
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: smaller time first; FIFO on ties.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // Min-heap: smaller time first; FIFO on ties. `total_cmp` keeps
+        // the ordering a true total order even for exotic timestamps —
+        // non-finite times are rejected at scheduling time, so every
+        // comparison the heap sees is over finite floats.
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
@@ -84,17 +83,34 @@ impl<E> EventQueue<E> {
         self.processed
     }
 
-    /// Schedule `event` at absolute time `at` (>= now).
+    /// Schedule `event` at absolute time `at`.
+    ///
+    /// `at` must be finite and `>= now()`: a NaN timestamp would poison
+    /// the heap's ordering, and a past timestamp would silently reorder
+    /// history. Both are bugs in the caller's schedule arithmetic, so
+    /// they panic in **every** build profile (the queue drives the
+    /// round engine; a corrupted schedule must never limp on in
+    /// release).
+    ///
+    /// # Panics
+    /// If `at` is non-finite or earlier than the current clock.
     pub fn schedule_at(&mut self, at: SimTime, event: E) {
-        debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
-        self.heap.push(Scheduled { time: at.max(self.now), seq: self.seq, event });
+        assert!(at.is_finite(), "non-finite event time: {at}");
+        assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        self.heap.push(Scheduled { time: at, seq: self.seq, event });
         self.seq += 1;
     }
 
     /// Schedule `event` after a relative delay.
+    ///
+    /// # Panics
+    /// If `delay` is non-finite or negative (see [`EventQueue::schedule_at`]).
     pub fn schedule_in(&mut self, delay: SimTime, event: E) {
-        debug_assert!(delay >= 0.0);
-        self.schedule_at(self.now + delay.max(0.0), event);
+        assert!(
+            delay.is_finite() && delay >= 0.0,
+            "bad relative delay: {delay} (must be finite and >= 0)"
+        );
+        self.schedule_at(self.now + delay, event);
     }
 
     /// Pop the next event, advancing the clock to its timestamp.
@@ -141,6 +157,72 @@ mod tests {
         q.schedule_in(2.0, "y");
         let (t2, _) = q.pop().unwrap();
         assert_eq!(t2, 7.0);
+    }
+
+    // The two latent time-ordering bugs, pinned: before the hard
+    // validation, a NaN timestamp compared `Ordering::Equal` against
+    // everything (silently corrupting heap order), and a past timestamp
+    // was silently clamped to `now` with only a debug_assert guarding it
+    // (compiled out of release builds). Both must now panic in every
+    // build profile — these tests run under `--release` in CI via
+    // `cargo test --release`-equivalent tiers, where `debug_assert!`
+    // alone would never fire.
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn nan_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, "x");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn infinite_timestamp_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, "x");
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_timestamp_rejected_not_rewritten() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, "a");
+        let _ = q.pop();
+        // now = 5.0; scheduling at 3.0 used to be silently rewritten to
+        // 5.0 in release builds.
+        q.schedule_at(3.0, "b");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad relative delay")]
+    fn negative_delay_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_in(-1.0, "x");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad relative delay")]
+    fn nan_delay_rejected() {
+        let mut q = EventQueue::new();
+        q.schedule_in(f64::NAN, "x");
+    }
+
+    #[test]
+    fn validation_fires_in_release_builds_too() {
+        // Belt-and-braces: catch_unwind proves the panic is a real
+        // `assert!` (present in all profiles), not a `debug_assert!`.
+        let caught = std::panic::catch_unwind(|| {
+            let mut q = EventQueue::new();
+            q.schedule_at(f64::NAN, 0u8);
+        });
+        assert!(caught.is_err(), "NaN timestamps must panic even with debug assertions off");
+        let caught = std::panic::catch_unwind(|| {
+            let mut q = EventQueue::new();
+            q.schedule_at(2.0, 0u8);
+            let _ = q.pop();
+            q.schedule_at(1.0, 0u8);
+        });
+        assert!(caught.is_err(), "past timestamps must panic even with debug assertions off");
     }
 
     #[test]

@@ -96,6 +96,19 @@ impl NetModel {
             jitter: self.jitter,
         }
     }
+
+    /// The persistent profile of client `id`, derived *per id* from a
+    /// non-mutated profile root stream: `profile_for(root, id)` is a
+    /// pure function of `(model, root, id)`, so a population engine can
+    /// materialize any client's profile on activation — in any order,
+    /// any number of times — and always get the same draw the resident
+    /// engine gets. This replaces the old sequential
+    /// `sample_profile(&mut prng)` loop at trainer setup, whose draws
+    /// depended on every lower client id having been sampled first.
+    pub fn profile_for(&self, prof_root: &Rng, id: u64) -> ClientProfile {
+        self.sample_profile(&mut prof_root.split(id))
+    }
+
 }
 
 impl ClientProfile {
@@ -160,6 +173,30 @@ mod tests {
         // Same means: only the spread changes.
         assert_eq!(heavy.mean_batch_time, base.mean_batch_time);
         assert_eq!(heavy.mean_up_bps, base.mean_up_bps);
+    }
+
+    #[test]
+    fn profile_for_is_order_independent_and_matches_split() {
+        let m = NetModel::heavy_tailed();
+        let root = Rng::new(0xBEEF);
+        // Same (root, id) → same profile, regardless of how many other
+        // ids were materialized before, and `split` is non-mutating so
+        // the root itself never advances.
+        let a = m.profile_for(&root, 7);
+        for id in [0u64, 3, 1_000_000, 7] {
+            let _ = m.profile_for(&root, id);
+        }
+        let b = m.profile_for(&root, 7);
+        assert_eq!(a.batch_time, b.batch_time);
+        assert_eq!(a.up_bps, b.up_bps);
+        assert_eq!(a.down_bps, b.down_bps);
+        // And it is exactly sample_profile on the derived child stream.
+        let c = m.sample_profile(&mut root.split(7));
+        assert_eq!(a.batch_time, c.batch_time);
+        assert_eq!(a.up_bps, c.up_bps);
+        // Distinct ids draw distinct profiles under heterogeneity.
+        let d = m.profile_for(&root, 8);
+        assert_ne!(a.batch_time, d.batch_time);
     }
 
     #[test]

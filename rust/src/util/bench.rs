@@ -5,7 +5,10 @@
 //! counts, and robust statistics (median / p10 / p90 / mean) printed in a
 //! fixed-width table that EXPERIMENTS.md quotes directly.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One measured statistic set, all in nanoseconds per iteration.
 #[derive(Clone, Debug)]
@@ -31,6 +34,42 @@ impl Stats {
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.items_per_iter.map(|n| n * 1e9 / self.mean_ns)
     }
+
+    /// One snapshot row (see [`write_snapshot`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p10_ns", Json::num(self.p10_ns)),
+            ("p90_ns", Json::num(self.p90_ns)),
+            (
+                "items_per_iter",
+                self.items_per_iter.map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Serialize a bench run as a `BENCH_*.json` snapshot: a stable schema
+/// the perf trajectory can diff across commits. Bench targets call this
+/// when `CSE_FSL_BENCH_JSON` names an output path.
+pub fn snapshot_json(generated_by: &str, stats: &[Stats]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("generated_by", Json::str(generated_by)),
+        ("results", Json::Arr(stats.iter().map(Stats::to_json).collect())),
+    ])
+}
+
+/// Write a snapshot produced by [`snapshot_json`] to `path`.
+pub fn write_snapshot(
+    path: impl AsRef<Path>,
+    generated_by: &str,
+    stats: &[Stats],
+) -> std::io::Result<()> {
+    std::fs::write(path, snapshot_json(generated_by, stats).pretty())
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -194,6 +233,44 @@ mod tests {
             items_per_iter: Some(50.0),
         };
         assert!((s.throughput_per_sec().unwrap() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_schema_roundtrips() {
+        let s = Stats {
+            name: "g/row".into(),
+            iters: 7,
+            mean_ns: 2e6,
+            median_ns: 1.5e6,
+            p10_ns: 1e6,
+            p90_ns: 3e6,
+            items_per_iter: Some(64.0),
+        };
+        let j = snapshot_json("bench_test", &[s]);
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(parsed.get("generated_by").unwrap().as_str().unwrap(), "bench_test");
+        let rows = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str().unwrap(), "g/row");
+        assert_eq!(rows[0].get("median_ns").unwrap().as_f64().unwrap(), 1.5e6);
+        assert_eq!(rows[0].get("items_per_iter").unwrap().as_f64().unwrap(), 64.0);
+        // No denominator serializes as null, not 0.
+        let none = Stats { items_per_iter: None, ..rows_src() };
+        let j = snapshot_json("x", &[none]);
+        assert!(j.pretty().contains("\"items_per_iter\": null"));
+    }
+
+    fn rows_src() -> Stats {
+        Stats {
+            name: "g/row".into(),
+            iters: 1,
+            mean_ns: 1.0,
+            median_ns: 1.0,
+            p10_ns: 1.0,
+            p90_ns: 1.0,
+            items_per_iter: Some(1.0),
+        }
     }
 
     #[test]

@@ -24,6 +24,12 @@ pub struct Rng {
     /// property harness (`util::prop`) to bias generated sizes/choices
     /// toward small values when hunting a minimal counterexample.
     shrink: u64,
+    /// Time-dimension shrink divisor for [`Rng::below_time`] (1 = off).
+    /// Orthogonal to `shrink`: the property harness tries capping *time
+    /// extents* (round counts, schedule lengths) first, so a failing
+    /// trainer property replays fewer rounds before any other input is
+    /// reduced.
+    time_shrink: u64,
 }
 
 impl Rng {
@@ -35,7 +41,7 @@ impl Rng {
             sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
             splitmix64_mix(sm)
         };
-        Rng { s: [next(), next(), next(), next()], shrink: 1 }
+        Rng { s: [next(), next(), next(), next()], shrink: 1, time_shrink: 1 }
     }
 
     /// Seed like [`Rng::new`] but cap every [`Rng::below`] range to
@@ -45,9 +51,19 @@ impl Rng {
     /// inherit the cap: it shrinks the *generator* stream the property
     /// harness drives, never the simulation streams seeded from it.
     pub fn with_shrink(seed: u64, shrink: u64) -> Self {
+        Rng::with_shrink_dims(seed, shrink, 1)
+    }
+
+    /// Seed like [`Rng::with_shrink`] with an additional *time*-dimension
+    /// cap: [`Rng::below_time`] ranges are divided by `time_shrink`
+    /// before the ordinary `shrink` cap applies. Both factors at 1 is
+    /// exactly [`Rng::new`]; derived streams inherit neither cap.
+    pub fn with_shrink_dims(seed: u64, shrink: u64, time_shrink: u64) -> Self {
         assert!(shrink >= 1, "shrink factor must be >= 1");
+        assert!(time_shrink >= 1, "time-shrink factor must be >= 1");
         let mut r = Rng::new(seed);
         r.shrink = shrink;
+        r.time_shrink = time_shrink;
         r
     }
 
@@ -117,6 +133,18 @@ impl Rng {
             }
         }
         (m >> 64) as u64
+    }
+
+    /// Uniform integer in [0, n) for a **time-extent** draw (round
+    /// counts, schedule lengths). Behaves exactly like [`Rng::below`]
+    /// under [`Rng::new`]; under [`Rng::with_shrink_dims`] the range is
+    /// first capped to `max(n / time_shrink, 1)`, so the property
+    /// harness can hunt counterexamples that replay a shorter *time
+    /// prefix* (fewer rounds) before shrinking any other input.
+    pub fn below_time(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below_time(0)");
+        let n = if self.time_shrink > 1 { (n / self.time_shrink).max(1) } else { n };
+        self.below(n)
     }
 
     /// Standard normal via Box–Muller (one value per call; simple and
@@ -211,15 +239,33 @@ impl Rng {
     }
 
     /// Sample `k` distinct indices from 0..n (partial Fisher–Yates).
+    ///
+    /// Implemented sparsely — a hash map of displaced slots instead of a
+    /// materialized `0..n` vector — so memory is O(k) regardless of `n`
+    /// (the streaming population engine samples cohorts from millions of
+    /// clients). The draw sequence and outputs are **bit-identical** to
+    /// the dense partial Fisher–Yates this replaces (one `below(n - i)`
+    /// per output; `tests` pin the equivalence), so cached results and
+    /// golden schedules are unchanged.
     pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "choose({k}) from {n}");
-        let mut v: Vec<usize> = (0..n).collect();
+        // `displaced[x]` is the value a dense Fisher–Yates array would
+        // hold at slot x, for the slots that no longer hold their own
+        // index; every other slot x still holds x.
+        let mut displaced: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(k.saturating_mul(2));
+        let mut out = Vec::with_capacity(k);
         for i in 0..k {
             let j = i + self.below((n - i) as u64) as usize;
-            v.swap(i, j);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            // swap(i, j): slot j receives slot i's value; slot i's value
+            // (vj) is emitted and never read again (future draws index
+            // strictly above i).
+            displaced.insert(j, vi);
+            out.push(vj);
         }
-        v.truncate(k);
-        v
+        out
     }
 
     /// Exponential with the given mean (for arrival/delay models).
@@ -375,6 +421,85 @@ mod tests {
             assert_eq!(s.len(), 4);
             assert!(c.iter().all(|&x| x < 10));
         }
+    }
+
+    /// The dense partial Fisher–Yates `choose` used to materialize
+    /// `0..n`; the sparse rewrite must replay the identical draw
+    /// sequence and outputs for every (seed, n, k).
+    fn choose_dense_reference(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + rng.below((n - i) as u64) as usize;
+            v.swap(i, j);
+        }
+        v.truncate(k);
+        v
+    }
+
+    #[test]
+    fn sparse_choose_matches_dense_reference() {
+        for seed in 0..32u64 {
+            for &(n, k) in &[(1usize, 1usize), (10, 4), (10, 10), (97, 13), (1000, 1), (1000, 64)]
+            {
+                let mut a = Rng::new(seed);
+                let mut b = Rng::new(seed);
+                assert_eq!(
+                    a.choose(n, k),
+                    choose_dense_reference(&mut b, n, k),
+                    "seed={seed} n={n} k={k}"
+                );
+                // Both consumed the same stream: subsequent draws agree.
+                assert_eq!(a.next_u64(), b.next_u64(), "stream diverged at seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_choose_is_memory_sparse_at_scale() {
+        // k draws from a million-element domain must be instant and
+        // distinct — the O(n) vector would dominate this test's runtime
+        // and memory otherwise.
+        let mut r = Rng::new(9);
+        let c = r.choose(1_000_000, 256);
+        let mut s = c.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 256);
+        assert!(c.iter().all(|&x| x < 1_000_000));
+    }
+
+    #[test]
+    fn time_shrink_caps_only_time_draws() {
+        // No factors: below_time is exactly below.
+        let mut a = Rng::new(4);
+        let mut b = Rng::new(4);
+        for _ in 0..64 {
+            assert_eq!(a.below_time(37), b.below(37));
+        }
+        // A time factor caps below_time but leaves below untouched.
+        let mut t8 = Rng::with_shrink_dims(7, 1, 8);
+        let mut seen_big_range = false;
+        for _ in 0..256 {
+            assert!(t8.below_time(100) < 13, "100/8 = 12 caps the time range");
+            if t8.below(100) >= 13 {
+                seen_big_range = true;
+            }
+        }
+        assert!(seen_big_range, "range draws must not inherit the time cap");
+        // Both factors compose: 100/4 = 25, then 25/5 = 5.
+        let mut both = Rng::with_shrink_dims(7, 5, 4);
+        for _ in 0..256 {
+            assert!(both.below_time(100) < 5);
+        }
+        // Derived streams inherit neither cap.
+        let mut child = Rng::with_shrink_dims(7, 1, 8).split(3);
+        let mut seen_big = false;
+        for _ in 0..256 {
+            if child.below_time(100) >= 13 {
+                seen_big = true;
+            }
+        }
+        assert!(seen_big, "split streams must sample the full time range");
     }
 
     #[test]

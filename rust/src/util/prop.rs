@@ -19,9 +19,18 @@
 //! ([`Rng::split`]) are deliberately *not* capped, so the property still
 //! exercises the real system — only the generated inputs shrink.
 //!
+//! **Time-prefix shrinking** runs *before* range shrinking: properties
+//! that draw their round/step counts through [`Rng::below_time`] get
+//! those draws capped first (via [`Rng::with_shrink_dims`]), so a
+//! trainer failure at round 37 is first replayed with 4, 9, 18 rounds —
+//! a failure that survives replays *fewer rounds* without distorting
+//! client counts or model sizes. Only if no time-capped rerun fails does
+//! the harness fall back to capping every range.
+//!
 //! Reproduction: `PROP_SEED=<n> cargo test <name>` replays an original
 //! failure exactly; `PROP_SEED=<n> PROP_SHRINK=<factor> PROP_CASES=1`
-//! replays a shrunk one. `PROP_CASES` overrides the case count.
+//! (or `PROP_TIME_SHRINK=<factor>` for a time-shrunk one) replays a
+//! shrunk counterexample. `PROP_CASES` overrides the case count.
 
 use super::prng::{splitmix64_mix, Rng};
 
@@ -50,8 +59,21 @@ fn shrink_factor() -> u64 {
         .unwrap_or(1)
 }
 
+/// Time-shrink factor applied to every case's [`Rng::below_time`] draws
+/// (replay knob for time-shrunk counterexamples; 1 = off).
+fn time_shrink_factor() -> u64 {
+    std::env::var("PROP_TIME_SHRINK")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&f| f >= 1)
+        .unwrap_or(1)
+}
+
 /// Shrink factors tried on failure, most aggressive first.
 const SHRINK_FACTORS: [u64; 4] = [16, 8, 4, 2];
+
+/// Time-prefix shrink factors, tried before range factors.
+const TIME_SHRINK_FACTORS: [u64; 3] = [8, 4, 2];
 
 /// Derived sub-seeds tried per factor.
 const SHRINK_TRIES: u64 = 6;
@@ -75,26 +97,53 @@ fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Hunt for a smaller failing input: rerun `prop` with derived sub-seeds
-/// under descending shrink factors; the first capped rerun that fails
-/// (by `Err` or by panic) wins. Returns `(factor, sub_seed, message)`.
-fn shrink<F>(prop: &mut F, seed: u64) -> Option<(u64, u64, String)>
+/// Which draw dimension a shrunk counterexample capped.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum ShrinkDim {
+    /// Only [`Rng::below_time`] draws capped — fewer rounds/steps, same
+    /// everything else.
+    Time,
+    /// Every `below` draw capped — smaller inputs across the board.
+    Range,
+}
+
+fn rerun_capped<F>(prop: &mut F, sub: u64, factor: u64, time_factor: u64) -> Option<String>
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
+    let mut srng = Rng::with_shrink_dims(sub, factor, time_factor);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut srng)));
+    match outcome {
+        Ok(Ok(())) => None,
+        Ok(Err(msg)) => Some(msg),
+        Err(p) => Some(panic_message(p)),
+    }
+}
+
+/// Hunt for a smaller failing input: rerun `prop` with derived sub-seeds,
+/// first under descending *time* factors (replay fewer rounds via
+/// [`Rng::below_time`] caps), then under descending *range* factors; the
+/// first capped rerun that fails (by `Err` or by panic) wins. Returns
+/// `(dimension, factor, sub_seed, message)`.
+fn shrink<F>(prop: &mut F, seed: u64) -> Option<(ShrinkDim, u64, u64, String)>
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for &factor in &TIME_SHRINK_FACTORS {
+        for attempt in 0..SHRINK_TRIES {
+            // xor keeps time-phase sub-seed streams disjoint from the
+            // range phase at equal factors.
+            let sub = derive_sub_seed(seed ^ 0x7135_0000, factor, attempt);
+            if let Some(msg) = rerun_capped(prop, sub, 1, factor) {
+                return Some((ShrinkDim::Time, factor, sub, msg));
+            }
+        }
+    }
     for &factor in &SHRINK_FACTORS {
         for attempt in 0..SHRINK_TRIES {
             let sub = derive_sub_seed(seed, factor, attempt);
-            let mut srng = Rng::with_shrink(sub, factor);
-            let outcome =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut srng)));
-            let failure = match outcome {
-                Ok(Ok(())) => None,
-                Ok(Err(msg)) => Some(msg),
-                Err(p) => Some(panic_message(p)),
-            };
-            if let Some(msg) = failure {
-                return Some((factor, sub, msg));
+            if let Some(msg) = rerun_capped(prop, sub, factor, 1) {
+                return Some((ShrinkDim::Range, factor, sub, msg));
             }
         }
     }
@@ -112,9 +161,10 @@ where
     let cases = default_cases();
     let base = base_seed();
     let replay_factor = shrink_factor();
+    let time_replay = time_shrink_factor();
     for case in 0..cases {
         let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut rng = Rng::with_shrink(seed, replay_factor);
+        let mut rng = Rng::with_shrink_dims(seed, replay_factor, time_replay);
         if let Err(msg) = prop(&mut rng) {
             let mut report = format!(
                 "property {name:?} failed on case {case}/{cases}: {msg}\n\
@@ -123,11 +173,15 @@ where
             );
             // Only shrink original-size failures; a capped replay is
             // already minimal-ish and reruns would double-shrink.
-            if replay_factor == 1 {
-                if let Some((factor, sub, smsg)) = shrink(&mut prop, seed) {
+            if replay_factor == 1 && time_replay == 1 {
+                if let Some((dim, factor, sub, smsg)) = shrink(&mut prop, seed) {
+                    let (what, knob) = match dim {
+                        ShrinkDim::Time => ("time draws", "PROP_TIME_SHRINK"),
+                        ShrinkDim::Range => ("ranges", "PROP_SHRINK"),
+                    };
                     report.push_str(&format!(
-                        "\nshrunk counterexample (ranges capped ~1/{factor}): {smsg}\n\
-                         reproduce shrunk: PROP_SEED={sub} PROP_SHRINK={factor} PROP_CASES=1"
+                        "\nshrunk counterexample ({what} capped ~1/{factor}): {smsg}\n\
+                         reproduce shrunk: PROP_SEED={sub} {knob}={factor} PROP_CASES=1"
                     ));
                 }
             }
@@ -185,6 +239,36 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "PROP_TIME_SHRINK")]
+    fn time_prefix_shrink_is_tried_first() {
+        // Fails whenever the below_time draw is >= 1 — any capped rerun
+        // still fails, and since the time phase runs before the range
+        // phase, the reproduction line must carry the time knob.
+        check("long-run-fails", |rng| {
+            let rounds = rng.below_time(1_000_000);
+            let _unrelated = rng.below(64);
+            prop_assert!(rounds == 0, "failed at round {rounds}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "PROP_SHRINK=")]
+    fn range_shrink_reached_when_time_caps_mask_the_failure() {
+        // Fails only when below_time(2) draws 1 — every time factor
+        // (>= 2) caps that range to below(1) == 0, so all time-phase
+        // reruns PASS and the shrinker must fall through to the range
+        // phase, where below_time stays uncapped and the big range draw
+        // keeps failing. Pins the fallback ordering.
+        check("time-capped-masks", |rng| {
+            let gate = rng.below_time(2);
+            let n = rng.below(1_000_000);
+            prop_assert!(!(gate == 1 && n >= 1), "gate {gate} n {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
     fn shrunk_failures_replay_exactly() {
         // A shrunk counterexample's reproduction line pins (sub_seed,
         // factor); Rng::with_shrink must replay the identical stream.
@@ -193,6 +277,12 @@ mod tests {
         let mut b = Rng::with_shrink(sub, 8);
         for _ in 0..64 {
             assert_eq!(a.below(1000), b.below(1000));
+        }
+        // Same for the time dimension.
+        let mut c = Rng::with_shrink_dims(sub, 1, 4);
+        let mut d = Rng::with_shrink_dims(sub, 1, 4);
+        for _ in 0..64 {
+            assert_eq!(c.below_time(1000), d.below_time(1000));
         }
     }
 

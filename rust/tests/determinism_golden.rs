@@ -647,9 +647,10 @@ fn locality_shard_map_deterministic_and_below_contiguous_skew() {
     // 1-2 labels): bit-determinism at k ∈ {2, 4} × threads {1, 4} for
     // every dealing policy, non-empty shards with ±1 client counts, and
     // a shard-skew metric no worse than the contiguous grouping — at
-    // k = 2 strictly better, for *any* client cost draw (the contiguous
-    // map scores ≈ 0.417 on this partition while every grouping the
-    // wave dealing can produce scores ≤ 0.278).
+    // k = 2 strictly better, for *any* client cost draw (under the
+    // client-weighted skew now recorded, the contiguous map scores 0.4
+    // on this partition while every grouping the wave dealing can
+    // produce stays ≤ 0.34).
     let train = dataset(120, 19);
     let test = dataset(24, 20);
     for shards in [2usize, 4] {

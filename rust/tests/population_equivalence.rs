@@ -1,0 +1,191 @@
+//! Streaming-vs-resident equivalence: the population engine must be
+//! invisible at resident scale.
+//!
+//! The contract (coordinator/population.rs): a population run over a
+//! `ClientSource::Partition` — same partition, same config, contract
+//! defaults (full availability, no straggler cutoff) — produces a
+//! `RunRecord` **bit-identical** to the resident engine's, even though
+//! no client state outlives its activation window. And the population
+//! engine inherits the repo's older golden contract: thread counts and
+//! dealing policies never change results. The non-contract knobs
+//! (availability < 1, straggler dropout) must visibly change results —
+//! that is what they are for — while still completing cleanly.
+
+use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::population::{ClientSource, PopulationSetup};
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::data::Dataset;
+use cse_fsl::exp::common::run_to_json;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::sched::SchedPolicy;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    generate(&spec(), n, seed)
+}
+
+fn config(seed: u64, participation: usize, rounds: usize) -> TrainConfig {
+    TrainConfig {
+        participation,
+        agg_every: 4,
+        eval_every: 3,
+        eval_max_batches: 2,
+        lr0: 1.0,
+        track_grad_norms: true,
+        seed,
+        ..TrainConfig::new(Method::CseFsl).with_h(2)
+    }
+    .with_rounds(rounds)
+}
+
+/// The resident reference run.
+fn run_resident(train: &Dataset, test: &Dataset, cfg: TrainConfig) -> String {
+    let e = MockEngine::small(42);
+    let setup = TrainerSetup {
+        train,
+        test,
+        partition: iid(train, 5, &mut Rng::new(7)),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "golden".to_string(),
+    };
+    let mut tr = Trainer::new(&e, cfg, setup).unwrap();
+    run_to_json(&tr.run().unwrap()).pretty()
+}
+
+/// The same run through the streaming population engine.
+fn run_population(train: &Dataset, test: &Dataset, cfg: TrainConfig) -> String {
+    let e = MockEngine::small(42);
+    let source = ClientSource::Partition(iid(train, 5, &mut Rng::new(7)));
+    let setup = PopulationSetup::new(train, test, source, NetModel::edge_default(), "golden");
+    let mut tr = Trainer::new_population(&e, cfg, setup).unwrap();
+    run_to_json(&tr.run().unwrap()).pretty()
+}
+
+#[test]
+fn population_partition_bit_identical_to_resident() {
+    // Equivalence property over seeds × participation: full rounds
+    // (every client active every round) and k-of-n sampling (clients
+    // activate late, retire, and reactivate — the lazy-lifecycle path
+    // that replays missed aggregation broadcasts).
+    let train = dataset(120, 1);
+    let test = dataset(24, 2);
+    for seed in [1u64, 5, 9] {
+        for participation in [0usize, 3] {
+            let resident = run_resident(&train, &test, config(seed, participation, 12));
+            let streamed = run_population(&train, &test, config(seed, participation, 12));
+            assert_eq!(
+                resident.as_bytes(),
+                streamed.as_bytes(),
+                "seed={seed} participation={participation}: RunRecord diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn population_bit_identical_across_threads_and_sched() {
+    // The population fan-out goes through the same dealing machinery as
+    // the resident engine, so it inherits the golden contract: thread
+    // counts and dealing policies are invisible in results.
+    let train = dataset(120, 3);
+    let test = dataset(24, 4);
+    let reference = run_population(&train, &test, config(1, 3, 12));
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let cfg = TrainConfig {
+                parallelism: Parallelism::Threads(threads),
+                sched,
+                ..config(1, 3, 12)
+            };
+            let par = run_population(&train, &test, cfg);
+            assert_eq!(
+                reference.as_bytes(),
+                par.as_bytes(),
+                "sched={sched} threads={threads}: RunRecord diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn pool_source_activates_only_the_sampled_working_set() {
+    // Fleet mode: a Pool source over a shared sample pool. Only sampled
+    // participants are ever materialized, so the working set is bounded
+    // by rounds × cohort regardless of n.
+    let train = dataset(120, 5);
+    let test = dataset(24, 6);
+    let e = MockEngine::small(42);
+    let n = 512usize;
+    let source =
+        ClientSource::Pool { n_clients: n, samples_per_client: 24, pool_len: train.len() };
+    let setup = PopulationSetup::new(&train, &test, source, NetModel::edge_default(), "pool");
+    let cfg = TrainConfig {
+        participation: 16,
+        agg_every: 2,
+        eval_every: 3,
+        eval_max_batches: 2,
+        lr0: 1.0,
+        seed: 1,
+        ..TrainConfig::new(Method::CseFsl).with_h(2)
+    }
+    .with_rounds(6);
+    let mut tr = Trainer::new_population(&e, cfg, setup).unwrap();
+    let rec = tr.run().unwrap();
+    assert_eq!(rec.rounds.len(), 6);
+    assert_eq!(tr.n_clients(), n);
+    assert!(
+        rec.clients_activated <= 6 * 16 && rec.clients_activated < n,
+        "activated {} of {n}",
+        rec.clients_activated
+    );
+    assert_eq!(rec.clients_activated, tr.clients_activated());
+    assert!(
+        (0.0..=1.0).contains(&rec.shard_label_divergence),
+        "{}",
+        rec.shard_label_divergence
+    );
+    // The record reflects the full fleet, not the working set.
+    assert!(rec.server_storage_params > 0);
+    // Losses are finite — the shared pool trains like any IID split.
+    assert!(rec.rounds.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn availability_and_straggler_dropout_change_results_but_complete() {
+    let train = dataset(120, 7);
+    let test = dataset(24, 8);
+    let contract = run_population(&train, &test, config(1, 0, 12));
+    // Straggler cutoff 0: in every round only the earliest arrival (and
+    // exact ties) enters the dataQueue; everything else is dropped.
+    let e = MockEngine::small(42);
+    let source = ClientSource::Partition(iid(&train, 5, &mut Rng::new(7)));
+    let mut setup =
+        PopulationSetup::new(&train, &test, source, NetModel::edge_default(), "golden");
+    setup.straggler_cutoff = Some(0.0);
+    setup.availability = 0.6;
+    let mut tr = Trainer::new_population(&e, config(1, 0, 12), setup).unwrap();
+    let rec = tr.run().unwrap();
+    assert_eq!(rec.rounds.len(), 12);
+    let pop = tr.population.as_ref().unwrap();
+    assert!(pop.arrivals > 0, "no arrivals processed");
+    assert!(
+        pop.stragglers_dropped > 0,
+        "cutoff 0 with distinct delays must drop stragglers"
+    );
+    assert_ne!(
+        contract,
+        run_to_json(&rec).pretty(),
+        "dropout knobs must visibly change results"
+    );
+}
