@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 use cse_fsl::comm::accounting::{table2, CommLedger, MsgKind, WireSizes};
 use cse_fsl::sched::{fanout, SchedPolicy};
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::{Compression, Method};
 use cse_fsl::coordinator::population::{ClientSource, PopulationSetup};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
@@ -121,6 +121,37 @@ fn main() {
             run_fanout(Parallelism::Threads(8), SchedPolicy::RoundRobin)
         })
         .median_ns;
+    // The wire codec on the same fan-out: quantize-4 pays a per-element
+    // min/max fold + stochastic round on every smashed upload. This row
+    // vs threads4 round-robin is that codec overhead (it changes
+    // results, so it is not comparable to the uncompressed rows beyond
+    // wall-clock).
+    let quant4_ns = bench
+        .run("threads4_quantize4_8clients_h2_6rounds", || {
+            let cfg = TrainConfig {
+                eval_every: 0,
+                agg_every: 1000,
+                lr0: 0.05,
+                parallelism: Parallelism::Threads(4),
+                sched: SchedPolicy::RoundRobin,
+                ..TrainConfig::new(Method::CseFsl).with_h(2)
+            }
+            .with_compression(Compression::Quantize { bits: 4 })
+            .with_rounds(6);
+            let setup = TrainerSetup {
+                train: &heavy_train,
+                test: &heavy_test,
+                partition: iid(&heavy_train, n_clients, &mut Rng::new(7)),
+                net: NetModel::edge_default(),
+                client_layout: None,
+                server_layout: None,
+                aux_layout: None,
+                label: "fanout-q4".into(),
+            };
+            let mut tr = Trainer::new(&heavy, cfg, setup).unwrap();
+            tr.run().unwrap()
+        })
+        .median_ns;
     // Work stealing through the full trainer: same results (golden
     // contract), so this row measures pure dealing overhead vs the
     // round-robin threads4 row.
@@ -132,11 +163,12 @@ fn main() {
     bench.report();
     snapshot.extend(bench.results().iter().cloned());
     println!(
-        "\nfan-out scaling at 8 clients (median): threads2 {:.2}x, threads4 {:.2}x, threads8 {:.2}x vs sequential; steal/rr at threads4 {:.2}x",
+        "\nfan-out scaling at 8 clients (median): threads2 {:.2}x, threads4 {:.2}x, threads8 {:.2}x vs sequential; steal/rr at threads4 {:.2}x; quantize4 codec overhead at threads4 {:.2}x",
         seq_ns / thr2_ns,
         seq_ns / thr4_ns,
         seq_ns / thr8_ns,
         thr4_ns / steal4_ns,
+        quant4_ns / thr4_ns,
     );
 
     // --- scheduling policies over the raw fan-out: the makespan of 16

@@ -297,24 +297,27 @@ pub mod storage {
 ///
 /// ```
 /// use cse_fsl::comm::accounting::{predict, table2, WireSizes};
+/// use cse_fsl::comm::compress::Compression;
 ///
 /// let w = WireSizes::new(2304, 107_328, 23_050); // paper CIFAR-10 sizes
 /// let (n, batch, h, rounds) = (5u64, 50u64, 5u64, 8u64);
 /// let d_i = batch * h * rounds; // |D_i|: samples walked once per epoch
 /// let p = predict::TrafficProfile::AuxLocal;
-/// let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+/// let (up, down) = predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
 /// assert_eq!(up + down, table2::cse_fsl(n, d_i, h, &w));
 /// ```
 pub mod predict {
     use super::{MsgKind, WireSizes};
+    use crate::comm::compress::Compression;
 
     /// The wire-relevant projection of a method spec (decoupled from
     /// `coordinator::methods::MethodSpec` so `comm` stays a leaf
-    /// module; build one via `MethodSpec::traffic`). Of the three spec
-    /// axes only the **client-update rule** moves bytes: the upload
-    /// schedule changes how many rounds an epoch takes (never bytes per
-    /// round — each round is one smashed upload whatever h is), and the
-    /// server topology moves storage only.
+    /// module; build one via `MethodSpec::traffic`). Of the spec axes
+    /// only the **client-update rule** (here) and the **compression
+    /// codec** (passed alongside) move bytes: the upload schedule
+    /// changes how many rounds an epoch takes (never bytes per round —
+    /// each round is one smashed upload whatever h is), and the server
+    /// topology moves storage only.
     #[derive(Clone, Copy, Debug, PartialEq, Eq)]
     pub enum TrafficProfile {
         /// Server returns cut-layer gradients per batch; no aux nets in
@@ -327,8 +330,18 @@ pub mod predict {
 
     /// Expected bytes per message kind over a whole run, full
     /// participation of `n` clients with per-upload batch size `batch`.
+    ///
+    /// The compression codec `c` applies to the lossy tensor messages
+    /// only — each round's smashed upload and (under the server-grad
+    /// rule) the matching gradient download. Labels and model
+    /// aggregation exchanges always cross the wire at full precision.
+    /// The per-message wire size is [`Compression::wire_bytes`] on the
+    /// `batch × smashed_elems` tensor — the very function the live
+    /// trainer records into its ledger, so measured and predicted bytes
+    /// agree exactly (`tests/comm_properties.rs`).
     pub fn run_kind_bytes(
         p: TrafficProfile,
+        c: Compression,
         n: u64,
         batch: u64,
         rounds: u64,
@@ -336,16 +349,17 @@ pub mod predict {
         w: &WireSizes,
     ) -> Vec<(MsgKind, u64)> {
         let aggs = rounds / agg_every;
-        let per_round_up = n * batch;
+        // smashed_per_sample is bytes of f32s (4 bytes each); the codec
+        // works in elements of the per-upload batch tensor.
+        let smashed_elems = batch * (w.smashed_per_sample / 4);
+        let smashed_wire = c.wire_bytes(smashed_elems);
         let mut out = vec![
-            (MsgKind::SmashedUpload, rounds * per_round_up * w.smashed_per_sample),
-            (MsgKind::LabelUpload, rounds * per_round_up * w.label),
+            (MsgKind::SmashedUpload, rounds * n * smashed_wire),
+            (MsgKind::LabelUpload, rounds * n * batch * w.label),
             (
                 MsgKind::GradDownload,
                 match p {
-                    TrafficProfile::ServerGrad => {
-                        rounds * per_round_up * w.smashed_per_sample
-                    }
+                    TrafficProfile::ServerGrad => rounds * n * smashed_wire,
                     TrafficProfile::AuxLocal => 0,
                 },
             ),
@@ -368,6 +382,7 @@ pub mod predict {
     /// (uplink, downlink) byte totals for a whole run.
     pub fn run_totals(
         p: TrafficProfile,
+        c: Compression,
         n: u64,
         batch: u64,
         rounds: u64,
@@ -376,7 +391,7 @@ pub mod predict {
     ) -> (u64, u64) {
         let mut up = 0;
         let mut down = 0;
-        for (kind, bytes) in run_kind_bytes(p, n, batch, rounds, agg_every, w) {
+        for (kind, bytes) in run_kind_bytes(p, c, n, batch, rounds, agg_every, w) {
             match kind.dir() {
                 super::Dir::Up => up += bytes,
                 super::Dir::Down => down += bytes,
@@ -467,6 +482,7 @@ mod tests {
 
     #[test]
     fn predict_reduces_to_table2_epoch_forms() {
+        use crate::comm::compress::Compression;
         let w = wires();
         let (n, batch) = (5u64, 50u64);
         // One epoch of CSE_FSL_h: |D_i| = batch*h*rounds, one aggregation.
@@ -474,19 +490,65 @@ mod tests {
             let rounds = 8;
             let d_i = batch * h * rounds;
             let p = predict::TrafficProfile::AuxLocal;
-            let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+            let (up, down) =
+                predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
             assert_eq!(up + down, table2::cse_fsl(n, d_i, h, &w), "h={h}");
         }
         // One epoch of FSL_MC: h=1, rounds = |D_i|/batch.
         let rounds = 12;
         let d_i = batch * rounds;
         let p = predict::TrafficProfile::ServerGrad;
-        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        let (up, down) =
+            predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
         assert_eq!(up + down, table2::fsl_mc(n, d_i, &w));
         // One epoch of FSL_AN: no grad downlink, aux rides along.
         let p = predict::TrafficProfile::AuxLocal;
-        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        let (up, down) =
+            predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
         assert_eq!(up + down, table2::fsl_an(n, d_i, &w));
+    }
+
+    #[test]
+    fn predict_compressed_forms_touch_only_lossy_tensor_kinds() {
+        use crate::comm::compress::Compression;
+        let w = wires();
+        let (n, batch, rounds, agg_every) = (5u64, 50u64, 12u64, 4u64);
+        for p in [predict::TrafficProfile::ServerGrad, predict::TrafficProfile::AuxLocal] {
+            let base: std::collections::BTreeMap<_, _> =
+                predict::run_kind_bytes(p, Compression::None, n, batch, rounds, agg_every, &w)
+                    .into_iter()
+                    .collect();
+            for c in [
+                Compression::Quantize { bits: 4 },
+                Compression::Quantize { bits: 8 },
+                Compression::TopK { frac: 0.25 },
+            ] {
+                let smashed_elems = batch * (w.smashed_per_sample / 4);
+                let wire = c.wire_bytes(smashed_elems);
+                let got: std::collections::BTreeMap<_, _> =
+                    predict::run_kind_bytes(p, c, n, batch, rounds, agg_every, &w)
+                        .into_iter()
+                        .collect();
+                for (kind, &bytes) in &got {
+                    match kind {
+                        MsgKind::SmashedUpload => {
+                            assert_eq!(bytes, rounds * n * wire, "{p:?} {c}")
+                        }
+                        MsgKind::GradDownload => {
+                            let want = match p {
+                                predict::TrafficProfile::ServerGrad => rounds * n * wire,
+                                predict::TrafficProfile::AuxLocal => 0,
+                            };
+                            assert_eq!(bytes, want, "{p:?} {c}");
+                        }
+                        // Labels and model exchanges are never compressed.
+                        other => assert_eq!(bytes, base[other], "{p:?} {c} {other:?}"),
+                    }
+                }
+                // Compressed smashed traffic is strictly below full precision.
+                assert!(wire < Compression::None.wire_bytes(smashed_elems), "{c}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Lossy wire compression for split-layer activations (FedLite-style).
+//!
+//! CSE-FSL reduces *how often* smashed data crosses the wire; FedLite
+//! (arXiv 2201.11865) shows the complementary lever is *how many bits*
+//! each crossing costs, via quantization or top-k sketching of the
+//! split-layer activations. [`Compression`] is that lever as a
+//! first-class algorithm axis: the coordinator applies it at the wire
+//! boundary (uplink smashed activations, and — for the server-grad
+//! update rule — the returned gradient downlink), and
+//! [`crate::comm::accounting::predict`] uses the *same*
+//! [`Compression::wire_bytes`] integer arithmetic for its closed forms,
+//! so ledgered bytes and predicted bytes agree exactly by construction.
+//!
+//! Two invariants the rest of the system leans on:
+//!
+//! * **Determinism** — [`Compression::apply`] is a pure function of
+//!   `(self, input, rng)`. The coordinator derives the rng from the
+//!   round snapshot via a non-mutating [`Rng::split`], so parallel and
+//!   sequential schedules stay bit-identical
+//!   (`tests/determinism_golden.rs`).
+//! * **Exact byte accounting** — [`Compression::wire_bytes`] is integer
+//!   arithmetic on element counts, shared by the trainer's ledger and
+//!   the closed-form predictions (`tests/comm_properties.rs`).
+
+use crate::util::prng::Rng;
+
+/// Wire-compression axis of a method spec.
+///
+/// `None` is the historical uncompressed wire (4 bytes per f32
+/// element); the other variants are lossy codecs applied to each
+/// smashed-activation upload (and, under the server-grad update rule,
+/// to each gradient download) as a compress → decompress round trip:
+/// the receiving side trains on the dequantized values, while the
+/// ledger records the compressed wire size.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Compression {
+    /// No compression: full-precision f32 on the wire.
+    None,
+    /// Uniform `bits`-bit quantization over the tensor's `[min, max]`
+    /// range with seeded stochastic rounding (unbiased in expectation).
+    /// Wire cost: an 8-byte range header + `bits` bits per element.
+    Quantize {
+        /// Bits per element, `1..=16`.
+        bits: u8,
+    },
+    /// Magnitude top-k sparsification: keep the `ceil(frac * n)`
+    /// largest-|x| entries, zero the rest. Wire cost: 8 bytes (value +
+    /// index) per kept entry.
+    TopK {
+        /// Fraction of entries kept, in `(0, 1]`.
+        frac: f32,
+    },
+}
+
+impl Compression {
+    /// Canonical cache-key / label tag for the non-`None` variants
+    /// (`q4`, `t0.25`, ...). `None` has *no* tag — it is deliberately
+    /// unrepresented so every pre-axis key string survives byte-
+    /// identically (`tests/spec_equivalence.rs`).
+    pub fn tag(&self) -> String {
+        match self {
+            Compression::None => String::new(),
+            Compression::Quantize { bits } => format!("q{bits}"),
+            Compression::TopK { frac } => format!("t{frac}"),
+        }
+    }
+
+    /// Check the axis point is runnable; returns a human-readable
+    /// reason when it is not.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            Compression::None => Ok(()),
+            Compression::Quantize { bits } => {
+                if bits == 0 {
+                    Err("quantize bits must be >= 1".into())
+                } else if bits > 16 {
+                    Err(format!(
+                        "quantize bits must be <= 16 (got {bits}; full precision is \
+                         --compress none)"
+                    ))
+                } else {
+                    Ok(())
+                }
+            }
+            Compression::TopK { frac } => {
+                if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+                    Err(format!("top-k frac must be in (0, 1] (got {frac})"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Number of entries a `TopK { frac }` codec keeps out of `n`:
+    /// `ceil(frac * n)`, clamped to `[1, n]` for non-empty tensors.
+    /// Shared by [`Compression::apply`], [`Compression::wire_bytes`]
+    /// and the property tests, so the three can never drift.
+    pub fn kept_count(frac: f32, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        (((frac as f64) * n as f64).ceil() as u64).clamp(1, n)
+    }
+
+    /// Exact wire size in bytes of one `raw_elems`-element f32 tensor
+    /// under this codec. Integer arithmetic only — this is the single
+    /// source of truth for both the trainer's ledger and the
+    /// closed-form predictions in [`crate::comm::accounting::predict`].
+    pub fn wire_bytes(&self, raw_elems: u64) -> u64 {
+        match *self {
+            Compression::None => raw_elems * 4,
+            // 8-byte header (f32 min + f32 scale) + bits per element,
+            // bit-packed and rounded up to whole bytes.
+            Compression::Quantize { bits } => 8 + (raw_elems * bits as u64).div_ceil(8),
+            // 4-byte value + 4-byte index per kept entry.
+            Compression::TopK { frac } => Self::kept_count(frac, raw_elems) * 8,
+        }
+    }
+
+    /// The lossy compress → decompress round trip: what the receiver
+    /// sees after this codec crosses the wire. Pure in `(self, v, rng)`;
+    /// the caller passes an rng split off the round snapshot so the
+    /// result is schedule-independent.
+    ///
+    /// Quantization uses stochastic rounding on a uniform grid over
+    /// `[min, max]`: each element lands on one of the two neighboring
+    /// levels with probability proportional to proximity, so the error
+    /// is bounded by one step (not half a step) but unbiased in
+    /// expectation. Top-k keeps the `ceil(frac * n)` largest-|x|
+    /// entries (ties broken toward the lower index) and zeroes the
+    /// rest — deterministic, no rng consumed.
+    pub fn apply(&self, v: &[f32], rng: &Rng) -> Vec<f32> {
+        match *self {
+            Compression::None => v.to_vec(),
+            Compression::Quantize { bits } => {
+                if v.is_empty() {
+                    return Vec::new();
+                }
+                let min = v.iter().copied().fold(f32::INFINITY, f32::min);
+                let max = v.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let levels = (1u32 << bits) - 1;
+                if max <= min || levels == 0 {
+                    // Degenerate range: every element is the shared min.
+                    return vec![min; v.len()];
+                }
+                let step = (max - min) / levels as f32;
+                let mut r = rng.clone();
+                v.iter()
+                    .map(|&x| {
+                        // One rng draw per element, endpoints included,
+                        // so the stream stays aligned whatever the data.
+                        let u = r.uniform();
+                        if x == max {
+                            // The top of the range is an exact grid
+                            // point, but (max-min)/step can land just
+                            // below `levels` in f32 — snap it.
+                            return max;
+                        }
+                        let pos = ((x - min) / step) as f64;
+                        let lo = pos.floor();
+                        let up = (u < pos - lo) as u32;
+                        let level = (lo as u32 + up).min(levels);
+                        // Reconstruct; the top level snaps to max so the
+                        // output can never escape the input range.
+                        if level == levels {
+                            max
+                        } else {
+                            min + level as f32 * step
+                        }
+                    })
+                    .collect()
+            }
+            Compression::TopK { frac } => {
+                let n = v.len();
+                let keep = Self::kept_count(frac, n as u64) as usize;
+                // Rank by |x| descending, index ascending on ties.
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    v[b].abs()
+                        .partial_cmp(&v[a].abs())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                let mut out = vec![0.0f32; n];
+                for &i in order.iter().take(keep) {
+                    out[i] = v[i];
+                }
+                out
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Compression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Compression::None => write!(f, "none"),
+            Compression::Quantize { bits } => write!(f, "quantize{bits}"),
+            Compression::TopK { frac } => write!(f, "topk{frac}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_closed_forms() {
+        // None: 4 bytes per element.
+        assert_eq!(Compression::None.wire_bytes(6), 24);
+        assert_eq!(Compression::None.wire_bytes(0), 0);
+        // Quantize: 8-byte header + ceil(elems * bits / 8).
+        assert_eq!(Compression::Quantize { bits: 8 }.wire_bytes(6), 8 + 6);
+        assert_eq!(Compression::Quantize { bits: 4 }.wire_bytes(6), 8 + 3);
+        assert_eq!(Compression::Quantize { bits: 1 }.wire_bytes(9), 8 + 2);
+        assert_eq!(Compression::Quantize { bits: 16 }.wire_bytes(3), 8 + 6);
+        // TopK: 8 bytes per kept entry, kept = ceil(frac * n) >= 1.
+        assert_eq!(Compression::TopK { frac: 0.5 }.wire_bytes(6), 3 * 8);
+        assert_eq!(Compression::TopK { frac: 0.25 }.wire_bytes(6), 2 * 8);
+        assert_eq!(Compression::TopK { frac: 0.01 }.wire_bytes(6), 8);
+        assert_eq!(Compression::TopK { frac: 1.0 }.wire_bytes(6), 48);
+        assert_eq!(Compression::TopK { frac: 0.5 }.wire_bytes(0), 0);
+    }
+
+    #[test]
+    fn kept_count_boundaries() {
+        assert_eq!(Compression::kept_count(0.5, 0), 0);
+        assert_eq!(Compression::kept_count(0.001, 5), 1, "non-empty keeps at least one");
+        assert_eq!(Compression::kept_count(1.0, 5), 5);
+        assert_eq!(Compression::kept_count(0.5, 5), 3, "ceil(2.5)");
+        assert_eq!(Compression::kept_count(0.4, 5), 2);
+    }
+
+    #[test]
+    fn validation_rules() {
+        assert!(Compression::None.validate().is_ok());
+        assert!(Compression::Quantize { bits: 1 }.validate().is_ok());
+        assert!(Compression::Quantize { bits: 16 }.validate().is_ok());
+        assert!(Compression::Quantize { bits: 0 }.validate().is_err());
+        assert!(Compression::Quantize { bits: 17 }.validate().is_err());
+        assert!(Compression::TopK { frac: 1.0 }.validate().is_ok());
+        assert!(Compression::TopK { frac: 0.25 }.validate().is_ok());
+        assert!(Compression::TopK { frac: 0.0 }.validate().is_err());
+        assert!(Compression::TopK { frac: -0.5 }.validate().is_err());
+        assert!(Compression::TopK { frac: 1.5 }.validate().is_err());
+        assert!(Compression::TopK { frac: f32::NAN }.validate().is_err());
+    }
+
+    #[test]
+    fn tags_and_display() {
+        assert_eq!(Compression::None.tag(), "");
+        assert_eq!(Compression::Quantize { bits: 4 }.tag(), "q4");
+        assert_eq!(Compression::TopK { frac: 0.25 }.tag(), "t0.25");
+        assert_eq!(Compression::None.to_string(), "none");
+        assert_eq!(Compression::Quantize { bits: 8 }.to_string(), "quantize8");
+        assert_eq!(Compression::TopK { frac: 0.5 }.to_string(), "topk0.5");
+    }
+
+    #[test]
+    fn apply_is_deterministic_given_equal_rng() {
+        let rng = Rng::new(7).split_str("compress-test");
+        let v: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        for c in [
+            Compression::None,
+            Compression::Quantize { bits: 4 },
+            Compression::Quantize { bits: 8 },
+            Compression::TopK { frac: 0.25 },
+        ] {
+            assert_eq!(c.apply(&v, &rng), c.apply(&v, &rng), "{c}");
+        }
+    }
+
+    #[test]
+    fn none_is_identity_and_quantize_stays_in_range() {
+        let rng = Rng::new(3);
+        let v: Vec<f32> = vec![-1.5, 0.0, 0.25, 2.0, 0.75];
+        assert_eq!(Compression::None.apply(&v, &rng), v);
+        let q = Compression::Quantize { bits: 4 }.apply(&v, &rng);
+        assert_eq!(q.len(), v.len());
+        for &y in &q {
+            assert!((-1.5..=2.0).contains(&y), "{y} outside input range");
+        }
+        // Range endpoints are exact grid points, so min/max quantize to
+        // themselves regardless of the stochastic draw.
+        assert_eq!(q[0], -1.5);
+        assert_eq!(q[3], 2.0);
+    }
+
+    #[test]
+    fn quantize_degenerate_range_is_constant() {
+        let rng = Rng::new(5);
+        let v = vec![0.7f32; 9];
+        assert_eq!(Compression::Quantize { bits: 4 }.apply(&v, &rng), v);
+        assert!(Compression::Quantize { bits: 8 }.apply(&[], &rng).is_empty());
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes() {
+        let rng = Rng::new(1);
+        let v = vec![0.1f32, -3.0, 0.5, 2.0, -0.2];
+        let out = Compression::TopK { frac: 0.4 }.apply(&v, &rng);
+        // ceil(0.4 * 5) = 2 kept: |-3.0| and |2.0|.
+        assert_eq!(out, vec![0.0, -3.0, 0.0, 2.0, 0.0]);
+        // frac = 1 keeps everything.
+        assert_eq!(Compression::TopK { frac: 1.0 }.apply(&v, &rng), v);
+        // Ties break toward the lower index.
+        let tied = vec![1.0f32, -1.0, 1.0];
+        assert_eq!(Compression::TopK { frac: 0.34 }.apply(&tied, &rng), vec![1.0, 0.0, 0.0]);
+    }
+}

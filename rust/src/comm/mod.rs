@@ -1,3 +1,5 @@
-//! Communication accounting (measured ledger + Table II closed forms).
+//! Communication accounting (measured ledger + Table II closed forms)
+//! and lossy wire compression.
 
 pub mod accounting;
+pub mod compress;

@@ -2,7 +2,7 @@
 
 use crate::sched::SchedPolicy;
 
-use super::methods::{Method, MethodSpec, ServerTopology};
+use super::methods::{Compression, Method, MethodSpec, ServerTopology};
 
 /// Client fan-out strategy for the local-training phase of a round.
 ///
@@ -259,6 +259,13 @@ impl TrainConfig {
     /// update rule can amortize it).
     pub fn with_h(mut self, h: usize) -> Self {
         self.spec = self.spec.with_period(h);
+        self
+    }
+
+    /// Builder: set the spec's wire-compression codec
+    /// ([`MethodSpec::with_compression`]).
+    pub fn with_compression(mut self, compression: Compression) -> Self {
+        self.spec = self.spec.with_compression(compression);
         self
     }
 
@@ -525,6 +532,35 @@ mod tests {
                 .validate(5)
                 .is_err());
         }
+    }
+
+    #[test]
+    fn compression_rides_the_spec() {
+        // Presets default to the uncompressed wire.
+        for m in [Method::FslMc, Method::FslOc, Method::FslAn, Method::CseFsl] {
+            assert_eq!(TrainConfig::new(m).spec.compression, Compression::None, "{m}");
+        }
+        // The builder delegates to the spec and composes with the rest.
+        let c = TrainConfig::new(Method::CseFsl)
+            .with_h(2)
+            .with_compression(Compression::Quantize { bits: 4 });
+        assert_eq!(c.spec.compression, Compression::Quantize { bits: 4 });
+        assert!(c.validate(5).is_ok());
+        assert_eq!(c.spec.preset(), None, "compressed specs are spec-only points");
+        // Spec-level codec validation surfaces through the config.
+        assert!(TrainConfig::new(Method::CseFsl)
+            .with_compression(Compression::Quantize { bits: 0 })
+            .validate(5)
+            .is_err());
+        assert!(TrainConfig::new(Method::CseFsl)
+            .with_compression(Compression::TopK { frac: 0.0 })
+            .validate(5)
+            .is_err());
+        // Server-grad presets accept a codec too (symmetric downlink).
+        assert!(TrainConfig::new(Method::FslOc)
+            .with_compression(Compression::TopK { frac: 0.25 })
+            .validate(5)
+            .is_ok());
     }
 
     #[test]

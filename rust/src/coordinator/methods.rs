@@ -1,14 +1,15 @@
 //! The composable method-spec API: every federated-split-learning
-//! variant is a point in a three-axis design space, and the paper's four
+//! variant is a point in a four-axis design space, and the paper's four
 //! compared methods (Section VI-A) are named presets in it.
 //!
-//! # The three axes
+//! # The four axes
 //!
 //! | axis | variants | decides |
 //! |---|---|---|
 //! | [`ClientUpdate`] | `ServerGrad { clip }` / `AuxLocal` | where the client-side gradient comes from (server downlink per batch, or a local auxiliary-network loss) |
 //! | [`UploadSchedule`] | `EveryBatch` / `Period(h)` / `AdaptivePeriod { .. }` | how many local batches each smashed upload amortizes |
 //! | [`ServerTopology`] | `PerClient` / `Shared` | whether the server keeps one model copy per client or shared copies (`TrainConfig::server_shards` refines `Shared` into k shard copies) |
+//! | [`Compression`] | `None` / `Quantize { bits }` / `TopK { frac }` | how many bits each smashed upload (and server-grad downlink) costs on the wire (FedLite-style lossy codecs) |
 //!
 //! # The paper's presets
 //!
@@ -19,22 +20,29 @@
 //! | FSL_AN  | `AuxLocal`           | every batch| per-client|
 //! | CSE_FSL | `AuxLocal`           | every h    | shared    |
 //!
+//! Every preset sits at `Compression::None` (the paper transmits
+//! full-precision smashed data); any compressed point is spec-only and
+//! gets the canonical axis tag.
+//!
 //! Any other combination is a scenario the paper never names — e.g.
 //! `AuxLocal × Period(h) × PerClient` ("FSL_AN with h > 1", the `figure
-//! h` arm) — and runs through exactly the same trainer. The only
-//! incoherent region is `ServerGrad` with a non-every-batch schedule:
-//! the SplitFed client *blocks* on the per-batch gradient round trip, so
-//! there is nothing for a period to amortize ([`MethodSpec::validate`]).
+//! h` arm) or `CSE_FSL × Quantize{4}` (the `figure b` arm) — and runs
+//! through exactly the same trainer. The only incoherent region is
+//! `ServerGrad` with a non-every-batch schedule: the SplitFed client
+//! *blocks* on the per-batch gradient round trip, so there is nothing
+//! for a period to amortize ([`MethodSpec::validate`]).
 //!
 //! This module is the single home of method parsing / display / alias
 //! handling: the CLI resolves `--method` (preset alias) and the
-//! `--update` / `--upload-every` / `--clip` / `--topology` axis flags
-//! through [`MethodSpec::from_cli`], and every axis type implements
-//! `FromStr` here.
+//! `--update` / `--upload-every` / `--clip` / `--topology` /
+//! `--compress`+`--bits`+`--topk` axis flags through
+//! [`MethodSpec::from_cli`], and every axis type implements `FromStr`
+//! here (compression composes from two flags, so it parses in
+//! `from_cli` directly).
 //!
 //! ```
 //! use cse_fsl::coordinator::methods::{
-//!     ClientUpdate, Method, MethodSpec, ServerTopology, UploadSchedule,
+//!     ClientUpdate, Compression, Method, MethodSpec, ServerTopology, UploadSchedule,
 //! };
 //!
 //! // The paper's method is just one point of the space...
@@ -44,13 +52,22 @@
 //!     update: ClientUpdate::AuxLocal,
 //!     upload: UploadSchedule::period(4),
 //!     topology: ServerTopology::PerClient,
+//!     compression: Compression::None,
 //! };
 //! assert_eq!(an_h4, Method::FslAn.spec().with_period(4));
 //! assert_eq!(an_h4.preset(), None); // spec-only scenario ("FSL_AN with h>1")
 //! assert!(an_h4.validate().is_ok());
+//! // Compressed CSE-FSL: quantized smashed uploads every 2 batches.
+//! let q4 = Method::CseFsl
+//!     .spec()
+//!     .with_period(2)
+//!     .with_compression(Compression::Quantize { bits: 4 });
+//! assert_eq!(q4.preset(), None);
+//! assert_eq!(q4.tag(), "aux+p2+sh+q4");
 //! ```
 
 use crate::comm::accounting::predict::TrafficProfile;
+pub use crate::comm::compress::Compression;
 
 /// Where the client-side model's gradient comes from (axis 1).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -297,9 +314,9 @@ impl std::str::FromStr for ServerTopology {
 }
 
 /// One fully-specified algorithm point: update rule × upload schedule ×
-/// server topology. The four paper methods are presets
-/// ([`Method::spec`]); everything else is a spec-only scenario served by
-/// the same trainer.
+/// server topology × wire compression. The four paper methods are
+/// presets ([`Method::spec`]); everything else is a spec-only scenario
+/// served by the same trainer.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MethodSpec {
     /// Where the client-side gradient comes from.
@@ -308,6 +325,10 @@ pub struct MethodSpec {
     pub upload: UploadSchedule,
     /// Server-side copy layout.
     pub topology: ServerTopology,
+    /// Lossy codec on the smashed-activation uplink (and, under the
+    /// server-grad rule, the gradient downlink). Presets sit at
+    /// [`Compression::None`].
+    pub compression: Compression,
 }
 
 impl MethodSpec {
@@ -358,14 +379,20 @@ impl MethodSpec {
                 }
             }
         }
+        self.compression.validate()?;
         Ok(())
     }
 
     /// The preset this spec is a point of, if any — the exact inverse of
     /// [`Method::spec`] (CSE_FSL absorbs every fixed period on the
-    /// shared topology; non-preset clips and the adaptive schedule are
-    /// spec-only).
+    /// shared topology; non-preset clips, the adaptive schedule, and any
+    /// compression are spec-only).
     pub fn preset(&self) -> Option<Method> {
+        if self.compression != Compression::None {
+            // Compressed points always carry the canonical axis tag —
+            // the paper's presets transmit full precision.
+            return None;
+        }
         match (self.update, self.upload, self.topology) {
             (
                 ClientUpdate::ServerGrad { clip },
@@ -392,16 +419,26 @@ impl MethodSpec {
     /// The cache-key segment: the preset's historical name when the spec
     /// is a preset point (cache compatibility — `RunSpec::key` strings
     /// are unchanged for the four paper methods), a canonical
-    /// `{update}+{upload}+{topology}` tag otherwise.
+    /// `{update}+{upload}+{topology}` tag otherwise, with a trailing
+    /// `+{compression}` segment when a codec is on (e.g. `aux+p2+sh+q4`;
+    /// `Compression::None` is deliberately unrepresented so every
+    /// pre-axis key string survives byte-identically).
     pub fn tag(&self) -> String {
         match self.preset() {
             Some(m) => m.to_string(),
-            None => format!(
-                "{}+{}+{}",
-                self.update.tag(),
-                self.upload.tag(),
-                self.topology.tag()
-            ),
+            None => {
+                let mut t = format!(
+                    "{}+{}+{}",
+                    self.update.tag(),
+                    self.upload.tag(),
+                    self.topology.tag()
+                );
+                if self.compression != Compression::None {
+                    t.push('+');
+                    t.push_str(&self.compression.tag());
+                }
+                t
+            }
         }
     }
 
@@ -443,17 +480,33 @@ impl MethodSpec {
         self
     }
 
+    /// Builder: set the wire-compression codec.
+    pub fn with_compression(mut self, compression: Compression) -> Self {
+        self.compression = compression;
+        self
+    }
+
     /// Resolve a spec from CLI flags — THE one home of method/axis flag
     /// handling. `method` names the preset base (`--method`, historical
     /// aliases preserved); each `Some` axis flag then overrides that
-    /// axis (`--update`, `--upload-every`, `--clip`, `--topology`). The
+    /// axis (`--update`, `--upload-every`, `--clip`, `--topology`, and
+    /// the compression trio `--compress` / `--bits` / `--topk`). The
     /// result is validated.
+    ///
+    /// Compression resolution: `--compress quantize` takes `--bits`
+    /// (default 8), `--compress topk` takes `--topk` (default 0.25);
+    /// `--bits` / `--topk` without the matching codec — or with the
+    /// other one — are rejected rather than silently ignored.
+    #[allow(clippy::too_many_arguments)]
     pub fn from_cli(
         method: &str,
         update: Option<&str>,
         upload: Option<&str>,
         clip: Option<&str>,
         topology: Option<&str>,
+        compress: Option<&str>,
+        bits: Option<&str>,
+        topk: Option<&str>,
     ) -> Result<MethodSpec, String> {
         let mut spec = Method::parse(method)
             .ok_or_else(|| format!("bad method {method:?} (expected mc | oc | an | cse)"))?
@@ -485,6 +538,54 @@ impl MethodSpec {
         if let Some(t) = topology {
             spec.topology = t.parse()?;
         }
+        spec.compression = match compress.map(|c| c.to_ascii_lowercase()).as_deref() {
+            None | Some("none") => {
+                if let Some(b) = bits {
+                    return Err(format!(
+                        "--bits {b} composes with --compress quantize"
+                    ));
+                }
+                if let Some(k) = topk {
+                    return Err(format!(
+                        "--topk {k} composes with --compress topk"
+                    ));
+                }
+                Compression::None
+            }
+            Some("quantize") | Some("q") => {
+                if let Some(k) = topk {
+                    return Err(format!(
+                        "--topk {k} composes with --compress topk, not quantize"
+                    ));
+                }
+                let b: u8 = match bits {
+                    Some(b) => b
+                        .parse()
+                        .map_err(|_| format!("bad --bits {b:?} (expected 1..=16)"))?,
+                    None => 8,
+                };
+                Compression::Quantize { bits: b }
+            }
+            Some("topk") | Some("top-k") | Some("t") => {
+                if let Some(b) = bits {
+                    return Err(format!(
+                        "--bits {b} composes with --compress quantize, not topk"
+                    ));
+                }
+                let f: f32 = match topk {
+                    Some(k) => k
+                        .parse()
+                        .map_err(|_| format!("bad --topk {k:?} (expected a fraction)"))?,
+                    None => 0.25,
+                };
+                Compression::TopK { frac: f }
+            }
+            Some(other) => {
+                return Err(format!(
+                    "bad compression {other:?} (expected none | quantize | topk)"
+                ));
+            }
+        };
         spec.validate()?;
         Ok(spec)
     }
@@ -524,6 +625,7 @@ impl Method {
                 update: ClientUpdate::ServerGrad { clip: 0.0 },
                 upload: UploadSchedule::EveryBatch,
                 topology: ServerTopology::PerClient,
+                compression: Compression::None,
             },
             Method::FslOc => MethodSpec {
                 // The paper adds clipping to FSL_OC to fix its
@@ -531,16 +633,19 @@ impl Method {
                 update: ClientUpdate::ServerGrad { clip: 1.0 },
                 upload: UploadSchedule::EveryBatch,
                 topology: ServerTopology::Shared,
+                compression: Compression::None,
             },
             Method::FslAn => MethodSpec {
                 update: ClientUpdate::AuxLocal,
                 upload: UploadSchedule::EveryBatch,
                 topology: ServerTopology::PerClient,
+                compression: Compression::None,
             },
             Method::CseFsl => MethodSpec {
                 update: ClientUpdate::AuxLocal,
                 upload: UploadSchedule::EveryBatch,
                 topology: ServerTopology::Shared,
+                compression: Compression::None,
             },
         }
     }
@@ -718,6 +823,66 @@ mod tests {
             ..Method::CseFsl.spec()
         };
         assert_eq!(adaptive.tag(), "aux+ap2x8e5+sh");
+        // Compression is a trailing tag segment; None is unrepresented.
+        let q4 = Method::CseFsl
+            .spec()
+            .with_period(2)
+            .with_compression(Compression::Quantize { bits: 4 });
+        assert_eq!(q4.tag(), "aux+p2+sh+q4");
+        assert_eq!(q4.label(), "aux+p2+sh+q4");
+        assert_eq!(
+            Method::FslMc.spec().with_compression(Compression::Quantize { bits: 8 }).tag(),
+            "sg0+b+pc+q8"
+        );
+        assert_eq!(
+            Method::CseFsl.spec().with_compression(Compression::TopK { frac: 0.25 }).tag(),
+            "aux+b+sh+t0.25"
+        );
+        assert_eq!(
+            Method::CseFsl.spec().with_compression(Compression::None).tag(),
+            "CSE_FSL",
+            "explicit None must keep the historical preset tag"
+        );
+    }
+
+    #[test]
+    fn compression_leaves_presets_and_validates() {
+        // Any codec moves the spec off the preset points...
+        for m in Method::ALL {
+            let q = m.spec().with_compression(Compression::Quantize { bits: 8 });
+            assert_eq!(q.preset(), None, "{m}");
+            assert!(q.validate().is_ok(), "{m}");
+            // ...and with_compression(None) round-trips back.
+            assert_eq!(q.with_compression(Compression::None).preset(), Some(m), "{m}");
+        }
+        // Bad codec parameters are caught by spec validation.
+        assert!(Method::CseFsl
+            .spec()
+            .with_compression(Compression::Quantize { bits: 0 })
+            .validate()
+            .is_err());
+        assert!(Method::CseFsl
+            .spec()
+            .with_compression(Compression::Quantize { bits: 17 })
+            .validate()
+            .is_err());
+        assert!(Method::CseFsl
+            .spec()
+            .with_compression(Compression::TopK { frac: 0.0 })
+            .validate()
+            .is_err());
+        assert!(Method::CseFsl
+            .spec()
+            .with_compression(Compression::TopK { frac: 2.0 })
+            .validate()
+            .is_err());
+        // Compression composes with the server-grad rule too (the grad
+        // downlink is compressed symmetrically).
+        assert!(Method::FslOc
+            .spec()
+            .with_compression(Compression::Quantize { bits: 4 })
+            .validate()
+            .is_ok());
     }
 
     #[test]
@@ -745,39 +910,114 @@ mod tests {
     fn cli_resolution_composes() {
         // --method alone is the historical preset path.
         assert_eq!(
-            MethodSpec::from_cli("cse", None, None, None, None).unwrap(),
+            MethodSpec::from_cli("cse", None, None, None, None, None, None, None).unwrap(),
             Method::CseFsl.spec()
         );
         assert_eq!(
-            MethodSpec::from_cli("mc", None, None, None, None).unwrap(),
+            MethodSpec::from_cli("mc", None, None, None, None, None, None, None).unwrap(),
             Method::FslMc.spec()
         );
         // --upload-every composes onto the preset base...
         assert_eq!(
-            MethodSpec::from_cli("cse", None, Some("5"), None, None).unwrap(),
+            MethodSpec::from_cli("cse", None, Some("5"), None, None, None, None, None)
+                .unwrap(),
             Method::CseFsl.spec().with_period(5)
         );
         // ...including the spec-only "FSL_AN with h>1" point.
         assert_eq!(
-            MethodSpec::from_cli("an", None, Some("4"), None, None).unwrap(),
+            MethodSpec::from_cli("an", None, Some("4"), None, None, None, None, None)
+                .unwrap(),
             Method::FslAn.spec().with_period(4)
         );
         // Axis flags compose without any preset semantics.
         assert_eq!(
-            MethodSpec::from_cli("cse", Some("aux"), Some("4"), None, Some("per-client"))
-                .unwrap(),
+            MethodSpec::from_cli(
+                "cse",
+                Some("aux"),
+                Some("4"),
+                None,
+                Some("per-client"),
+                None,
+                None,
+                None
+            )
+            .unwrap(),
             Method::FslAn.spec().with_period(4)
         );
         // --clip composes with the server-grad rule only.
-        let oc = MethodSpec::from_cli("oc", None, None, Some("2.5"), None).unwrap();
+        let oc =
+            MethodSpec::from_cli("oc", None, None, Some("2.5"), None, None, None, None)
+                .unwrap();
         assert_eq!(oc.clip(), 2.5);
         assert_eq!(oc.preset(), None, "non-default clip leaves the preset");
-        assert!(MethodSpec::from_cli("cse", None, None, Some("1.0"), None).is_err());
-        assert!(MethodSpec::from_cli("cse", None, None, Some("0"), None).is_ok());
+        assert!(
+            MethodSpec::from_cli("cse", None, None, Some("1.0"), None, None, None, None)
+                .is_err()
+        );
+        assert!(
+            MethodSpec::from_cli("cse", None, None, Some("0"), None, None, None, None)
+                .is_ok()
+        );
         // Incoherent compositions are rejected at resolution time.
-        assert!(MethodSpec::from_cli("mc", None, Some("2"), None, None).is_err());
-        assert!(MethodSpec::from_cli("warp", None, None, None, None).is_err());
-        assert!(MethodSpec::from_cli("cse", None, Some("bogus"), None, None).is_err());
+        assert!(
+            MethodSpec::from_cli("mc", None, Some("2"), None, None, None, None, None)
+                .is_err()
+        );
+        assert!(
+            MethodSpec::from_cli("warp", None, None, None, None, None, None, None).is_err()
+        );
+        assert!(
+            MethodSpec::from_cli("cse", None, Some("bogus"), None, None, None, None, None)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn cli_compression_resolution() {
+        let cli = |compress: Option<&str>, bits: Option<&str>, topk: Option<&str>| {
+            MethodSpec::from_cli("cse", None, Some("2"), None, None, compress, bits, topk)
+        };
+        // Defaults: quantize -> 8 bits, topk -> 25%.
+        assert_eq!(
+            cli(Some("quantize"), None, None).unwrap().compression,
+            Compression::Quantize { bits: 8 }
+        );
+        assert_eq!(
+            cli(Some("topk"), None, None).unwrap().compression,
+            Compression::TopK { frac: 0.25 }
+        );
+        // Explicit parameters.
+        assert_eq!(
+            cli(Some("quantize"), Some("4"), None).unwrap().compression,
+            Compression::Quantize { bits: 4 }
+        );
+        assert_eq!(
+            cli(Some("topk"), None, Some("0.1")).unwrap().compression,
+            Compression::TopK { frac: 0.1 }
+        );
+        // Aliases and the explicit none.
+        assert_eq!(
+            cli(Some("q"), Some("2"), None).unwrap().compression,
+            Compression::Quantize { bits: 2 }
+        );
+        assert_eq!(
+            cli(Some("top-k"), None, None).unwrap().compression,
+            Compression::TopK { frac: 0.25 }
+        );
+        assert_eq!(cli(Some("none"), None, None).unwrap().compression, Compression::None);
+        assert_eq!(cli(None, None, None).unwrap().compression, Compression::None);
+        // Mismatched parameter flags are rejected, not ignored.
+        assert!(cli(None, Some("4"), None).is_err(), "--bits without --compress");
+        assert!(cli(None, None, Some("0.5")).is_err(), "--topk without --compress");
+        assert!(cli(Some("quantize"), None, Some("0.5")).is_err());
+        assert!(cli(Some("topk"), Some("4"), None).is_err());
+        assert!(cli(Some("none"), Some("4"), None).is_err());
+        // Bad values are rejected by parse or validation.
+        assert!(cli(Some("zip"), None, None).is_err());
+        assert!(cli(Some("quantize"), Some("0"), None).is_err());
+        assert!(cli(Some("quantize"), Some("99"), None).is_err());
+        assert!(cli(Some("topk"), None, Some("1.5")).is_err());
+        assert!(cli(Some("topk"), None, Some("x")).is_err());
     }
 
     #[test]

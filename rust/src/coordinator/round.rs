@@ -2,7 +2,7 @@
 //! aggregation — Algorithms 1 & 2 of the paper, for **any**
 //! [`MethodSpec`] point (the four paper methods are presets of it).
 //!
-//! The trainer branches exclusively on the spec's three axes:
+//! The trainer branches exclusively on the spec's four axes:
 //!
 //! - [`ClientUpdate`] picks the round shape — `AuxLocal` runs the
 //!   fire-and-forget local round (Algorithm 1), `ServerGrad { clip }`
@@ -11,7 +11,15 @@
 //!   upload amortizes (`batches_at(t)` — h per round, possibly
 //!   adaptive);
 //! - [`ServerTopology`] (refined by `TrainConfig::server_shards`)
-//!   decides the server-side copy layout.
+//!   decides the server-side copy layout;
+//! - [`Compression`] decides what each smashed upload (and, for the
+//!   server-grad rule, each gradient download) costs on the wire. The
+//!   codec runs sender-side as a compress → decompress round trip: the
+//!   receiver trains on the dequantized tensor, the ledger records the
+//!   compressed wire size, and the stochastic-rounding rng is split off
+//!   the round snapshot so the transform is schedule-independent.
+//!
+//! [`Compression`]: super::methods::Compression
 //!
 //! One **communication round** = one upload wave: each participating
 //! client trains its scheduled local batches and uploads its smashed
@@ -101,7 +109,7 @@ use crate::util::prng::Rng;
 
 use super::client::ClientState;
 use super::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
-use super::methods::{ClientUpdate, ServerTopology};
+use super::methods::{ClientUpdate, Compression, ServerTopology};
 use super::population::{AggEvent, PopulationSetup, PopulationState, SparseCosts};
 
 use super::server::{ServerState, ShardMap, SmashedMsg, Topology};
@@ -258,12 +266,17 @@ struct LocalOutcome {
 /// (engine steps, delay draws, span endpoints, byte records) is shared
 /// code, not merely equivalent code. `round_rng` is the trainer-stream
 /// snapshot for this round; `i` the canonical client id.
+/// `smashed_bytes` is the **wire** size of one upload under
+/// `compression` (the trainer's `smashed_bytes()`), and the uploaded
+/// tensor is the codec's compress → decompress round trip of the
+/// forward output — the server trains on what actually arrived.
 #[allow(clippy::too_many_arguments)]
 fn run_local_client<E: SplitEngine>(
     engine: &E,
     train: &Dataset,
     h: usize,
     lr: f32,
+    compression: Compression,
     smashed_bytes: u64,
     label_bytes: u64,
     round_rng: &Rng,
@@ -287,7 +300,12 @@ fn run_local_client<E: SplitEngine>(
     }
     // Smashed data of the *updated* model on the last batch
     // (Algorithm 1 line 9: g_{x^{t,h}}(z)).
-    let smashed = engine.client_fwd(&c.xc, &c.images, last_seed)?;
+    let mut smashed = engine.client_fwd(&c.xc, &c.images, last_seed)?;
+    if compression != Compression::None {
+        // Lossy wire round trip, seeded off the round snapshot per
+        // client id (non-mutating split) — schedule-independent.
+        smashed = compression.apply(&smashed, &round_rng.split(i as u64 ^ 0xB6));
+    }
     let mut drng = round_rng.split(i as u64);
     let t_compute = c.profile.compute_delay(h, &mut drng);
     let t_up = c.profile.upload_delay(payload, &mut drng);
@@ -560,8 +578,14 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         self.population.as_ref().map_or(self.clients.len(), |p| p.activated())
     }
 
+    /// Wire bytes of one smashed upload (and of one gradient downlink,
+    /// which carries the same tensor shape): the spec's compression
+    /// codec applied to the batch's element count. At
+    /// `Compression::None` this is exactly the historical
+    /// `batch × smashed_per_sample` bytes.
     fn smashed_bytes(&self) -> u64 {
-        self.engine.batch() as u64 * self.wires.smashed_per_sample
+        let elems = self.engine.batch() as u64 * (self.wires.smashed_per_sample / 4);
+        self.cfg.spec.compression.wire_bytes(elems)
     }
 
     fn label_bytes(&self) -> u64 {
@@ -758,6 +782,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     ) -> Result<(), EngineError> {
         let engine = self.engine;
         let train = self.train;
+        let compression = self.cfg.spec.compression;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         // Snapshot of the trainer stream: `split` derives child streams
@@ -778,6 +803,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     train,
                     h,
                     lr,
+                    compression,
                     smashed_bytes,
                     label_bytes,
                     &round_rng,
@@ -832,6 +858,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         // Phase 1: forwards + uploads (parallel across clients).
         let engine = self.engine;
         let train = self.train;
+        let compression = self.cfg.spec.compression;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         let payload = smashed_bytes + label_bytes;
@@ -848,7 +875,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 let start = c.ready_at;
                 c.load_batch(train);
                 let seed = c.next_seed();
-                let smashed = engine.client_fwd(&c.xc, &c.images, seed)?;
+                let mut smashed = engine.client_fwd(&c.xc, &c.images, seed)?;
+                if compression != Compression::None {
+                    // Same uplink codec + rng tag as the aux-local round.
+                    smashed =
+                        compression.apply(&smashed, &round_rng.split(i as u64 ^ 0xB6));
+                }
                 let mut drng = round_rng.split(i as u64 ^ 0x5F);
                 let t_fwd = c.profile.compute_delay(1, &mut drng) * 0.5;
                 let t_up = c.profile.upload_delay(payload, &mut drng);
@@ -928,14 +960,18 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 self.timeline.record(SpanKind::Download, Some(i), done, done + t_down, "grads");
                 self.ledger.record(i, MsgKind::GradDownload, grad_bytes);
 
-                let (new_xc, gnorm) = self.engine.client_bwd(
-                    &c.xc,
-                    &c.images,
-                    &out.grad_smashed,
-                    lr,
-                    p.seed,
-                    clip,
-                )?;
+                // The gradient downlink crosses the same lossy codec as
+                // the uplink; the client backward consumes what actually
+                // arrived. Phase 2 is sequential, but the split is
+                // non-mutating anyway — a fresh per-(round, client) tag
+                // off the trainer stream.
+                let grad = if compression == Compression::None {
+                    out.grad_smashed
+                } else {
+                    compression.apply(&out.grad_smashed, &self.rng.split(i as u64 ^ 0xE9))
+                };
+                let (new_xc, gnorm) =
+                    self.engine.client_bwd(&c.xc, &c.images, &grad, lr, p.seed, clip)?;
                 c.xc = new_xc;
                 client_gnorms.push(gnorm);
                 let t_bwd = c.profile.compute_delay(1, &mut drng) * 0.5;
@@ -1229,6 +1265,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     ) -> Result<(), EngineError> {
         let engine = self.engine;
         let train = self.train;
+        let compression = self.cfg.spec.compression;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         let round_rng = self.rng.clone();
@@ -1259,6 +1296,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     train,
                     h,
                     lr,
+                    compression,
                     smashed_bytes,
                     label_bytes,
                     &round_rng,

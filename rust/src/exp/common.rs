@@ -1082,6 +1082,14 @@ mod tests {
         other.method.topology = crate::coordinator::methods::ServerTopology::PerClient;
         assert_ne!(base.key(), other.key(), "topology must join the key");
         assert!(other.key().contains("aux+p5+pc"), "{}", other.key());
+        // The wire codec changes results, so it moves the method
+        // segment of the key (and demotes the preset to a spec tag).
+        let mut other = base.clone();
+        other.method = other
+            .method
+            .with_compression(crate::coordinator::methods::Compression::Quantize { bits: 4 });
+        assert_ne!(base.key(), other.key());
+        assert!(other.key().contains("+q4"), "{}", other.key());
         // Parallelism must NOT change the key: threaded runs are
         // bit-identical to sequential ones and share the cache.
         let mut other = base.clone();
@@ -1176,6 +1184,105 @@ mod tests {
         let novel = base(Method::FslAn.spec().with_period(4));
         assert_eq!(novel.key(), format!("cifar-cnn27-aux+p4+pc-h4-{tail}"));
         assert_eq!(novel.label(), "aux+p4+pc");
+    }
+
+    #[test]
+    fn stream_threshold_boundary_routes_exactly_at_4096() {
+        // The resident/streaming hand-off is a documented contract
+        // ("at or above" STREAM_THRESHOLD) with different memory and
+        // participation semantics on each side — pin the boundary at
+        // 4095/4096/4097 so an off-by-one in the `>=` can never slip
+        // in silently. `clients_activated` tells the engines apart:
+        // the resident trainer materializes every client up front
+        // (activated == n), the population engine only the sampled
+        // cohorts (activated <= participation * rounds).
+        let dir = std::env::temp_dir().join(format!(
+            "cse_fsl_stream_boundary_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+        // One sample per client keeps the resident arm's materialized
+        // dataset small (cifar sizes the pool as train_per_client * n;
+        // femnist would floor its writer count at n_clients).
+        let mut wl = cifar_workload(Scale::Quick);
+        wl.train_per_client = 1;
+        wl.test = 40;
+        wl.rounds = 1;
+        wl.eval_every = 0;
+        let spec = |n: usize, participation: usize| RunSpec {
+            dataset: "cifar".into(),
+            aux: "cnn27".into(),
+            method: Method::CseFsl.spec(),
+            n_clients: n,
+            participation,
+            dist: Dist::Iid,
+            arrival: ArrivalOrder::ByDelay,
+            lr0: 0.05,
+            seed: 1,
+            workload: wl,
+            parallelism: Parallelism::Sequential,
+            server_shards: 1,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Contiguous,
+        };
+        // 4095 = STREAM_THRESHOLD - 1: resident engine, every client
+        // materialized even though only 2 ever train.
+        let resident = h.run_cached(&spec(STREAM_THRESHOLD - 1, 2)).unwrap();
+        assert_eq!(resident.clients_activated, STREAM_THRESHOLD - 1);
+        // 4096 = STREAM_THRESHOLD: first streaming count ("at or
+        // above"), working set bounded by the sampled cohorts.
+        let streaming = h.run_cached(&spec(STREAM_THRESHOLD, 2)).unwrap();
+        assert!(
+            streaming.clients_activated <= 2,
+            "streaming working set {} exceeds participation * rounds",
+            streaming.clients_activated
+        );
+        assert!(streaming.clients_activated >= 1);
+        // 4097 streams too (the boundary is a threshold, not a point).
+        let above = h.run_cached(&spec(STREAM_THRESHOLD + 1, 2)).unwrap();
+        assert!(above.clients_activated <= 2, "{}", above.clients_activated);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn streaming_participation_zero_auto_caps_at_1024() {
+        // Resident semantics of participation 0 are "everyone"; at
+        // fleet scale run_streaming caps that to min(n, 1024) per
+        // round. Pin the cap: one round at participation 0 must
+        // materialize exactly 1024 clients, not 4096 and not 1023.
+        let dir = std::env::temp_dir().join(format!(
+            "cse_fsl_stream_autocap_{}_{}",
+            std::process::id(),
+            line!()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+        let mut wl = cifar_workload(Scale::Quick);
+        wl.train_per_client = 1;
+        wl.test = 40;
+        wl.rounds = 1;
+        wl.eval_every = 0;
+        let spec = RunSpec {
+            dataset: "cifar".into(),
+            aux: "cnn27".into(),
+            method: Method::CseFsl.spec(),
+            n_clients: STREAM_THRESHOLD,
+            participation: 0,
+            dist: Dist::Iid,
+            arrival: ArrivalOrder::ByDelay,
+            lr0: 0.05,
+            seed: 1,
+            workload: wl,
+            parallelism: Parallelism::Sequential,
+            server_shards: 1,
+            sched: SchedPolicy::RoundRobin,
+            shard_map: ShardMapKind::Contiguous,
+        };
+        let rec = h.run_cached(&spec).unwrap();
+        assert_eq!(rec.clients_activated, 1024, "participation-0 auto-cap");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

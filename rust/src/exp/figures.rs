@@ -7,7 +7,7 @@
 //! paper's *orderings and trends*, restated in each driver's doc.
 
 use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
-use crate::coordinator::methods::Method;
+use crate::coordinator::methods::{Compression, Method};
 use crate::metrics::recorder::RunRecord;
 use crate::sched::SchedPolicy;
 use crate::util::csvio::Csv;
@@ -533,6 +533,82 @@ pub fn fig_h(harness: &mut Harness, scale: Scale) -> Result<String, String> {
          \x20columns.)\n",
     );
     let _ = csv.write_to(&harness.out_dir.join("fig_h.csv"));
+    Ok(out)
+}
+
+/// Repo figure (no paper counterpart): **accuracy vs wire precision** —
+/// the FedLite-style compression axis on the smashed-data uplink.
+/// CSE_FSL at a fixed upload period h = 2 runs once uncompressed and
+/// once per codec point (quantize at 8/4/2 bits, top-k keeping a
+/// quarter of the entries), so the table isolates what lossy smashed
+/// uploads buy and cost: the load column shrinks by the codec's
+/// closed-form wire ratio (`comm::compress::Compression::wire_bytes`,
+/// pinned against the ledger by `comm_properties`) while the accuracy
+/// column shows the gradient-quality price of each precision. Labels,
+/// model exchanges, and the simulated schedule's cost priors are
+/// untouched by the codec — only the tensor bytes on the wire move.
+/// Workloads are pinned to the `ci` preset even at `--scale paper`
+/// (like `figure k`/`figure h`; EXPERIMENTS.md documents the protocol).
+pub fn fig_b(harness: &mut Harness, scale: Scale) -> Result<String, String> {
+    let w = cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale });
+    let codecs: &[Compression] = match scale {
+        Scale::Quick => &[
+            Compression::None,
+            Compression::Quantize { bits: 4 },
+        ],
+        _ => &[
+            Compression::None,
+            Compression::Quantize { bits: 8 },
+            Compression::Quantize { bits: 4 },
+            Compression::Quantize { bits: 2 },
+            Compression::TopK { frac: 0.25 },
+        ],
+    };
+    let base = base_spec("cifar", "cnn27", w);
+    let mut out = String::from(
+        "== Accuracy vs wire precision (CSE_FSL h=2, smashed-data codec) ==\n",
+    );
+    out.push_str(&format!(
+        "{:<16} {:>11} {:>10} {:>11} {:>12}\n",
+        "series", "codec", "final_acc", "load_gb", "sim_time_s"
+    ));
+    let mut csv = Csv::new(&[
+        "series",
+        "codec",
+        "final_accuracy",
+        "load_gb",
+        "sim_time",
+    ]);
+    for &codec in codecs {
+        let spec = RunSpec {
+            method: Method::CseFsl.spec().with_period(2).with_compression(codec),
+            ..base.clone()
+        };
+        let rec = harness.run_cached(&spec)?;
+        out.push_str(&format!(
+            "{:<16} {:>11} {:>9.1}% {:>11.4} {:>12.2}\n",
+            rec.label,
+            codec,
+            rec.final_accuracy * 100.0,
+            rec.total_gb(),
+            rec.sim_time,
+        ));
+        csv.row(&[
+            rec.label.clone(),
+            codec.to_string(),
+            format!("{:.4}", rec.final_accuracy),
+            format!("{:.6}", rec.total_gb()),
+            format!("{:.4}", rec.sim_time),
+        ]);
+    }
+    out.push_str(
+        "(the uncompressed row is the CSE_FSL preset under its historical cache\n\
+         \x20key; codec rows pay fewer wire bytes per smashed upload at the accuracy\n\
+         \x20cost of coarser activations. Load shrinks by the codec's closed-form\n\
+         \x20ratio — ~bits/32 for quantize, ~2·frac for top-k (index+value pairs) —\n\
+         \x20while labels and model exchanges stay full precision.)\n",
+    );
+    let _ = csv.write_to(&harness.out_dir.join("fig_b.csv"));
     Ok(out)
 }
 

@@ -4,16 +4,17 @@
 //!   run      one training run (any method-spec point: preset --method,
 //!            or composed --update/--upload-every/--clip/--topology),
 //!            prints the round table and summary
-//!   figure   regenerate a figure (3|4|5|6|7|8|9|k|h|all; `k` is the
+//!   figure   regenerate a figure (3|4|5|6|7|8|9|k|h|b|all; `k` is the
 //!            repo's accuracy-vs-shards staleness figure, `h` the
-//!            upload-period x topology figure)
+//!            upload-period x topology figure, `b` the accuracy-vs-bits
+//!            compression figure)
 //!   table    regenerate a paper table (2|3|4|5|all)
 //!   inspect  show the AOT artifact manifest
 //!
 //! Everything requires `make artifacts` to have produced `artifacts/`.
 
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism};
-use cse_fsl::coordinator::methods::MethodSpec;
+use cse_fsl::coordinator::methods::{Compression, MethodSpec};
 use cse_fsl::exp::common::{
     cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale,
     STREAM_THRESHOLD,
@@ -100,6 +101,20 @@ fn cmd_run(argv: &[String]) -> i32 {
             "server-topology axis: per-client | shared; overrides the --method \
              preset's axis",
         )
+        .opt_nodefault(
+            "compress",
+            "wire-compression axis: none | quantize | topk (FedLite-style lossy \
+             codec on smashed uploads, and on grad downlinks for the server-grad \
+             rule; absent = none, full precision)",
+        )
+        .opt_nodefault(
+            "bits",
+            "bits per element of --compress quantize (1..=16; default 8)",
+        )
+        .opt_nodefault(
+            "topk",
+            "kept fraction of --compress topk (in (0, 1]; default 0.25)",
+        )
         .opt(
             "clients",
             "5",
@@ -178,6 +193,9 @@ fn cmd_run(argv: &[String]) -> i32 {
             args.get("upload-every").or_else(|| args.get("h")),
             args.get("clip"),
             args.get("topology"),
+            args.get("compress"),
+            args.get("bits"),
+            args.get("topk"),
         )?;
         let spec = RunSpec {
             dataset,
@@ -206,6 +224,9 @@ fn cmd_run(argv: &[String]) -> i32 {
         let mut harness = Harness::with_engine(args.get("out").unwrap(), engine)?;
         let rec = harness.run_cached(&spec)?;
         println!("== {} [engine: {}] ==", rec.label, harness.backend());
+        if spec.method.compression != Compression::None {
+            println!("wire compression: {}", spec.method.compression);
+        }
         println!("round  train_loss  server_loss  acc");
         for r in &rec.rounds {
             println!(
@@ -282,7 +303,7 @@ fn cmd_figure(argv: &[String]) -> i32 {
         let mut harness = Harness::with_engine(&out, engine)?;
         println!("(engine backend: {})", harness.backend());
         let ids: Vec<&str> = if id == "all" {
-            vec!["3", "4", "5", "6", "7", "8", "9", "k", "h"]
+            vec!["3", "4", "5", "6", "7", "8", "9", "k", "h", "b"]
         } else {
             vec![id.as_str()]
         };
@@ -297,7 +318,8 @@ fn cmd_figure(argv: &[String]) -> i32 {
                 "9" => figures::fig9(&mut harness, scale)?,
                 "k" | "staleness" => figures::fig_staleness(&mut harness, scale)?,
                 "h" | "period" => figures::fig_h(&mut harness, scale)?,
-                other => return Err(format!("no figure {other} (have 3-9, k, h)")),
+                "b" | "bits" => figures::fig_b(&mut harness, scale)?,
+                other => return Err(format!("no figure {other} (have 3-9, k, h, b)")),
             };
             println!("{report}");
         }

@@ -1,15 +1,15 @@
 //! Wire- and storage-accounting properties (util/prop harness): across
-//! random `(method, n, h, agg_every, rounds, parallelism, server_shards)`
-//! configurations the live `CommLedger` must equal the generalized
-//! closed forms in `comm::accounting::predict` (which reduce to the
-//! paper's Table II per-epoch forms), the ledger's client-side and
-//! server-side views must conserve bytes per message kind, and the
-//! server's resident parameters must equal the
+//! random `(method, n, h, agg_every, rounds, parallelism, server_shards,
+//! compression)` configurations the live `CommLedger` must equal the
+//! generalized closed forms in `comm::accounting::predict` (which reduce
+//! to the paper's Table II per-epoch forms at `Compression::None`), the
+//! ledger's client-side and server-side views must conserve bytes per
+//! message kind, and the server's resident parameters must equal the
 //! `comm::accounting::storage` closed form for every shard count k.
 
 use cse_fsl::comm::accounting::{predict, storage as storage_form, table2, MsgKind, WireSizes};
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
-use cse_fsl::coordinator::methods::{Method, ServerTopology};
+use cse_fsl::coordinator::methods::{Compression, Method, ServerTopology};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
@@ -32,6 +32,16 @@ fn random_parallelism(rng: &mut Rng) -> Parallelism {
     }
 }
 
+fn random_compression(rng: &mut Rng) -> Compression {
+    match rng.below(3) {
+        0 => Compression::None,
+        1 => Compression::Quantize { bits: 2 + rng.below(7) as u8 },
+        // frac on a fixed grid inside (0, 1] — the formulas must hold
+        // at any kept fraction, including frac = 1 (all entries kept).
+        _ => Compression::TopK { frac: (1 + rng.below(20) as u32) as f32 / 20.0 },
+    }
+}
+
 /// A random trainer run; returns the trainer (ledger inspection) plus
 /// the configuration numbers the closed forms need.
 struct RandomRun {
@@ -41,6 +51,7 @@ struct RandomRun {
     rounds: usize,
     agg_every: usize,
     server_shards: usize,
+    compression: Compression,
     batch: usize,
     server_size: usize,
     wires: WireSizes,
@@ -65,6 +76,9 @@ fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> 
         ServerTopology::PerClient => 1,
         ServerTopology::Shared => 1 + rng.below(n as u64) as usize,
     };
+    // The wire codec composes with every preset (it is a spec axis, not
+    // a method): the closed forms must track the ledger at any point.
+    let compression = random_compression(rng);
     let e = MockEngine::small(rng.next_u64());
     let train = generate(&spec(), n * 16, rng.next_u64());
     let test = generate(&spec(), 8, rng.next_u64());
@@ -75,7 +89,7 @@ fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> 
         participation: participation.min(n),
         parallelism: random_parallelism(rng),
         server_shards,
-        ..TrainConfig::new(method).with_h(h)
+        ..TrainConfig::new(method).with_h(h).with_compression(compression)
     };
     let setup = TrainerSetup {
         train: &train,
@@ -96,6 +110,7 @@ fn run_random(rng: &mut Rng, participation: usize) -> Result<RandomRun, String> 
         rounds,
         agg_every,
         server_shards,
+        compression,
         batch: e.batch,
         server_size: e.server_size(),
         wires: WireSizes::new(e.smashed_len, e.client_size(), e.aux_size()),
@@ -114,6 +129,7 @@ fn prop_ledger_matches_generalized_closed_forms() {
         let p = r.method.spec().traffic();
         let expected = predict::run_kind_bytes(
             p,
+            r.compression,
             r.n as u64,
             r.batch as u64,
             r.rounds as u64,
@@ -123,8 +139,9 @@ fn prop_ledger_matches_generalized_closed_forms() {
         for (kind, bytes) in expected {
             prop_assert!(
                 r.ledger.bytes_of(kind) == bytes,
-                "{} n={} h={} rounds={} agg={}: {kind:?} measured {} != predicted {bytes}",
+                "{} {} n={} h={} rounds={} agg={}: {kind:?} measured {} != predicted {bytes}",
                 r.method,
+                r.compression,
                 r.n,
                 r.h,
                 r.rounds,
@@ -134,6 +151,7 @@ fn prop_ledger_matches_generalized_closed_forms() {
         }
         let (up, down) = predict::run_totals(
             p,
+            r.compression,
             r.n as u64,
             r.batch as u64,
             r.rounds as u64,
@@ -202,10 +220,13 @@ fn prop_generalized_forms_reduce_to_table2_epoch_forms() {
             1 + rng.below(200_000) as usize,
             1 + rng.below(50_000) as usize,
         );
-        // CSE_FSL_h epoch: |D_i| = batch*h*rounds, aggregate once.
+        // CSE_FSL_h epoch: |D_i| = batch*h*rounds, aggregate once. The
+        // Table II forms predate the wire codec, so the reduction holds
+        // at Compression::None (the codec-free point of the axis).
         let d_cse = batch * h * rounds;
         let p = predict::TrafficProfile::AuxLocal;
-        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        let (up, down) =
+            predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
         prop_assert!(
             up + down == table2::cse_fsl(n, d_cse, h, &w),
             "CSE: {} != table2 {}",
@@ -215,10 +236,12 @@ fn prop_generalized_forms_reduce_to_table2_epoch_forms() {
         // FSL_MC / FSL_AN epochs: h = 1, |D_i| = batch*rounds.
         let d1 = batch * rounds;
         let p = predict::TrafficProfile::ServerGrad;
-        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        let (up, down) =
+            predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
         prop_assert!(up + down == table2::fsl_mc(n, d1, &w), "MC mismatch");
         let p = predict::TrafficProfile::AuxLocal;
-        let (up, down) = predict::run_totals(p, n, batch, rounds, rounds, &w);
+        let (up, down) =
+            predict::run_totals(p, Compression::None, n, batch, rounds, rounds, &w);
         prop_assert!(up + down == table2::fsl_an(n, d1, &w), "AN mismatch");
         Ok(())
     });

@@ -1,0 +1,280 @@
+//! Properties of the wire-compression axis (util/prop harness): the
+//! quantizer's reconstruction error is bounded by its closed-form step
+//! size, top-k keeps exactly `ceil(frac * n)` entries (the largest
+//! magnitudes, verbatim), `Compression::None` is byte-invisible at the
+//! RunRecord level (the pre-axis baseline), and the live ledger matches
+//! the compressed closed forms in `comm::accounting::predict` for
+//! random codec draws. The bit-determinism of compressed rounds across
+//! thread counts and dealing policies is pinned separately in
+//! tests/determinism_golden.rs.
+
+use cse_fsl::comm::accounting::{predict, WireSizes};
+use cse_fsl::comm::compress::Compression;
+use cse_fsl::coordinator::config::TrainConfig;
+use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::exp::common::run_to_json;
+use cse_fsl::prop_assert;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::runtime::SplitEngine;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn random_tensor(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn prop_quantize_error_is_bounded_by_the_step_size() {
+    prop::check("quantize error <= (max-min)/(2^bits - 1)", |rng| {
+        let len = 1 + rng.below(256) as usize;
+        let bits = 1 + rng.below(12) as u8;
+        let v = random_tensor(rng, len);
+        let q = Compression::Quantize { bits };
+        let out = q.apply(&v, &Rng::new(rng.next_u64()));
+        prop_assert!(out.len() == v.len(), "length changed: {} -> {}", v.len(), out.len());
+        let min = v.iter().cloned().fold(f32::INFINITY, f32::min);
+        let max = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let levels = (1u32 << bits) - 1;
+        let step = ((max - min) / levels as f32) as f64;
+        // Stochastic rounding moves a value at most one full grid step
+        // (round-to-nearest would give step/2; the unbiased rounder
+        // trades that for zero-mean error). Small slack for the f32
+        // arithmetic of the reconstruction.
+        let tol = step * (1.0 + 1e-3) + 1e-5;
+        for (i, (&x, &y)) in v.iter().zip(out.iter()).enumerate() {
+            let err = (y as f64 - x as f64).abs();
+            prop_assert!(
+                err <= tol,
+                "bits={bits} len={len} i={i}: |{y} - {x}| = {err} > step {step}"
+            );
+            prop_assert!(
+                (min as f64 - 1e-5..=max as f64 + 1e-5).contains(&(y as f64)),
+                "bits={bits} i={i}: {y} escapes the input range [{min}, {max}]"
+            );
+        }
+        // The range endpoints are exact grid points, so they survive
+        // quantization bit-for-bit whatever the stochastic draws did.
+        for (i, &x) in v.iter().enumerate() {
+            if x == min || x == max {
+                prop_assert!(out[i] == x, "endpoint {x} at {i} moved to {}", out[i]);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_keeps_exactly_ceil_frac_n_largest_entries() {
+    prop::check("topk keeps ceil(frac*n) largest magnitudes verbatim", |rng| {
+        let n = 1 + rng.below(300) as usize;
+        let frac = (1 + rng.below(20) as u32) as f32 / 20.0;
+        // Distinct nonzero magnitudes (1..=n, shuffled, random signs) so
+        // "kept" vs "dropped" is unambiguous and countable.
+        let mut v: Vec<f32> = (0..n)
+            .map(|i| {
+                let mag = (i + 1) as f32;
+                if rng.below(2) == 0 {
+                    mag
+                } else {
+                    -mag
+                }
+            })
+            .collect();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            v.swap(i, j);
+        }
+        let t = Compression::TopK { frac };
+        let out = t.apply(&v, &Rng::new(rng.next_u64()));
+        prop_assert!(out.len() == v.len(), "length changed");
+        let kept = Compression::kept_count(frac, n as u64) as usize;
+        prop_assert!(
+            kept == (frac as f64 * n as f64).ceil() as usize,
+            "kept_count {kept} != ceil({frac} * {n})"
+        );
+        let survivors: Vec<usize> = (0..n).filter(|&i| out[i] != 0.0).collect();
+        prop_assert!(
+            survivors.len() == kept,
+            "n={n} frac={frac}: {} survivors != kept {kept}",
+            survivors.len()
+        );
+        let min_kept =
+            survivors.iter().map(|&i| v[i].abs()).fold(f32::INFINITY, f32::min);
+        for i in 0..n {
+            if out[i] != 0.0 {
+                // Survivors pass through verbatim (top-k sparsifies, it
+                // does not re-encode the kept values).
+                prop_assert!(out[i] == v[i], "survivor {i}: {} != {}", out[i], v[i]);
+            } else {
+                prop_assert!(
+                    v[i].abs() <= min_kept,
+                    "dropped |{}| at {i} outranks kept minimum {min_kept}",
+                    v[i]
+                );
+            }
+        }
+        // The wire cost is the sparse encoding: kept (index, value) pairs.
+        prop_assert!(
+            t.wire_bytes(n as u64) == kept as u64 * 8,
+            "wire_bytes {} != {kept} * 8",
+            t.wire_bytes(n as u64)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_apply_is_deterministic_in_the_rng() {
+    prop::check("equal rng => equal output", |rng| {
+        let v = random_tensor(rng, 1 + rng.below(128) as usize);
+        let seed = rng.next_u64();
+        for c in [
+            Compression::None,
+            Compression::Quantize { bits: 1 + rng.below(16) as u8 },
+            Compression::TopK { frac: (1 + rng.below(20) as u32) as f32 / 20.0 },
+        ] {
+            let a = c.apply(&v, &Rng::new(seed));
+            let b = c.apply(&v, &Rng::new(seed));
+            prop_assert!(a == b, "{c} is not deterministic given an equal rng");
+        }
+        Ok(())
+    });
+}
+
+/// One small CSE_FSL run over the mock engine at a given codec.
+fn run_record(compression: Compression) -> cse_fsl::metrics::recorder::RunRecord {
+    let e = MockEngine::small(42);
+    let train = generate(&spec(), 64, 5);
+    let test = generate(&spec(), 16, 6);
+    let cfg = TrainConfig {
+        rounds: 6,
+        agg_every: 2,
+        eval_every: 3,
+        eval_max_batches: 2,
+        ..TrainConfig::new(Method::CseFsl).with_h(2).with_compression(compression)
+    };
+    let setup = TrainerSetup {
+        train: &train,
+        test: &test,
+        partition: iid(&train, 4, &mut Rng::new(7)),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "codec".into(),
+    };
+    let mut tr = Trainer::new(&e, cfg, setup).unwrap();
+    tr.run().unwrap()
+}
+
+#[test]
+fn compression_none_is_byte_invisible_and_lossy_codecs_are_not() {
+    // `Compression::None` is the pre-axis baseline: a config that never
+    // mentions the axis and one that names it explicitly must produce
+    // byte-identical RunRecord JSON — the new axis default cannot move
+    // any recorded number. A lossy codec on the same seed must move
+    // them (coarser activations change the training trajectory and the
+    // wire bytes).
+    let implicit = {
+        let e = MockEngine::small(42);
+        let train = generate(&spec(), 64, 5);
+        let test = generate(&spec(), 16, 6);
+        let cfg = TrainConfig {
+            rounds: 6,
+            agg_every: 2,
+            eval_every: 3,
+            eval_max_batches: 2,
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
+        };
+        let setup = TrainerSetup {
+            train: &train,
+            test: &test,
+            partition: iid(&train, 4, &mut Rng::new(7)),
+            net: NetModel::edge_default(),
+            client_layout: None,
+            server_layout: None,
+            aux_layout: None,
+            label: "codec".into(),
+        };
+        let mut tr = Trainer::new(&e, cfg, setup).unwrap();
+        tr.run().unwrap()
+    };
+    let explicit_none = run_record(Compression::None);
+    assert_eq!(
+        run_to_json(&implicit).pretty(),
+        run_to_json(&explicit_none).pretty(),
+        "Compression::None must be byte-identical to never naming the axis"
+    );
+    let q4 = run_record(Compression::Quantize { bits: 4 });
+    assert_ne!(
+        run_to_json(&explicit_none).pretty(),
+        run_to_json(&q4).pretty(),
+        "a lossy codec must change the run"
+    );
+    // And repeated compressed runs reproduce bit-for-bit.
+    let q4_again = run_record(Compression::Quantize { bits: 4 });
+    assert_eq!(run_to_json(&q4).pretty(), run_to_json(&q4_again).pretty());
+}
+
+#[test]
+fn prop_compressed_ledger_matches_predicted_closed_forms() {
+    prop::check("compressed ledger == predict closed forms", |rng| {
+        let compression = match rng.below(3) {
+            0 => Compression::None,
+            1 => Compression::Quantize { bits: 1 + rng.below(16) as u8 },
+            _ => Compression::TopK { frac: (1 + rng.below(20) as u32) as f32 / 20.0 },
+        };
+        let n = 1 + rng.below(4) as usize;
+        let method = Method::ALL[rng.below(4) as usize];
+        let rounds = 1 + rng.below(6) as usize;
+        let agg_every = 1 + rng.below(rounds as u64 + 2) as usize;
+        let e = MockEngine::small(rng.next_u64());
+        let train = generate(&spec(), n * 16, rng.next_u64());
+        let test = generate(&spec(), 8, rng.next_u64());
+        let cfg = TrainConfig {
+            rounds,
+            agg_every,
+            eval_every: 0,
+            ..TrainConfig::new(method).with_compression(compression)
+        };
+        let setup = TrainerSetup {
+            train: &train,
+            test: &test,
+            partition: iid(&train, n, &mut Rng::new(rng.next_u64())),
+            net: NetModel::edge_default(),
+            client_layout: None,
+            server_layout: None,
+            aux_layout: None,
+            label: "prop".into(),
+        };
+        let mut tr = Trainer::new(&e, cfg, setup)?;
+        tr.run().map_err(|e| e.to_string())?;
+        let wires = WireSizes::new(e.smashed_len, e.client_size(), e.aux_size());
+        let expected = predict::run_kind_bytes(
+            method.spec().traffic(),
+            compression,
+            n as u64,
+            e.batch as u64,
+            rounds as u64,
+            agg_every as u64,
+            &wires,
+        );
+        for (kind, bytes) in expected {
+            prop_assert!(
+                tr.ledger.bytes_of(kind) == bytes,
+                "{method} {compression} n={n} rounds={rounds} agg={agg_every}: \
+                 {kind:?} measured {} != predicted {bytes}",
+                tr.ledger.bytes_of(kind)
+            );
+        }
+        Ok(())
+    });
+}

@@ -16,7 +16,7 @@
 use cse_fsl::comm::accounting::CommLedger;
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 use cse_fsl::coordinator::methods::{
-    ClientUpdate, Method, MethodSpec, ServerTopology, UploadSchedule,
+    ClientUpdate, Compression, Method, MethodSpec, ServerTopology, UploadSchedule,
 };
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::{iid, Partition};
@@ -799,6 +799,7 @@ fn aux_period_per_client_scenario_golden() {
         update: ClientUpdate::AuxLocal,
         upload: UploadSchedule::period(2),
         topology: ServerTopology::PerClient,
+        compression: Compression::None,
     };
     assert_eq!(novel, Method::FslAn.spec().with_period(2));
     assert_eq!(novel.preset(), None, "must be a spec-only point");
@@ -860,6 +861,109 @@ fn aux_period_per_client_scenario_golden() {
     );
     assert_ne!(seq.json, an_h1.json, "the period must change results vs FSL_AN");
     assert_ne!(seq.json, cse_h2.json, "the topology must change results vs CSE_FSL h=2");
+}
+
+#[test]
+fn compressed_rounds_keep_the_bit_determinism_contract() {
+    // The wire codec's stochastic rounding draws from a split of the
+    // round snapshot rng, never from worker-local state — so compressed
+    // runs must satisfy the same contract as everything else: any
+    // thread count × any dealing policy is bit-identical to the
+    // sequential reference. Covers both codec sites: the smashed-data
+    // uplink (CSE_FSL, aux-local) and the gradient downlink of the
+    // server-grad rule (FSL_OC phase 2).
+    let train = dataset(120, 23);
+    let test = dataset(24, 24);
+    let run_codec = |method: Method, h: usize, codec: Compression, parallelism, sched| {
+        let e = MockEngine::small(42);
+        let cfg = TrainConfig {
+            parallelism,
+            sched,
+            agg_every: 4,
+            eval_every: 3,
+            eval_max_batches: 2,
+            lr0: 1.0,
+            track_grad_norms: true,
+            ..TrainConfig::new(method).with_h(h).with_compression(codec)
+        }
+        .with_rounds(10);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 5)).unwrap();
+        let rec = tr.run().unwrap();
+        fingerprint(&tr, &rec)
+    };
+    let seq_rr = (Parallelism::Sequential, SchedPolicy::RoundRobin);
+    // Smashed-uplink site: CSE_FSL h=2 at 4 and 8 bits.
+    let uncompressed = run_codec(Method::CseFsl, 2, Compression::None, seq_rr.0, seq_rr.1);
+    for bits in [4u8, 8] {
+        let codec = Compression::Quantize { bits };
+        let seq = run_codec(Method::CseFsl, 2, codec, seq_rr.0, seq_rr.1);
+        assert_ne!(
+            seq.json, uncompressed.json,
+            "quantize{bits} must change results vs full precision"
+        );
+        for sched in SchedPolicy::ALL {
+            for threads in [1usize, 4] {
+                let par =
+                    run_codec(Method::CseFsl, 2, codec, Parallelism::Threads(threads), sched);
+                assert_identical(
+                    &seq,
+                    &par,
+                    &format!("CSE_FSL quantize{bits} sched={sched} threads={threads}"),
+                );
+            }
+        }
+        let again = run_codec(Method::CseFsl, 2, codec, seq_rr.0, seq_rr.1);
+        assert_identical(&seq, &again, &format!("CSE_FSL quantize{bits} repeat invocation"));
+    }
+    // Different precisions are different runs (the axis is live).
+    let q4 = run_codec(
+        Method::CseFsl,
+        2,
+        Compression::Quantize { bits: 4 },
+        Parallelism::Sequential,
+        SchedPolicy::RoundRobin,
+    );
+    let q8 = run_codec(
+        Method::CseFsl,
+        2,
+        Compression::Quantize { bits: 8 },
+        Parallelism::Sequential,
+        SchedPolicy::RoundRobin,
+    );
+    assert_ne!(q4.json, q8.json, "4-bit and 8-bit runs must differ");
+    // Gradient-downlink site: the server-grad rule compresses the
+    // returned gradient too (FSL_OC; phase-2 split off self.rng).
+    let oc = run_codec(
+        Method::FslOc,
+        1,
+        Compression::Quantize { bits: 4 },
+        Parallelism::Sequential,
+        SchedPolicy::RoundRobin,
+    );
+    let oc_none = run_codec(
+        Method::FslOc,
+        1,
+        Compression::None,
+        Parallelism::Sequential,
+        SchedPolicy::RoundRobin,
+    );
+    assert_ne!(oc.json, oc_none.json, "the codec must bite on the grad downlink");
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let par = run_codec(
+                Method::FslOc,
+                1,
+                Compression::Quantize { bits: 4 },
+                Parallelism::Threads(threads),
+                sched,
+            );
+            assert_identical(
+                &oc,
+                &par,
+                &format!("FSL_OC quantize4 sched={sched} threads={threads}"),
+            );
+        }
+    }
 }
 
 #[test]

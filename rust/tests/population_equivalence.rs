@@ -12,7 +12,7 @@
 //! that is what they are for — while still completing cleanly.
 
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
-use cse_fsl::coordinator::methods::Method;
+use cse_fsl::coordinator::methods::{Compression, Method};
 use cse_fsl::coordinator::population::{ClientSource, PopulationSetup};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
@@ -113,6 +113,48 @@ fn population_bit_identical_across_threads_and_sched() {
                 reference.as_bytes(),
                 par.as_bytes(),
                 "sched={sched} threads={threads}: RunRecord diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn compressed_population_bit_identical_to_resident() {
+    // The wire codec runs inside `run_local_client`, which both engines
+    // share — so a compressed population run must stay bit-identical to
+    // the compressed resident reference (same split of the round
+    // snapshot rng on both paths), across thread counts and dealing
+    // policies, while differing from the uncompressed contract run.
+    let train = dataset(120, 1);
+    let test = dataset(24, 2);
+    let compress = |cfg: TrainConfig| TrainConfig {
+        spec: cfg.spec.with_compression(Compression::Quantize { bits: 4 }),
+        ..cfg
+    };
+    let resident = run_resident(&train, &test, compress(config(1, 3, 12)));
+    let streamed = run_population(&train, &test, compress(config(1, 3, 12)));
+    assert_eq!(
+        resident.as_bytes(),
+        streamed.as_bytes(),
+        "quantize4: population RunRecord diverged from resident"
+    );
+    assert_ne!(
+        streamed,
+        run_population(&train, &test, config(1, 3, 12)),
+        "the codec must change results"
+    );
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let cfg = TrainConfig {
+                parallelism: Parallelism::Threads(threads),
+                sched,
+                ..compress(config(1, 3, 12))
+            };
+            let par = run_population(&train, &test, cfg);
+            assert_eq!(
+                streamed.as_bytes(),
+                par.as_bytes(),
+                "quantize4 sched={sched} threads={threads}: RunRecord diverged"
             );
         }
     }

@@ -18,14 +18,15 @@
 use cse_fsl::comm::accounting::MsgKind;
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind, TrainConfig};
 use cse_fsl::coordinator::methods::{
-    ClientUpdate, Method, MethodSpec, ServerTopology, UploadSchedule,
+    ClientUpdate, Compression, Method, MethodSpec, ServerTopology, UploadSchedule,
 };
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
 use cse_fsl::data::Dataset;
 use cse_fsl::exp::common::{
-    femnist_workload, run_to_json, Dist, EngineChoice, Harness, RunSpec, Scale,
+    cifar_workload, femnist_workload, run_to_json, Dist, EngineChoice, Harness, RunSpec,
+    Scale,
 };
 use cse_fsl::runtime::mock::MockEngine;
 use cse_fsl::sched::SchedPolicy;
@@ -82,21 +83,25 @@ fn hand_spec(method: Method) -> MethodSpec {
             update: ClientUpdate::ServerGrad { clip: 0.0 },
             upload: UploadSchedule::EveryBatch,
             topology: ServerTopology::PerClient,
+            compression: Compression::None,
         },
         Method::FslOc => MethodSpec {
             update: ClientUpdate::ServerGrad { clip: 1.0 },
             upload: UploadSchedule::EveryBatch,
             topology: ServerTopology::Shared,
+            compression: Compression::None,
         },
         Method::FslAn => MethodSpec {
             update: ClientUpdate::AuxLocal,
             upload: UploadSchedule::EveryBatch,
             topology: ServerTopology::PerClient,
+            compression: Compression::None,
         },
         Method::CseFsl => MethodSpec {
             update: ClientUpdate::AuxLocal,
             upload: UploadSchedule::EveryBatch,
             topology: ServerTopology::Shared,
+            compression: Compression::None,
         },
     }
 }
@@ -298,5 +303,151 @@ fn novel_scenario_runs_end_to_end_through_the_harness() {
     // Incoherent specs fail before the cache is touched.
     let bad = RunSpec { method: Method::FslMc.spec().with_period(2), ..base };
     assert!(h.run_cached(&bad).unwrap_err().contains("server-grad"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compression_axis_keeps_preset_keys_and_gets_canonical_tags() {
+    // Cache back-compat is a hard acceptance criterion of the
+    // compression axis: `Compression::None` — explicit or defaulted —
+    // must leave every preset key string byte-identical to its pre-axis
+    // literal, while any lossy codec demotes the spec to a canonical
+    // tagged key that can never collide with a preset entry.
+    let base = |method: MethodSpec| RunSpec {
+        dataset: "cifar".into(),
+        aux: "cnn27".into(),
+        method,
+        n_clients: 5,
+        participation: 0,
+        dist: Dist::Iid,
+        arrival: ArrivalOrder::ByDelay,
+        lr0: 0.05,
+        seed: 1,
+        workload: cifar_workload(Scale::Quick),
+        parallelism: Parallelism::Sequential,
+        server_shards: 1,
+        sched: SchedPolicy::RoundRobin,
+        shard_map: ShardMapKind::Contiguous,
+    };
+    let tail = "n5-p0-iid-delay-lr0.05-r4-d100-t100-k1-mcont-s1";
+    for (method, name) in [
+        (Method::FslMc, "FSL_MC"),
+        (Method::FslOc, "FSL_OC"),
+        (Method::FslAn, "FSL_AN"),
+        (Method::CseFsl, "CSE_FSL"),
+    ] {
+        let expected = format!("cifar-cnn27-{name}-h1-{tail}");
+        assert_eq!(base(method.spec()).key(), expected, "{method} defaulted axis");
+        assert_eq!(
+            base(method.spec().with_compression(Compression::None)).key(),
+            expected,
+            "{method} explicit Compression::None"
+        );
+    }
+    // Lossy codecs join the method segment with canonical tags.
+    let q4 = base(
+        Method::CseFsl.spec().with_period(2).with_compression(Compression::Quantize {
+            bits: 4,
+        }),
+    );
+    assert_eq!(q4.key(), format!("cifar-cnn27-aux+p2+sh+q4-h2-{tail}"));
+    assert_eq!(q4.label(), "aux+p2+sh+q4");
+    let topk = base(
+        Method::FslAn.spec().with_compression(Compression::TopK { frac: 0.25 }),
+    );
+    assert_eq!(topk.key(), format!("cifar-cnn27-aux+b+pc+t0.25-h1-{tail}"));
+    // Distinct codec points never share a key.
+    let q8 = base(
+        Method::CseFsl.spec().with_period(2).with_compression(Compression::Quantize {
+            bits: 8,
+        }),
+    );
+    assert_ne!(q4.key(), q8.key());
+}
+
+#[test]
+fn v2_cache_records_written_before_the_compression_axis_still_replay() {
+    // A cache entry written by the pre-axis binary (schema v2, preset
+    // key) must replay verbatim under the new binary: same key string,
+    // same JSON schema, no re-run. The record below is hand-written to
+    // the v2 schema — if `run_cached` ever re-ran the spec, the label
+    // and numbers could not survive.
+    let dir = std::env::temp_dir().join(format!(
+        "cse_fsl_spec_eq_{}_{}",
+        std::process::id(),
+        line!()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    let mut wl = femnist_workload(Scale::Quick);
+    wl.rounds = 4;
+    let spec = RunSpec {
+        dataset: "femnist".into(),
+        aux: "cnn8".into(),
+        method: Method::CseFsl.spec().with_period(2),
+        n_clients: 4,
+        participation: 0,
+        dist: Dist::Iid,
+        arrival: ArrivalOrder::ByDelay,
+        lr0: 0.05,
+        seed: 1,
+        workload: wl,
+        parallelism: Parallelism::Sequential,
+        server_shards: 1,
+        sched: SchedPolicy::RoundRobin,
+        shard_map: ShardMapKind::Contiguous,
+    };
+    // The preset key is the pre-axis literal (pinned end to end).
+    assert_eq!(
+        spec.key(),
+        "femnist-cnn8-CSE_FSL-h2-n4-p0-iid-delay-lr0.05-r4-d60-t120-k1-mcont-s1"
+    );
+    let prerecorded = r#"{
+  "cache_version": 2,
+  "label": "prerecorded v2",
+  "rounds": [
+    {
+      "round": 1,
+      "sim_time": 0.5,
+      "lr": 0.05,
+      "train_loss": 1.25,
+      "server_loss": 1.5,
+      "up_bytes": 1024,
+      "down_bytes": 2048,
+      "accuracy": null,
+      "client_grad_norm": null,
+      "server_grad_norm": null
+    }
+  ],
+  "final_accuracy": 0.75,
+  "total_up_bytes": 1024,
+  "total_down_bytes": 2048,
+  "sim_time": 0.5,
+  "server_idle_fraction": 0.25,
+  "server_storage_params": 64,
+  "shard_label_divergence": 0.0,
+  "clients_activated": 4
+}"#;
+    let cache = dir.join("cache").join("mock").join(format!("{}.json", spec.key()));
+    std::fs::write(&cache, prerecorded).unwrap();
+    let rec = h.run_cached(&spec).unwrap();
+    assert_eq!(rec.label, "prerecorded v2", "the cache entry must replay, not re-run");
+    assert_eq!(rec.rounds.len(), 1);
+    assert_eq!(rec.final_accuracy, 0.75);
+    assert_eq!(rec.total_up_bytes, 1024);
+    assert_eq!(rec.clients_activated, 4);
+    // A compressed spec at the same point does NOT hit that entry — it
+    // lives under its own tagged key, so it runs (rounds == workload).
+    let compressed = RunSpec {
+        method: Method::CseFsl
+            .spec()
+            .with_period(2)
+            .with_compression(Compression::Quantize { bits: 4 }),
+        ..spec
+    };
+    assert!(compressed.key().contains("-aux+p2+sh+q4-h2-"), "{}", compressed.key());
+    let crec = h.run_cached(&compressed).unwrap();
+    assert_eq!(crec.rounds.len(), 4);
+    assert_ne!(crec.label, "prerecorded v2");
     let _ = std::fs::remove_dir_all(&dir);
 }
