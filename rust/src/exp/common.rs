@@ -339,8 +339,9 @@ impl EngineChoice {
 }
 
 /// FNV-1a over a string — stable seeds for per-(dataset, aux) mock
-/// engines, so different aux arms train visibly differently.
-fn fnv64(s: &str) -> u64 {
+/// engines, and content digests for the sweep journal's cached-record
+/// verification ([`super::sweep`]).
+pub(crate) fn fnv64(s: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for b in s.bytes() {
         h ^= b as u64;
@@ -553,6 +554,14 @@ impl Harness {
         let dir = self.out_dir.join("cache");
         let dir = if self.mock_mode() { dir.join("mock") } else { dir };
         dir.join(format!("{}.json", spec.key()))
+    }
+
+    /// Public accessor for the cache file of one spec (the path
+    /// [`Harness::run_cached`] reads and writes). The sweep journal
+    /// records this path, relative to [`Harness::out_dir`], as a
+    /// trial's durable output location.
+    pub fn cache_file(&self, spec: &RunSpec) -> PathBuf {
+        self.cache_path(spec)
     }
 
     /// Run (or load from cache) one spec on the resolved backend.
@@ -1393,5 +1402,110 @@ mod tests {
         let t = curve_table("fig", &[&rec]);
         assert!(t.contains("42.0%"));
         assert!(t.contains("CSE_FSL h=5"));
+    }
+
+    #[test]
+    fn scale_aliases_roundtrip_exhaustively() {
+        // Every alias → variant pair, and Display round-trips.
+        for (alias, want) in [
+            ("quick", Scale::Quick),
+            ("smoke", Scale::Quick),
+            ("ci", Scale::Ci),
+            ("paper", Scale::Paper),
+        ] {
+            assert_eq!(Scale::parse(alias), Some(want), "{alias}");
+            assert_eq!(Scale::parse(&want.to_string()), Some(want));
+        }
+        // Scale::parse is case-SENSITIVE (CLI values are lowercase by
+        // contract) — pin that so a lowercasing change is deliberate.
+        for bad in ["QUICK", "Quick", "Ci", "PAPER", "fast", ""] {
+            assert_eq!(Scale::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn dist_aliases_roundtrip_exhaustively() {
+        for (alias, want) in [
+            ("iid", Dist::Iid),
+            ("dir", Dist::NonIidDirichlet),
+            ("dirichlet", Dist::NonIidDirichlet),
+            ("writer", Dist::NonIidWriter),
+            ("by-writer", Dist::NonIidWriter),
+        ] {
+            assert_eq!(Dist::parse(alias), Some(want), "{alias}");
+        }
+        // Dist::parse lowercases its input (unlike Scale::parse).
+        for (alias, want) in [
+            ("DIR", Dist::NonIidDirichlet),
+            ("Writer", Dist::NonIidWriter),
+            ("IID", Dist::Iid),
+        ] {
+            assert_eq!(Dist::parse(alias), Some(want), "{alias}");
+        }
+        for bad in ["niid", "by_writer", "dirichlet(0.5)", ""] {
+            assert_eq!(Dist::parse(bad), None, "{bad:?}");
+        }
+        // Tags round-trip (the documented contract).
+        for d in [Dist::Iid, Dist::NonIidDirichlet, Dist::NonIidWriter] {
+            assert_eq!(Dist::parse(d.tag()), Some(d));
+        }
+    }
+
+    #[test]
+    fn run_from_json_rejects_malformed_input() {
+        // Malformed JSON and non-object roots are parse errors, never
+        // defaulted records.
+        assert!(run_from_json("").is_err());
+        assert!(run_from_json("not json").is_err());
+        assert!(run_from_json("{\"cache_version\": 2").is_err(), "truncated object");
+        assert!(run_from_json("[1, 2, 3]").is_err(), "non-object root");
+        assert!(run_from_json("42").is_err(), "scalar root");
+    }
+
+    #[test]
+    fn run_from_json_rejects_each_missing_strict_field() {
+        let rec = RunRecord {
+            label: "x".into(),
+            rounds: Vec::new(),
+            final_accuracy: 0.5,
+            total_up_bytes: 10,
+            total_down_bytes: 20,
+            sim_time: 0.25,
+            server_idle_fraction: 0.9,
+            critical_path: 0.2,
+            lane_busy: Vec::new(),
+            server_storage_params: 123,
+            server_updates_per_shard: Vec::new(),
+            shard_label_divergence: 0.125,
+            clients_activated: 4,
+        };
+        let good = run_to_json(&rec).pretty();
+        assert!(run_from_json(&good).is_ok());
+        // Each strict field, removed in isolation, must fail the parse
+        // (the lenient observability fields are pinned separately in
+        // run_json_roundtrip).
+        for field in [
+            "label",
+            "rounds",
+            "final_accuracy",
+            "total_up_bytes",
+            "total_down_bytes",
+            "sim_time",
+            "server_idle_fraction",
+            "server_storage_params",
+            "shard_label_divergence",
+            "clients_activated",
+        ] {
+            let broken = good.replace(&format!("\"{field}\""), "\"gone\"");
+            assert_ne!(broken, good, "field {field} present in serialization");
+            assert!(run_from_json(&broken).is_err(), "missing {field} must be rejected");
+        }
+        // Wrong-typed values are rejected too, not coerced.
+        let broken = good.replace("\"final_accuracy\": 0.5", "\"final_accuracy\": \"high\"");
+        assert_ne!(broken, good);
+        assert!(run_from_json(&broken).is_err(), "string accuracy must be rejected");
+        let broken = good.replace("\"label\": \"x\"", "\"label\": 7");
+        assert_ne!(broken, good);
+        assert!(run_from_json(&broken).is_err(), "numeric label must be rejected");
     }
 }

@@ -7,7 +7,7 @@
 //! paper's *orderings and trends*, restated in each driver's doc.
 
 use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
-use crate::coordinator::methods::{Compression, Method};
+use crate::coordinator::methods::Method;
 use crate::metrics::recorder::RunRecord;
 use crate::sched::SchedPolicy;
 use crate::util::csvio::Csv;
@@ -15,8 +15,9 @@ use crate::util::csvio::Csv;
 use super::common::{
     cifar_workload, curve_table, femnist_workload, Dist, Harness, RunSpec, Scale, Workload,
 };
+use super::sweep::{self, SweepOptions};
 
-fn base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
+pub(crate) fn base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
     RunSpec {
         dataset: dataset.into(),
         aux: aux.into(),
@@ -316,139 +317,15 @@ pub fn fig9(harness: &mut Harness, scale: Scale) -> Result<String, String> {
 /// to the gradient mix every shard copy sees. Workloads are pinned to
 /// the `ci` preset even at `--scale paper` (the full paper workload is
 /// hours on one box; EXPERIMENTS.md documents the protocol).
+///
+/// Since PR 8 this figure is two declarative [`super::sweep`] specs
+/// (`staleness` + `staleness-noniid`): the grid, skip rule (k = 1 runs
+/// contiguous only), CSV columns, and notes live in
+/// [`sweep::builtin`]`("k", ..)`, execution goes through the
+/// crash-durable trial journal, and the CSVs are byte-identical to the
+/// pre-sweep hand-coded loops (pinned by `tests/sweep_resume.rs`).
 pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, String> {
-    let w = cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale });
-    let n_clients = 8usize;
-    let h = match scale {
-        Scale::Quick => 2usize,
-        _ => 5,
-    };
-    let mut specs = Vec::new();
-    for &k in &[1usize, 2, 4, 8] {
-        let base = RunSpec {
-            method: Method::CseFsl.spec().with_period(h),
-            n_clients,
-            server_shards: k,
-            shard_map: ShardMapKind::Contiguous,
-            ..base_spec("cifar", "cnn27", w)
-        };
-        specs.push(base.clone());
-        if k > 1 {
-            specs.push(RunSpec { shard_map: ShardMapKind::Balanced, ..base });
-        }
-    }
-    let mut out = String::from(
-        "== Accuracy vs server shards k (staleness cost of sharding) ==\n",
-    );
-    out.push_str(&format!(
-        "{:<16} {:>10} {:>12} {:>12} {:>10} {:>8}\n",
-        "series", "final_acc", "storage_Mp", "sim_time_s", "sched_eff", "skew"
-    ));
-    let mut csv = Csv::new(&[
-        "series",
-        "k",
-        "shard_map",
-        "final_accuracy",
-        "server_storage_params",
-        "sim_time",
-        "sched_efficiency",
-        "shard_divergence",
-    ]);
-    for spec in &specs {
-        let rec = harness.run_cached(spec)?;
-        out.push_str(&format!(
-            "{:<16} {:>9.1}% {:>12.3} {:>12.2} {:>10.2} {:>8.3}\n",
-            rec.label,
-            rec.final_accuracy * 100.0,
-            rec.server_storage_params as f64 / 1e6,
-            rec.sim_time,
-            rec.sched_efficiency(),
-            rec.shard_label_divergence,
-        ));
-        csv.row(&[
-            rec.label.clone(),
-            spec.server_shards.to_string(),
-            spec.shard_map.to_string(),
-            format!("{:.4}", rec.final_accuracy),
-            rec.server_storage_params.to_string(),
-            format!("{:.4}", rec.sim_time),
-            format!("{:.4}", rec.sched_efficiency()),
-            format!("{:.4}", rec.shard_label_divergence),
-        ]);
-    }
-    out.push_str(
-        "(k=1 = paper's shared copy; accuracy drift at larger k is the staleness cost,\n\
-         \x20storage grows as k·|w_s|, sim time falls as lanes parallelize arrivals)\n",
-    );
-    let _ = csv.write_to(&harness.out_dir.join("fig_staleness.csv"));
-
-    // Shard placement on the non-IID arms: which clients share a copy
-    // decides the label mix that copy trains on between aggregations.
-    out.push_str(
-        "\n== Shard placement on non-IID splits (contiguous / balanced / locality) ==\n",
-    );
-    out.push_str(&format!(
-        "{:<24} {:>8} {:>10} {:>8} {:>12}\n",
-        "series", "dist", "final_acc", "skew", "sim_time_s"
-    ));
-    let mut csv = Csv::new(&[
-        "series",
-        "dataset",
-        "dist",
-        "k",
-        "shard_map",
-        "final_accuracy",
-        "shard_divergence",
-        "sim_time",
-    ]);
-    for (dataset, aux, dist, h) in [
-        ("cifar", "cnn27", Dist::NonIidDirichlet, h),
-        ("femnist", "cnn8", Dist::NonIidWriter, 2),
-    ] {
-        let w = match dataset {
-            "cifar" => cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale }),
-            _ => femnist_workload(if scale == Scale::Paper { Scale::Ci } else { scale }),
-        };
-        for &k in &[2usize, 4] {
-            for map in
-                [ShardMapKind::Contiguous, ShardMapKind::Balanced, ShardMapKind::Locality]
-            {
-                let spec = RunSpec {
-                    method: Method::CseFsl.spec().with_period(h),
-                    n_clients,
-                    dist,
-                    server_shards: k,
-                    shard_map: map,
-                    ..base_spec(dataset, aux, w)
-                };
-                let rec = harness.run_cached(&spec)?;
-                out.push_str(&format!(
-                    "{:<24} {:>8} {:>9.1}% {:>8.3} {:>12.2}\n",
-                    format!("{} {}", dataset, rec.label),
-                    dist.tag(),
-                    rec.final_accuracy * 100.0,
-                    rec.shard_label_divergence,
-                    rec.sim_time,
-                ));
-                csv.row(&[
-                    rec.label.clone(),
-                    dataset.to_string(),
-                    dist.tag().to_string(),
-                    k.to_string(),
-                    map.to_string(),
-                    format!("{:.4}", rec.final_accuracy),
-                    format!("{:.4}", rec.shard_label_divergence),
-                    format!("{:.4}", rec.sim_time),
-                ]);
-            }
-        }
-    }
-    out.push_str(
-        "(skew = weighted per-shard label divergence from the global mix, 0 = every copy\n\
-         \x20trains on the global label distribution; locality minimizes it by design)\n",
-    );
-    let _ = csv.write_to(&harness.out_dir.join("fig_staleness_noniid.csv"));
-    Ok(out)
+    sweep_figure(harness, "k", scale)
 }
 
 /// Repo figure (no paper counterpart): the **upload-period axis on the
@@ -470,70 +347,14 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
 /// historical keys). Workloads are pinned to the `ci` preset even at
 /// `--scale paper` (like `figure k`; EXPERIMENTS.md documents the
 /// protocol and quotes mock-backend numbers).
+///
+/// Since PR 8 this figure is the declarative `h` sweep
+/// ([`sweep::builtin`]`("h", ..)`): the preset × period composition is
+/// two sweep axes (`Knob::Preset` then `Knob::H`), execution goes
+/// through the trial journal, and `fig_h.csv` is byte-identical to the
+/// pre-sweep loop (pinned by `tests/sweep_resume.rs`).
 pub fn fig_h(harness: &mut Harness, scale: Scale) -> Result<String, String> {
-    let w = cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale });
-    let h_set: &[usize] = match scale {
-        Scale::Quick => &[1, 2],
-        _ => &[1, 2, 4, 8],
-    };
-    let base = base_spec("cifar", "cnn27", w);
-    let mut out = String::from(
-        "== Upload period h x server topology (aux-local update rule) ==\n",
-    );
-    out.push_str(&format!(
-        "{:<16} {:>3} {:>11} {:>10} {:>11} {:>12} {:>12}\n",
-        "series", "h", "topology", "final_acc", "load_gb", "storage_p", "sim_time_s"
-    ));
-    let mut csv = Csv::new(&[
-        "series",
-        "h",
-        "topology",
-        "final_accuracy",
-        "load_gb",
-        "server_storage_params",
-        "sim_time",
-    ]);
-    for &h in h_set {
-        // The per-client arm (spec-only for h > 1) and its
-        // shared-topology control at the same h.
-        let arms = [
-            (Method::FslAn.spec().with_period(h), "per-client"),
-            (Method::CseFsl.spec().with_period(h), "shared"),
-        ];
-        for (method, topo) in arms {
-            let spec = RunSpec { method, ..base.clone() };
-            let rec = harness.run_cached(&spec)?;
-            out.push_str(&format!(
-                "{:<16} {:>3} {:>11} {:>9.1}% {:>11.4} {:>12} {:>12.2}\n",
-                rec.label,
-                h,
-                topo,
-                rec.final_accuracy * 100.0,
-                rec.total_gb(),
-                rec.server_storage_params,
-                rec.sim_time,
-            ));
-            csv.row(&[
-                rec.label.clone(),
-                h.to_string(),
-                topo.to_string(),
-                format!("{:.4}", rec.final_accuracy),
-                format!("{:.6}", rec.total_gb()),
-                rec.server_storage_params.to_string(),
-                format!("{:.4}", rec.sim_time),
-            ]);
-        }
-    }
-    out.push_str(
-        "(h=1 rows are the FSL_AN / CSE_FSL presets; h>1 per-client rows are the\n\
-         \x20spec-only aux+p<h>+pc scenario the closed Method enum could not express.\n\
-         \x20Each round uploads one smashed batch whatever h is, so wire cost per\n\
-         \x20local batch trained falls ~1/h; the per-client arm pays n x |w_s|\n\
-         \x20storage for per-client server trajectories at identical wire/schedule\n\
-         \x20columns.)\n",
-    );
-    let _ = csv.write_to(&harness.out_dir.join("fig_h.csv"));
-    Ok(out)
+    sweep_figure(harness, "h", scale)
 }
 
 /// Repo figure (no paper counterpart): **accuracy vs wire precision** —
@@ -549,66 +370,25 @@ pub fn fig_h(harness: &mut Harness, scale: Scale) -> Result<String, String> {
 /// untouched by the codec — only the tensor bytes on the wire move.
 /// Workloads are pinned to the `ci` preset even at `--scale paper`
 /// (like `figure k`/`figure h`; EXPERIMENTS.md documents the protocol).
+///
+/// Since PR 8 this figure is the declarative `b` sweep
+/// ([`sweep::builtin`]`("b", ..)`): the codec grid is one `Knob::Codec`
+/// axis, execution goes through the trial journal, and `fig_b.csv` is
+/// byte-identical to the pre-sweep loop (pinned by
+/// `tests/sweep_resume.rs`).
 pub fn fig_b(harness: &mut Harness, scale: Scale) -> Result<String, String> {
-    let w = cifar_workload(if scale == Scale::Paper { Scale::Ci } else { scale });
-    let codecs: &[Compression] = match scale {
-        Scale::Quick => &[
-            Compression::None,
-            Compression::Quantize { bits: 4 },
-        ],
-        _ => &[
-            Compression::None,
-            Compression::Quantize { bits: 8 },
-            Compression::Quantize { bits: 4 },
-            Compression::Quantize { bits: 2 },
-            Compression::TopK { frac: 0.25 },
-        ],
-    };
-    let base = base_spec("cifar", "cnn27", w);
-    let mut out = String::from(
-        "== Accuracy vs wire precision (CSE_FSL h=2, smashed-data codec) ==\n",
-    );
-    out.push_str(&format!(
-        "{:<16} {:>11} {:>10} {:>11} {:>12}\n",
-        "series", "codec", "final_acc", "load_gb", "sim_time_s"
-    ));
-    let mut csv = Csv::new(&[
-        "series",
-        "codec",
-        "final_accuracy",
-        "load_gb",
-        "sim_time",
-    ]);
-    for &codec in codecs {
-        let spec = RunSpec {
-            method: Method::CseFsl.spec().with_period(2).with_compression(codec),
-            ..base.clone()
-        };
-        let rec = harness.run_cached(&spec)?;
-        out.push_str(&format!(
-            "{:<16} {:>11} {:>9.1}% {:>11.4} {:>12.2}\n",
-            rec.label,
-            codec,
-            rec.final_accuracy * 100.0,
-            rec.total_gb(),
-            rec.sim_time,
-        ));
-        csv.row(&[
-            rec.label.clone(),
-            codec.to_string(),
-            format!("{:.4}", rec.final_accuracy),
-            format!("{:.6}", rec.total_gb()),
-            format!("{:.4}", rec.sim_time),
-        ]);
+    sweep_figure(harness, "b", scale)
+}
+
+/// Run a figure's built-in sweeps ([`sweep::builtin`]) back to back on
+/// the shared harness and concatenate their journal-derived reports.
+fn sweep_figure(harness: &mut Harness, id: &str, scale: Scale) -> Result<String, String> {
+    let mut out = String::new();
+    for sw in sweep::builtin(id, scale)? {
+        let outcome = sweep::run_sweep(harness, &sw, &SweepOptions::default())?;
+        out.push_str(&outcome.report);
+        out.push('\n');
     }
-    out.push_str(
-        "(the uncompressed row is the CSE_FSL preset under its historical cache\n\
-         \x20key; codec rows pay fewer wire bytes per smashed upload at the accuracy\n\
-         \x20cost of coarser activations. Load shrinks by the codec's closed-form\n\
-         \x20ratio — ~bits/32 for quantize, ~2·frac for top-k (index+value pairs) —\n\
-         \x20while labels and model exchanges stay full precision.)\n",
-    );
-    let _ = csv.write_to(&harness.out_dir.join("fig_b.csv"));
     Ok(out)
 }
 

@@ -1,5 +1,7 @@
-//! Experiment drivers: one per paper figure/table (DESIGN.md §3 index).
+//! Experiment drivers: one per paper figure/table (DESIGN.md §3 index),
+//! plus the declarative sweep runner they execute through.
 
 pub mod common;
 pub mod figures;
+pub mod sweep;
 pub mod tables;

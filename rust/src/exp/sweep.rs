@@ -1,0 +1,1250 @@
+//! Durable declarative sweep runner: spec → trials → journal → tables.
+//!
+//! A [`SweepSpec`] names the experiment grid declaratively (a base
+//! [`RunSpec`] plus axes of [`Setting`]s, seeds, and repeats); it
+//! expands deterministically into a [`Trial`] list, every point lowered
+//! to a validated `RunSpec` *before* anything runs. Execution appends
+//! one JSONL record per completed trial to a crash-durable [`Journal`]
+//! (atomic line writes; recovery keeps the longest valid prefix, so a
+//! line torn by `kill -9` is dropped, never misread), which lets
+//! [`run_sweep`] skip journaled-complete trials on `--resume` and
+//! execute only the remainder. Figure output (CSV + aligned report) is
+//! derived purely from the journal — the join key between the spec
+//! expansion and the journal is [`RunSpec::key`].
+//!
+//! The three repo figures (`figure k` / `h` / `b`) are [`builtin`]
+//! sweeps; their CSVs are byte-identical to the pre-sweep hand-coded
+//! drivers (pinned by `tests/sweep_resume.rs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::methods::{Compression, Method};
+use crate::metrics::recorder::RunRecord;
+use crate::util::csvio::Csv;
+use crate::util::json::Json;
+
+use super::common::{
+    cifar_workload, femnist_workload, fnv64, run_from_json, run_to_json, Dist, Harness,
+    RunSpec, Scale, Workload, CACHE_VERSION,
+};
+use super::figures::base_spec;
+
+// ------------------------------------------------------------- knobs
+
+/// One sweepable axis of a [`RunSpec`] — the declarative name of a
+/// field (or derived field) that a [`Setting`] assigns. Lowering
+/// applies base-replacing knobs ([`Knob::Dataset`] / [`Knob::Aux`] /
+/// [`Knob::Preset`]) before refining ones, so e.g. `Preset=an, H=4`
+/// means `Method::FslAn.spec().with_period(4)` whatever the axis order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Knob {
+    /// Dataset name; also re-derives the per-dataset workload at the
+    /// sweep's scale (`cifar` | `femnist`).
+    Dataset,
+    /// Auxiliary architecture name (manifest key).
+    Aux,
+    /// Method preset base (`mc` | `oc` | `an` | `cse`): replaces the
+    /// whole method spec, so it applies before `H` / `Codec`.
+    Preset,
+    /// Upload period h ([`crate::coordinator::methods::MethodSpec::with_period`]).
+    H,
+    /// Server shard count k.
+    Shards,
+    /// Client → shard placement (`contiguous` | `balanced` | `locality`).
+    Map,
+    /// Data distribution (`iid` | `dir` | `writer`).
+    Dist,
+    /// Wire codec (`none` | `q<bits>` | `quantize<bits>` | `t<frac>` |
+    /// `topk<frac>`).
+    Codec,
+    /// Server topology (`per-client` | `shared`).
+    Topology,
+    /// Number of federated clients.
+    Clients,
+    /// Clients sampled per round (0 = all).
+    Participation,
+    /// Initial learning rate.
+    Lr,
+    /// Experiment seed (appended automatically by the expansion).
+    Seed,
+}
+
+impl Knob {
+    /// Application phase: base-replacing knobs go first so refinements
+    /// (`H`, `Codec`, `Topology`) compose on top of them.
+    fn phase(self) -> u8 {
+        match self {
+            Knob::Dataset | Knob::Aux | Knob::Preset => 0,
+            _ => 1,
+        }
+    }
+
+    /// Assign `value` into `spec`. `scale` sizes the workload when the
+    /// dataset changes.
+    pub fn apply(self, spec: &mut RunSpec, value: &str, scale: Scale) -> Result<(), String> {
+        match self {
+            Knob::Dataset => {
+                spec.workload = workload_for(value, scale)?;
+                spec.dataset = value.to_string();
+            }
+            Knob::Aux => spec.aux = value.to_string(),
+            Knob::Preset => {
+                let m = Method::parse(value)
+                    .ok_or_else(|| format!("unknown method preset {value:?}"))?;
+                spec.method = m.spec();
+            }
+            Knob::H => {
+                let h: usize = value
+                    .parse()
+                    .map_err(|_| format!("bad upload period {value:?}"))?;
+                spec.method = spec.method.with_period(h);
+            }
+            Knob::Shards => {
+                spec.server_shards =
+                    value.parse().map_err(|_| format!("bad shard count {value:?}"))?;
+            }
+            Knob::Map => spec.shard_map = value.parse()?,
+            Knob::Dist => {
+                spec.dist = Dist::parse(value)
+                    .ok_or_else(|| format!("unknown distribution {value:?}"))?;
+            }
+            Knob::Codec => {
+                spec.method = spec.method.with_compression(parse_codec(value)?);
+            }
+            Knob::Topology => spec.method.topology = value.parse()?,
+            Knob::Clients => {
+                spec.n_clients =
+                    value.parse().map_err(|_| format!("bad client count {value:?}"))?;
+            }
+            Knob::Participation => {
+                spec.participation =
+                    value.parse().map_err(|_| format!("bad participation {value:?}"))?;
+            }
+            Knob::Lr => {
+                spec.lr0 = value.parse().map_err(|_| format!("bad learning rate {value:?}"))?;
+            }
+            Knob::Seed => {
+                spec.seed = value.parse().map_err(|_| format!("bad seed {value:?}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The knob's value in a lowered spec, as a CSV cell (inverse
+    /// direction of [`Knob::apply`], used by journal-derived tables).
+    pub fn get(self, spec: &RunSpec) -> String {
+        match self {
+            Knob::Dataset => spec.dataset.clone(),
+            Knob::Aux => spec.aux.clone(),
+            Knob::Preset => spec.method.tag(),
+            Knob::H => spec.method.h_hint().to_string(),
+            Knob::Shards => spec.server_shards.to_string(),
+            Knob::Map => spec.shard_map.to_string(),
+            Knob::Dist => spec.dist.tag().to_string(),
+            Knob::Codec => spec.method.compression.to_string(),
+            Knob::Topology => spec.method.topology.to_string(),
+            Knob::Clients => spec.n_clients.to_string(),
+            Knob::Participation => spec.participation.to_string(),
+            Knob::Lr => spec.lr0.to_string(),
+            Knob::Seed => spec.seed.to_string(),
+        }
+    }
+}
+
+/// Per-dataset workload at a scale (the [`Knob::Dataset`] derivation).
+fn workload_for(dataset: &str, scale: Scale) -> Result<Workload, String> {
+    match dataset {
+        "cifar" => Ok(cifar_workload(scale)),
+        "femnist" => Ok(femnist_workload(scale)),
+        other => Err(format!("unknown dataset {other:?}")),
+    }
+}
+
+/// Parse a codec axis value: `none`, `quantize<bits>` / `q<bits>`,
+/// `topk<frac>` / `t<frac>`. Range validation is left to
+/// [`crate::coordinator::methods::MethodSpec::validate`] so axis values
+/// fail with the same messages as CLI flags.
+pub fn parse_codec(s: &str) -> Result<Compression, String> {
+    let low = s.to_ascii_lowercase();
+    if low == "none" {
+        return Ok(Compression::None);
+    }
+    // `topk` before the single-letter `t` prefix, and both before `q`,
+    // so `topk0.25` is never read as `t` + garbage.
+    for prefix in ["quantize", "q"] {
+        if let Some(rest) = low.strip_prefix(prefix) {
+            if let Ok(bits) = rest.parse::<u8>() {
+                return Ok(Compression::Quantize { bits });
+            }
+        }
+    }
+    for prefix in ["topk", "t"] {
+        if let Some(rest) = low.strip_prefix(prefix) {
+            if let Ok(frac) = rest.parse::<f32>() {
+                return Ok(Compression::TopK { frac });
+            }
+        }
+    }
+    Err(format!(
+        "bad codec {s:?} (expected none | q<bits> | quantize<bits> | t<frac> | topk<frac>)"
+    ))
+}
+
+// ----------------------------------------------------- spec expansion
+
+/// One knob assignment of an axis point.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Setting {
+    /// Which spec axis to assign.
+    pub knob: Knob,
+    /// The value, in the knob's CLI spelling.
+    pub value: String,
+}
+
+impl Setting {
+    /// A knob assignment.
+    pub fn new(knob: Knob, value: &str) -> Setting {
+        Setting { knob, value: value.to_string() }
+    }
+}
+
+/// A named sweep axis: a list of points, each point a (usually
+/// singleton) group of [`Setting`]s that vary together.
+#[derive(Clone, Debug)]
+pub struct Axis {
+    /// Axis name (reports and error messages).
+    pub name: String,
+    /// The points of this axis, in sweep order.
+    pub points: Vec<Vec<Setting>>,
+}
+
+impl Axis {
+    /// The common case: one knob, one value per point.
+    pub fn single(name: &str, knob: Knob, values: &[&str]) -> Axis {
+        Axis {
+            name: name.to_string(),
+            points: values.iter().map(|v| vec![Setting::new(knob, v)]).collect(),
+        }
+    }
+
+    /// An axis whose points assign several knobs at once (e.g. a
+    /// dataset arm that moves dataset + aux + dist + lr together).
+    pub fn joint(name: &str, points: Vec<Vec<Setting>>) -> Axis {
+        Axis { name: name.to_string(), points }
+    }
+}
+
+/// One expanded trial: its settings (for provenance) and the lowered,
+/// validated [`RunSpec`].
+#[derive(Clone, Debug)]
+pub struct Trial {
+    /// Position in the deterministic expansion order.
+    pub index: usize,
+    /// The settings that produced [`Trial::spec`].
+    pub settings: Vec<Setting>,
+    /// The fully lowered run spec (its [`RunSpec::key`] joins the
+    /// journal to the expansion).
+    pub spec: RunSpec,
+}
+
+/// A declarative sweep: named axes × values × seeds × repeats over a
+/// base [`RunSpec`], plus the table derived from the journal.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// Sweep name — names the journal file (`sweeps/<backend>/<name>.jsonl`).
+    pub name: String,
+    /// Report title.
+    pub title: String,
+    /// The spec every trial starts from.
+    pub base: RunSpec,
+    /// Scale used when a [`Knob::Dataset`] setting re-derives the
+    /// workload (the *effective* scale — figure sweeps pin `paper` to
+    /// the `ci` preset, see EXPERIMENTS.md).
+    pub scale: Scale,
+    /// The axes, outermost first (rightmost axis varies fastest).
+    pub axes: Vec<Axis>,
+    /// Experiment seeds (empty = the base spec's seed).
+    pub seeds: Vec<u64>,
+    /// Repeats per (point, seed); repeat r runs at `seed + r`.
+    pub repeats: usize,
+    /// Skip rules: a point is dropped when it contains every setting of
+    /// any rule (e.g. `k=1, map=balanced` — placement is moot at one shard).
+    pub skip: Vec<Vec<Setting>>,
+    /// The journal-derived output table.
+    pub table: TableSpec,
+    /// Footer appended to the report (provenance notes).
+    pub notes: String,
+}
+
+impl SweepSpec {
+    /// Expand the sweep deterministically into its trial list: the
+    /// cartesian product of the axes (rightmost fastest) minus skip
+    /// rules, times seeds × repeats; every point lowered onto the base
+    /// spec and validated up front, with duplicate [`RunSpec::key`]s
+    /// rejected (they would alias journal entries).
+    pub fn trials(&self) -> Result<Vec<Trial>, String> {
+        let mut points: Vec<Vec<Setting>> = vec![Vec::new()];
+        for axis in &self.axes {
+            if axis.points.is_empty() {
+                return Err(format!("sweep {}: axis {:?} has no points", self.name, axis.name));
+            }
+            let mut next = Vec::with_capacity(points.len() * axis.points.len());
+            for point in &points {
+                for choice in &axis.points {
+                    let mut p = point.clone();
+                    p.extend(choice.iter().cloned());
+                    next.push(p);
+                }
+            }
+            points = next;
+        }
+        points.retain(|p| {
+            !self.skip.iter().any(|rule| rule.iter().all(|s| p.contains(s)))
+        });
+        let seeds = if self.seeds.is_empty() { vec![self.base.seed] } else { self.seeds.clone() };
+        let mut trials = Vec::new();
+        let mut seen = BTreeSet::new();
+        for point in &points {
+            for &seed in &seeds {
+                for r in 0..self.repeats.max(1) {
+                    let mut settings = point.clone();
+                    settings.push(Setting::new(Knob::Seed, &(seed + r as u64).to_string()));
+                    let spec = self.lower(&settings)?;
+                    spec.validate().map_err(|e| {
+                        format!("sweep {}: invalid trial {settings:?}: {e}", self.name)
+                    })?;
+                    let key = spec.key();
+                    if !seen.insert(key.clone()) {
+                        return Err(format!(
+                            "sweep {}: duplicate trial key {key} (axes overlap)",
+                            self.name
+                        ));
+                    }
+                    trials.push(Trial { index: trials.len(), settings, spec });
+                }
+            }
+        }
+        Ok(trials)
+    }
+
+    /// Lower one settings list onto the base spec (stable-sorted by
+    /// `Knob::phase`, so base-replacing knobs apply first).
+    fn lower(&self, settings: &[Setting]) -> Result<RunSpec, String> {
+        let mut spec = self.base.clone();
+        let mut ordered: Vec<&Setting> = settings.iter().collect();
+        ordered.sort_by_key(|s| s.knob.phase());
+        for s in ordered {
+            s.knob.apply(&mut spec, &s.value, self.scale).map_err(|e| {
+                format!("sweep {}: {:?}={}: {e}", self.name, s.knob, s.value)
+            })?;
+        }
+        Ok(spec)
+    }
+}
+
+// -------------------------------------------------------- table layer
+
+/// The journal-derived output table of a sweep.
+#[derive(Clone, Debug)]
+pub struct TableSpec {
+    /// CSV file stem (written as `<out_dir>/<file>.csv`).
+    pub file: String,
+    /// Columns, in order.
+    pub columns: Vec<Column>,
+}
+
+/// One table column.
+#[derive(Clone, Debug)]
+pub struct Column {
+    /// CSV header cell.
+    pub header: String,
+    /// Where the cell value comes from.
+    pub value: ColumnValue,
+}
+
+impl Column {
+    /// The run's series label (`RunRecord::label`), under the
+    /// conventional `series` header.
+    pub fn series() -> Column {
+        Column { header: "series".to_string(), value: ColumnValue::Series }
+    }
+
+    /// A spec knob read back from the trial's lowered spec.
+    pub fn knob(header: &str, knob: Knob) -> Column {
+        Column { header: header.to_string(), value: ColumnValue::Knob(knob) }
+    }
+
+    /// A metric of the journaled run record.
+    pub fn metric(header: &str, metric: Metric) -> Column {
+        Column { header: header.to_string(), value: ColumnValue::Metric(metric) }
+    }
+
+    /// Render this column's cell for one (spec, record) pair.
+    fn cell(&self, spec: &RunSpec, rec: &RunRecord) -> String {
+        match &self.value {
+            ColumnValue::Series => rec.label.clone(),
+            ColumnValue::Knob(k) => k.get(spec),
+            ColumnValue::Metric(m) => m.cell(rec),
+        }
+    }
+}
+
+/// What a [`Column`] cell is derived from.
+#[derive(Clone, Debug)]
+pub enum ColumnValue {
+    /// The run record's label.
+    Series,
+    /// A knob of the trial's lowered spec.
+    Knob(Knob),
+    /// A metric of the journaled run record.
+    Metric(Metric),
+}
+
+/// Run-record metrics a table can report. Formats are pinned to the
+/// historical figure CSVs (byte-compatibility is a test contract).
+#[derive(Clone, Copy, Debug)]
+pub enum Metric {
+    /// `final_accuracy`, 4 decimals.
+    FinalAccuracy,
+    /// Total wire load in GB (`RunRecord::total_gb`), 6 decimals.
+    LoadGb,
+    /// Simulated wall-clock seconds, 4 decimals.
+    SimTime,
+    /// `RunRecord::sched_efficiency`, 4 decimals.
+    SchedEfficiency,
+    /// Weighted per-shard label divergence, 4 decimals.
+    ShardDivergence,
+    /// Server storage in parameters (integer).
+    StorageParams,
+}
+
+impl Metric {
+    fn cell(self, rec: &RunRecord) -> String {
+        match self {
+            Metric::FinalAccuracy => format!("{:.4}", rec.final_accuracy),
+            Metric::LoadGb => format!("{:.6}", rec.total_gb()),
+            Metric::SimTime => format!("{:.4}", rec.sim_time),
+            Metric::SchedEfficiency => format!("{:.4}", rec.sched_efficiency()),
+            Metric::ShardDivergence => format!("{:.4}", rec.shard_label_divergence),
+            Metric::StorageParams => rec.server_storage_params.to_string(),
+        }
+    }
+}
+
+// ------------------------------------------------------------ journal
+
+/// Journal line-format version; [`TrialEntry::parse`] rejects records
+/// from any other version (they fall into the invalid suffix and the
+/// trials re-run from the results cache).
+pub const JOURNAL_VERSION: u32 = 1;
+
+/// Outcome recorded for one trial.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialStatus {
+    /// The trial completed and its record was cached.
+    Ok,
+    /// The trial errored (journaled for forensics; never counts as
+    /// complete, so a resume retries it).
+    Failed,
+}
+
+impl TrialStatus {
+    fn tag(self) -> &'static str {
+        match self {
+            TrialStatus::Ok => "ok",
+            TrialStatus::Failed => "failed",
+        }
+    }
+
+    fn parse(s: &str) -> Result<TrialStatus, String> {
+        match s {
+            "ok" => Ok(TrialStatus::Ok),
+            "failed" => Ok(TrialStatus::Failed),
+            other => Err(format!("bad trial status {other:?}")),
+        }
+    }
+}
+
+/// One journal line: the durable fact that a trial reached a terminal
+/// status, plus enough to verify and locate its cached record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialEntry {
+    /// The trial's [`RunSpec::key`] — the join key to the expansion.
+    pub key: String,
+    /// Results-cache schema version the record was written under.
+    pub cache_version: u32,
+    /// Terminal status.
+    pub status: TrialStatus,
+    /// FNV-1a digest of the cached record's bytes (0 for failures).
+    pub digest: u64,
+    /// Record path relative to the harness `out_dir` (empty for failures).
+    pub record: String,
+}
+
+impl TrialEntry {
+    /// Serialize as one compact JSON line (no trailing newline). Keys
+    /// are emitted sorted (BTreeMap), so lines are byte-deterministic.
+    pub fn to_line(&self) -> String {
+        Json::obj(vec![
+            ("cache_version", Json::num(self.cache_version as f64)),
+            ("digest", Json::str(format!("{:016x}", self.digest))),
+            ("journal_version", Json::num(JOURNAL_VERSION as f64)),
+            ("key", Json::str(self.key.clone())),
+            ("record", Json::str(self.record.clone())),
+            ("status", Json::str(self.status.tag())),
+        ])
+        .dump()
+    }
+
+    /// Parse one journal line; any malformation (bad JSON, missing
+    /// field, wrong type, unknown version) is an error, which recovery
+    /// treats as the start of the invalid suffix.
+    pub fn parse(line: &str) -> Result<TrialEntry, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        let err = |e: crate::util::json::JsonError| e.to_string();
+        let version = j.get("journal_version").map_err(err)?.as_usize().map_err(err)? as u32;
+        if version != JOURNAL_VERSION {
+            return Err(format!("journal_version {version} != {JOURNAL_VERSION}"));
+        }
+        let digest_hex = j.get("digest").map_err(err)?.as_str().map_err(err)?;
+        let digest = u64::from_str_radix(digest_hex, 16)
+            .map_err(|_| format!("bad digest {digest_hex:?}"))?;
+        Ok(TrialEntry {
+            key: j.get("key").map_err(err)?.as_str().map_err(err)?.to_string(),
+            cache_version: j.get("cache_version").map_err(err)?.as_usize().map_err(err)?
+                as u32,
+            status: TrialStatus::parse(j.get("status").map_err(err)?.as_str().map_err(err)?)?,
+            digest,
+            record: j.get("record").map_err(err)?.as_str().map_err(err)?.to_string(),
+        })
+    }
+}
+
+/// Recover the longest valid prefix of a journal: entries are read off
+/// newline-terminated, parseable lines until the first torn, truncated,
+/// malformed, or unknown-version line; everything from that point on is
+/// the invalid suffix. Returns the entries and the prefix length in
+/// bytes (what [`Journal::resume`] truncates the file to).
+pub fn recover(bytes: &[u8]) -> (Vec<TrialEntry>, usize) {
+    let mut entries = Vec::new();
+    let mut valid = 0usize;
+    let mut start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'\n' {
+            continue;
+        }
+        let parsed = std::str::from_utf8(&bytes[start..i])
+            .map_err(|e| e.to_string())
+            .and_then(TrialEntry::parse);
+        match parsed {
+            Ok(e) => {
+                entries.push(e);
+                valid = i + 1;
+                start = i + 1;
+            }
+            Err(_) => return (entries, valid),
+        }
+    }
+    // Bytes after the last newline are an unterminated (torn) line.
+    (entries, valid)
+}
+
+/// Append-only crash-durable trial journal (JSONL). Each line is
+/// written with a single `write_all` + `sync_data`, so a crash leaves
+/// at most one torn line — which recovery drops.
+pub struct Journal {
+    path: PathBuf,
+    file: std::fs::File,
+    entries: Vec<TrialEntry>,
+}
+
+impl Journal {
+    /// Start an empty journal, truncating any existing file.
+    pub fn fresh(path: &Path) -> Result<Journal, String> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        let file = std::fs::File::create(path)
+            .map_err(|e| format!("cannot create journal {}: {e}", path.display()))?;
+        Ok(Journal { path: path.to_path_buf(), file, entries: Vec::new() })
+    }
+
+    /// Reopen a journal, recovering the longest valid prefix (a missing
+    /// file is an empty journal). The file is truncated to the valid
+    /// prefix so appends never interleave with torn bytes. Returns the
+    /// journal and how many invalid-suffix bytes were dropped.
+    pub fn resume(path: &Path) -> Result<(Journal, usize), String> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        let bytes = std::fs::read(path).unwrap_or_default();
+        let (entries, valid) = recover(&bytes);
+        let dropped = bytes.len() - valid;
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(path)
+            .map_err(|e| format!("cannot open journal {}: {e}", path.display()))?;
+        file.set_len(valid as u64).map_err(|e| e.to_string())?;
+        Ok((Journal { path: path.to_path_buf(), file, entries }, dropped))
+    }
+
+    /// Append one entry as an atomic line write (single `write_all` of
+    /// `line + "\n"`, then `sync_data`).
+    pub fn append(&mut self, entry: TrialEntry) -> Result<(), String> {
+        let mut line = entry.to_line();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .map_err(|e| format!("journal write failed: {e}"))?;
+        self.file.sync_data().map_err(|e| format!("journal sync failed: {e}"))?;
+        self.entries.push(entry);
+        Ok(())
+    }
+
+    /// All recovered + appended entries, in journal order.
+    pub fn entries(&self) -> &[TrialEntry] {
+        &self.entries
+    }
+
+    /// The journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// The journaled-complete trial set: last `Ok` entry per key, filtered
+/// to the current [`CACHE_VERSION`] and to keys inside the sweep's own
+/// expansion — so duplicate records last-win, `Failed` lines never
+/// complete anything, and alien keys (another sweep's, or a stale
+/// grid's) can never mark this sweep's work done.
+pub fn journaled_complete<'a>(
+    entries: &'a [TrialEntry],
+    expansion: &BTreeSet<String>,
+) -> BTreeMap<String, &'a TrialEntry> {
+    let mut done = BTreeMap::new();
+    for e in entries {
+        if e.status == TrialStatus::Ok
+            && e.cache_version == CACHE_VERSION
+            && expansion.contains(&e.key)
+        {
+            done.insert(e.key.clone(), e);
+        }
+    }
+    done
+}
+
+// ---------------------------------------------------------- execution
+
+/// Execution options for [`run_sweep`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepOptions {
+    /// Reopen the journal and skip journaled-complete trials instead of
+    /// starting from an empty journal.
+    pub resume: bool,
+    /// Fault injection (tests/CI): abort with an error before executing
+    /// trial N+1, leaving N journaled trials behind.
+    pub fail_after: Option<usize>,
+}
+
+/// What a completed sweep produced.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    /// Trials in the full expansion.
+    pub total: usize,
+    /// Trials skipped as journaled-complete.
+    pub skipped: usize,
+    /// Trials executed this invocation.
+    pub executed: usize,
+    /// Journal file path.
+    pub journal: PathBuf,
+    /// Derived CSV path.
+    pub csv: PathBuf,
+    /// Aligned-text report (title + table + notes).
+    pub report: String,
+}
+
+/// Run one sweep: expand + validate the grid, skip journaled-complete
+/// trials (on [`SweepOptions::resume`]), execute the remainder through
+/// [`Harness::run_cached`], journal each completion, then derive the
+/// CSV + report purely from the journal.
+pub fn run_sweep(
+    harness: &mut Harness,
+    sweep: &SweepSpec,
+    opts: &SweepOptions,
+) -> Result<SweepOutcome, String> {
+    let trials = sweep.trials()?;
+    let expansion: BTreeSet<String> = trials.iter().map(|t| t.spec.key()).collect();
+    let journal_path = harness
+        .out_dir
+        .join("sweeps")
+        .join(harness.backend())
+        .join(format!("{}.jsonl", sweep.name));
+    let (mut journal, dropped) = if opts.resume {
+        Journal::resume(&journal_path)?
+    } else {
+        (Journal::fresh(&journal_path)?, 0)
+    };
+    if dropped > 0 {
+        eprintln!(
+            "sweep {}: dropped {dropped} torn/invalid journal byte(s) at {}",
+            sweep.name,
+            journal_path.display()
+        );
+    }
+    // A journal line only skips a trial when its cached record still
+    // verifies (file present, digest matches, record parses at the
+    // current cache version): a wiped or corrupted cache self-heals by
+    // re-running instead of failing the table derivation later.
+    let completed: BTreeSet<String> = journaled_complete(journal.entries(), &expansion)
+        .into_iter()
+        .filter(|(_, e)| verify_record(&harness.out_dir, e))
+        .map(|(k, _)| k)
+        .collect();
+    let mut executed = 0usize;
+    let mut skipped = 0usize;
+    for trial in &trials {
+        let key = trial.spec.key();
+        if completed.contains(&key) {
+            skipped += 1;
+            continue;
+        }
+        if let Some(n) = opts.fail_after {
+            if executed >= n {
+                return Err(format!(
+                    "sweep {}: injected failure after {executed} executed trial(s) \
+                     ({} line(s) journaled)",
+                    sweep.name,
+                    journal.entries().len()
+                ));
+            }
+        }
+        eprintln!("sweep {}: [{}/{}] {key}", sweep.name, trial.index + 1, trials.len());
+        match harness.run_cached(&trial.spec) {
+            Ok(rec) => {
+                // By the JSON round-trip stability contract (pinned in
+                // exp::common tests) this digest equals the digest of
+                // the cache file's bytes, whether the run was fresh or
+                // replayed.
+                let text = run_to_json(&rec).pretty();
+                let record = rel_to(&harness.out_dir, &harness.cache_file(&trial.spec));
+                journal.append(TrialEntry {
+                    key,
+                    cache_version: CACHE_VERSION,
+                    status: TrialStatus::Ok,
+                    digest: fnv64(&text),
+                    record,
+                })?;
+                executed += 1;
+            }
+            Err(e) => {
+                let _ = journal.append(TrialEntry {
+                    key: key.clone(),
+                    cache_version: CACHE_VERSION,
+                    status: TrialStatus::Failed,
+                    digest: 0,
+                    record: String::new(),
+                });
+                return Err(format!("sweep {}: trial {key} failed: {e}", sweep.name));
+            }
+        }
+    }
+    let (csv, report) = derive_table(harness, sweep, &trials, journal.entries())?;
+    let csv_path = harness.out_dir.join(format!("{}.csv", sweep.table.file));
+    csv.write_to(&csv_path).map_err(|e| e.to_string())?;
+    Ok(SweepOutcome {
+        total: trials.len(),
+        skipped,
+        executed,
+        journal: journal_path,
+        csv: csv_path,
+        report,
+    })
+}
+
+/// `path` relative to `base` (falls back to the absolute path when the
+/// record lives outside the out dir — it never does in practice).
+fn rel_to(base: &Path, path: &Path) -> String {
+    path.strip_prefix(base).unwrap_or(path).to_string_lossy().into_owned()
+}
+
+/// Whether a journaled record still verifies on disk: readable, digest
+/// match, parseable at the current cache version.
+fn verify_record(out_dir: &Path, e: &TrialEntry) -> bool {
+    if e.record.is_empty() {
+        return false;
+    }
+    match std::fs::read_to_string(out_dir.join(&e.record)) {
+        Ok(text) => fnv64(&text) == e.digest && run_from_json(&text).is_ok(),
+        Err(_) => false,
+    }
+}
+
+/// Derive the sweep's table purely from the journal: for every trial in
+/// expansion order, look up its journaled entry by [`RunSpec::key`],
+/// load + verify the cached record, and render the configured columns.
+fn derive_table(
+    harness: &Harness,
+    sweep: &SweepSpec,
+    trials: &[Trial],
+    entries: &[TrialEntry],
+) -> Result<(Csv, String), String> {
+    let expansion: BTreeSet<String> = trials.iter().map(|t| t.spec.key()).collect();
+    let done = journaled_complete(entries, &expansion);
+    let headers: Vec<&str> = sweep.table.columns.iter().map(|c| c.header.as_str()).collect();
+    let mut csv = Csv::new(&headers);
+    let mut rows = Vec::with_capacity(trials.len());
+    for trial in trials {
+        let key = trial.spec.key();
+        let e = done.get(&key).ok_or_else(|| {
+            format!("sweep {}: journal has no completed entry for {key}", sweep.name)
+        })?;
+        let text = std::fs::read_to_string(harness.out_dir.join(&e.record)).map_err(|err| {
+            format!("sweep {}: cannot read journaled record {}: {err}", sweep.name, e.record)
+        })?;
+        if fnv64(&text) != e.digest {
+            return Err(format!(
+                "sweep {}: record {} does not match its journaled digest",
+                sweep.name, e.record
+            ));
+        }
+        let rec = run_from_json(&text)?;
+        let row: Vec<String> =
+            sweep.table.columns.iter().map(|c| c.cell(&trial.spec, &rec)).collect();
+        csv.row(&row);
+        rows.push(row);
+    }
+    let report = render_report(&sweep.title, &headers, &rows, &sweep.notes);
+    Ok((csv, report))
+}
+
+/// Aligned-text rendering of a derived table (first column
+/// left-aligned, the rest right-aligned), with the notes footer.
+fn render_report(title: &str, headers: &[&str], rows: &[Vec<String>], notes: &str) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    let line = |cells: &[&str], out: &mut String| {
+        for (i, cell) in cells.iter().enumerate() {
+            if i == 0 {
+                out.push_str(&format!("{cell:<w$}", w = widths[i]));
+            } else {
+                out.push_str(&format!(" {cell:>w$}", w = widths[i]));
+            }
+        }
+        out.push('\n');
+    };
+    line(headers, &mut out);
+    for row in rows {
+        let cells: Vec<&str> = row.iter().map(|c| c.as_str()).collect();
+        line(&cells, &mut out);
+    }
+    if !notes.is_empty() {
+        out.push_str(notes);
+        if !notes.ends_with('\n') {
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------- builtin sweeps
+
+/// The figure protocol pins `--scale paper` to the `ci` workload for
+/// these sweeps (EXPERIMENTS.md — the full paper workload is hours on
+/// one box).
+fn eff(scale: Scale) -> Scale {
+    if scale == Scale::Paper {
+        Scale::Ci
+    } else {
+        scale
+    }
+}
+
+/// Resolve a figure id to its built-in sweep list: `k`/`staleness` (two
+/// sweeps: IID shard axis + non-IID placement arms), `h`/`period`,
+/// `b`/`bits`, or `all`.
+pub fn builtin(id: &str, scale: Scale) -> Result<Vec<SweepSpec>, String> {
+    match id {
+        "k" | "staleness" => Ok(vec![staleness_sweep(scale), staleness_noniid_sweep(scale)]),
+        "h" | "period" => Ok(vec![h_sweep(scale)]),
+        "b" | "bits" => Ok(vec![b_sweep(scale)]),
+        "all" => Ok(vec![
+            staleness_sweep(scale),
+            staleness_noniid_sweep(scale),
+            h_sweep(scale),
+            b_sweep(scale),
+        ]),
+        other => Err(format!("no sweep {other:?} (have k|staleness, h|period, b|bits, all)")),
+    }
+}
+
+/// `figure k`, IID arm: accuracy vs server shards k at contiguous and
+/// balanced placements (the staleness cost of sharding).
+fn staleness_sweep(scale: Scale) -> SweepSpec {
+    let h = if scale == Scale::Quick { 2 } else { 5 };
+    let base = RunSpec {
+        method: Method::CseFsl.spec().with_period(h),
+        n_clients: 8,
+        ..base_spec("cifar", "cnn27", cifar_workload(eff(scale)))
+    };
+    SweepSpec {
+        name: "staleness".to_string(),
+        title: "Accuracy vs server shards k (staleness cost of sharding)".to_string(),
+        base,
+        scale: eff(scale),
+        axes: vec![
+            Axis::single("k", Knob::Shards, &["1", "2", "4", "8"]),
+            Axis::single("map", Knob::Map, &["contiguous", "balanced"]),
+        ],
+        seeds: Vec::new(),
+        repeats: 1,
+        // Placement is moot at one shard: k=1 runs contiguous only.
+        skip: vec![vec![Setting::new(Knob::Shards, "1"), Setting::new(Knob::Map, "balanced")]],
+        table: TableSpec {
+            file: "fig_staleness".to_string(),
+            columns: vec![
+                Column::series(),
+                Column::knob("k", Knob::Shards),
+                Column::knob("shard_map", Knob::Map),
+                Column::metric("final_accuracy", Metric::FinalAccuracy),
+                Column::metric("server_storage_params", Metric::StorageParams),
+                Column::metric("sim_time", Metric::SimTime),
+                Column::metric("sched_efficiency", Metric::SchedEfficiency),
+                Column::metric("shard_divergence", Metric::ShardDivergence),
+            ],
+        },
+        notes: "(k=1 = paper's shared copy; accuracy drift at larger k is the staleness \
+                cost,\n storage grows as k·|w_s|, sim time falls as lanes parallelize \
+                arrivals)\n"
+            .to_string(),
+    }
+}
+
+/// `figure k`, non-IID arm: shard placement (contiguous / balanced /
+/// locality) on Dirichlet CIFAR and by-writer F-EMNIST.
+fn staleness_noniid_sweep(scale: Scale) -> SweepSpec {
+    let h = if scale == Scale::Quick { 2 } else { 5 };
+    let base =
+        RunSpec { n_clients: 8, ..base_spec("cifar", "cnn27", cifar_workload(eff(scale))) };
+    SweepSpec {
+        name: "staleness-noniid".to_string(),
+        title: "Shard placement on non-IID splits (contiguous / balanced / locality)"
+            .to_string(),
+        base,
+        scale: eff(scale),
+        axes: vec![
+            Axis::joint(
+                "arm",
+                vec![
+                    vec![
+                        Setting::new(Knob::Dataset, "cifar"),
+                        Setting::new(Knob::Aux, "cnn27"),
+                        Setting::new(Knob::Dist, "dir"),
+                        Setting::new(Knob::H, &h.to_string()),
+                        Setting::new(Knob::Lr, "0.01"),
+                    ],
+                    vec![
+                        Setting::new(Knob::Dataset, "femnist"),
+                        Setting::new(Knob::Aux, "cnn8"),
+                        Setting::new(Knob::Dist, "writer"),
+                        Setting::new(Knob::H, "2"),
+                        Setting::new(Knob::Lr, "0.05"),
+                    ],
+                ],
+            ),
+            Axis::single("k", Knob::Shards, &["2", "4"]),
+            Axis::single("map", Knob::Map, &["contiguous", "balanced", "locality"]),
+        ],
+        seeds: Vec::new(),
+        repeats: 1,
+        skip: Vec::new(),
+        table: TableSpec {
+            file: "fig_staleness_noniid".to_string(),
+            columns: vec![
+                Column::series(),
+                Column::knob("dataset", Knob::Dataset),
+                Column::knob("dist", Knob::Dist),
+                Column::knob("k", Knob::Shards),
+                Column::knob("shard_map", Knob::Map),
+                Column::metric("final_accuracy", Metric::FinalAccuracy),
+                Column::metric("shard_divergence", Metric::ShardDivergence),
+                Column::metric("sim_time", Metric::SimTime),
+            ],
+        },
+        notes: "(skew = weighted per-shard label divergence from the global mix, 0 = every \
+                copy\n trains on the global label distribution; locality minimizes it by \
+                design)\n"
+            .to_string(),
+    }
+}
+
+/// `figure h`: upload period × server topology on the aux-local update
+/// rule (the per-client arm next to its shared-topology control).
+fn h_sweep(scale: Scale) -> SweepSpec {
+    let h_vals: &[&str] = if scale == Scale::Quick { &["1", "2"] } else { &["1", "2", "4", "8"] };
+    SweepSpec {
+        name: "h".to_string(),
+        title: "Upload period h x server topology (aux-local update rule)".to_string(),
+        base: base_spec("cifar", "cnn27", cifar_workload(eff(scale))),
+        scale: eff(scale),
+        axes: vec![
+            Axis::single("h", Knob::H, h_vals),
+            Axis::single("arm", Knob::Preset, &["an", "cse"]),
+        ],
+        seeds: Vec::new(),
+        repeats: 1,
+        skip: Vec::new(),
+        table: TableSpec {
+            file: "fig_h".to_string(),
+            columns: vec![
+                Column::series(),
+                Column::knob("h", Knob::H),
+                Column::knob("topology", Knob::Topology),
+                Column::metric("final_accuracy", Metric::FinalAccuracy),
+                Column::metric("load_gb", Metric::LoadGb),
+                Column::metric("server_storage_params", Metric::StorageParams),
+                Column::metric("sim_time", Metric::SimTime),
+            ],
+        },
+        notes: "(h=1 rows are the FSL_AN / CSE_FSL presets; h>1 per-client rows are the\n \
+                spec-only aux+p<h>+pc scenario the closed Method enum could not express.\n \
+                Each round uploads one smashed batch whatever h is, so wire cost per\n \
+                local batch trained falls ~1/h; the per-client arm pays n x |w_s|\n \
+                storage for per-client server trajectories at identical wire/schedule\n \
+                columns.)\n"
+            .to_string(),
+    }
+}
+
+/// `figure b`: accuracy vs wire precision (FedLite-style codec axis on
+/// the smashed-data uplink, CSE_FSL at h = 2).
+fn b_sweep(scale: Scale) -> SweepSpec {
+    let codecs: &[&str] = if scale == Scale::Quick {
+        &["none", "q4"]
+    } else {
+        &["none", "q8", "q4", "q2", "t0.25"]
+    };
+    let base = RunSpec {
+        method: Method::CseFsl.spec().with_period(2),
+        ..base_spec("cifar", "cnn27", cifar_workload(eff(scale)))
+    };
+    SweepSpec {
+        name: "b".to_string(),
+        title: "Accuracy vs wire precision (CSE_FSL h=2, smashed-data codec)".to_string(),
+        base,
+        scale: eff(scale),
+        axes: vec![Axis::single("codec", Knob::Codec, codecs)],
+        seeds: Vec::new(),
+        repeats: 1,
+        skip: Vec::new(),
+        table: TableSpec {
+            file: "fig_b".to_string(),
+            columns: vec![
+                Column::series(),
+                Column::knob("codec", Knob::Codec),
+                Column::metric("final_accuracy", Metric::FinalAccuracy),
+                Column::metric("load_gb", Metric::LoadGb),
+                Column::metric("sim_time", Metric::SimTime),
+            ],
+        },
+        notes: "(the uncompressed row is the CSE_FSL preset under its historical cache\n \
+                key; codec rows pay fewer wire bytes per smashed upload at the accuracy\n \
+                cost of coarser activations. Load shrinks by the codec's closed-form\n \
+                ratio — ~bits/32 for quantize, ~2·frac for top-k (index+value pairs) —\n \
+                while labels and model exchanges stay full precision.)\n"
+            .to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ShardMapKind;
+
+    #[test]
+    fn entry_line_roundtrip_and_version_gate() {
+        let e = TrialEntry {
+            key: "cifar-cnn27-CSE_FSL-h2-n8-...-s1".to_string(),
+            cache_version: CACHE_VERSION,
+            status: TrialStatus::Ok,
+            digest: 0xDEAD_BEEF_0123_4567,
+            record: "cache/mock/k.json".to_string(),
+        };
+        let line = e.to_line();
+        assert!(!line.contains('\n'), "one entry = one line");
+        assert_eq!(TrialEntry::parse(&line).unwrap(), e);
+        // Failed entries round-trip too.
+        let f = TrialEntry {
+            status: TrialStatus::Failed,
+            digest: 0,
+            record: String::new(),
+            ..e.clone()
+        };
+        assert_eq!(TrialEntry::parse(&f.to_line()).unwrap(), f);
+        // Unknown journal versions are the invalid suffix, not data.
+        // (`dump()` is compact: no space after the colon.)
+        let future = line.replace("\"journal_version\":1", "\"journal_version\":99");
+        assert_ne!(future, line, "replacement must hit");
+        let err = TrialEntry::parse(&future).unwrap_err();
+        assert!(err.contains("journal_version 99"), "{err}");
+        // Malformed fields are errors, never defaults.
+        assert!(TrialEntry::parse("{}").is_err());
+        assert!(TrialEntry::parse("not json").is_err());
+        let bad_status = line.replace("\"status\":\"ok\"", "\"status\":\"done\"");
+        assert_ne!(bad_status, line, "replacement must hit");
+        assert!(TrialEntry::parse(&bad_status).is_err());
+    }
+
+    #[test]
+    fn recover_keeps_longest_valid_prefix() {
+        let e1 = TrialEntry {
+            key: "k1".to_string(),
+            cache_version: CACHE_VERSION,
+            status: TrialStatus::Ok,
+            digest: 1,
+            record: "cache/mock/k1.json".to_string(),
+        };
+        let e2 = TrialEntry { key: "k2".to_string(), digest: 2, ..e1.clone() };
+        let l1 = e1.to_line();
+        let l2 = e2.to_line();
+        let full = format!("{l1}\n{l2}\n");
+        let (entries, valid) = recover(full.as_bytes());
+        assert_eq!(entries, vec![e1.clone(), e2.clone()]);
+        assert_eq!(valid, full.len());
+        // A torn final line (kill mid-write) is dropped exactly.
+        let torn = format!("{l1}\n{}", &l2[..l2.len() / 2]);
+        let (entries, valid) = recover(torn.as_bytes());
+        assert_eq!(entries, vec![e1.clone()]);
+        assert_eq!(valid, l1.len() + 1);
+        // Garbage in the middle ends the prefix there — later valid
+        // lines are NOT resurrected (prefix semantics, not filtering).
+        let gap = format!("{l1}\nnot json\n{l2}\n");
+        let (entries, valid) = recover(gap.as_bytes());
+        assert_eq!(entries, vec![e1.clone()]);
+        assert_eq!(valid, l1.len() + 1);
+        // Empty journal.
+        assert_eq!(recover(b""), (Vec::new(), 0));
+    }
+
+    #[test]
+    fn journaled_complete_last_wins_and_filters() {
+        let ok = |key: &str, digest: u64| TrialEntry {
+            key: key.to_string(),
+            cache_version: CACHE_VERSION,
+            status: TrialStatus::Ok,
+            digest,
+            record: format!("cache/mock/{key}.json"),
+        };
+        let entries = vec![
+            ok("a", 1),
+            ok("a", 2),                                           // duplicate: last wins
+            TrialEntry { status: TrialStatus::Failed, ..ok("b", 0) }, // failed: never complete
+            TrialEntry { cache_version: CACHE_VERSION + 1, ..ok("c", 3) }, // stale schema
+            ok("alien", 4),                                       // not in the expansion
+        ];
+        let expansion: BTreeSet<String> =
+            ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        let done = journaled_complete(&entries, &expansion);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done["a"].digest, 2);
+        // Completed keys are a subset of the expansion by construction.
+        assert!(done.keys().all(|k| expansion.contains(k)));
+    }
+
+    #[test]
+    fn codec_axis_values_parse() {
+        assert_eq!(parse_codec("none").unwrap(), Compression::None);
+        assert_eq!(parse_codec("q4").unwrap(), Compression::Quantize { bits: 4 });
+        assert_eq!(parse_codec("quantize8").unwrap(), Compression::Quantize { bits: 8 });
+        assert_eq!(parse_codec("t0.25").unwrap(), Compression::TopK { frac: 0.25 });
+        assert_eq!(parse_codec("topk0.25").unwrap(), Compression::TopK { frac: 0.25 });
+        assert!(parse_codec("gzip").is_err());
+        assert!(parse_codec("q").is_err());
+    }
+
+    #[test]
+    fn staleness_expansion_matches_historical_loop_order() {
+        let trials = staleness_sweep(Scale::Quick).trials().unwrap();
+        // k=1 runs contiguous only (skip rule), then cont+bal per k.
+        let got: Vec<(usize, ShardMapKind)> =
+            trials.iter().map(|t| (t.spec.server_shards, t.spec.shard_map)).collect();
+        let want = vec![
+            (1, ShardMapKind::Contiguous),
+            (2, ShardMapKind::Contiguous),
+            (2, ShardMapKind::Balanced),
+            (4, ShardMapKind::Contiguous),
+            (4, ShardMapKind::Balanced),
+            (8, ShardMapKind::Contiguous),
+            (8, ShardMapKind::Balanced),
+        ];
+        assert_eq!(got, want);
+        // Every trial is pre-validated and keys are unique.
+        let keys: BTreeSet<String> = trials.iter().map(|t| t.spec.key()).collect();
+        assert_eq!(keys.len(), trials.len());
+        // Quick scale pins h=2 on every point.
+        assert!(trials.iter().all(|t| t.spec.method.h_hint() == 2));
+    }
+
+    #[test]
+    fn h_expansion_composes_preset_then_period() {
+        let trials = h_sweep(Scale::Quick).trials().unwrap();
+        assert_eq!(trials.len(), 4);
+        // (h=1, an), (h=1, cse), (h=2, an), (h=2, cse) — rightmost
+        // axis fastest, preset applied before the period refinement.
+        assert_eq!(trials[0].spec.method, Method::FslAn.spec());
+        assert_eq!(trials[1].spec.method, Method::CseFsl.spec());
+        assert_eq!(trials[2].spec.method, Method::FslAn.spec().with_period(2));
+        assert_eq!(trials[3].spec.method, Method::CseFsl.spec().with_period(2));
+    }
+
+    #[test]
+    fn noniid_arms_move_dataset_workload_and_lr_together() {
+        let sweep = staleness_noniid_sweep(Scale::Quick);
+        let trials = sweep.trials().unwrap();
+        assert_eq!(trials.len(), 2 * 2 * 3);
+        let cifar = &trials[0].spec;
+        assert_eq!((cifar.dataset.as_str(), cifar.aux.as_str()), ("cifar", "cnn27"));
+        assert_eq!(cifar.dist, Dist::NonIidDirichlet);
+        assert_eq!(cifar.lr0, 0.01);
+        assert_eq!(cifar.workload.rounds, cifar_workload(Scale::Quick).rounds);
+        let femnist = &trials[6].spec;
+        assert_eq!((femnist.dataset.as_str(), femnist.aux.as_str()), ("femnist", "cnn8"));
+        assert_eq!(femnist.dist, Dist::NonIidWriter);
+        assert_eq!(femnist.lr0, 0.05);
+        assert_eq!(femnist.workload.rounds, femnist_workload(Scale::Quick).rounds);
+        assert_eq!(femnist.method.h_hint(), 2);
+    }
+
+    #[test]
+    fn seeds_and_repeats_expand_and_duplicates_are_rejected() {
+        let mut sweep = b_sweep(Scale::Quick);
+        sweep.seeds = vec![1, 7];
+        sweep.repeats = 2;
+        let trials = sweep.trials().unwrap();
+        // 2 codecs × 2 seeds × 2 repeats; repeat r runs at seed + r.
+        assert_eq!(trials.len(), 8);
+        let seeds: Vec<u64> = trials.iter().take(4).map(|t| t.spec.seed).collect();
+        assert_eq!(seeds, vec![1, 2, 7, 8]);
+        // Overlapping seed/repeat windows collide on RunSpec::key and
+        // must be rejected, not silently double-journaled.
+        sweep.seeds = vec![1, 2];
+        let err = sweep.trials().unwrap_err();
+        assert!(err.contains("duplicate trial key"), "{err}");
+    }
+
+    #[test]
+    fn builtin_ids_resolve() {
+        for id in ["k", "staleness", "h", "period", "b", "bits", "all"] {
+            assert!(builtin(id, Scale::Quick).is_ok(), "{id}");
+        }
+        assert_eq!(builtin("all", Scale::Quick).unwrap().len(), 4);
+        assert!(builtin("z", Scale::Quick).is_err());
+    }
+}

@@ -9,6 +9,9 @@
 //!            upload-period x topology figure, `b` the accuracy-vs-bits
 //!            compression figure)
 //!   table    regenerate a paper table (2|3|4|5|all)
+//!   sweep    run a declarative sweep (k|h|b|all) with a crash-durable
+//!            trial journal; `--resume` skips journaled-complete trials
+//!            and `--fail-after N` injects a mid-sweep abort (CI/tests)
 //!   inspect  show the AOT artifact manifest
 //!
 //! Everything requires `make artifacts` to have produced `artifacts/`.
@@ -19,6 +22,7 @@ use cse_fsl::exp::common::{
     cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale,
     STREAM_THRESHOLD,
 };
+use cse_fsl::exp::sweep::{self, SweepOptions};
 use cse_fsl::exp::{figures, tables};
 use cse_fsl::util::cli::Command;
 use cse_fsl::util::logging;
@@ -32,13 +36,15 @@ fn main() {
         Some("run") => cmd_run(&argv[1..]),
         Some("figure") => cmd_figure(&argv[1..]),
         Some("table") => cmd_table(&argv[1..]),
+        Some("sweep") => cmd_sweep(&argv[1..]),
         Some("inspect") => cmd_inspect(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!(
                 "cse-fsl — Communication and Storage Efficient Federated Split Learning\n\n\
-                 USAGE:\n  cse-fsl <run|figure|table|inspect> [args]\n\n\
+                 USAGE:\n  cse-fsl <run|figure|table|sweep|inspect> [args]\n\n\
                  EXAMPLES:\n  cse-fsl run --dataset femnist --method cse --h 2 --rounds 20\n  \
-                 cse-fsl figure 4 --scale ci\n  cse-fsl table all\n  cse-fsl inspect"
+                 cse-fsl figure 4 --scale ci\n  cse-fsl table all\n  \
+                 cse-fsl sweep h --scale paper --engine mock --resume\n  cse-fsl inspect"
             );
             0
         }
@@ -343,6 +349,53 @@ fn cmd_table(argv: &[String]) -> i32 {
                 other => return Err(format!("no table {other} (have 2-5)")),
             };
             println!("{report}");
+        }
+        Ok(())
+    };
+    run().map(|_| 0).unwrap_or_else(fail)
+}
+
+fn cmd_sweep(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "cse-fsl sweep",
+        "run a declarative sweep with a crash-durable trial journal",
+    )
+    .positional("spec", "which sweep: k|staleness, h|period, b|bits, all")
+    .opt("scale", "ci", "quick (alias smoke) | ci | paper")
+    .opt("out", "results", "output directory")
+    .opt("engine", "auto", "compute backend: auto | pjrt | mock")
+    .flag(
+        "resume",
+        "reopen the trial journal (tolerating a torn final line) and skip \
+         journaled-complete trials instead of starting fresh",
+    )
+    .opt_nodefault(
+        "fail-after",
+        "fault injection: abort after N executed trials, leaving the journal \
+         behind for --resume (tests/CI)",
+    );
+    let run = || -> Result<(), String> {
+        let args = cmd.parse(argv).map_err(|e| format!("{e}\n\n{}", cmd.usage()))?;
+        let id = args.positional("spec").unwrap().to_string();
+        let scale = Scale::parse(args.get("scale").unwrap()).ok_or("bad --scale")?;
+        let engine =
+            EngineChoice::parse(args.get("engine").unwrap()).ok_or("bad --engine")?;
+        let fail_after = match args.get("fail-after") {
+            Some(_) => Some(args.parse_as::<usize>("fail-after").map_err(|e| e.to_string())?),
+            None => None,
+        };
+        let opts = SweepOptions { resume: args.flag("resume"), fail_after };
+        let mut harness = Harness::with_engine(args.get("out").unwrap(), engine)?;
+        println!("(engine backend: {})", harness.backend());
+        for sw in sweep::builtin(&id, scale)? {
+            let outcome = sweep::run_sweep(&mut harness, &sw, &opts)?;
+            println!("{}", outcome.report);
+            println!(
+                "sweep {}: {} trials, {} journaled-complete (skipped), {} executed",
+                sw.name, outcome.total, outcome.skipped, outcome.executed
+            );
+            println!("journal: {}", outcome.journal.display());
+            println!("csv:     {}\n", outcome.csv.display());
         }
         Ok(())
     };

@@ -1,0 +1,192 @@
+//! Property suite for the sweep trial journal (`exp::sweep`): across
+//! random trial interleavings, duplicate records, torn/truncated final
+//! lines, and unknown-version records, the reader must recover exactly
+//! the longest valid prefix, replay must be idempotent, and
+//! journaled-complete trial keys must be a subset of the sweep's own
+//! spec expansion.
+
+use std::collections::BTreeSet;
+
+use cse_fsl::exp::common::{Scale, CACHE_VERSION};
+use cse_fsl::exp::sweep::{
+    builtin, journaled_complete, recover, TrialEntry, TrialStatus, JOURNAL_VERSION,
+};
+use cse_fsl::prop_assert;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+/// A random journal entry over a small key pool (collisions are the
+/// point: duplicates are a journal fact of life under resume).
+fn random_entry(rng: &mut Rng) -> TrialEntry {
+    let key = format!("trial-key-{}", rng.below(6));
+    let status = if rng.below(4) == 0 { TrialStatus::Failed } else { TrialStatus::Ok };
+    let record = if status == TrialStatus::Ok {
+        format!("cache/mock/{key}.json")
+    } else {
+        String::new()
+    };
+    TrialEntry {
+        key,
+        // Mostly current-version records, sometimes a stale schema.
+        cache_version: if rng.below(5) == 0 { CACHE_VERSION + 1 } else { CACHE_VERSION },
+        status,
+        digest: rng.next_u64(),
+        record,
+    }
+}
+
+/// A random journal: its entries, their rendered lines, and the full
+/// byte image.
+fn random_journal(rng: &mut Rng) -> (Vec<TrialEntry>, Vec<String>, Vec<u8>) {
+    let n = 1 + rng.below(8) as usize;
+    let entries: Vec<TrialEntry> = (0..n).map(|_| random_entry(rng)).collect();
+    let lines: Vec<String> = entries.iter().map(|e| format!("{}\n", e.to_line())).collect();
+    let bytes = lines.concat().into_bytes();
+    (entries, lines, bytes)
+}
+
+#[test]
+fn entry_lines_roundtrip() {
+    prop::check("entry_lines_roundtrip", |rng| {
+        let e = random_entry(rng);
+        let line = e.to_line();
+        prop_assert!(!line.contains('\n'), "entry rendered with embedded newline: {line:?}");
+        let back = TrialEntry::parse(&line)
+            .map_err(|err| format!("own line failed to parse: {err}"))?;
+        prop_assert!(back == e, "round-trip changed the entry: {e:?} -> {back:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn recover_is_exact_longest_valid_prefix_under_truncation() {
+    prop::check("recover_truncation_prefix", |rng| {
+        let (entries, lines, bytes) = random_journal(rng);
+        // Cut the byte image anywhere, including line boundaries and
+        // cut=0 / cut=len: recovery must return exactly the entries
+        // whose full line (newline included) survives the cut.
+        let cut = rng.below(bytes.len() as u64 + 1) as usize;
+        let (got, valid) = recover(&bytes[..cut]);
+        let mut boundary = 0usize;
+        let mut want = 0usize;
+        for line in &lines {
+            if boundary + line.len() <= cut {
+                boundary += line.len();
+                want += 1;
+            } else {
+                break;
+            }
+        }
+        prop_assert!(valid == boundary, "valid bytes {valid} != intact-line bytes {boundary}");
+        prop_assert!(
+            got == entries[..want],
+            "cut at {cut}: recovered {} entries, wanted {want}",
+            got.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn recover_stops_at_corrupt_or_unknown_version_lines() {
+    prop::check("recover_corruption_prefix", |rng| {
+        let (entries, lines, _) = random_journal(rng);
+        // Replace the line at position p with either garbage or a
+        // structurally valid record from an unknown journal version.
+        let p = rng.below(lines.len() as u64) as usize;
+        let bad = match rng.below(3) {
+            0 => "not json at all\n".to_string(),
+            1 => format!("{}\n", &lines[p][..lines[p].len() / 2]),
+            // `to_line()` is compact JSON: no space after the colon.
+            _ => format!(
+                "{}\n",
+                entries[p].to_line().replace(
+                    &format!("\"journal_version\":{JOURNAL_VERSION}"),
+                    "\"journal_version\":99",
+                )
+            ),
+        };
+        let mut doctored = String::new();
+        for (i, line) in lines.iter().enumerate() {
+            doctored.push_str(if i == p { &bad } else { line });
+        }
+        let (got, valid) = recover(doctored.as_bytes());
+        let boundary: usize = lines[..p].iter().map(|l| l.len()).sum();
+        prop_assert!(
+            got == entries[..p],
+            "corruption at line {p}: recovered {} entries, wanted {p}",
+            got.len()
+        );
+        prop_assert!(valid == boundary, "valid bytes {valid} != prefix bytes {boundary}");
+        Ok(())
+    });
+}
+
+#[test]
+fn recover_replay_is_idempotent() {
+    prop::check("recover_replay_idempotent", |rng| {
+        let (_, _, mut bytes) = random_journal(rng);
+        // Optionally tear the tail first: idempotence must hold from
+        // any starting image, clean or torn.
+        if rng.below(2) == 0 {
+            let cut = rng.below(bytes.len() as u64 + 1) as usize;
+            bytes.truncate(cut);
+        }
+        let (first, valid) = recover(&bytes);
+        // Replaying exactly the valid prefix (what Journal::resume
+        // truncates the file to) is a fixed point.
+        let (second, valid2) = recover(&bytes[..valid]);
+        prop_assert!(second == first, "replay recovered different entries");
+        prop_assert!(valid2 == valid, "replay moved the valid boundary: {valid} -> {valid2}");
+        Ok(())
+    });
+}
+
+#[test]
+fn journaled_complete_keys_are_subset_of_spec_expansion() {
+    // The real expansion of the built-in `h` sweep at Quick scale.
+    let sweeps = builtin("h", Scale::Quick).unwrap();
+    let expansion: BTreeSet<String> =
+        sweeps[0].trials().unwrap().iter().map(|t| t.spec.key()).collect();
+    let keys: Vec<String> = expansion.iter().cloned().collect();
+    prop::check("journaled_complete_subset", |rng| {
+        // Random mix of in-grid entries, alien keys, failures, stale
+        // schema versions, and duplicates.
+        let n = rng.below(12) as usize;
+        let entries: Vec<TrialEntry> = (0..n)
+            .map(|_| {
+                let mut e = random_entry(rng);
+                if rng.below(2) == 0 {
+                    e.key = keys[rng.below(keys.len() as u64) as usize].clone();
+                }
+                e
+            })
+            .collect();
+        let done = journaled_complete(&entries, &expansion);
+        for (key, e) in &done {
+            prop_assert!(expansion.contains(key), "completed key {key:?} outside expansion");
+            prop_assert!(
+                e.status == TrialStatus::Ok,
+                "non-Ok entry marked complete: {e:?}"
+            );
+            prop_assert!(
+                e.cache_version == CACHE_VERSION,
+                "stale-schema entry marked complete: {e:?}"
+            );
+        }
+        // Last-wins: the map must hold the final Ok record per key.
+        for (key, e) in &done {
+            let last = entries
+                .iter()
+                .rev()
+                .find(|c| {
+                    &c.key == key
+                        && c.status == TrialStatus::Ok
+                        && c.cache_version == CACHE_VERSION
+                })
+                .unwrap();
+            prop_assert!(last == *e, "completion for {key:?} is not the last Ok entry");
+        }
+        Ok(())
+    });
+}

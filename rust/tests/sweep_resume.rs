@@ -1,0 +1,337 @@
+//! Fault-injection suite for the durable sweep runner (`exp::sweep`):
+//! interrupt a sweep after K trials — via the `fail_after` injection
+//! hook and via a `kill -9`-style torn journal — then resume and assert
+//! journaled trials are not re-executed, the union of work equals the
+//! full grid, and the final CSV is byte-identical to an uninterrupted
+//! run. Also pins the PR-8 port contract: the three sweep-driven
+//! figures (k / h / b) produce CSVs byte-identical to the pre-sweep
+//! hand-coded loops, re-rolled verbatim here.
+
+use std::collections::BTreeSet;
+use std::io::Write;
+use std::path::PathBuf;
+
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
+use cse_fsl::coordinator::methods::{Compression, Method};
+use cse_fsl::exp::common::{
+    cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale, Workload,
+};
+use cse_fsl::exp::figures;
+use cse_fsl::exp::sweep::{builtin, recover, run_sweep, SweepOptions, TrialEntry, TrialStatus};
+use cse_fsl::sched::SchedPolicy;
+use cse_fsl::util::csvio::Csv;
+
+fn tmp(tag: &str, line: u32) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("cse_fsl_{tag}_{}_{line}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The pre-sweep `exp::figures::base_spec`, re-rolled verbatim: the
+/// byte-compat pins below must not depend on the refactored code under
+/// test for their expected values.
+fn old_base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
+    RunSpec {
+        dataset: dataset.into(),
+        aux: aux.into(),
+        method: Method::CseFsl.spec(),
+        n_clients: 5,
+        participation: 0,
+        dist: Dist::Iid,
+        arrival: ArrivalOrder::ByDelay,
+        lr0: if dataset == "cifar" { 0.01 } else { 0.05 },
+        seed: 1,
+        workload: w,
+        parallelism: Parallelism::auto(),
+        server_shards: 1,
+        sched: SchedPolicy::WorkStealing,
+        shard_map: ShardMapKind::Contiguous,
+    }
+}
+
+#[test]
+fn injected_failure_resumes_without_reexecution() {
+    // Uninterrupted reference run.
+    let dir_a = tmp("sweep_clean", line!());
+    let mut ha = Harness::with_engine(&dir_a, EngineChoice::Mock).unwrap();
+    let sweeps = builtin("h", Scale::Quick).unwrap();
+    assert_eq!(sweeps.len(), 1);
+    let sw = &sweeps[0];
+    let clean = run_sweep(&mut ha, sw, &SweepOptions::default()).unwrap();
+    assert_eq!((clean.total, clean.skipped, clean.executed), (4, 0, 4));
+    let clean_csv = std::fs::read_to_string(&clean.csv).unwrap();
+
+    // Interrupted run: the injection hook kills the sweep after 2
+    // executed trials, leaving exactly 2 journaled lines behind.
+    let dir_b = tmp("sweep_fail", line!());
+    let mut hb = Harness::with_engine(&dir_b, EngineChoice::Mock).unwrap();
+    let err = run_sweep(&mut hb, sw, &SweepOptions { resume: false, fail_after: Some(2) })
+        .unwrap_err();
+    assert!(err.contains("injected failure"), "{err}");
+    let journal_path = dir_b.join("sweeps").join("mock").join("h.jsonl");
+    let interrupted = std::fs::read(&journal_path).unwrap();
+    assert_eq!(interrupted.iter().filter(|&&b| b == b'\n').count(), 2);
+
+    // Resume: journaled trials are skipped, only the remainder runs,
+    // and the journal grows append-only over its interrupted prefix.
+    let out = run_sweep(&mut hb, sw, &SweepOptions { resume: true, fail_after: None }).unwrap();
+    assert_eq!((out.total, out.skipped, out.executed), (4, 2, 2));
+    let resumed = std::fs::read(&journal_path).unwrap();
+    assert!(resumed.starts_with(&interrupted), "resume must append, not rewrite");
+    assert_eq!(resumed.iter().filter(|&&b| b == b'\n').count(), 4);
+
+    // Union of work == the full grid (by RunSpec::key).
+    let (entries, valid) = recover(&resumed);
+    assert_eq!(valid, resumed.len());
+    let keys: BTreeSet<String> = entries.iter().map(|e| e.key.clone()).collect();
+    let want: BTreeSet<String> = sw.trials().unwrap().iter().map(|t| t.spec.key()).collect();
+    assert_eq!(keys, want);
+
+    // Final CSV byte-identical to the uninterrupted run.
+    assert_eq!(std::fs::read_to_string(&out.csv).unwrap(), clean_csv);
+
+    // A second resume finds everything journaled: fail_after(0) proves
+    // zero trials re-execute (it would abort before the first one).
+    let again =
+        run_sweep(&mut hb, sw, &SweepOptions { resume: true, fail_after: Some(0) }).unwrap();
+    assert_eq!((again.skipped, again.executed), (4, 0));
+    assert_eq!(std::fs::read_to_string(&again.csv).unwrap(), clean_csv);
+
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}
+
+#[test]
+fn torn_journal_line_is_dropped_and_rerun() {
+    let dir = tmp("sweep_torn", line!());
+    let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    let sweeps = builtin("h", Scale::Quick).unwrap();
+    let sw = &sweeps[0];
+    let clean = run_sweep(&mut h, sw, &SweepOptions::default()).unwrap();
+    let clean_csv = std::fs::read_to_string(&clean.csv).unwrap();
+
+    // kill -9 mid-write: the final journal line is cut mid-bytes.
+    let bytes = std::fs::read(&clean.journal).unwrap();
+    std::fs::write(&clean.journal, &bytes[..bytes.len() - 7]).unwrap();
+
+    // Resume drops exactly the torn line and re-runs only that trial.
+    let out = run_sweep(&mut h, sw, &SweepOptions { resume: true, fail_after: None }).unwrap();
+    assert_eq!((out.skipped, out.executed), (3, 1));
+    assert_eq!(std::fs::read_to_string(&out.csv).unwrap(), clean_csv);
+    let healed = std::fs::read(&clean.journal).unwrap();
+    assert_eq!(recover(&healed).1, healed.len(), "healed journal is fully valid");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn duplicate_alien_and_failed_entries_do_not_confuse_resume() {
+    let dir = tmp("sweep_dup", line!());
+    let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    let sweeps = builtin("h", Scale::Quick).unwrap();
+    let sw = &sweeps[0];
+    let clean = run_sweep(&mut h, sw, &SweepOptions::default()).unwrap();
+    let clean_csv = std::fs::read_to_string(&clean.csv).unwrap();
+
+    // Append a duplicate of the first entry, an Ok entry under a key
+    // outside this sweep's expansion, and a Failed retread of the
+    // second entry — none of which may change what resume skips.
+    let (entries, _) = recover(&std::fs::read(&clean.journal).unwrap());
+    let alien = TrialEntry { key: "alien-grid-key".to_string(), ..entries[0].clone() };
+    let failed = TrialEntry {
+        status: TrialStatus::Failed,
+        digest: 0,
+        record: String::new(),
+        ..entries[1].clone()
+    };
+    let mut extra = String::new();
+    for e in [&entries[0], &alien, &failed] {
+        extra.push_str(&e.to_line());
+        extra.push('\n');
+    }
+    let mut f = std::fs::OpenOptions::new().append(true).open(&clean.journal).unwrap();
+    f.write_all(extra.as_bytes()).unwrap();
+    drop(f);
+
+    let out =
+        run_sweep(&mut h, sw, &SweepOptions { resume: true, fail_after: Some(0) }).unwrap();
+    assert_eq!((out.skipped, out.executed), (4, 0));
+    assert_eq!(std::fs::read_to_string(&out.csv).unwrap(), clean_csv);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig_h_csv_is_byte_identical_to_pre_sweep_loop() {
+    let dir = tmp("fig_h_pin", line!());
+    let mut harness = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    // The old fig_h body at Quick scale, verbatim.
+    let base = old_base_spec("cifar", "cnn27", cifar_workload(Scale::Quick));
+    let mut csv = Csv::new(&[
+        "series",
+        "h",
+        "topology",
+        "final_accuracy",
+        "load_gb",
+        "server_storage_params",
+        "sim_time",
+    ]);
+    for &h in &[1usize, 2] {
+        let arms = [
+            (Method::FslAn.spec().with_period(h), "per-client"),
+            (Method::CseFsl.spec().with_period(h), "shared"),
+        ];
+        for (method, topo) in arms {
+            let spec = RunSpec { method, ..base.clone() };
+            let rec = harness.run_cached(&spec).unwrap();
+            csv.row(&[
+                rec.label.clone(),
+                h.to_string(),
+                topo.to_string(),
+                format!("{:.4}", rec.final_accuracy),
+                format!("{:.6}", rec.total_gb()),
+                rec.server_storage_params.to_string(),
+                format!("{:.4}", rec.sim_time),
+            ]);
+        }
+    }
+    let report = figures::fig_h(&mut harness, Scale::Quick).unwrap();
+    assert!(report.contains("Upload period h x server topology"), "{report}");
+    assert_eq!(std::fs::read_to_string(dir.join("fig_h.csv")).unwrap(), csv.to_string());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig_b_csv_is_byte_identical_to_pre_sweep_loop() {
+    let dir = tmp("fig_b_pin", line!());
+    let mut harness = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    // The old fig_b body at Quick scale, verbatim.
+    let base = old_base_spec("cifar", "cnn27", cifar_workload(Scale::Quick));
+    let mut csv = Csv::new(&["series", "codec", "final_accuracy", "load_gb", "sim_time"]);
+    for &codec in &[Compression::None, Compression::Quantize { bits: 4 }] {
+        let spec = RunSpec {
+            method: Method::CseFsl.spec().with_period(2).with_compression(codec),
+            ..base.clone()
+        };
+        let rec = harness.run_cached(&spec).unwrap();
+        csv.row(&[
+            rec.label.clone(),
+            codec.to_string(),
+            format!("{:.4}", rec.final_accuracy),
+            format!("{:.6}", rec.total_gb()),
+            format!("{:.4}", rec.sim_time),
+        ]);
+    }
+    let report = figures::fig_b(&mut harness, Scale::Quick).unwrap();
+    assert!(report.contains("Accuracy vs wire precision"), "{report}");
+    assert_eq!(std::fs::read_to_string(dir.join("fig_b.csv")).unwrap(), csv.to_string());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fig_staleness_csvs_are_byte_identical_to_pre_sweep_loops() {
+    let dir = tmp("fig_k_pin", line!());
+    let mut harness = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    let n_clients = 8usize;
+    let h = 2usize; // Quick scale
+
+    // The old fig_staleness IID arm at Quick scale, verbatim.
+    let w = cifar_workload(Scale::Quick);
+    let mut specs = Vec::new();
+    for &k in &[1usize, 2, 4, 8] {
+        let base = RunSpec {
+            method: Method::CseFsl.spec().with_period(h),
+            n_clients,
+            server_shards: k,
+            shard_map: ShardMapKind::Contiguous,
+            ..old_base_spec("cifar", "cnn27", w)
+        };
+        specs.push(base.clone());
+        if k > 1 {
+            specs.push(RunSpec { shard_map: ShardMapKind::Balanced, ..base });
+        }
+    }
+    let mut csv = Csv::new(&[
+        "series",
+        "k",
+        "shard_map",
+        "final_accuracy",
+        "server_storage_params",
+        "sim_time",
+        "sched_efficiency",
+        "shard_divergence",
+    ]);
+    for spec in &specs {
+        let rec = harness.run_cached(spec).unwrap();
+        csv.row(&[
+            rec.label.clone(),
+            spec.server_shards.to_string(),
+            spec.shard_map.to_string(),
+            format!("{:.4}", rec.final_accuracy),
+            rec.server_storage_params.to_string(),
+            format!("{:.4}", rec.sim_time),
+            format!("{:.4}", rec.sched_efficiency()),
+            format!("{:.4}", rec.shard_label_divergence),
+        ]);
+    }
+
+    // The old non-IID placement arm at Quick scale, verbatim.
+    let mut csv_noniid = Csv::new(&[
+        "series",
+        "dataset",
+        "dist",
+        "k",
+        "shard_map",
+        "final_accuracy",
+        "shard_divergence",
+        "sim_time",
+    ]);
+    for (dataset, aux, dist, h) in [
+        ("cifar", "cnn27", Dist::NonIidDirichlet, h),
+        ("femnist", "cnn8", Dist::NonIidWriter, 2),
+    ] {
+        let w = match dataset {
+            "cifar" => cifar_workload(Scale::Quick),
+            _ => femnist_workload(Scale::Quick),
+        };
+        for &k in &[2usize, 4] {
+            for map in
+                [ShardMapKind::Contiguous, ShardMapKind::Balanced, ShardMapKind::Locality]
+            {
+                let spec = RunSpec {
+                    method: Method::CseFsl.spec().with_period(h),
+                    n_clients,
+                    dist,
+                    server_shards: k,
+                    shard_map: map,
+                    ..old_base_spec(dataset, aux, w)
+                };
+                let rec = harness.run_cached(&spec).unwrap();
+                csv_noniid.row(&[
+                    rec.label.clone(),
+                    dataset.to_string(),
+                    dist.tag().to_string(),
+                    k.to_string(),
+                    map.to_string(),
+                    format!("{:.4}", rec.final_accuracy),
+                    format!("{:.4}", rec.shard_label_divergence),
+                    format!("{:.4}", rec.sim_time),
+                ]);
+            }
+        }
+    }
+
+    let report = figures::fig_staleness(&mut harness, Scale::Quick).unwrap();
+    assert!(report.contains("Accuracy vs server shards k"), "{report}");
+    assert!(report.contains("Shard placement on non-IID splits"), "{report}");
+    assert_eq!(
+        std::fs::read_to_string(dir.join("fig_staleness.csv")).unwrap(),
+        csv.to_string()
+    );
+    assert_eq!(
+        std::fs::read_to_string(dir.join("fig_staleness_noniid.csv")).unwrap(),
+        csv_noniid.to_string()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
