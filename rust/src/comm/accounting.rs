@@ -326,6 +326,18 @@ pub mod predict {
         /// No gradient downlink; client aux nets ride along with model
         /// aggregation (the local-update rule — FSL_AN / CSE_FSL).
         AuxLocal,
+        /// Gradient-estimator rule (FSL-SAGE): aux nets ride along with
+        /// model aggregation like [`TrafficProfile::AuxLocal`], but every
+        /// `align_every`-th round additionally triggers a true-gradient
+        /// downlink used to re-align the estimator. The gradient-downlink
+        /// term reduces **exactly** to [`TrafficProfile::ServerGrad`]'s at
+        /// `align_every = 1` and vanishes once `align_every > rounds`, at
+        /// which point the whole profile equals
+        /// [`TrafficProfile::AuxLocal`]'s byte totals.
+        SageEstimate {
+            /// Alignment period in rounds (>= 1).
+            align_every: u64,
+        },
     }
 
     /// Expected bytes per message kind over a whole run, full
@@ -361,13 +373,21 @@ pub mod predict {
                 match p {
                     TrafficProfile::ServerGrad => rounds * n * smashed_wire,
                     TrafficProfile::AuxLocal => 0,
+                    // One alignment downlink every align_every-th round:
+                    // rounds/align_every of them, each the same codec-wired
+                    // smashed tensor the per-batch rule sends. align_every=1
+                    // is exactly the ServerGrad term; align_every > rounds
+                    // is exactly the AuxLocal (zero) term.
+                    TrafficProfile::SageEstimate { align_every } => {
+                        (rounds / align_every) * n * smashed_wire
+                    }
                 },
             ),
             (MsgKind::ClientModelUpload, aggs * n * w.client_model),
             (MsgKind::ClientModelDownload, aggs * n * w.client_model),
         ];
         match p {
-            TrafficProfile::AuxLocal => {
+            TrafficProfile::AuxLocal | TrafficProfile::SageEstimate { .. } => {
                 out.push((MsgKind::AuxModelUpload, aggs * n * w.aux_model));
                 out.push((MsgKind::AuxModelDownload, aggs * n * w.aux_model));
             }
@@ -513,7 +533,11 @@ mod tests {
         use crate::comm::compress::Compression;
         let w = wires();
         let (n, batch, rounds, agg_every) = (5u64, 50u64, 12u64, 4u64);
-        for p in [predict::TrafficProfile::ServerGrad, predict::TrafficProfile::AuxLocal] {
+        for p in [
+            predict::TrafficProfile::ServerGrad,
+            predict::TrafficProfile::AuxLocal,
+            predict::TrafficProfile::SageEstimate { align_every: 3 },
+        ] {
             let base: std::collections::BTreeMap<_, _> =
                 predict::run_kind_bytes(p, Compression::None, n, batch, rounds, agg_every, &w)
                     .into_iter()
@@ -538,6 +562,9 @@ mod tests {
                             let want = match p {
                                 predict::TrafficProfile::ServerGrad => rounds * n * wire,
                                 predict::TrafficProfile::AuxLocal => 0,
+                                predict::TrafficProfile::SageEstimate { align_every } => {
+                                    (rounds / align_every) * n * wire
+                                }
                             };
                             assert_eq!(bytes, want, "{p:?} {c}");
                         }
@@ -547,6 +574,68 @@ mod tests {
                 }
                 // Compressed smashed traffic is strictly below full precision.
                 assert!(wire < Compression::None.wire_bytes(smashed_elems), "{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn sage_profile_reduces_to_both_neighbours() {
+        use crate::comm::compress::Compression;
+        let w = wires();
+        let (n, batch, rounds, agg_every) = (5u64, 50u64, 12u64, 4u64);
+        for c in [
+            Compression::None,
+            Compression::Quantize { bits: 4 },
+            Compression::TopK { frac: 0.25 },
+        ] {
+            // align_every = 1: byte-for-byte the ServerGrad gradient
+            // downlink, plus AuxLocal's aux-aggregation riders.
+            let sage1: std::collections::BTreeMap<_, _> = predict::run_kind_bytes(
+                predict::TrafficProfile::SageEstimate { align_every: 1 },
+                c, n, batch, rounds, agg_every, &w,
+            )
+            .into_iter()
+            .collect();
+            let grad: std::collections::BTreeMap<_, _> = predict::run_kind_bytes(
+                predict::TrafficProfile::ServerGrad,
+                c, n, batch, rounds, agg_every, &w,
+            )
+            .into_iter()
+            .collect();
+            let aux: std::collections::BTreeMap<_, _> = predict::run_kind_bytes(
+                predict::TrafficProfile::AuxLocal,
+                c, n, batch, rounds, agg_every, &w,
+            )
+            .into_iter()
+            .collect();
+            assert_eq!(
+                sage1[&MsgKind::GradDownload],
+                grad[&MsgKind::GradDownload],
+                "{c}"
+            );
+            for k in [MsgKind::AuxModelUpload, MsgKind::AuxModelDownload] {
+                assert_eq!(sage1[&k], aux[&k], "{c} {k:?}");
+            }
+            // align_every > rounds: the whole profile IS AuxLocal.
+            let sage_inf = predict::run_kind_bytes(
+                predict::TrafficProfile::SageEstimate { align_every: rounds + 1 },
+                c, n, batch, rounds, agg_every, &w,
+            );
+            let aux_vec = predict::run_kind_bytes(
+                predict::TrafficProfile::AuxLocal,
+                c, n, batch, rounds, agg_every, &w,
+            );
+            assert_eq!(sage_inf, aux_vec, "{c}");
+            // In between, the downlink is monotone non-increasing in the
+            // alignment period and strictly between the two neighbours.
+            let mut last = u64::MAX;
+            for a in 1..=rounds + 1 {
+                let (_, down) = predict::run_totals(
+                    predict::TrafficProfile::SageEstimate { align_every: a },
+                    c, n, batch, rounds, agg_every, &w,
+                );
+                assert!(down <= last, "a={a} {c}");
+                last = down;
             }
         }
     }

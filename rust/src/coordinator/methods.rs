@@ -6,7 +6,7 @@
 //!
 //! | axis | variants | decides |
 //! |---|---|---|
-//! | [`ClientUpdate`] | `ServerGrad { clip }` / `AuxLocal` | where the client-side gradient comes from (server downlink per batch, or a local auxiliary-network loss) |
+//! | [`ClientUpdate`] | `ServerGrad { clip }` / `AuxLocal` / `SageEstimate { align_every, clip }` | where the client-side gradient comes from (server downlink per batch, a local auxiliary-network loss, or an aux-network *estimate* of the server gradient re-aligned against the true gradient every `align_every`-th upload — FSL-SAGE) |
 //! | [`UploadSchedule`] | `EveryBatch` / `Period(h)` / `AdaptivePeriod { .. }` | how many local batches each smashed upload amortizes |
 //! | [`ServerTopology`] | `PerClient` / `Shared` | whether the server keeps one model copy per client or shared copies (`TrainConfig::server_shards` refines `Shared` into k shard copies) |
 //! | [`Compression`] | `None` / `Quantize { bits }` / `TopK { frac }` | how many bits each smashed upload (and server-grad downlink) costs on the wire (FedLite-style lossy codecs) |
@@ -85,12 +85,30 @@ pub enum ClientUpdate {
     /// never waits for server gradients (fire-and-forget — the CSE-FSL
     /// rule). The aux networks join the model exchange at aggregation.
     AuxLocal,
+    /// The auxiliary network *estimates* the server's smashed-gradient
+    /// and the client trains against the estimate locally — between
+    /// alignments the round is fire-and-forget with AuxLocal-shaped
+    /// traffic. Every `align_every`-th upload the server returns its
+    /// true cut-layer gradient, used both for the client step and an
+    /// estimator-alignment update of the aux net — ServerGrad-shaped
+    /// traffic on that round only (the FSL-SAGE rule). `clip` caps the
+    /// gradient norm on both sides of the alignment round trip (0 =
+    /// off).
+    SageEstimate {
+        /// Alignment period in rounds: every `align_every`-th upload
+        /// triggers the true-gradient downlink. `1` aligns every round
+        /// (the ServerGrad traffic shape); large values approach the
+        /// purely local AuxLocal profile.
+        align_every: usize,
+        /// Gradient-norm clip on the alignment round trip (0 = off).
+        clip: f32,
+    },
 }
 
 impl ClientUpdate {
     /// Does this rule train (and aggregate) an auxiliary network?
     pub fn uses_aux(self) -> bool {
-        matches!(self, ClientUpdate::AuxLocal)
+        matches!(self, ClientUpdate::AuxLocal | ClientUpdate::SageEstimate { .. })
     }
 
     /// The gradient clip in effect (0 for the aux-local rule, which
@@ -99,14 +117,24 @@ impl ClientUpdate {
         match self {
             ClientUpdate::ServerGrad { clip } => clip,
             ClientUpdate::AuxLocal => 0.0,
+            ClientUpdate::SageEstimate { clip, .. } => clip,
         }
     }
 
-    /// Short cache-key tag (`sg{clip}` / `aux`).
+    /// Short cache-key tag (`sg{clip}` / `aux` / `sage{a}`; a non-zero
+    /// sage clip joins the segment as `sage{a}c{clip}` — the clip
+    /// changes results, so it must fork the key).
     pub fn tag(self) -> String {
         match self {
             ClientUpdate::ServerGrad { clip } => format!("sg{clip}"),
             ClientUpdate::AuxLocal => "aux".to_string(),
+            ClientUpdate::SageEstimate { align_every, clip } => {
+                if clip == 0.0 {
+                    format!("sage{align_every}")
+                } else {
+                    format!("sage{align_every}c{clip}")
+                }
+            }
         }
     }
 }
@@ -116,6 +144,9 @@ impl std::fmt::Display for ClientUpdate {
         match self {
             ClientUpdate::ServerGrad { clip } => write!(f, "server-grad(clip={clip})"),
             ClientUpdate::AuxLocal => write!(f, "aux-local"),
+            ClientUpdate::SageEstimate { align_every, clip } => {
+                write!(f, "sage-estimate(align={align_every}, clip={clip})")
+            }
         }
     }
 }
@@ -124,13 +155,20 @@ impl std::str::FromStr for ClientUpdate {
     type Err = String;
 
     /// `grad` / `server-grad` / `sg` (clip 0 until `--clip` composes);
-    /// `aux` / `aux-local` / `local`.
+    /// `aux` / `aux-local` / `local`; `sage` / `sage-estimate` /
+    /// `estimator` (alignment period 4 until `--align-every` composes,
+    /// clip 0 until `--clip` does). Parsing lowercases and maps `_` to
+    /// `-`, exactly like `Dist::parse`.
     fn from_str(s: &str) -> Result<Self, String> {
         match s.to_ascii_lowercase().replace('_', "-").as_str() {
             "grad" | "server-grad" | "sg" => Ok(ClientUpdate::ServerGrad { clip: 0.0 }),
             "aux" | "aux-local" | "local" => Ok(ClientUpdate::AuxLocal),
+            "sage" | "sage-estimate" | "estimator" => {
+                Ok(ClientUpdate::SageEstimate { align_every: 4, clip: 0.0 })
+            }
             other => Err(format!(
-                "bad client update {other:?} (expected grad | server-grad | aux | aux-local)"
+                "bad client update {other:?} (expected grad | server-grad | aux | \
+                 aux-local | sage)"
             )),
         }
     }
@@ -350,6 +388,18 @@ impl MethodSpec {
                 }
             }
             ClientUpdate::AuxLocal => {}
+            ClientUpdate::SageEstimate { align_every, clip } => {
+                if align_every == 0 {
+                    return Err(
+                        "sage alignment period must be >= 1 (--align-every)".into()
+                    );
+                }
+                if !clip.is_finite() || clip < 0.0 {
+                    return Err(format!("clip must be finite and >= 0 (got {clip})"));
+                }
+                // Between alignments the client is as fire-and-forget as
+                // AuxLocal, so any upload schedule composes.
+            }
         }
         match self.upload {
             UploadSchedule::EveryBatch => {}
@@ -470,6 +520,9 @@ impl MethodSpec {
         match self.update {
             ClientUpdate::ServerGrad { .. } => TrafficProfile::ServerGrad,
             ClientUpdate::AuxLocal => TrafficProfile::AuxLocal,
+            ClientUpdate::SageEstimate { align_every, .. } => {
+                TrafficProfile::SageEstimate { align_every: align_every as u64 }
+            }
         }
     }
 
@@ -489,9 +542,14 @@ impl MethodSpec {
     /// Resolve a spec from CLI flags — THE one home of method/axis flag
     /// handling. `method` names the preset base (`--method`, historical
     /// aliases preserved); each `Some` axis flag then overrides that
-    /// axis (`--update`, `--upload-every`, `--clip`, `--topology`, and
-    /// the compression trio `--compress` / `--bits` / `--topk`). The
-    /// result is validated.
+    /// axis (`--update`, `--upload-every`, `--clip`, `--align-every`,
+    /// `--topology`, and the compression trio `--compress` / `--bits` /
+    /// `--topk`). The result is validated.
+    ///
+    /// `--align-every` composes with the gradient-estimator rule only
+    /// (`--update sage`); passing it with any other update rule — or
+    /// passing a non-integer or zero period — is rejected rather than
+    /// silently ignored.
     ///
     /// Compression resolution: `--compress quantize` takes `--bits`
     /// (default 8), `--compress topk` takes `--topk` (default 0.25);
@@ -503,6 +561,7 @@ impl MethodSpec {
         update: Option<&str>,
         upload: Option<&str>,
         clip: Option<&str>,
+        align_every: Option<&str>,
         topology: Option<&str>,
         compress: Option<&str>,
         bits: Option<&str>,
@@ -523,6 +582,7 @@ impl MethodSpec {
                 .map_err(|_| format!("bad clip {c:?} (expected a number)"))?;
             match &mut spec.update {
                 ClientUpdate::ServerGrad { clip } => *clip = v,
+                ClientUpdate::SageEstimate { clip, .. } => *clip = v,
                 ClientUpdate::AuxLocal => {
                     if v != 0.0 {
                         return Err(
@@ -532,6 +592,20 @@ impl MethodSpec {
                                 .into(),
                         );
                     }
+                }
+            }
+        }
+        if let Some(a) = align_every {
+            let v: usize = a.parse().map_err(|_| {
+                format!("bad --align-every {a:?} (expected an integer >= 1)")
+            })?;
+            match &mut spec.update {
+                ClientUpdate::SageEstimate { align_every, .. } => *align_every = v,
+                _ => {
+                    return Err(format!(
+                        "--align-every {a} composes with the gradient-estimator \
+                         update rule (--update sage)"
+                    ));
                 }
             }
         }
@@ -910,22 +984,22 @@ mod tests {
     fn cli_resolution_composes() {
         // --method alone is the historical preset path.
         assert_eq!(
-            MethodSpec::from_cli("cse", None, None, None, None, None, None, None).unwrap(),
+            MethodSpec::from_cli("cse", None, None, None, None, None, None, None, None).unwrap(),
             Method::CseFsl.spec()
         );
         assert_eq!(
-            MethodSpec::from_cli("mc", None, None, None, None, None, None, None).unwrap(),
+            MethodSpec::from_cli("mc", None, None, None, None, None, None, None, None).unwrap(),
             Method::FslMc.spec()
         );
         // --upload-every composes onto the preset base...
         assert_eq!(
-            MethodSpec::from_cli("cse", None, Some("5"), None, None, None, None, None)
+            MethodSpec::from_cli("cse", None, Some("5"), None, None, None, None, None, None)
                 .unwrap(),
             Method::CseFsl.spec().with_period(5)
         );
         // ...including the spec-only "FSL_AN with h>1" point.
         assert_eq!(
-            MethodSpec::from_cli("an", None, Some("4"), None, None, None, None, None)
+            MethodSpec::from_cli("an", None, Some("4"), None, None, None, None, None, None)
                 .unwrap(),
             Method::FslAn.spec().with_period(4)
         );
@@ -935,6 +1009,7 @@ mod tests {
                 "cse",
                 Some("aux"),
                 Some("4"),
+                None,
                 None,
                 Some("per-client"),
                 None,
@@ -946,28 +1021,28 @@ mod tests {
         );
         // --clip composes with the server-grad rule only.
         let oc =
-            MethodSpec::from_cli("oc", None, None, Some("2.5"), None, None, None, None)
+            MethodSpec::from_cli("oc", None, None, Some("2.5"), None, None, None, None, None)
                 .unwrap();
         assert_eq!(oc.clip(), 2.5);
         assert_eq!(oc.preset(), None, "non-default clip leaves the preset");
         assert!(
-            MethodSpec::from_cli("cse", None, None, Some("1.0"), None, None, None, None)
+            MethodSpec::from_cli("cse", None, None, Some("1.0"), None, None, None, None, None)
                 .is_err()
         );
         assert!(
-            MethodSpec::from_cli("cse", None, None, Some("0"), None, None, None, None)
+            MethodSpec::from_cli("cse", None, None, Some("0"), None, None, None, None, None)
                 .is_ok()
         );
         // Incoherent compositions are rejected at resolution time.
         assert!(
-            MethodSpec::from_cli("mc", None, Some("2"), None, None, None, None, None)
+            MethodSpec::from_cli("mc", None, Some("2"), None, None, None, None, None, None)
                 .is_err()
         );
         assert!(
-            MethodSpec::from_cli("warp", None, None, None, None, None, None, None).is_err()
+            MethodSpec::from_cli("warp", None, None, None, None, None, None, None, None).is_err()
         );
         assert!(
-            MethodSpec::from_cli("cse", None, Some("bogus"), None, None, None, None, None)
+            MethodSpec::from_cli("cse", None, Some("bogus"), None, None, None, None, None, None)
                 .is_err()
         );
     }
@@ -975,7 +1050,17 @@ mod tests {
     #[test]
     fn cli_compression_resolution() {
         let cli = |compress: Option<&str>, bits: Option<&str>, topk: Option<&str>| {
-            MethodSpec::from_cli("cse", None, Some("2"), None, None, compress, bits, topk)
+            MethodSpec::from_cli(
+                "cse",
+                None,
+                Some("2"),
+                None,
+                None,
+                None,
+                compress,
+                bits,
+                topk,
+            )
         };
         // Defaults: quantize -> 8 bits, topk -> 25%.
         assert_eq!(
@@ -1026,5 +1111,151 @@ mod tests {
         assert_eq!(Method::FslOc.spec().traffic(), TrafficProfile::ServerGrad);
         assert_eq!(Method::FslAn.spec().traffic(), TrafficProfile::AuxLocal);
         assert_eq!(Method::CseFsl.spec().traffic(), TrafficProfile::AuxLocal);
+        let sage = MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every: 3, clip: 0.0 },
+            ..Method::CseFsl.spec()
+        };
+        assert_eq!(sage.traffic(), TrafficProfile::SageEstimate { align_every: 3 });
+    }
+
+    fn sage_spec(align_every: usize) -> MethodSpec {
+        MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every, clip: 0.0 },
+            ..Method::CseFsl.spec()
+        }
+    }
+
+    #[test]
+    fn sage_axis_semantics() {
+        let s = sage_spec(4);
+        // The estimator rule trains (and aggregates) an aux network...
+        assert!(s.update.uses_aux());
+        // ...composes with any upload schedule, either topology, and any
+        // codec (the downlink codec applies to the alignment rounds)...
+        assert!(s.validate().is_ok());
+        assert!(s.with_period(5).validate().is_ok());
+        assert!(
+            MethodSpec { topology: ServerTopology::PerClient, ..s }.validate().is_ok()
+        );
+        assert!(s
+            .with_compression(Compression::Quantize { bits: 4 })
+            .validate()
+            .is_ok());
+        let adaptive = MethodSpec {
+            upload: UploadSchedule::AdaptivePeriod { h0: 1, h_max: 8, double_every: 4 },
+            ..sage_spec(2)
+        };
+        assert!(adaptive.validate().is_ok());
+        // ...and never detects as a preset point.
+        assert_eq!(s.preset(), None);
+        assert_eq!(sage_spec(1).preset(), None);
+        // Degenerate parameters are rejected.
+        assert!(sage_spec(0).validate().is_err());
+        assert!(MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every: 4, clip: -1.0 },
+            ..Method::CseFsl.spec()
+        }
+        .validate()
+        .is_err());
+        assert!(MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every: 4, clip: f32::NAN },
+            ..Method::CseFsl.spec()
+        }
+        .validate()
+        .is_err());
+        // Clip composes (the alignment round trip is clippable).
+        assert_eq!(
+            MethodSpec {
+                update: ClientUpdate::SageEstimate { align_every: 4, clip: 1.5 },
+                ..Method::CseFsl.spec()
+            }
+            .clip(),
+            1.5
+        );
+    }
+
+    #[test]
+    fn sage_tags_and_labels() {
+        // The canonical `sage{a}` segment composes with the other axis
+        // tags exactly like any spec-only point.
+        assert_eq!(sage_spec(4).tag(), "sage4+b+sh");
+        assert_eq!(sage_spec(4).with_period(3).tag(), "sage4+p3+sh");
+        assert_eq!(sage_spec(4).with_period(3).label(), "sage4+p3+sh");
+        assert_eq!(
+            MethodSpec { topology: ServerTopology::PerClient, ..sage_spec(2) }.tag(),
+            "sage2+b+pc"
+        );
+        assert_eq!(
+            sage_spec(8).with_compression(Compression::Quantize { bits: 4 }).tag(),
+            "sage8+b+sh+q4"
+        );
+        // A non-zero clip changes results, so it forks the key segment.
+        assert_eq!(
+            MethodSpec {
+                update: ClientUpdate::SageEstimate { align_every: 4, clip: 0.5 },
+                ..Method::CseFsl.spec()
+            }
+            .tag(),
+            "sage4c0.5+b+sh"
+        );
+        assert_eq!(
+            format!("{}", ClientUpdate::SageEstimate { align_every: 4, clip: 0.0 }),
+            "sage-estimate(align=4, clip=0)"
+        );
+    }
+
+    #[test]
+    fn sage_axis_parsing() {
+        // Aliases, lowercasing, and `_` → `-` pinned like Dist::parse.
+        let d = ClientUpdate::SageEstimate { align_every: 4, clip: 0.0 };
+        assert_eq!("sage".parse::<ClientUpdate>(), Ok(d));
+        assert_eq!("SAGE".parse::<ClientUpdate>(), Ok(d));
+        assert_eq!("sage-estimate".parse::<ClientUpdate>(), Ok(d));
+        assert_eq!("sage_estimate".parse::<ClientUpdate>(), Ok(d));
+        assert_eq!("Sage_Estimate".parse::<ClientUpdate>(), Ok(d));
+        assert_eq!("estimator".parse::<ClientUpdate>(), Ok(d));
+        assert!("sage4".parse::<ClientUpdate>().is_err(), "period composes via --align-every");
+    }
+
+    #[test]
+    fn sage_cli_resolution() {
+        // --update sage alone: the documented default alignment period.
+        let s = MethodSpec::from_cli(
+            "cse", Some("sage"), None, None, None, None, None, None, None,
+        )
+        .unwrap();
+        assert_eq!(s.update, ClientUpdate::SageEstimate { align_every: 4, clip: 0.0 });
+        // --align-every composes onto it...
+        let s = MethodSpec::from_cli(
+            "cse", Some("sage"), Some("2"), None, Some("8"), None, None, None, None,
+        )
+        .unwrap();
+        assert_eq!(s.update, ClientUpdate::SageEstimate { align_every: 8, clip: 0.0 });
+        assert_eq!(s.upload, UploadSchedule::Period(2));
+        assert_eq!(s.tag(), "sage8+p2+sh");
+        // ...as does --clip (the alignment round trip is clippable).
+        let s = MethodSpec::from_cli(
+            "cse", Some("sage"), None, Some("1.5"), Some("3"), None, None, None, None,
+        )
+        .unwrap();
+        assert_eq!(s.update, ClientUpdate::SageEstimate { align_every: 3, clip: 1.5 });
+        // --align-every without --update sage is rejected, not ignored.
+        assert!(MethodSpec::from_cli(
+            "cse", None, None, None, Some("4"), None, None, None, None,
+        )
+        .is_err());
+        assert!(MethodSpec::from_cli(
+            "mc", Some("grad"), None, None, Some("4"), None, None, None, None,
+        )
+        .is_err());
+        // Zero and garbage periods are rejected.
+        assert!(MethodSpec::from_cli(
+            "cse", Some("sage"), None, None, Some("0"), None, None, None, None,
+        )
+        .is_err());
+        assert!(MethodSpec::from_cli(
+            "cse", Some("sage"), None, None, Some("x"), None, None, None, None,
+        )
+        .is_err());
     }
 }

@@ -6,7 +6,12 @@
 //!
 //! - [`ClientUpdate`] picks the round shape — `AuxLocal` runs the
 //!   fire-and-forget local round (Algorithm 1), `ServerGrad { clip }`
-//!   the blocking SplitFed round trip;
+//!   the blocking SplitFed round trip, and `SageEstimate { align_every,
+//!   clip }` runs the aux-local body every round plus, on every
+//!   `align_every`-th round, a true-gradient **alignment pass**: the
+//!   server's drain loop returns real cut-layer gradients, each client
+//!   takes a backward step on its own and re-fits its estimator against
+//!   it (ServerGrad-shaped downlink traffic on those rounds only);
 //! - [`UploadSchedule`] decides how many local batches each round's
 //!   upload amortizes (`batches_at(t)` — h per round, possibly
 //!   adaptive);
@@ -248,6 +253,19 @@ where
     fanout_owned(parallelism, policy, costs, refs, |pos, c| work(pos, participants[pos], c))
 }
 
+/// One true cut-layer gradient produced by an aligning drain pass
+/// (`ClientUpdate::SageEstimate`, on an `align_every`-th round): the
+/// lane's `server_fwd_bwd` output for one arrival, tagged with the
+/// client, its batch seed, and the server-update completion time the
+/// downlink departs at. Collected worker-locally in the lane loop and
+/// consumed by [`Trainer::align_estimators`] in canonical client order.
+struct AlignGrad {
+    client: usize,
+    seed: i32,
+    grad: Vec<f32>,
+    done: f64,
+}
+
 /// Worker-local artifacts of one client's aux-local round (losses,
 /// spans, wire bytes, the smashed message) — produced by
 /// [`run_local_client`], merged in canonical participant order.
@@ -338,6 +356,65 @@ fn run_local_client<E: SplitEngine>(
     // it never waits for server gradients.
     c.ready_at = start + t_compute + t_up;
     Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg })
+}
+
+/// One client's estimator-alignment step (`ClientUpdate::SageEstimate`,
+/// alignment rounds only): the true-gradient downlink (codec round trip
+/// + wire record + download span), a client backward on the true
+/// gradient, and an estimator re-fit on the same batch — the aux net is
+/// trained to regress what the server actually returned. This is THE
+/// alignment body for **both** engines, exactly like
+/// [`run_local_client`] is the round body for both. `round_rng` is the
+/// trainer-stream snapshot; the alignment splits use fresh tags
+/// (`0xEB` downlink codec, `0xA7` delays) so no same-round stream is
+/// shared. Returns the client backward's gradient norm plus the
+/// worker-local timeline/ledger to merge.
+#[allow(clippy::too_many_arguments)]
+fn align_one_client<E: SplitEngine>(
+    engine: &E,
+    lr: f32,
+    clip: f32,
+    compression: Compression,
+    grad_bytes: u64,
+    round_rng: &Rng,
+    g: AlignGrad,
+    c: &mut ClientState,
+) -> Result<(f32, Timeline, CommLedger), EngineError> {
+    let i = g.client;
+    // The alignment downlink crosses the same lossy codec as the
+    // uplink; the client consumes what actually arrived.
+    let grad = if compression == Compression::None {
+        g.grad
+    } else {
+        compression.apply(&g.grad, &round_rng.split(i as u64 ^ 0xEB))
+    };
+    let mut ledger = CommLedger::new();
+    ledger.record(i, MsgKind::GradDownload, grad_bytes);
+    let mut drng = round_rng.split(i as u64 ^ 0xA7);
+    let t_down = c.profile.download_delay(grad_bytes, &mut drng);
+    // True-gradient client step (the SplitFed backward, norm-clipped by
+    // `clip`; 0 = off)...
+    let (new_xc, gnorm) = engine.client_bwd(&c.xc, &c.images, &grad, lr, g.seed, clip)?;
+    c.xc = new_xc;
+    // ...then the estimator re-fit: one aux training step on the same
+    // batch, keeping ONLY the aux update (the client model already took
+    // its true-gradient step above).
+    let out = engine.client_train_step(&c.xc, &c.ac, &c.images, &c.labels, lr, g.seed)?;
+    c.ac = out.new_aux;
+    let t_align = c.profile.compute_delay(1, &mut drng) * 0.5;
+    let mut timeline = Timeline::default();
+    timeline.record(SpanKind::Download, Some(i), g.done, g.done + t_down, "align grads");
+    timeline.record(
+        SpanKind::ClientCompute,
+        Some(i),
+        g.done + t_down,
+        g.done + t_down + t_align,
+        "align",
+    );
+    // Alignment rounds block on the round trip, unlike the
+    // fire-and-forget base round.
+    c.ready_at = g.done + t_down + t_align;
+    Ok((gnorm, timeline, ledger))
 }
 
 impl<'a, E: SplitEngine> Trainer<'a, E> {
@@ -453,8 +530,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     /// lazily, and retired after their aggregation upload (see the
     /// `coordinator::population` module docs for the memory and
     /// bit-determinism arguments). Restricted to the config points
-    /// whose round shape needs no resident global state: the aux-local
-    /// update rule (fire-and-forget clients), the shared server
+    /// whose round shape needs no resident global state: the
+    /// aux-training update rules (aux-local, and the sage estimator —
+    /// its alignment pass only touches the carried cohort), the shared server
     /// topology, the contiguous shard map (O(1) closed form at any n),
     /// and by-delay arrival ordering (the event queue's native order).
     pub fn new_population(
@@ -465,10 +543,13 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let n = setup.source.n_clients();
         cfg.validate(n)?;
         setup.source.validate(setup.train.len()).map_err(|e| format!("source: {e}"))?;
-        if !matches!(cfg.spec.update, ClientUpdate::AuxLocal) {
+        if !matches!(
+            cfg.spec.update,
+            ClientUpdate::AuxLocal | ClientUpdate::SageEstimate { .. }
+        ) {
             return Err(
-                "population engine: only the aux-local update rule streams \
-                 (server-grad clients block on per-client round trips)"
+                "population engine: only the aux-training update rules stream \
+                 (server-grad clients block on per-batch round trips)"
                     .into(),
             );
         }
@@ -704,7 +785,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let mut msgs: Vec<SmashedMsg> = Vec::new();
 
         // The update axis picks the round shape; the upload axis the
-        // local batch count this round's upload amortizes.
+        // local batch count this round's upload amortizes. `align` is
+        // the sage rule's alignment trigger: Some(clip) on every
+        // `align_every`-th round, when the drain returns true gradients.
+        let mut align: Option<f32> = None;
         match self.cfg.spec.update {
             ClientUpdate::ServerGrad { clip } => self.splitfed_round(
                 &participants,
@@ -725,10 +809,30 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     &mut msgs,
                 )?
             }
+            ClientUpdate::SageEstimate { align_every, clip } => {
+                // Between alignments the sage round IS the aux-local
+                // round: the estimator stands in for the server.
+                let h = self.cfg.spec.upload.batches_at(t);
+                self.local_round(
+                    &participants,
+                    h,
+                    lr,
+                    &mut train_losses,
+                    &mut client_gnorms,
+                    &mut msgs,
+                )?;
+                if t % align_every == 0 {
+                    align = Some(clip);
+                }
+            }
         }
 
         // Event-triggered server updates over the arrival queue.
-        let (server_losses, server_gnorms) = self.drain_data_queue(server_lr, msgs)?;
+        let (server_losses, server_gnorms, grads) =
+            self.drain_data_queue(server_lr, msgs, align)?;
+        if let Some(clip) = align {
+            self.align_estimators(lr, clip, grads, &mut client_gnorms)?;
+        }
 
         for &i in &participants {
             self.dirty[i] = true;
@@ -1002,9 +1106,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         &mut self,
         lr: f32,
         mut msgs: Vec<SmashedMsg>,
-    ) -> Result<(Vec<f32>, Vec<f32>), EngineError> {
+        align: Option<f32>,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<AlignGrad>), EngineError> {
         if msgs.is_empty() {
-            return Ok((Vec::new(), Vec::new()));
+            return Ok((Vec::new(), Vec::new(), Vec::new()));
         }
         match self.cfg.arrival {
             ArrivalOrder::ByDelay => {
@@ -1013,7 +1118,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             ArrivalOrder::ClientIndex => msgs.sort_by_key(|m| m.client),
             ArrivalOrder::Shuffled => self.rng.shuffle(&mut msgs),
         }
-        self.drain_ordered(lr, msgs)
+        self.drain_ordered(lr, msgs, align)
     }
 
     /// The lane-routing + fan-out body of the drain loop, over
@@ -1021,13 +1126,19 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     /// `cfg.arrival` above; the population path pops them off the
     /// [`EventQueue`] (time order, FIFO ties — the same sequence as the
     /// resident stable sort) before calling in here.
+    ///
+    /// `align` is the sage rule's alignment trigger: `Some(clip)` makes
+    /// every lane update run the full `server_fwd_bwd` (instead of the
+    /// forward-only `server_train_step`) and return the true cut-layer
+    /// gradient as an [`AlignGrad`] for the post-drain alignment pass.
     fn drain_ordered(
         &mut self,
         lr: f32,
         msgs: Vec<SmashedMsg>,
-    ) -> Result<(Vec<f32>, Vec<f32>), EngineError> {
+        align: Option<f32>,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<AlignGrad>), EngineError> {
         if msgs.is_empty() {
-            return Ok((Vec::new(), Vec::new()));
+            return Ok((Vec::new(), Vec::new(), Vec::new()));
         }
         let lanes = self.server.lanes();
         // The paper's dataQueue, materialized per executor lane: route
@@ -1052,6 +1163,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             losses: Vec<f32>,
             gnorms: Vec<f32>,
             timeline: Timeline,
+            /// True gradients for the alignment pass (aligning drains
+            /// only), in lane arrival order.
+            grads: Vec<AlignGrad>,
         }
         let engine = self.engine;
         let net_server = NetModel::edge_default().server_update_time;
@@ -1078,21 +1192,48 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 let mut losses = Vec::with_capacity(msgs.len());
                 let mut gnorms = Vec::with_capacity(msgs.len());
                 let mut timeline = Timeline::default();
+                let mut grads = Vec::new();
                 for m in msgs {
                     let start = free_at.max(m.arrival);
-                    let slot = shard_map.shard_of(m.client) - base;
-                    let out = engine.server_train_step(
-                        &copies[slot],
-                        &m.smashed,
-                        &m.labels,
-                        lr,
-                        m.seed,
-                    )?;
-                    copies[slot] = out.new_server;
-                    updates[slot] += 1;
-                    losses.push(out.loss);
-                    gnorms.push(out.grad_norm);
                     let done = start + net_server;
+                    let slot = shard_map.shard_of(m.client) - base;
+                    match align {
+                        Some(clip) => {
+                            // Aligning drain: the same server update,
+                            // via the fwd/bwd path that also returns
+                            // the true cut-layer gradient.
+                            let out = engine.server_fwd_bwd(
+                                &copies[slot],
+                                &m.smashed,
+                                &m.labels,
+                                lr,
+                                m.seed,
+                                clip,
+                            )?;
+                            copies[slot] = out.new_server;
+                            losses.push(out.loss);
+                            gnorms.push(out.grad_norm);
+                            grads.push(AlignGrad {
+                                client: m.client,
+                                seed: m.seed,
+                                grad: out.grad_smashed,
+                                done,
+                            });
+                        }
+                        None => {
+                            let out = engine.server_train_step(
+                                &copies[slot],
+                                &m.smashed,
+                                &m.labels,
+                                lr,
+                                m.seed,
+                            )?;
+                            copies[slot] = out.new_server;
+                            losses.push(out.loss);
+                            gnorms.push(out.grad_norm);
+                        }
+                    }
+                    updates[slot] += 1;
                     free_at = done;
                     let label = if lanes == 1 {
                         format!("update c{}", m.client)
@@ -1101,13 +1242,14 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     };
                     timeline.record_in_lane(SpanKind::ServerUpdate, None, lane, start, done, label);
                 }
-                Ok(LaneOutcome { copies, free_at, updates, losses, gnorms, timeline })
+                Ok(LaneOutcome { copies, free_at, updates, losses, gnorms, timeline, grads })
             },
         )?;
         // Merge in canonical lane order (the bit-determinism contract);
         // copies are re-assembled in ascending copy-index order.
         let mut losses = Vec::new();
         let mut gnorms = Vec::new();
+        let mut grads = Vec::new();
         for (lane, o) in outcomes.into_iter().enumerate() {
             let base = if lanes == 1 { 0 } else { lane };
             for (j, (copy, ups)) in o.copies.into_iter().zip(o.updates).enumerate() {
@@ -1120,8 +1262,59 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             self.timeline.append(o.timeline);
             losses.extend(o.losses);
             gnorms.extend(o.gnorms);
+            grads.extend(o.grads);
         }
-        Ok((losses, gnorms))
+        Ok((losses, gnorms, grads))
+    }
+
+    /// The sage alignment pass (alignment rounds only): consume the
+    /// drain loop's true gradients in **canonical client-id order**
+    /// (regardless of lane routing or arrival order — the
+    /// bit-determinism contract) and run [`align_one_client`] for each,
+    /// over the resident client vector or the carried population
+    /// cohort. The rng snapshot is taken once, so every split is a
+    /// non-mutating per-(round, client) tag off the trainer stream.
+    fn align_estimators(
+        &mut self,
+        lr: f32,
+        clip: f32,
+        mut grads: Vec<AlignGrad>,
+        client_gnorms: &mut Vec<f32>,
+    ) -> Result<(), EngineError> {
+        grads.sort_by_key(|g| g.client);
+        let grad_bytes = self.smashed_bytes();
+        let compression = self.cfg.spec.compression;
+        let engine = self.engine;
+        let round_rng = self.rng.clone();
+        for g in grads {
+            let i = g.client;
+            let (gnorm, timeline, ledger) = match self.population.as_mut() {
+                Some(pop) => {
+                    let c = pop.carry.get_mut(&i).expect("aligned client not carried");
+                    let out = align_one_client(
+                        engine, lr, clip, compression, grad_bytes, &round_rng, g, c,
+                    )?;
+                    // Busy fold in span-record order, as everywhere the
+                    // population engine replays resident spans.
+                    for s in &out.1.spans {
+                        if let Some(who) = s.who {
+                            *pop.busy.entry(who).or_insert(0.0) += s.end - s.start;
+                        }
+                    }
+                    out
+                }
+                None => {
+                    let c = &mut self.clients[i];
+                    align_one_client(
+                        engine, lr, clip, compression, grad_bytes, &round_rng, g, c,
+                    )?
+                }
+            };
+            client_gnorms.push(gnorm);
+            self.timeline.append(timeline);
+            self.ledger.merge(&ledger);
+        }
+        Ok(())
     }
 
     /// One communication round of the streaming population engine: the
@@ -1148,6 +1341,14 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             }
         }
         let h = self.cfg.spec.upload.batches_at(t);
+        // The sage rule's alignment trigger — the same condition as the
+        // resident dispatch, so the two engines align the same rounds.
+        let align = match self.cfg.spec.update {
+            ClientUpdate::SageEstimate { align_every, clip } if t % align_every == 0 => {
+                Some(clip)
+            }
+            _ => None,
+        };
         self.activate_cohort(&participants);
         let mut train_losses = Vec::new();
         let mut client_gnorms = Vec::new();
@@ -1164,7 +1365,14 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         // upload wave in time order; late arrivals past the straggler
         // cutoff never reach the server's dataQueue.
         let ordered = self.order_arrivals(msgs);
-        let (server_losses, server_gnorms) = self.drain_ordered(server_lr, ordered)?;
+        let (server_losses, server_gnorms, grads) =
+            self.drain_ordered(server_lr, ordered, align)?;
+        if let Some(clip) = align {
+            self.align_estimators(lr, clip, grads, &mut client_gnorms)?;
+        }
+        // Retire the cohort's batch buffers only now: the alignment
+        // pass consumes the round's last batch after the drain.
+        self.retire_batch_buffers(&participants);
         {
             let pop = self.population.as_mut().expect("population run");
             pop.dirty.extend(participants.iter().copied());
@@ -1321,16 +1529,22 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             self.ledger.merge(&o.ledger);
             msgs.push(o.msg);
         }
-        // Retire the cohort's batch buffers between rounds: they are
-        // rebuilt by the next `load_batch` and would otherwise pin
-        // O(working set · batch · sample) floats.
+        Ok(())
+    }
+
+    /// Retire the cohort's batch buffers between rounds: they are
+    /// rebuilt by the next `load_batch` and would otherwise pin
+    /// O(working set · batch · sample) floats. Called at round end —
+    /// after the drain *and* any sage alignment pass, both of which
+    /// consume the round's last batch.
+    fn retire_batch_buffers(&mut self, participants: &[usize]) {
+        let pop = self.population.as_mut().expect("population run");
         for &i in participants {
             let c = pop.carry.get_mut(&i).expect("activated");
             c.idx_buf = Vec::new();
             c.images = Vec::new();
             c.labels = Vec::new();
         }
-        Ok(())
     }
 
     /// Replay the round's upload wave through the [`EventQueue`]:
@@ -1373,8 +1587,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         if contributors.is_empty() {
             return Ok(());
         }
-        // Contributor uploads (client model + aux riders — the aux-local
-        // rule always trains the aux net) in ascending id order.
+        // Contributor uploads (client model + aux riders — both
+        // streaming update rules train the aux net) in ascending id
+        // order.
         let mut last_arrival = self.server.free_at_max();
         {
             let pop = self.population.as_mut().expect("population run");
@@ -1465,8 +1680,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             return Ok(());
         }
         // Aux networks ride along with the model exchange exactly when
-        // the update axis trains them.
-        let aux_riders = matches!(self.cfg.spec.update, ClientUpdate::AuxLocal);
+        // the update axis trains them (the aux-local head and the sage
+        // estimator both do).
+        let aux_riders = matches!(
+            self.cfg.spec.update,
+            ClientUpdate::AuxLocal | ClientUpdate::SageEstimate { .. }
+        );
         // Upload client models (+ aux) — wire cost + arrival times.
         let mut last_arrival = self.server.free_at_max();
         for &i in &contributors {

@@ -959,6 +959,70 @@ mod tests {
     }
 
     #[test]
+    fn align_every_flag_composes_only_with_the_sage_update_rule() {
+        use crate::coordinator::methods::MethodSpec;
+        let cli = |method: &str, update: Option<&str>, align: Option<&str>| {
+            MethodSpec::from_cli(method, update, None, None, align, None, None, None, None)
+        };
+        // --align-every without --update sage is a rejection, whether
+        // the update axis is defaulted by the preset or set explicitly.
+        for update in [None, Some("grad"), Some("aux")] {
+            let err = cli("cse", update, Some("4")).unwrap_err();
+            assert!(err.contains("--update sage"), "{update:?}: {err}");
+        }
+        // --align-every 0 parses as an integer but fails spec
+        // validation (the period is 1-based).
+        let err = cli("cse", Some("sage"), Some("0")).unwrap_err();
+        assert!(err.contains(">= 1"), "{err}");
+        // Non-integers are rejected at the flag.
+        let err = cli("cse", Some("sage"), Some("x")).unwrap_err();
+        assert!(err.contains("align-every"), "{err}");
+        // The happy path resolves: default period 4, explicit periods
+        // override it.
+        let spec = cli("cse", Some("sage"), None).unwrap();
+        assert_eq!(
+            spec.update,
+            crate::coordinator::methods::ClientUpdate::SageEstimate {
+                align_every: 4,
+                clip: 0.0
+            }
+        );
+        let spec = cli("cse", Some("sage"), Some("8")).unwrap();
+        assert_eq!(spec.tag(), "sage8+b+sh");
+    }
+
+    #[test]
+    fn client_update_aliases_roundtrip_like_dist_parse() {
+        use crate::coordinator::methods::ClientUpdate;
+        // The new sage aliases round-trip through FromStr with the same
+        // normalization contract as `Dist::parse`: ASCII-lowercased,
+        // `_` mapped to `-`, anything else rejected.
+        let sage = ClientUpdate::SageEstimate { align_every: 4, clip: 0.0 };
+        for alias in ["sage", "SAGE", "Sage-Estimate", "sage_estimate", "estimator"] {
+            assert_eq!(alias.parse::<ClientUpdate>(), Ok(sage), "{alias}");
+        }
+        for alias in ["aux", "AUX", "aux_local", "local"] {
+            assert_eq!(alias.parse::<ClientUpdate>(), Ok(ClientUpdate::AuxLocal), "{alias}");
+        }
+        for alias in ["grad", "SERVER_GRAD", "sg"] {
+            assert_eq!(
+                alias.parse::<ClientUpdate>(),
+                Ok(ClientUpdate::ServerGrad { clip: 0.0 }),
+                "{alias}"
+            );
+        }
+        // Tag strings are cache-key segments, not CLI aliases: they must
+        // NOT parse (exactly like `Dist::parse("dir")` vs "dirichlet"
+        // being the only spellings — no accidental alias space).
+        for not_alias in ["sage4", "sage-4", "estimate", "sage "] {
+            assert!(
+                not_alias.parse::<ClientUpdate>().is_err(),
+                "{not_alias:?} must not parse"
+            );
+        }
+    }
+
+    #[test]
     fn engine_choice_parse() {
         assert_eq!(EngineChoice::parse("auto"), Some(EngineChoice::Auto));
         assert_eq!(EngineChoice::parse("pjrt"), Some(EngineChoice::Pjrt));

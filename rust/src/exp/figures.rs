@@ -348,11 +348,15 @@ pub fn fig_staleness(harness: &mut Harness, scale: Scale) -> Result<String, Stri
 /// `--scale paper` (like `figure k`; EXPERIMENTS.md documents the
 /// protocol and quotes mock-backend numbers).
 ///
-/// Since PR 8 this figure is the declarative `h` sweep
+/// Since PR 8 this figure is declarative sweeps
 /// ([`sweep::builtin`]`("h", ..)`): the preset × period composition is
 /// two sweep axes (`Knob::Preset` then `Knob::H`), execution goes
 /// through the trial journal, and `fig_h.csv` is byte-identical to the
-/// pre-sweep loop (pinned by `tests/sweep_resume.rs`).
+/// pre-sweep loop (pinned by `tests/sweep_resume.rs`). A second sweep
+/// (`h-sage`, writing `fig_h_sage.csv`) rides along: the alignment
+/// period of the gradient-estimator update rule (`--update sage`),
+/// whose wire traffic interpolates between the server-grad and
+/// aux-local closed forms.
 pub fn fig_h(harness: &mut Harness, scale: Scale) -> Result<String, String> {
     sweep_figure(harness, "h", scale)
 }

@@ -20,7 +20,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::methods::{Compression, Method};
+use crate::coordinator::methods::{ClientUpdate, Compression, Method};
 use crate::metrics::recorder::RunRecord;
 use crate::util::csvio::Csv;
 use crate::util::json::Json;
@@ -59,6 +59,13 @@ pub enum Knob {
     /// Wire codec (`none` | `q<bits>` | `quantize<bits>` | `t<frac>` |
     /// `topk<frac>`).
     Codec,
+    /// Client-update rule (`grad` | `aux` | `sage`, the
+    /// [`ClientUpdate::from_str`] spellings).
+    Update,
+    /// Alignment period of the sage update rule (applies after
+    /// [`Knob::Update`]; rejected on any other rule, like
+    /// `--align-every`).
+    AlignEvery,
     /// Server topology (`per-client` | `shared`).
     Topology,
     /// Number of federated clients.
@@ -77,6 +84,8 @@ impl Knob {
     fn phase(self) -> u8 {
         match self {
             Knob::Dataset | Knob::Aux | Knob::Preset => 0,
+            // Applies onto the update rule, so after `Knob::Update`.
+            Knob::AlignEvery => 2,
             _ => 1,
         }
     }
@@ -113,6 +122,20 @@ impl Knob {
             Knob::Codec => {
                 spec.method = spec.method.with_compression(parse_codec(value)?);
             }
+            Knob::Update => spec.method.update = value.parse()?,
+            Knob::AlignEvery => {
+                let a: usize = value
+                    .parse()
+                    .map_err(|_| format!("bad alignment period {value:?}"))?;
+                match &mut spec.method.update {
+                    ClientUpdate::SageEstimate { align_every, .. } => *align_every = a,
+                    other => {
+                        return Err(format!(
+                            "align-every composes with the sage update rule, not {other}"
+                        ));
+                    }
+                }
+            }
             Knob::Topology => spec.method.topology = value.parse()?,
             Knob::Clients => {
                 spec.n_clients =
@@ -144,6 +167,15 @@ impl Knob {
             Knob::Map => spec.shard_map.to_string(),
             Knob::Dist => spec.dist.tag().to_string(),
             Knob::Codec => spec.method.compression.to_string(),
+            Knob::Update => match spec.method.update {
+                ClientUpdate::ServerGrad { .. } => "grad".to_string(),
+                ClientUpdate::AuxLocal => "aux".to_string(),
+                ClientUpdate::SageEstimate { .. } => "sage".to_string(),
+            },
+            Knob::AlignEvery => match spec.method.update {
+                ClientUpdate::SageEstimate { align_every, .. } => align_every.to_string(),
+                _ => "-".to_string(),
+            },
             Knob::Topology => spec.method.topology.to_string(),
             Knob::Clients => spec.n_clients.to_string(),
             Knob::Participation => spec.participation.to_string(),
@@ -868,17 +900,19 @@ fn eff(scale: Scale) -> Scale {
 }
 
 /// Resolve a figure id to its built-in sweep list: `k`/`staleness` (two
-/// sweeps: IID shard axis + non-IID placement arms), `h`/`period`,
+/// sweeps: IID shard axis + non-IID placement arms), `h`/`period` (two
+/// sweeps: the aux-local period grid + the sage alignment-period arm),
 /// `b`/`bits`, or `all`.
 pub fn builtin(id: &str, scale: Scale) -> Result<Vec<SweepSpec>, String> {
     match id {
         "k" | "staleness" => Ok(vec![staleness_sweep(scale), staleness_noniid_sweep(scale)]),
-        "h" | "period" => Ok(vec![h_sweep(scale)]),
+        "h" | "period" => Ok(vec![h_sweep(scale), h_sage_sweep(scale)]),
         "b" | "bits" => Ok(vec![b_sweep(scale)]),
         "all" => Ok(vec![
             staleness_sweep(scale),
             staleness_noniid_sweep(scale),
             h_sweep(scale),
+            h_sage_sweep(scale),
             b_sweep(scale),
         ]),
         other => Err(format!("no sweep {other:?} (have k|staleness, h|period, b|bits, all)")),
@@ -1019,6 +1053,56 @@ fn h_sweep(scale: Scale) -> SweepSpec {
                 local batch trained falls ~1/h; the per-client arm pays n x |w_s|\n \
                 storage for per-client server trajectories at identical wire/schedule\n \
                 columns.)\n"
+            .to_string(),
+    }
+}
+
+/// `figure h`, sage arm: alignment period of the gradient-estimator
+/// update rule (FSL-SAGE) on the shared topology. Wire traffic
+/// interpolates between the neighbouring rules' closed forms — a=1 pays
+/// the full server-grad downlink, large a approaches the aux-local
+/// totals — which `tests/estimator_properties.rs` pins against the
+/// measured ledger.
+fn h_sage_sweep(scale: Scale) -> SweepSpec {
+    let a_vals: &[&str] =
+        if scale == Scale::Quick { &["1", "2"] } else { &["1", "2", "4", "8"] };
+    SweepSpec {
+        name: "h-sage".to_string(),
+        title: "Alignment period a (sage gradient-estimator update rule)".to_string(),
+        base: base_spec("cifar", "cnn27", cifar_workload(eff(scale))),
+        scale: eff(scale),
+        axes: vec![Axis::joint(
+            "align",
+            a_vals
+                .iter()
+                .map(|a| {
+                    vec![
+                        Setting::new(Knob::Update, "sage"),
+                        Setting::new(Knob::AlignEvery, a),
+                    ]
+                })
+                .collect(),
+        )],
+        seeds: Vec::new(),
+        repeats: 1,
+        skip: Vec::new(),
+        table: TableSpec {
+            file: "fig_h_sage".to_string(),
+            columns: vec![
+                Column::series(),
+                Column::knob("align_every", Knob::AlignEvery),
+                Column::knob("topology", Knob::Topology),
+                Column::metric("final_accuracy", Metric::FinalAccuracy),
+                Column::metric("load_gb", Metric::LoadGb),
+                Column::metric("server_storage_params", Metric::StorageParams),
+                Column::metric("sim_time", Metric::SimTime),
+            ],
+        },
+        notes: "(sage{a} rows: aux-local rounds with a true-gradient alignment every a-th\n \
+                upload. The gradient downlink pays (rounds/a)·n·smashed_wire bytes —\n \
+                exactly the server-grad term at a=1, vanishing as a grows — while aux\n \
+                nets ride along with aggregation like the aux-local rule; predicted and\n \
+                ledgered bytes agree exactly.)\n"
             .to_string(),
     }
 }
@@ -1244,7 +1328,37 @@ mod tests {
         for id in ["k", "staleness", "h", "period", "b", "bits", "all"] {
             assert!(builtin(id, Scale::Quick).is_ok(), "{id}");
         }
-        assert_eq!(builtin("all", Scale::Quick).unwrap().len(), 4);
+        assert_eq!(builtin("all", Scale::Quick).unwrap().len(), 5);
         assert!(builtin("z", Scale::Quick).is_err());
+    }
+
+    #[test]
+    fn sage_arm_expands_update_then_alignment_period() {
+        let trials = h_sage_sweep(Scale::Quick).trials().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert_eq!(
+            trials[0].spec.method.update,
+            ClientUpdate::SageEstimate { align_every: 1, clip: 0.0 }
+        );
+        assert_eq!(
+            trials[1].spec.method.update,
+            ClientUpdate::SageEstimate { align_every: 2, clip: 0.0 }
+        );
+        // The sage segment forks the key from the aux-local grid, and
+        // the knobs read back for the table columns.
+        assert!(trials[0].spec.key().contains("sage1+"), "{}", trials[0].spec.key());
+        assert_eq!(Knob::Update.get(&trials[0].spec), "sage");
+        assert_eq!(Knob::AlignEvery.get(&trials[1].spec), "2");
+        // AlignEvery on a non-sage spec is a lowering error, mirroring
+        // the CLI's --align-every rejection.
+        let mut bad = h_sage_sweep(Scale::Quick);
+        bad.axes =
+            vec![Axis::single("align", Knob::AlignEvery, &["2"])];
+        let err = bad.trials().unwrap_err();
+        assert!(err.contains("sage update rule"), "{err}");
+        // The aux-local h grid is untouched by the sage arm: same file
+        // stems as before for fig_h, a separate one for the sage table.
+        assert_eq!(h_sweep(Scale::Quick).table.file, "fig_h");
+        assert_eq!(h_sage_sweep(Scale::Quick).table.file, "fig_h_sage");
     }
 }

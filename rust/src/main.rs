@@ -89,8 +89,10 @@ fn cmd_run(argv: &[String]) -> i32 {
         )
         .opt_nodefault(
             "update",
-            "client-update axis: grad (server-grad downlink) | aux (aux-local); \
-             overrides the --method preset's axis",
+            "client-update axis: grad (server-grad downlink) | aux (aux-local) | \
+             sage (gradient estimator, FSL-SAGE: aux-local rounds with a \
+             true-gradient alignment every --align-every rounds); overrides the \
+             --method preset's axis",
         )
         .opt_nodefault(
             "upload-every",
@@ -100,7 +102,13 @@ fn cmd_run(argv: &[String]) -> i32 {
         .opt_nodefault(
             "clip",
             "gradient-norm clip of the server-grad update rule (composes with \
-             --update grad / the mc|oc presets; 0 = off)",
+             --update grad / the mc|oc presets, and with --update sage on its \
+             alignment round trip; 0 = off)",
+        )
+        .opt_nodefault(
+            "align-every",
+            "alignment period of --update sage: every Nth upload triggers the \
+             true-gradient downlink + estimator re-fit (>= 1; default 4)",
         )
         .opt_nodefault(
             "topology",
@@ -198,6 +206,7 @@ fn cmd_run(argv: &[String]) -> i32 {
             args.get("update"),
             args.get("upload-every").or_else(|| args.get("h")),
             args.get("clip"),
+            args.get("align-every"),
             args.get("topology"),
             args.get("compress"),
             args.get("bits"),

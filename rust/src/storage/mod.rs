@@ -61,7 +61,7 @@ pub fn server_storage_params_sharded(
         storage_form::server_copies_params(copies as u64, sizes.server as u64) as usize;
     let clients = n_clients * sizes.client;
     let aux = match spec.update {
-        ClientUpdate::AuxLocal => n_clients * sizes.aux,
+        ClientUpdate::AuxLocal | ClientUpdate::SageEstimate { .. } => n_clients * sizes.aux,
         ClientUpdate::ServerGrad { .. } => 0,
     };
     server + clients + aux
@@ -82,7 +82,7 @@ pub fn server_storage_m(spec: &MethodSpec, n_clients: usize, sizes: &ModelSizes)
 pub fn client_storage_params(spec: &MethodSpec, sizes: &ModelSizes) -> usize {
     sizes.client
         + match spec.update {
-            ClientUpdate::AuxLocal => sizes.aux,
+            ClientUpdate::AuxLocal | ClientUpdate::SageEstimate { .. } => sizes.aux,
             ClientUpdate::ServerGrad { .. } => 0,
         }
 }
@@ -168,6 +168,28 @@ mod tests {
         let aux_term = server_storage_params(&Method::CseFsl.spec(), 5, &CIFAR)
             - server_storage_params(&Method::FslOc.spec(), 5, &CIFAR);
         assert_eq!(aux_term, 5 * CIFAR.aux);
+    }
+
+    #[test]
+    fn sage_stores_exactly_what_aux_local_does() {
+        // The estimator is the aux net retrained to a different target;
+        // storage is identical to the aux-local rule at any period.
+        use crate::coordinator::methods::{ClientUpdate, MethodSpec};
+        for a in [1usize, 4, 100] {
+            let sage = MethodSpec {
+                update: ClientUpdate::SageEstimate { align_every: a, clip: 0.0 },
+                ..Method::CseFsl.spec()
+            };
+            assert_eq!(
+                server_storage_params(&sage, 5, &CIFAR),
+                server_storage_params(&Method::CseFsl.spec(), 5, &CIFAR),
+                "align_every={a}"
+            );
+            assert_eq!(
+                client_storage_params(&sage, &CIFAR),
+                client_storage_params(&Method::CseFsl.spec(), &CIFAR)
+            );
+        }
     }
 
     #[test]

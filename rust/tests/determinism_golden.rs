@@ -864,6 +864,75 @@ fn aux_period_per_client_scenario_golden() {
 }
 
 #[test]
+fn sage_estimator_golden_bit_identical_and_distinct_from_neighbours() {
+    // The gradient-estimator update rule (SageEstimate): alignment
+    // rounds interleave a server fwd/bwd drain, a true-gradient client
+    // step, and an estimator re-fit — all of it off splits of the round
+    // snapshot rng, so the golden contract must hold unchanged: any
+    // thread count × any dealing policy is bit-identical to the
+    // sequential reference, and repeat invocations replay exactly.
+    let train = dataset(120, 25);
+    let test = dataset(24, 26);
+    let sage = MethodSpec {
+        update: ClientUpdate::SageEstimate { align_every: 3, clip: 0.0 },
+        ..Method::CseFsl.spec()
+    };
+    assert_eq!(sage.preset(), None, "must be a spec-only point");
+    let run_spec = |spec: MethodSpec, parallelism: Parallelism, sched: SchedPolicy| {
+        let e = MockEngine::small(42);
+        let cfg = TrainConfig {
+            parallelism,
+            sched,
+            agg_every: 4,
+            eval_every: 3,
+            eval_max_batches: 2,
+            lr0: 1.0,
+            track_grad_norms: true,
+            ..TrainConfig::from_spec(spec)
+        }
+        .with_rounds(12);
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 5)).unwrap();
+        let rec = tr.run().unwrap();
+        fingerprint(&tr, &rec)
+    };
+    let seq = run_spec(sage, Parallelism::Sequential, SchedPolicy::RoundRobin);
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let par = run_spec(sage, Parallelism::Threads(threads), sched);
+            assert_identical(
+                &seq,
+                &par,
+                &format!("sage3 sched={sched} threads={threads}"),
+            );
+        }
+    }
+    let again = run_spec(sage, Parallelism::Sequential, SchedPolicy::RoundRobin);
+    assert_identical(&seq, &again, "sage3 repeat invocation");
+    // A genuinely new point on the update axis: distinct fingerprints
+    // from BOTH neighbours with the same other axes — the aux-local
+    // rule (no alignment ever) and the server-grad rule (per-batch
+    // round trips).
+    let aux = run_spec(
+        MethodSpec { update: ClientUpdate::AuxLocal, ..sage },
+        Parallelism::Sequential,
+        SchedPolicy::RoundRobin,
+    );
+    assert_ne!(seq.json, aux.json, "alignment must change results vs AuxLocal");
+    let grad = run_spec(
+        Method::FslOc.spec(),
+        Parallelism::Sequential,
+        SchedPolicy::RoundRobin,
+    );
+    assert_ne!(seq.json, grad.json, "the estimator must change results vs ServerGrad");
+    // The alignment wire profile sits strictly between the neighbours'.
+    use cse_fsl::comm::accounting::MsgKind;
+    let down = |f: &Fingerprint| f.ledger.bytes_of(MsgKind::GradDownload);
+    assert_eq!(down(&aux), 0);
+    assert!(down(&seq) > 0, "alignment rounds must record the downlink");
+    assert!(down(&seq) < down(&grad), "a=3 must downlink less than per-batch");
+}
+
+#[test]
 fn compressed_rounds_keep_the_bit_determinism_contract() {
     // The wire codec's stochastic rounding draws from a split of the
     // round snapshot rng, never from worker-local state — so compressed

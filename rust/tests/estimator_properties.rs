@@ -1,0 +1,325 @@
+//! Gradient-estimator (FSL-SAGE) alignment properties: across random
+//! `(align_every, codec, h, agg_every, rounds, parallelism)`
+//! configurations the live `CommLedger` of a sage run must equal the
+//! `comm::accounting::predict` closed forms; at `align_every = 1` the
+//! gradient-downlink records bit-reduce to the server-grad rule's
+//! per-upload shape; once `align_every > rounds` the whole run is
+//! byte-identical to the aux-local rule; the estimator error (aux-net
+//! distance to its mock target) is non-increasing across alignment
+//! events; and the alignment rng splits keep the repo's determinism
+//! contract (repeat invocations and thread counts are invisible).
+
+use cse_fsl::comm::accounting::{predict, MsgKind, WireSizes};
+use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism, TrainConfig};
+use cse_fsl::coordinator::methods::{ClientUpdate, Compression, Method, MethodSpec};
+use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
+use cse_fsl::data::partition::iid;
+use cse_fsl::data::synthetic::{generate, SyntheticSpec};
+use cse_fsl::data::Dataset;
+use cse_fsl::exp::common::run_to_json;
+use cse_fsl::prop_assert;
+use cse_fsl::runtime::mock::MockEngine;
+use cse_fsl::runtime::SplitEngine;
+use cse_fsl::sched::SchedPolicy;
+use cse_fsl::sim::netmodel::NetModel;
+use cse_fsl::util::prng::Rng;
+use cse_fsl::util::prop;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec { height: 2, width: 2, channels: 2, classes: 3, ..SyntheticSpec::cifar_like() }
+}
+
+fn dataset(n: usize, seed: u64) -> Dataset {
+    generate(&spec(), n, seed)
+}
+
+fn sage_spec(align_every: usize, clip: f32) -> MethodSpec {
+    MethodSpec {
+        update: ClientUpdate::SageEstimate { align_every, clip },
+        ..Method::CseFsl.spec()
+    }
+}
+
+fn setup<'a>(train: &'a Dataset, test: &'a Dataset, n_clients: usize) -> TrainerSetup<'a> {
+    TrainerSetup {
+        train,
+        test,
+        partition: iid(train, n_clients, &mut Rng::new(7)),
+        net: NetModel::edge_default(),
+        client_layout: None,
+        server_layout: None,
+        aux_layout: None,
+        label: "sage".to_string(),
+    }
+}
+
+#[test]
+fn prop_sage_ledger_matches_predict_closed_forms() {
+    prop::check("sage ledger == predict closed forms", |rng| {
+        // Random alignment period × codec × schedule, full participation
+        // (the closed forms count every client at every alignment).
+        let n = 1 + rng.below(5) as usize;
+        let align_every = 1 + rng.below(6) as usize;
+        let h = 1 + rng.below(4) as usize;
+        let rounds = 1 + rng.below(10) as usize;
+        let agg_every = 1 + rng.below(rounds as u64 + 3) as usize;
+        let compression = match rng.below(3) {
+            0 => Compression::None,
+            1 => Compression::Quantize { bits: 2 + rng.below(7) as u8 },
+            _ => Compression::TopK { frac: (1 + rng.below(20) as u32) as f32 / 20.0 },
+        };
+        let clip = if rng.below(2) == 0 { 0.0 } else { 0.5 };
+        let parallelism = if rng.below(2) == 0 {
+            Parallelism::Sequential
+        } else {
+            Parallelism::Threads(1 + rng.below(4) as usize)
+        };
+        let e = MockEngine::small(rng.next_u64());
+        let train = generate(&spec(), n * 16, rng.next_u64());
+        let test = generate(&spec(), 8, rng.next_u64());
+        let cfg = TrainConfig {
+            rounds,
+            agg_every,
+            eval_every: 0,
+            parallelism,
+            ..TrainConfig::from_spec(
+                sage_spec(align_every, clip)
+                    .with_period(h)
+                    .with_compression(compression),
+            )
+        };
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, n))?;
+        tr.run().map_err(|e| e.to_string())?;
+        let w = WireSizes::new(e.smashed_len, e.client_size(), e.aux_size());
+        let p = predict::TrafficProfile::SageEstimate { align_every: align_every as u64 };
+        for (kind, bytes) in predict::run_kind_bytes(
+            p,
+            compression,
+            n as u64,
+            e.batch as u64,
+            rounds as u64,
+            agg_every as u64,
+            &w,
+        ) {
+            prop_assert!(
+                tr.ledger.bytes_of(kind) == bytes,
+                "a={align_every} {compression} n={n} h={h} rounds={rounds} agg={agg_every}: \
+                 {kind:?} measured {} != predicted {bytes}",
+                tr.ledger.bytes_of(kind)
+            );
+        }
+        let (up, down) = predict::run_totals(
+            p,
+            compression,
+            n as u64,
+            e.batch as u64,
+            rounds as u64,
+            agg_every as u64,
+            &w,
+        );
+        prop_assert!(
+            tr.ledger.up_bytes() == up && tr.ledger.down_bytes() == down,
+            "totals measured ({}, {}) != predicted ({up}, {down})",
+            tr.ledger.up_bytes(),
+            tr.ledger.down_bytes()
+        );
+        // The alignment downlink count is exactly one record per client
+        // per alignment round.
+        prop_assert!(
+            tr.ledger.count_of(MsgKind::GradDownload)
+                == (rounds / align_every) as u64 * n as u64,
+            "a={align_every} rounds={rounds}: {} downlink records",
+            tr.ledger.count_of(MsgKind::GradDownload)
+        );
+        Ok(())
+    });
+}
+
+fn run_trainer<'a, 'b>(
+    e: &'a MockEngine,
+    cfg: TrainConfig,
+    train: &'b Dataset,
+    test: &'b Dataset,
+) -> Trainer<'a, MockEngine>
+where
+    'b: 'a,
+{
+    let mut tr = Trainer::new(e, cfg, setup(train, test, 5)).unwrap();
+    tr.run().unwrap();
+    tr
+}
+
+fn base_cfg(spec_point: MethodSpec, rounds: usize) -> TrainConfig {
+    TrainConfig {
+        agg_every: 4,
+        eval_every: 3,
+        eval_max_batches: 2,
+        lr0: 1.0,
+        track_grad_norms: true,
+        ..TrainConfig::from_spec(spec_point)
+    }
+    .with_rounds(rounds)
+}
+
+#[test]
+fn align_every_one_bit_reduces_to_server_grad_record_shape() {
+    // At a = 1 every upload triggers the true-gradient downlink: the
+    // GradDownload records (count, per-record bytes, per-client bytes)
+    // are exactly the server-grad rule's per-upload shape.
+    let train = dataset(120, 31);
+    let test = dataset(24, 32);
+    let e = MockEngine::small(42);
+    for codec in [Compression::None, Compression::Quantize { bits: 4 }] {
+        let sage = run_trainer(
+            &e,
+            base_cfg(sage_spec(1, 0.0).with_compression(codec), 12),
+            &train,
+            &test,
+        );
+        let grad = run_trainer(
+            &e,
+            base_cfg(Method::FslOc.spec().with_compression(codec), 12),
+            &train,
+            &test,
+        );
+        assert_eq!(
+            sage.ledger.count_of(MsgKind::GradDownload),
+            grad.ledger.count_of(MsgKind::GradDownload),
+            "{codec}: record count"
+        );
+        assert_eq!(
+            sage.ledger.bytes_of(MsgKind::GradDownload),
+            grad.ledger.bytes_of(MsgKind::GradDownload),
+            "{codec}: record bytes"
+        );
+        for c in 0..5 {
+            assert_eq!(
+                sage.ledger.client_kind_bytes(c, MsgKind::GradDownload),
+                grad.ledger.client_kind_bytes(c, MsgKind::GradDownload),
+                "{codec}: client {c} downlink bytes"
+            );
+        }
+        // 12 rounds × 5 clients, one record each.
+        assert_eq!(sage.ledger.count_of(MsgKind::GradDownload), 60, "{codec}");
+    }
+}
+
+#[test]
+fn align_every_beyond_rounds_is_byte_identical_to_aux_local() {
+    // Once align_every > rounds no alignment ever fires: the run IS the
+    // aux-local rule — identical ledger (every view), identical final
+    // models, identical per-round records.
+    let train = dataset(120, 33);
+    let test = dataset(24, 34);
+    let e = MockEngine::small(42);
+    let mut sage = Trainer::new(
+        &e,
+        base_cfg(sage_spec(13, 0.0), 12),
+        setup(&train, &test, 5),
+    )
+    .unwrap();
+    let sage_rec = sage.run().unwrap();
+    let mut aux = Trainer::new(
+        &e,
+        base_cfg(Method::CseFsl.spec(), 12),
+        setup(&train, &test, 5),
+    )
+    .unwrap();
+    let aux_rec = aux.run().unwrap();
+    assert_eq!(sage.ledger, aux.ledger, "ledgers diverged");
+    assert_eq!(sage.ledger.bytes_of(MsgKind::GradDownload), 0);
+    let models = |tr: &Trainer<'_, MockEngine>| {
+        (
+            tr.clients.iter().map(|c| c.xc.clone()).collect::<Vec<_>>(),
+            tr.clients.iter().map(|c| c.ac.clone()).collect::<Vec<_>>(),
+        )
+    };
+    assert_eq!(models(&sage), models(&aux), "model trajectories diverged");
+    assert_eq!(
+        run_to_json(&sage_rec).pretty().as_bytes(),
+        run_to_json(&aux_rec).pretty().as_bytes(),
+        "per-round records diverged"
+    );
+}
+
+#[test]
+fn estimator_error_non_increasing_across_alignment_events() {
+    // The mock's aux dynamics contract toward the target every training
+    // step, and the alignment re-fit is one more such step — so the
+    // estimator error (mean aux distance to target) measured after k
+    // alignment events is non-increasing in k. `lr_at` depends only on
+    // the round index, so a shorter run is a bit-identical prefix of a
+    // longer one and "after k events" is simply rounds = k·a.
+    let train = dataset(120, 35);
+    let test = dataset(24, 36);
+    let e = MockEngine::small(42);
+    let aux_err = |tr: &Trainer<'_, MockEngine>| {
+        let (_, target_aux, _) = e.targets();
+        let dist = |ac: &[f32]| {
+            ac.iter()
+                .zip(target_aux)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                .sqrt() as f64
+        };
+        tr.clients.iter().map(|c| dist(&c.ac)).sum::<f64>() / tr.clients.len() as f64
+    };
+    let align_every = 3;
+    let mut last = f64::INFINITY;
+    for events in 1..=3usize {
+        let tr = run_trainer(
+            &e,
+            base_cfg(sage_spec(align_every, 0.0), align_every * events),
+            &train,
+            &test,
+        );
+        let err = aux_err(&tr);
+        assert!(
+            err <= last,
+            "estimator error rose across alignment event {events}: {err} > {last}"
+        );
+        assert!(err.is_finite() && err > 0.0);
+        last = err;
+    }
+}
+
+#[test]
+fn alignment_rng_split_is_deterministic() {
+    // Repeat invocations replay bit-for-bit, and the alignment pass —
+    // which consumes drain-loop gradients sorted into canonical client
+    // order — keeps the golden contract under shuffled arrivals and any
+    // thread count × dealing policy.
+    let train = dataset(120, 37);
+    let test = dataset(24, 38);
+    let e = MockEngine::small(42);
+    let run_with = |parallelism: Parallelism, sched: SchedPolicy| {
+        let cfg = TrainConfig {
+            arrival: ArrivalOrder::Shuffled,
+            parallelism,
+            sched,
+            ..base_cfg(
+                sage_spec(3, 0.5).with_compression(Compression::Quantize { bits: 4 }),
+                12,
+            )
+        };
+        let mut tr = Trainer::new(&e, cfg, setup(&train, &test, 5)).unwrap();
+        let rec = tr.run().unwrap();
+        (run_to_json(&rec).pretty(), tr.ledger.clone())
+    };
+    let (seq_json, seq_ledger) = run_with(Parallelism::Sequential, SchedPolicy::RoundRobin);
+    let (again_json, again_ledger) =
+        run_with(Parallelism::Sequential, SchedPolicy::RoundRobin);
+    assert_eq!(seq_json.as_bytes(), again_json.as_bytes(), "repeat invocation diverged");
+    assert_eq!(seq_ledger, again_ledger);
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let (par_json, par_ledger) = run_with(Parallelism::Threads(threads), sched);
+            assert_eq!(
+                seq_json.as_bytes(),
+                par_json.as_bytes(),
+                "sched={sched} threads={threads}: RunRecord diverged"
+            );
+            assert_eq!(seq_ledger, par_ledger, "sched={sched} threads={threads}");
+        }
+    }
+}

@@ -12,7 +12,7 @@
 //! that is what they are for — while still completing cleanly.
 
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
-use cse_fsl::coordinator::methods::{Compression, Method};
+use cse_fsl::coordinator::methods::{ClientUpdate, Compression, Method, MethodSpec};
 use cse_fsl::coordinator::population::{ClientSource, PopulationSetup};
 use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
@@ -155,6 +155,76 @@ fn compressed_population_bit_identical_to_resident() {
                 streamed.as_bytes(),
                 par.as_bytes(),
                 "quantize4 sched={sched} threads={threads}: RunRecord diverged"
+            );
+        }
+    }
+}
+
+/// `config()` with the gradient-estimator update rule swapped in: the
+/// same aux-local round body between alignments, plus the true-gradient
+/// downlink + estimator re-fit every `align_every`-th round.
+fn sage_config(seed: u64, participation: usize, rounds: usize) -> TrainConfig {
+    let base = config(seed, participation, rounds);
+    TrainConfig {
+        spec: MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every: 3, clip: 0.0 },
+            ..base.spec
+        },
+        ..base
+    }
+}
+
+#[test]
+fn sage_population_bit_identical_to_resident() {
+    // The alignment pass runs on the carried cohort exactly as it runs
+    // on the resident client vector (same rng splits off the round
+    // snapshot, same canonical client order), so the streaming engine
+    // stays invisible for the sage rule too — at full rounds and under
+    // k-of-n sampling, uncompressed and with the codec biting on the
+    // alignment downlink.
+    let train = dataset(120, 1);
+    let test = dataset(24, 2);
+    for participation in [0usize, 3] {
+        let resident = run_resident(&train, &test, sage_config(1, participation, 12));
+        let streamed = run_population(&train, &test, sage_config(1, participation, 12));
+        assert_eq!(
+            resident.as_bytes(),
+            streamed.as_bytes(),
+            "sage participation={participation}: RunRecord diverged"
+        );
+    }
+    let compress = |cfg: TrainConfig| TrainConfig {
+        spec: cfg.spec.with_compression(Compression::Quantize { bits: 4 }),
+        ..cfg
+    };
+    let resident = run_resident(&train, &test, compress(sage_config(1, 3, 12)));
+    let streamed = run_population(&train, &test, compress(sage_config(1, 3, 12)));
+    assert_eq!(
+        resident.as_bytes(),
+        streamed.as_bytes(),
+        "sage quantize4: population RunRecord diverged from resident"
+    );
+    // The estimator rule is a live axis in the population engine: its
+    // results differ from the aux-local neighbour's.
+    assert_ne!(
+        run_population(&train, &test, sage_config(1, 0, 12)),
+        run_population(&train, &test, config(1, 0, 12)),
+        "alignment must change population results"
+    );
+    // And the population fan-out keeps the golden contract on sage runs.
+    let reference = run_population(&train, &test, sage_config(1, 3, 12));
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let cfg = TrainConfig {
+                parallelism: Parallelism::Threads(threads),
+                sched,
+                ..sage_config(1, 3, 12)
+            };
+            let par = run_population(&train, &test, cfg);
+            assert_eq!(
+                reference.as_bytes(),
+                par.as_bytes(),
+                "sage sched={sched} threads={threads}: RunRecord diverged"
             );
         }
     }

@@ -451,3 +451,159 @@ fn v2_cache_records_written_before_the_compression_axis_still_replay() {
     assert_ne!(crec.label, "prerecorded v2");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn sage_axis_keeps_preset_keys_and_round_trips_its_canonical_tag() {
+    // Back-compat pin for the sage axis: the four paper preset key
+    // strings stay byte-identical to their pre-sage literals — no sage
+    // segment can ever leak into them — while a sage point gets the
+    // canonical `sage{a}+p{h}+sh` tagged key.
+    let base = |method: MethodSpec| RunSpec {
+        dataset: "cifar".into(),
+        aux: "cnn27".into(),
+        method,
+        n_clients: 5,
+        participation: 0,
+        dist: Dist::Iid,
+        arrival: ArrivalOrder::ByDelay,
+        lr0: 0.05,
+        seed: 1,
+        workload: cifar_workload(Scale::Quick),
+        parallelism: Parallelism::Sequential,
+        server_shards: 1,
+        sched: SchedPolicy::RoundRobin,
+        shard_map: ShardMapKind::Contiguous,
+    };
+    let tail = "n5-p0-iid-delay-lr0.05-r4-d100-t100-k1-mcont-s1";
+    for (method, name) in [
+        (Method::FslMc, "FSL_MC"),
+        (Method::FslOc, "FSL_OC"),
+        (Method::FslAn, "FSL_AN"),
+        (Method::CseFsl, "CSE_FSL"),
+    ] {
+        let key = base(method.spec()).key();
+        assert_eq!(key, format!("cifar-cnn27-{name}-h1-{tail}"), "{method} preset key");
+        assert!(!key.contains("sage"), "{method}: sage segment leaked into {key}");
+    }
+    // The canonical sage tag joins the method segment of the key; the
+    // clip forks it (results change with the clip, so the key must).
+    let sage = |a: usize, clip: f32| {
+        base(MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every: a, clip },
+            ..Method::CseFsl.spec().with_period(2)
+        })
+    };
+    assert_eq!(sage(3, 0.0).key(), format!("cifar-cnn27-sage3+p2+sh-h2-{tail}"));
+    assert_eq!(sage(3, 0.0).label(), "sage3+p2+sh");
+    assert_eq!(sage(3, 0.5).key(), format!("cifar-cnn27-sage3c0.5+p2+sh-h2-{tail}"));
+    assert_ne!(sage(3, 0.0).key(), sage(4, 0.0).key(), "the period must fork the key");
+    // And the codec composes on top, like every other axis point.
+    let compressed = base(MethodSpec {
+        update: ClientUpdate::SageEstimate { align_every: 3, clip: 0.0 },
+        ..Method::CseFsl
+            .spec()
+            .with_period(2)
+            .with_compression(Compression::Quantize { bits: 4 })
+    });
+    assert_eq!(compressed.key(), format!("cifar-cnn27-sage3+p2+sh+q4-h2-{tail}"));
+}
+
+#[test]
+fn sage_sibling_misses_the_v2_preset_cache_entry_and_reruns() {
+    // A v2 cache record written under the CSE_FSL preset key must keep
+    // replaying for the preset — and the sage point at the very same
+    // axes must MISS it (its key carries the sage segment), run live,
+    // and land in its own cache entry that then replays bitwise.
+    let dir = std::env::temp_dir().join(format!(
+        "cse_fsl_spec_eq_{}_{}",
+        std::process::id(),
+        line!()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut h = Harness::with_engine(&dir, EngineChoice::Mock).unwrap();
+    let mut wl = femnist_workload(Scale::Quick);
+    wl.rounds = 4;
+    let preset = RunSpec {
+        dataset: "femnist".into(),
+        aux: "cnn8".into(),
+        method: Method::CseFsl.spec().with_period(2),
+        n_clients: 4,
+        participation: 0,
+        dist: Dist::Iid,
+        arrival: ArrivalOrder::ByDelay,
+        lr0: 0.05,
+        seed: 1,
+        workload: wl,
+        parallelism: Parallelism::Sequential,
+        server_shards: 1,
+        sched: SchedPolicy::RoundRobin,
+        shard_map: ShardMapKind::Contiguous,
+    };
+    let prerecorded = r#"{
+  "cache_version": 2,
+  "label": "prerecorded v2",
+  "rounds": [
+    {
+      "round": 1,
+      "sim_time": 0.5,
+      "lr": 0.05,
+      "train_loss": 1.25,
+      "server_loss": 1.5,
+      "up_bytes": 1024,
+      "down_bytes": 2048,
+      "accuracy": null,
+      "client_grad_norm": null,
+      "server_grad_norm": null
+    }
+  ],
+  "final_accuracy": 0.75,
+  "total_up_bytes": 1024,
+  "total_down_bytes": 2048,
+  "sim_time": 0.5,
+  "server_idle_fraction": 0.25,
+  "server_storage_params": 64,
+  "shard_label_divergence": 0.0,
+  "clients_activated": 4
+}"#;
+    let cache = dir.join("cache").join("mock").join(format!("{}.json", preset.key()));
+    std::fs::write(&cache, prerecorded).unwrap();
+    let sage = RunSpec {
+        method: MethodSpec {
+            update: ClientUpdate::SageEstimate { align_every: 2, clip: 0.0 },
+            ..Method::CseFsl.spec().with_period(2)
+        },
+        ..preset.clone()
+    };
+    assert!(sage.validate().is_ok());
+    assert!(sage.key().contains("-sage2+p2+sh-h2-"), "{}", sage.key());
+    // The sage sibling runs live (4 workload rounds, its own label)...
+    let srec = h.run_cached(&sage).unwrap();
+    assert_eq!(srec.rounds.len(), 4, "sage must re-run, not replay the preset entry");
+    assert_eq!(srec.label, "sage2+p2+sh");
+    // ...lands under its own key...
+    let sage_cache =
+        dir.join("cache").join("mock").join(format!("{}.json", sage.key()));
+    assert!(sage_cache.is_file(), "missing {}", sage_cache.display());
+    // ...and replays bitwise from there.
+    let replay = h.run_cached(&sage).unwrap();
+    assert_eq!(run_to_json(&srec).pretty(), run_to_json(&replay).pretty());
+    // The preset entry stayed untouched and still replays.
+    let prec = h.run_cached(&preset).unwrap();
+    assert_eq!(prec.label, "prerecorded v2", "preset cache entry must survive");
+    assert_eq!(prec.rounds.len(), 1);
+    // The alignment downlink is live in the sage run: downlink bytes
+    // exceed the aux-local sibling's at the same axes.
+    let aux = RunSpec { method: Method::CseFsl.spec().with_period(2), seed: 2, ..preset };
+    let arec = h.run_cached(&aux).unwrap();
+    // Byte totals are value-independent, so the seed difference cannot
+    // move them: uplinks match exactly, and the sage downlink exceeds
+    // the aux-local one by exactly the alignment records.
+    assert_eq!(srec.total_up_bytes, arec.total_up_bytes, "uplink must not move");
+    assert!(
+        srec.total_down_bytes > arec.total_down_bytes,
+        "alignment downlinks missing ({} <= {})",
+        srec.total_down_bytes,
+        arec.total_down_bytes
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -56,7 +56,9 @@ fn injected_failure_resumes_without_reexecution() {
     let dir_a = tmp("sweep_clean", line!());
     let mut ha = Harness::with_engine(&dir_a, EngineChoice::Mock).unwrap();
     let sweeps = builtin("h", Scale::Quick).unwrap();
-    assert_eq!(sweeps.len(), 1);
+    // "h" expands to the h × topology grid plus the sage alignment arm;
+    // the fault-injection plumbing below exercises the former.
+    assert_eq!(sweeps.len(), 2);
     let sw = &sweeps[0];
     let clean = run_sweep(&mut ha, sw, &SweepOptions::default()).unwrap();
     assert_eq!((clean.total, clean.skipped, clean.executed), (4, 0, 4));
