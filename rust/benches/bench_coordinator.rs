@@ -17,6 +17,7 @@ use cse_fsl::coordinator::round::{Trainer, TrainerSetup};
 use cse_fsl::data::partition::iid;
 use cse_fsl::data::synthetic::{generate, SyntheticSpec};
 use cse_fsl::model::aggregate::{fedavg, Accumulator};
+use cse_fsl::sim::churn::{ChurnConfig, ChurnModel, ResiliencePolicy};
 use cse_fsl::sim::event::EventQueue;
 use cse_fsl::sim::netmodel::NetModel;
 use cse_fsl::runtime::mock::MockEngine;
@@ -402,6 +403,54 @@ fn main() {
     });
     bench.report();
     snapshot.extend(bench.results().iter().cloned());
+
+    // --- churn over the fleet: the same 100k-pool round with the
+    // correlated-outage model, mid-round failures, and quorum
+    // re-sampling switched on, vs the churn-free row above. The filter
+    // is O(cohort) split-stream draws per round, so this row pins the
+    // whole reliability layer's overhead at fleet scale.
+    let run_churned_population = |n: usize, rounds: usize| {
+        let e = MockEngine::small(42);
+        let source = ClientSource::Pool {
+            n_clients: n,
+            samples_per_client: 32,
+            pool_len: train.len(),
+        };
+        let setup =
+            PopulationSetup::new(&train, &test, source, NetModel::edge_default(), "bench");
+        let cfg = TrainConfig {
+            eval_every: 0,
+            agg_every: 1,
+            participation: 64,
+            ..TrainConfig::new(Method::CseFsl).with_h(2)
+        }
+        .with_churn(ChurnConfig {
+            model: ChurnModel::Correlated { clusters: 32, p_outage: 0.2 },
+            fail_rate: 0.05,
+            policy: ResiliencePolicy::Quorum { min_frac: 0.8, resample: true },
+        })
+        .with_rounds(rounds);
+        let mut tr = Trainer::new_population(&e, cfg, setup).unwrap();
+        tr.run().unwrap()
+    };
+    let mut bench = Bench::new("coordinator/churn")
+        .with_times(Duration::from_millis(200), Duration::from_millis(1000));
+    let clean_ns = bench
+        .run_with_items("pool_100k_cohort64_3rounds_nochurn", Some(100_000.0), || {
+            run_population(100_000, 3)
+        })
+        .median_ns;
+    let churned_ns = bench
+        .run_with_items("pool_100k_cohort64_3rounds_churned", Some(100_000.0), || {
+            run_churned_population(100_000, 3)
+        })
+        .median_ns;
+    bench.report();
+    snapshot.extend(bench.results().iter().cloned());
+    println!(
+        "\nchurn overhead at 100k clients (median): churned/clean {:.2}x",
+        churned_ns / clean_ns,
+    );
 
     if let Ok(path) = std::env::var("CSE_FSL_BENCH_JSON") {
         write_snapshot(&path, "bench_coordinator", &snapshot).unwrap();

@@ -399,6 +399,103 @@ pub mod predict {
         out
     }
 
+    /// Realized per-kind message counts of a finished (possibly churned)
+    /// run. The full-participation closed form [`run_kind_bytes`] fixes
+    /// these a priori (`rounds * n` uploads, …); under churn the cohort
+    /// that actually uploads varies per round, so the prediction is
+    /// instead parameterized by the counts the run realized — every
+    /// *byte* stays a closed-form function of them, which is what
+    /// `tests/churn_properties.rs` pins against the live ledger.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct RealizedCounts {
+        /// Complete smashed uploads served (each carries its labels).
+        pub uploads_ok: u64,
+        /// Mid-round deaths after a partial upload: half the smashed
+        /// wire bytes crossed, no labels ([`ChurnConfig::fail_rate`]).
+        ///
+        /// [`ChurnConfig::fail_rate`]: crate::sim::churn::ChurnConfig
+        pub partial_uploads: u64,
+        /// Cut-layer gradient downloads served.
+        pub grad_downloads: u64,
+        /// Client-model uploads received across all aggregations.
+        pub model_uploads: u64,
+        /// Aggregated-model downloads sent across all aggregations.
+        pub model_downloads: u64,
+    }
+
+    impl RealizedCounts {
+        /// Read the realized counts back out of a run's ledger.
+        /// `partial_failures` is the trainer's churn-stat count of
+        /// mid-round deaths (partial uploads share the `SmashedUpload`
+        /// kind with complete ones, so the ledger alone cannot split
+        /// them).
+        pub fn from_ledger(ledger: &super::CommLedger, partial_failures: u64) -> Self {
+            RealizedCounts {
+                uploads_ok: ledger.count_of(MsgKind::SmashedUpload) - partial_failures,
+                partial_uploads: partial_failures,
+                grad_downloads: ledger.count_of(MsgKind::GradDownload),
+                model_uploads: ledger.count_of(MsgKind::ClientModelUpload),
+                model_downloads: ledger.count_of(MsgKind::ClientModelDownload),
+            }
+        }
+
+        /// The counts a full-participation, failure-free run realizes —
+        /// under which [`realized_kind_bytes`] reduces exactly to
+        /// [`run_kind_bytes`] (pinned by a unit test below).
+        pub fn full(p: TrafficProfile, n: u64, rounds: u64, agg_every: u64) -> Self {
+            let aggs = rounds / agg_every;
+            RealizedCounts {
+                uploads_ok: rounds * n,
+                partial_uploads: 0,
+                grad_downloads: match p {
+                    TrafficProfile::ServerGrad => rounds * n,
+                    TrafficProfile::AuxLocal => 0,
+                    TrafficProfile::SageEstimate { align_every } => {
+                        (rounds / align_every) * n
+                    }
+                },
+                model_uploads: aggs * n,
+                model_downloads: aggs * n,
+            }
+        }
+    }
+
+    /// Expected bytes per message kind given the cohort/failure counts a
+    /// run actually realized — the churn-proof form of
+    /// [`run_kind_bytes`]. Per-message wire sizes are identical to the a
+    /// priori form (codec-wired smashed tensors, full-precision labels
+    /// and model exchanges); a partial upload crosses exactly
+    /// `wire / 2` bytes (integer division — the same expression the live
+    /// trainer ledgers) and carries no labels. Aux-net riders follow the
+    /// model-exchange counts under the aux-local profiles and are zero
+    /// under the server-grad rule, exactly as on the live wire.
+    pub fn realized_kind_bytes(
+        p: TrafficProfile,
+        c: Compression,
+        batch: u64,
+        w: &WireSizes,
+        r: &RealizedCounts,
+    ) -> Vec<(MsgKind, u64)> {
+        let smashed_elems = batch * (w.smashed_per_sample / 4);
+        let smashed_wire = c.wire_bytes(smashed_elems);
+        let aux = match p {
+            TrafficProfile::ServerGrad => 0,
+            TrafficProfile::AuxLocal | TrafficProfile::SageEstimate { .. } => 1,
+        };
+        vec![
+            (
+                MsgKind::SmashedUpload,
+                r.uploads_ok * smashed_wire + r.partial_uploads * (smashed_wire / 2),
+            ),
+            (MsgKind::LabelUpload, r.uploads_ok * batch * w.label),
+            (MsgKind::GradDownload, r.grad_downloads * smashed_wire),
+            (MsgKind::ClientModelUpload, r.model_uploads * w.client_model),
+            (MsgKind::ClientModelDownload, r.model_downloads * w.client_model),
+            (MsgKind::AuxModelUpload, aux * r.model_uploads * w.aux_model),
+            (MsgKind::AuxModelDownload, aux * r.model_downloads * w.aux_model),
+        ]
+    }
+
     /// (uplink, downlink) byte totals for a whole run.
     pub fn run_totals(
         p: TrafficProfile,
@@ -638,6 +735,91 @@ mod tests {
                 last = down;
             }
         }
+    }
+
+    #[test]
+    fn realized_counts_reduce_to_the_full_participation_form() {
+        use crate::comm::compress::Compression;
+        let w = wires();
+        let (n, batch, rounds, agg_every) = (5u64, 50u64, 12u64, 4u64);
+        for p in [
+            predict::TrafficProfile::ServerGrad,
+            predict::TrafficProfile::AuxLocal,
+            predict::TrafficProfile::SageEstimate { align_every: 3 },
+        ] {
+            for c in [
+                Compression::None,
+                Compression::Quantize { bits: 4 },
+                Compression::TopK { frac: 0.25 },
+            ] {
+                let full = predict::RealizedCounts::full(p, n, rounds, agg_every);
+                assert_eq!(
+                    predict::realized_kind_bytes(p, c, batch, &w, &full),
+                    predict::run_kind_bytes(p, c, n, batch, rounds, agg_every, &w),
+                    "{p:?} {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partial_uploads_cost_half_the_wire_and_no_labels() {
+        use crate::comm::compress::Compression;
+        let w = wires();
+        let batch = 50u64;
+        let p = predict::TrafficProfile::AuxLocal;
+        for c in [Compression::None, Compression::Quantize { bits: 4 }] {
+            let smashed_wire = c.wire_bytes(batch * (w.smashed_per_sample / 4));
+            let base = predict::RealizedCounts {
+                uploads_ok: 40,
+                partial_uploads: 0,
+                grad_downloads: 0,
+                model_uploads: 10,
+                model_downloads: 10,
+            };
+            let churned = predict::RealizedCounts { partial_uploads: 3, ..base };
+            let b: std::collections::BTreeMap<_, _> =
+                predict::realized_kind_bytes(p, c, batch, &w, &base).into_iter().collect();
+            let ch: std::collections::BTreeMap<_, _> =
+                predict::realized_kind_bytes(p, c, batch, &w, &churned)
+                    .into_iter()
+                    .collect();
+            // Each death adds exactly half a smashed wire message...
+            assert_eq!(
+                ch[&MsgKind::SmashedUpload] - b[&MsgKind::SmashedUpload],
+                3 * (smashed_wire / 2),
+                "{c}"
+            );
+            // ...and nothing else: labels ride only with complete uploads.
+            for k in MsgKind::ALL {
+                if k != MsgKind::SmashedUpload {
+                    assert_eq!(ch[&k], b[&k], "{c} {k:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn realized_counts_read_back_from_a_ledger() {
+        let mut l = CommLedger::new();
+        for _ in 0..4 {
+            l.record(0, MsgKind::SmashedUpload, 100);
+        }
+        l.record(1, MsgKind::SmashedUpload, 50); // the partial one
+        l.record(0, MsgKind::GradDownload, 100);
+        l.record(0, MsgKind::ClientModelUpload, 8);
+        l.record_bulk(MsgKind::ClientModelDownload, 3, 8);
+        let r = predict::RealizedCounts::from_ledger(&l, 1);
+        assert_eq!(
+            r,
+            predict::RealizedCounts {
+                uploads_ok: 4,
+                partial_uploads: 1,
+                grad_downloads: 1,
+                model_uploads: 1,
+                model_downloads: 3,
+            }
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Training-run configuration + validation.
 
 use crate::sched::SchedPolicy;
+use crate::sim::churn::ChurnConfig;
 
 use super::methods::{Compression, Method, MethodSpec, ServerTopology};
 
@@ -214,6 +215,13 @@ pub struct TrainConfig {
     /// non-IID partition, enforced where the distribution is known
     /// (`exp::common::RunSpec::validate`).
     pub shard_map: ShardMapKind,
+    /// Client churn & reliability: availability model × mid-round
+    /// failure rate × server resilience policy
+    /// ([`crate::sim::churn`]). The default is full availability with
+    /// no failures and `WaitAll` — the contract point, under which no
+    /// churn draw ever happens. Any non-default knob **changes
+    /// results** and rides into `RunSpec::key` / run labels.
+    pub churn: ChurnConfig,
 }
 
 impl TrainConfig {
@@ -245,6 +253,7 @@ impl TrainConfig {
             server_shards: 1,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Contiguous,
+            churn: ChurnConfig::default(),
         }
     }
 
@@ -296,6 +305,12 @@ impl TrainConfig {
     /// Builder: set the client → shard assignment flavor.
     pub fn with_shard_map(mut self, shard_map: ShardMapKind) -> Self {
         self.shard_map = shard_map;
+        self
+    }
+
+    /// Builder: set the churn & reliability configuration.
+    pub fn with_churn(mut self, churn: ChurnConfig) -> Self {
+        self.churn = churn;
         self
     }
 
@@ -351,6 +366,7 @@ impl TrainConfig {
         if self.lr0 <= 0.0 || self.lr_decay_rate <= 0.0 || self.lr_decay_rate > 1.0 {
             return Err("bad learning-rate schedule".into());
         }
+        self.churn.validate()?;
         Ok(())
     }
 
@@ -561,6 +577,79 @@ mod tests {
             .with_compression(Compression::TopK { frac: 0.25 })
             .validate(5)
             .is_ok());
+    }
+
+    #[test]
+    fn churn_rides_the_config_and_is_validated_at_build_time() {
+        use crate::sim::churn::{ChurnModel, ResiliencePolicy};
+        // The default is the contract point: no churn anywhere.
+        let c = TrainConfig::new(Method::CseFsl);
+        assert!(c.churn.is_default());
+        assert!(c.validate(5).is_ok());
+        // A full non-default stack validates...
+        let churned = c.clone().with_churn(ChurnConfig {
+            model: ChurnModel::Correlated { clusters: 4, p_outage: 0.2 },
+            fail_rate: 0.1,
+            policy: ResiliencePolicy::Quorum { min_frac: 0.5, resample: true },
+        });
+        assert!(churned.validate(5).is_ok());
+        // ...and every bad parameter is rejected at config build time
+        // instead of flowing into the engines (one test per path).
+        let reject = |churn: ChurnConfig| {
+            TrainConfig::new(Method::CseFsl).with_churn(churn).validate(5)
+        };
+        assert!(
+            reject(ChurnConfig {
+                model: ChurnModel::Iid { p: 0.0 },
+                ..ChurnConfig::default()
+            })
+            .is_err(),
+            "availability 0 must be rejected"
+        );
+        assert!(
+            reject(ChurnConfig {
+                model: ChurnModel::Iid { p: 1.5 },
+                ..ChurnConfig::default()
+            })
+            .is_err(),
+            "availability > 1 must be rejected"
+        );
+        assert!(
+            reject(ChurnConfig {
+                model: ChurnModel::Iid { p: f64::NAN },
+                ..ChurnConfig::default()
+            })
+            .is_err(),
+            "NaN availability must be rejected"
+        );
+        assert!(
+            reject(ChurnConfig {
+                policy: ResiliencePolicy::Cutoff { secs: -1.0 },
+                ..ChurnConfig::default()
+            })
+            .is_err(),
+            "negative straggler cutoff must be rejected"
+        );
+        assert!(
+            reject(ChurnConfig {
+                policy: ResiliencePolicy::Cutoff { secs: f64::NAN },
+                ..ChurnConfig::default()
+            })
+            .is_err(),
+            "NaN straggler cutoff must be rejected"
+        );
+        assert!(
+            reject(ChurnConfig { fail_rate: 1.0, ..ChurnConfig::default() }).is_err(),
+            "fail rate 1 must be rejected"
+        );
+        assert!(
+            reject(ChurnConfig {
+                policy: ResiliencePolicy::Quorum { min_frac: 0.0, resample: false },
+                ..ChurnConfig::default()
+            })
+            .is_err(),
+            "zero quorum must be rejected"
+        );
     }
 
     #[test]

@@ -181,23 +181,14 @@ pub struct PopulationSetup<'a> {
     pub net: NetModel,
     /// Human-readable run label carried into the `RunRecord`.
     pub label: String,
-    /// Per-round client availability in (0, 1]: each sampled participant
-    /// independently sits the round out with probability
-    /// `1 - availability` (a fresh non-mutated draw per (round, id), so
-    /// it perturbs nothing else). 1.0 — the default, and the only value
-    /// the bit-determinism contract covers — disables the filter.
-    pub availability: f64,
-    /// Straggler dropout: a round's smashed upload is dropped (never
-    /// enters the server's dataQueue) if it arrives more than this many
-    /// simulated seconds after the round's *first* arrival. `None` — the
-    /// default, and the only value the bit-determinism contract covers —
-    /// processes every arrival.
-    pub straggler_cutoff: Option<f64>,
 }
 
 impl<'a> PopulationSetup<'a> {
-    /// A setup with the contract-covered defaults: full availability,
-    /// no straggler dropout.
+    /// A setup over the given source and delay model. Availability,
+    /// mid-round failures, and straggler handling are no longer setup
+    /// knobs: they live in `TrainConfig::churn`
+    /// ([`crate::sim::churn::ChurnConfig`]), shared with the resident
+    /// engine.
     pub fn new(
         train: &'a Dataset,
         test: &'a Dataset,
@@ -205,15 +196,7 @@ impl<'a> PopulationSetup<'a> {
         net: NetModel,
         label: impl Into<String>,
     ) -> Self {
-        PopulationSetup {
-            train,
-            test,
-            source,
-            net,
-            label: label.into(),
-            availability: 1.0,
-            straggler_cutoff: None,
-        }
+        PopulationSetup { train, test, source, net, label: label.into() }
     }
 }
 
@@ -306,14 +289,6 @@ pub struct PopulationState {
     /// Client private-stream root (`Rng::new(seed)`; activation derives
     /// `client_root.split(1_000 + id)` — the resident constructor arg).
     pub client_root: Rng,
-    /// Availability root stream (`root.split_str("availability")`; only
-    /// consulted when `availability < 1.0`).
-    pub avail_root: Rng,
-    /// Per-round availability in (0, 1]; 1.0 disables the filter.
-    pub availability: f64,
-    /// Straggler dropout window (seconds past the round's first
-    /// arrival); `None` processes every arrival.
-    pub straggler_cutoff: Option<f64>,
     /// The model every not-currently-diverged client holds (x_c after
     /// the last aggregation; x_c^0 before the first).
     pub global_xc: Vec<f32>,
@@ -341,8 +316,6 @@ pub struct PopulationState {
     pub busy: BTreeMap<usize, f64>,
     /// Smashed arrivals processed through the event queue.
     pub arrivals: u64,
-    /// Smashed arrivals dropped by the straggler cutoff.
-    pub stragglers_dropped: u64,
 }
 
 impl PopulationState {

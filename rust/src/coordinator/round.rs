@@ -106,6 +106,7 @@ use crate::model::init::init_flat;
 use crate::model::layout::Layout;
 use crate::runtime::{EngineError, SplitEngine};
 use crate::sched::{self, CostTracker, SchedPolicy};
+use crate::sim::churn::{ChurnState, ChurnStats, ResiliencePolicy};
 use crate::sim::event::EventQueue;
 use crate::sim::netmodel::NetModel;
 use crate::sim::timeline::{SpanKind, Timeline};
@@ -157,6 +158,13 @@ pub struct Trainer<'a, E: SplitEngine> {
     records: Vec<RoundRecord>,
     /// Clients that contributed training since the last aggregation.
     dirty: Vec<bool>,
+    /// Churn evaluator: the availability/resample draw streams plus the
+    /// Markov models' carried per-client session state
+    /// (`cfg.churn` decides what, if anything, it is asked).
+    churn: ChurnState,
+    /// Reliability counters (dropped / replaced / failed / straggling),
+    /// accumulated across the run and surfaced through the `RunRecord`.
+    pub churn_stats: ChurnStats,
     label: String,
 }
 
@@ -274,7 +282,10 @@ struct LocalOutcome {
     gnorms: Vec<f32>,
     timeline: Timeline,
     ledger: CommLedger,
-    msg: SmashedMsg,
+    /// The smashed upload; `None` when the client died mid-round (a
+    /// partial upload's wire bytes are ledgered, but nothing reaches
+    /// the server's dataQueue and the client's own state is untouched).
+    msg: Option<SmashedMsg>,
 }
 
 /// One client's aux-local round (Algorithm 1): `h` local batches, one
@@ -288,6 +299,14 @@ struct LocalOutcome {
 /// `compression` (the trainer's `smashed_bytes()`), and the uploaded
 /// tensor is the codec's compress → decompress round trip of the
 /// forward output — the server trains on what actually arrived.
+///
+/// With `fail_rate > 0` the client first takes a per-(round, id) death
+/// draw off a throwaway split (`0xFA`): a dying client crashes after
+/// computing a prefix of its `h` batches and half its upload — the
+/// partial wire bytes ARE ledgered (the server really received them),
+/// the spans ARE recorded, but no message is produced and the client's
+/// own state (model, batcher, private stream) is untouched, so it
+/// resumes from its checkpoint whenever it next participates.
 #[allow(clippy::too_many_arguments)]
 fn run_local_client<E: SplitEngine>(
     engine: &E,
@@ -295,6 +314,7 @@ fn run_local_client<E: SplitEngine>(
     h: usize,
     lr: f32,
     compression: Compression,
+    fail_rate: f64,
     smashed_bytes: u64,
     label_bytes: u64,
     round_rng: &Rng,
@@ -303,6 +323,44 @@ fn run_local_client<E: SplitEngine>(
 ) -> Result<LocalOutcome, EngineError> {
     let payload = smashed_bytes + label_bytes;
     let start = c.ready_at;
+    if fail_rate > 0.0 {
+        let mut frng = round_rng.split(i as u64 ^ 0xFA);
+        if frng.uniform() < fail_rate {
+            // Crash after `done` of the `h` batches (uniform prefix)
+            // plus half the upload. No engine step runs: the partial
+            // round's model updates die with the process.
+            let done = frng.below(h as u64) as usize;
+            let mut drng = round_rng.split(i as u64);
+            let frac = (done as f64 + 0.5) / h as f64;
+            let t_compute = c.profile.compute_delay(h, &mut drng) * frac;
+            let t_up = c.profile.upload_delay(payload, &mut drng) * 0.5;
+            let mut timeline = Timeline::default();
+            timeline.record(
+                SpanKind::ClientCompute,
+                Some(i),
+                start,
+                start + t_compute,
+                format!("train {done}/{h} (died)"),
+            );
+            timeline.record(
+                SpanKind::Upload,
+                Some(i),
+                start + t_compute,
+                start + t_compute + t_up,
+                "smashed (partial)",
+            );
+            let mut ledger = CommLedger::new();
+            ledger.record(i, MsgKind::SmashedUpload, smashed_bytes / 2);
+            c.ready_at = start + t_compute + t_up;
+            return Ok(LocalOutcome {
+                losses: Vec::new(),
+                gnorms: Vec::new(),
+                timeline,
+                ledger,
+                msg: None,
+            });
+        }
+    }
     let mut losses = Vec::with_capacity(h);
     let mut gnorms = Vec::with_capacity(h);
     let mut last_seed = 0;
@@ -355,7 +413,7 @@ fn run_local_client<E: SplitEngine>(
     // Fire-and-forget: the client is free as soon as the upload leaves —
     // it never waits for server gradients.
     c.ready_at = start + t_compute + t_up;
-    Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg })
+    Ok(LocalOutcome { losses, gnorms, timeline, ledger, msg: Some(msg) })
 }
 
 /// One client's estimator-alignment step (`ClientUpdate::SageEstimate`,
@@ -521,6 +579,8 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             shard_divergence,
             records: Vec::new(),
             dirty: vec![false; n],
+            churn: ChurnState::new(&root),
+            churn_stats: ChurnStats::default(),
             label: setup.label,
         })
     }
@@ -571,19 +631,6 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     .into(),
             );
         }
-        if !(setup.availability > 0.0 && setup.availability <= 1.0) {
-            return Err(format!(
-                "population engine: availability {} outside (0, 1]",
-                setup.availability
-            ));
-        }
-        if let Some(cut) = setup.straggler_cutoff {
-            if !(cut.is_finite() && cut >= 0.0) {
-                return Err(format!(
-                    "population engine: straggler cutoff {cut} must be finite and >= 0"
-                ));
-            }
-        }
         let root = Rng::new(cfg.seed);
         // Global zero-init, matching `Trainer::new` with no layouts (the
         // population engine drives layout-free mock runs; every client
@@ -609,9 +656,6 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             net: setup.net,
             prof_root: root.split_str("profiles"),
             client_root: root.clone(),
-            avail_root: root.split_str("availability"),
-            availability: setup.availability,
-            straggler_cutoff: setup.straggler_cutoff,
             global_xc: xc0,
             global_ac: ac0,
             carry: BTreeMap::new(),
@@ -621,7 +665,6 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             dl_end_max: 0.0,
             busy: BTreeMap::new(),
             arrivals: 0,
-            stragglers_dropped: 0,
         };
         Ok(Trainer {
             engine,
@@ -643,6 +686,8 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             shard_divergence,
             records: Vec::new(),
             dirty: Vec::new(),
+            churn: ChurnState::new(&root),
+            churn_stats: ChurnStats::default(),
             label: setup.label,
         })
     }
@@ -685,6 +730,75 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             let mut v = self.rng.choose(n, k);
             v.sort_unstable();
             v
+        }
+    }
+
+    /// Apply the availability model and the quorum guard to this
+    /// round's sampled participants (both engines, pre-fanout).
+    ///
+    /// Availability draws are per-(round, id) non-mutating splits
+    /// ([`ChurnState::is_available`]) — the filter perturbs no other
+    /// stream, and the default full-availability model never draws, so
+    /// the bit-determinism contract's covered point is untouched byte
+    /// for byte. When the surviving cohort falls below a resampling
+    /// quorum, deterministic replacements are drawn from the still-
+    /// available population (bounded rejection sampling off a per-round
+    /// stream) and merged back in canonical id order.
+    fn apply_churn(&mut self, t: usize, participants: &mut Vec<usize>) {
+        let model = self.cfg.churn.model;
+        if model.is_full() {
+            // No model can drop anyone, so every quorum is met: nothing
+            // to do (and nothing may be drawn — `Quorum { 1.0, false }`
+            // must stay byte-identical to `WaitAll`).
+            return;
+        }
+        let planned = participants.len();
+        participants.retain(|&i| self.churn.is_available(&model, t, i));
+        self.churn_stats.clients_dropped += (planned - participants.len()) as u64;
+        if let ResiliencePolicy::Quorum { min_frac, resample } = self.cfg.churn.policy {
+            let quorum = (min_frac * planned as f64).ceil() as usize;
+            if resample && participants.len() < quorum {
+                let n = self.n_clients();
+                let mut have: BTreeSet<usize> = participants.iter().copied().collect();
+                let mut rng = self.churn.resample_stream(t);
+                let need = quorum - have.len();
+                // Bounded rejection sampling: candidates already in the
+                // cohort or themselves unavailable are skipped; under a
+                // heavy blackout the budget runs out and the round
+                // proceeds below quorum with whoever there is.
+                let budget = 4 * need + 64;
+                let mut accepted = 0usize;
+                for _ in 0..budget {
+                    if accepted >= need || have.len() >= n {
+                        break;
+                    }
+                    let cand = rng.below(n as u64) as usize;
+                    if have.contains(&cand) || !self.churn.is_available(&model, t, cand) {
+                        continue;
+                    }
+                    have.insert(cand);
+                    accepted += 1;
+                }
+                self.churn_stats.clients_replaced += accepted as u64;
+                *participants = have.into_iter().collect();
+            }
+        }
+    }
+
+    /// The `Cutoff` resilience policy over an upload wave: drop every
+    /// message arriving more than the window past the wave's *first*
+    /// arrival (the resident counterpart of the population engine's
+    /// event-queue filter in [`Trainer::order_arrivals`] — same window,
+    /// same first-arrival anchor, same strict inequality).
+    fn apply_cutoff(&mut self, msgs: &mut Vec<SmashedMsg>) {
+        if let ResiliencePolicy::Cutoff { secs } = self.cfg.churn.policy {
+            if let Some(first) =
+                msgs.iter().map(|m| m.arrival).reduce(f64::min)
+            {
+                let before = msgs.len();
+                msgs.retain(|m| m.arrival <= first + secs);
+                self.churn_stats.stragglers_dropped += (before - msgs.len()) as u64;
+            }
         }
     }
 
@@ -743,6 +857,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             server_updates_per_shard: self.server.shard_updates.clone(),
             shard_label_divergence: self.shard_divergence,
             clients_activated: self.clients_activated(),
+            clients_dropped: self.churn_stats.clients_dropped,
+            clients_replaced: self.churn_stats.clients_replaced,
+            partial_failures: self.churn_stats.partial_failures,
+            stragglers_dropped: self.churn_stats.stragglers_dropped,
         })
     }
 
@@ -779,7 +897,8 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         }
         let lr = self.cfg.lr_at(t - 1) as f32;
         let server_lr = (self.cfg.lr_at(t - 1) * self.cfg.server_lr_scale) as f32;
-        let participants = self.select_participants();
+        let mut participants = self.select_participants();
+        self.apply_churn(t, &mut participants);
         let mut train_losses = Vec::new();
         let mut client_gnorms = Vec::new();
         let mut msgs: Vec<SmashedMsg> = Vec::new();
@@ -827,15 +946,19 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             }
         }
 
+        // Clients that actually trained go dirty: a mid-round failure
+        // never touched its model (no message), while a straggler cut
+        // below *did* train — only its upload is dropped.
+        for m in &msgs {
+            self.dirty[m.client] = true;
+        }
+        self.apply_cutoff(&mut msgs);
+
         // Event-triggered server updates over the arrival queue.
         let (server_losses, server_gnorms, grads) =
             self.drain_data_queue(server_lr, msgs, align)?;
         if let Some(clip) = align {
             self.align_estimators(lr, clip, grads, &mut client_gnorms)?;
-        }
-
-        for &i in &participants {
-            self.dirty[i] = true;
         }
 
         if t % self.cfg.agg_every == 0 {
@@ -887,6 +1010,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let engine = self.engine;
         let train = self.train;
         let compression = self.cfg.spec.compression;
+        let fail_rate = self.cfg.churn.fail_rate;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         // Snapshot of the trainer stream: `split` derives child streams
@@ -908,6 +1032,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     h,
                     lr,
                     compression,
+                    fail_rate,
                     smashed_bytes,
                     label_bytes,
                     &round_rng,
@@ -926,7 +1051,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             client_gnorms.extend_from_slice(&o.gnorms);
             self.timeline.append(o.timeline);
             self.ledger.merge(&o.ledger);
-            msgs.push(o.msg);
+            match o.msg {
+                Some(m) => msgs.push(m),
+                None => self.churn_stats.partial_failures += 1,
+            }
         }
         Ok(())
     }
@@ -957,7 +1085,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         struct FwdOutcome {
             timeline: Timeline,
             ledger: CommLedger,
-            pend: Pending,
+            /// `None` when the client died mid-upload (partial wire
+            /// bytes ledgered, nothing reaches the server).
+            pend: Option<Pending>,
         }
         // Phase 1: forwards + uploads (parallel across clients).
         let engine = self.engine;
@@ -966,6 +1096,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         let payload = smashed_bytes + label_bytes;
+        let fail_rate = self.cfg.churn.fail_rate;
         let round_rng = self.rng.clone();
         let costs: Vec<f64> =
             participants.iter().map(|&i| self.cost_tracker.estimate(i)).collect();
@@ -977,6 +1108,40 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             participants,
             |_pos, i, c: &mut ClientState| {
                 let start = c.ready_at;
+                if fail_rate > 0.0
+                    && round_rng.split(i as u64 ^ 0xFA).uniform() < fail_rate
+                {
+                    // Mid-round death: the client crashes partway
+                    // through its forward + upload. Half the compute
+                    // and half the wire bytes are spent (and ledgered
+                    // — the server really received a partial smashed
+                    // upload), but nothing reaches the dataQueue and
+                    // the client's own state (model, batcher, private
+                    // stream) is untouched: it restarts this round's
+                    // work from its checkpoint whenever it returns.
+                    let mut drng = round_rng.split(i as u64 ^ 0x5F);
+                    let t_fwd = c.profile.compute_delay(1, &mut drng) * 0.5 * 0.5;
+                    let t_up = c.profile.upload_delay(payload, &mut drng) * 0.5;
+                    let mut timeline = Timeline::default();
+                    timeline.record(
+                        SpanKind::ClientCompute,
+                        Some(i),
+                        start,
+                        start + t_fwd,
+                        "fwd (died)",
+                    );
+                    timeline.record(
+                        SpanKind::Upload,
+                        Some(i),
+                        start + t_fwd,
+                        start + t_fwd + t_up,
+                        "smashed (partial)",
+                    );
+                    let mut ledger = CommLedger::new();
+                    ledger.record(i, MsgKind::SmashedUpload, smashed_bytes / 2);
+                    c.ready_at = start + t_fwd + t_up;
+                    return Ok(FwdOutcome { timeline, ledger, pend: None });
+                }
                 c.load_batch(train);
                 let seed = c.next_seed();
                 let mut smashed = engine.client_fwd(&c.xc, &c.images, seed)?;
@@ -1002,7 +1167,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                 ledger.record(i, MsgKind::LabelUpload, label_bytes);
                 let pend =
                     Pending { client: i, smashed, seed, arrival: start + t_fwd + t_up };
-                Ok(FwdOutcome { timeline, ledger, pend })
+                Ok(FwdOutcome { timeline, ledger, pend: Some(pend) })
             },
         )?;
         let mut pend: Vec<Pending> = Vec::with_capacity(outcomes.len());
@@ -1012,10 +1177,23 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             self.cost_tracker.observe(participants[pos], observed);
             self.timeline.append(o.timeline);
             self.ledger.merge(&o.ledger);
-            pend.push(o.pend);
+            match o.pend {
+                Some(p) => pend.push(p),
+                None => self.churn_stats.partial_failures += 1,
+            }
         }
         // Stable sort: equal arrivals keep canonical client-id order.
         pend.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        // The straggler window applies to the SplitFed dataQueue too: a
+        // cut client's upload never reaches the server, so it takes no
+        // round trip, no gradient, no step — and stays clean.
+        if let ResiliencePolicy::Cutoff { secs } = self.cfg.churn.policy {
+            if let Some(first) = pend.first().map(|p| p.arrival) {
+                let before = pend.len();
+                pend.retain(|p| p.arrival <= first + secs);
+                self.churn_stats.stragglers_dropped += (before - pend.len()) as u64;
+            }
+        }
 
         // Phase 2: the server round trip, then client backward after the
         // gradient downlink. Arrivals are grouped by executor lane
@@ -1033,6 +1211,9 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         for (lane, lane_pend) in by_lane.into_iter().enumerate() {
             for p in lane_pend {
                 let i = p.client;
+                // A SplitFed client trains iff its upload is served:
+                // dirty is decided here, not at sampling time.
+                self.dirty[i] = true;
                 let start = self.server.free_at[lane].max(p.arrival);
                 let copy = self.server.copy_for(i);
                 let labels = self.clients[i].labels.clone();
@@ -1325,21 +1506,13 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let lr = self.cfg.lr_at(t - 1) as f32;
         let server_lr = (self.cfg.lr_at(t - 1) * self.cfg.server_lr_scale) as f32;
         let mut participants = self.select_participants();
-        {
-            // Availability: each sampled participant independently sits
-            // the round out. Draws come per (round, id) from a
-            // non-mutated root, so the filter perturbs no other stream;
-            // availability = 1.0 (the contract default) never draws.
-            let pop = self.population.as_ref().expect("population run");
-            if pop.availability < 1.0 {
-                let round_avail = pop.avail_root.split(t as u64);
-                let avail = pop.availability;
-                participants.retain(|&i| {
-                    let mut r = round_avail.split(i as u64);
-                    r.uniform() < avail
-                });
-            }
-        }
+        // Churn: who of the sampled cohort shows up (availability model
+        // + quorum re-sampling). Draws come per (round, id) from
+        // non-mutated roots, so the filter perturbs no other stream;
+        // the default full-availability model never draws. `Iid { p }`
+        // replays the legacy `availability = p` knob's draw sequence
+        // bit for bit (pinned by `tests/churn_properties.rs`).
+        self.apply_churn(t, &mut participants);
         let h = self.cfg.spec.upload.batches_at(t);
         // The sage rule's alignment trigger — the same condition as the
         // resident dispatch, so the two engines align the same rounds.
@@ -1361,9 +1534,14 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             &mut client_gnorms,
             &mut msgs,
         )?;
+        // Clients that actually trained go dirty (a mid-round failure
+        // produced no message and never touched its model; a straggler
+        // cut below trained — only its upload is dropped).
+        let trained: Vec<usize> = msgs.iter().map(|m| m.client).collect();
         // Arrivals, dropouts, stragglers: the event queue replays the
         // upload wave in time order; late arrivals past the straggler
-        // cutoff never reach the server's dataQueue.
+        // window (`ResiliencePolicy::Cutoff`) never reach the server's
+        // dataQueue.
         let ordered = self.order_arrivals(msgs);
         let (server_losses, server_gnorms, grads) =
             self.drain_ordered(server_lr, ordered, align)?;
@@ -1375,7 +1553,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         self.retire_batch_buffers(&participants);
         {
             let pop = self.population.as_mut().expect("population run");
-            pop.dirty.extend(participants.iter().copied());
+            pop.dirty.extend(trained);
         }
         if t % self.cfg.agg_every == 0 {
             self.aggregate_population()?;
@@ -1474,6 +1652,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         let engine = self.engine;
         let train = self.train;
         let compression = self.cfg.spec.compression;
+        let fail_rate = self.cfg.churn.fail_rate;
         let smashed_bytes = self.smashed_bytes();
         let label_bytes = self.label_bytes();
         let round_rng = self.rng.clone();
@@ -1505,6 +1684,7 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
                     h,
                     lr,
                     compression,
+                    fail_rate,
                     smashed_bytes,
                     label_bytes,
                     &round_rng,
@@ -1527,7 +1707,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
             client_gnorms.extend_from_slice(&o.gnorms);
             self.timeline.append(o.timeline);
             self.ledger.merge(&o.ledger);
-            msgs.push(o.msg);
+            match o.msg {
+                Some(m) => msgs.push(m),
+                None => self.churn_stats.partial_failures += 1,
+            }
         }
         Ok(())
     }
@@ -1550,10 +1733,12 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
     /// Replay the round's upload wave through the [`EventQueue`]:
     /// arrivals pop in time order with FIFO ties — enqueued in
     /// participant order, that reproduces the resident engine's stable
-    /// sort bit-for-bit — and arrivals later than `straggler_cutoff`
-    /// seconds past the wave's first are dropped before they ever reach
-    /// the server's dataQueue.
+    /// sort bit-for-bit — and, under [`ResiliencePolicy::Cutoff`],
+    /// arrivals later than the window past the wave's first are dropped
+    /// before they ever reach the server's dataQueue (the population
+    /// counterpart of [`Trainer::apply_cutoff`]).
     fn order_arrivals(&mut self, msgs: Vec<SmashedMsg>) -> Vec<SmashedMsg> {
+        let cutoff = self.cfg.churn.policy.cutoff();
         let pop = self.population.as_mut().expect("population run");
         let mut q = EventQueue::new();
         for m in msgs {
@@ -1564,8 +1749,10 @@ impl<'a, E: SplitEngine> Trainer<'a, E> {
         while let Some((at, m)) = q.pop() {
             let first = *first_arrival.get_or_insert(at);
             pop.arrivals += 1;
-            match pop.straggler_cutoff {
-                Some(cut) if at > first + cut => pop.stragglers_dropped += 1,
+            match cutoff {
+                Some(cut) if at > first + cut => {
+                    self.churn_stats.stragglers_dropped += 1
+                }
                 _ => ordered.push(m),
             }
         }

@@ -24,6 +24,7 @@ use crate::runtime::artifact::Manifest;
 use crate::runtime::mock::MockEngine;
 use crate::runtime::pjrt::{PjrtEngine, PjrtRuntime};
 use crate::runtime::SplitEngine;
+use crate::sim::churn::ChurnConfig;
 use crate::sim::netmodel::NetModel;
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -234,6 +235,13 @@ pub struct RunSpec {
     /// across shard copies, which **changes results** — so, like
     /// `server_shards`, it is part of the cache key and of run labels.
     pub shard_map: ShardMapKind,
+    /// Churn & resilience knobs (availability model, mid-round failure
+    /// rate, partial-aggregation policy). Every non-default knob
+    /// changes results, so the whole config joins [`RunSpec::key`] via
+    /// [`ChurnConfig::key_suffix`] — which is empty at the default, so
+    /// every pre-churn cache key (and the pinned preset strings) stays
+    /// byte-identical.
+    pub churn: ChurnConfig,
 }
 
 impl RunSpec {
@@ -269,7 +277,7 @@ impl RunSpec {
             self.server_shards,
             self.shard_map.tag(),
             self.seed
-        )
+        ) + &self.churn.key_suffix()
     }
 
     /// Human-readable series label ([`MethodSpec::label`] — historical
@@ -283,6 +291,7 @@ impl RunSpec {
         if self.shard_map != ShardMapKind::Contiguous {
             l.push_str(&format!(" {}", self.shard_map.tag()));
         }
+        l.push_str(&self.churn.label_suffix());
         l
     }
 
@@ -732,6 +741,7 @@ fn build_config(spec: &RunSpec, engine_batch: usize, participation: usize) -> Tr
         server_shards: spec.server_shards,
         sched: spec.sched,
         shard_map: spec.shard_map,
+        churn: spec.churn,
     }
 }
 
@@ -792,6 +802,10 @@ pub fn run_to_json(r: &RunRecord) -> Json {
         ),
         ("shard_label_divergence", Json::num(r.shard_label_divergence)),
         ("clients_activated", Json::num(r.clients_activated as f64)),
+        ("clients_dropped", Json::num(r.clients_dropped as f64)),
+        ("clients_replaced", Json::num(r.clients_replaced as f64)),
+        ("partial_failures", Json::num(r.partial_failures as f64)),
+        ("stragglers_dropped", Json::num(r.stragglers_dropped as f64)),
     ])
 }
 
@@ -890,7 +904,24 @@ pub fn run_from_json(text: &str) -> Result<RunRecord, String> {
             .map_err(err)?
             .as_f64()
             .map_err(err)? as usize,
+        // Churn counters: absent in pre-churn v2 entries, where their
+        // true value IS 0 (no churn subsystem existed, so nothing was
+        // ever dropped) — lenient defaults are exact here, not guesses.
+        // Present-yet-malformed values still error like every field.
+        clients_dropped: lenient_u64(&j, "clients_dropped").map_err(err)?,
+        clients_replaced: lenient_u64(&j, "clients_replaced").map_err(err)?,
+        partial_failures: lenient_u64(&j, "partial_failures").map_err(err)?,
+        stragglers_dropped: lenient_u64(&j, "stragglers_dropped").map_err(err)?,
     })
+}
+
+/// Absent-means-zero u64 field parse (a present-yet-malformed value is
+/// still an error): the churn counters of [`run_from_json`].
+fn lenient_u64(j: &Json, field: &str) -> Result<u64, crate::util::json::JsonError> {
+    match j.opt(field) {
+        Some(v) => v.as_f64().map(|f| f as u64),
+        None => Ok(0),
+    }
 }
 
 /// Render several accuracy-vs-round curves side by side.
@@ -1047,6 +1078,7 @@ mod tests {
             server_shards: 2,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Locality,
+            churn: ChurnConfig::default(),
         };
         let err = spec.validate().unwrap_err();
         assert!(err.contains("non-IID"), "{err}");
@@ -1098,6 +1130,7 @@ mod tests {
             server_shards: 2,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Locality,
+            churn: ChurnConfig::default(),
         };
         let loc = h.run_cached(&spec).unwrap();
         assert_eq!(loc.rounds.len(), 3);
@@ -1142,6 +1175,7 @@ mod tests {
             server_shards: 1,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Contiguous,
+            churn: ChurnConfig::default(),
         };
         let mut other = base.clone();
         other.method = other.method.with_period(10);
@@ -1204,6 +1238,23 @@ mod tests {
         let mut other = base.clone();
         other.seed = 2;
         assert_ne!(base.key(), other.key());
+        // Every non-default churn knob changes results, so each moves
+        // the key (and the label); the default adds nothing, keeping
+        // every pre-churn cache entry addressable.
+        use crate::sim::churn::{ChurnModel, ResiliencePolicy};
+        assert!(base.key().ends_with("-s1"), "default churn must not touch the key");
+        let mut other = base.clone();
+        other.churn.model = ChurnModel::Iid { p: 0.7 };
+        assert_ne!(base.key(), other.key());
+        assert!(other.key().ends_with("-ciid0.7"), "{}", other.key());
+        assert!(other.label().contains("iid0.7"), "{}", other.label());
+        let mut other = base.clone();
+        other.churn.fail_rate = 0.05;
+        assert_ne!(base.key(), other.key());
+        let mut other = base.clone();
+        other.churn.policy = ResiliencePolicy::Quorum { min_frac: 0.5, resample: true };
+        assert_ne!(base.key(), other.key());
+        assert!(other.key().ends_with("-q0.5r"), "{}", other.key());
     }
 
     #[test]
@@ -1227,6 +1278,7 @@ mod tests {
             server_shards: 1,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Contiguous,
+            churn: ChurnConfig::default(),
         };
         let tail = "n5-p0-iid-delay-lr0.05-r4-d100-t100-k1-mcont-s1";
         assert_eq!(
@@ -1299,6 +1351,7 @@ mod tests {
             server_shards: 1,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Contiguous,
+            churn: ChurnConfig::default(),
         };
         // 4095 = STREAM_THRESHOLD - 1: resident engine, every client
         // materialized even though only 2 ever train.
@@ -1352,6 +1405,7 @@ mod tests {
             server_shards: 1,
             sched: SchedPolicy::RoundRobin,
             shard_map: ShardMapKind::Contiguous,
+            churn: ChurnConfig::default(),
         };
         let rec = h.run_cached(&spec).unwrap();
         assert_eq!(rec.clients_activated, 1024, "participation-0 auto-cap");
@@ -1385,6 +1439,10 @@ mod tests {
             server_updates_per_shard: vec![4, 6],
             shard_label_divergence: 0.125,
             clients_activated: 4,
+            clients_dropped: 7,
+            clients_replaced: 2,
+            partial_failures: 3,
+            stragglers_dropped: 5,
         };
         let rt = run_from_json(&run_to_json(&rec).pretty()).unwrap();
         assert_eq!(rt.label, "x");
@@ -1397,6 +1455,11 @@ mod tests {
         assert_eq!(rt.lane_busy, vec![0.1, 0.2]);
         assert_eq!(rt.shard_label_divergence, 0.125);
         assert_eq!(rt.clients_activated, 4);
+        assert_eq!(
+            (rt.clients_dropped, rt.clients_replaced, rt.partial_failures, rt.stragglers_dropped),
+            (7, 2, 3, 5),
+            "churn counters round-trip"
+        );
         // Unversioned (pre-v2) cache entries must NOT parse: they
         // recorded the unweighted shard-divergence formula, so every
         // one of them falls through to a deterministic re-run.
@@ -1433,6 +1496,22 @@ mod tests {
         );
         let rt = run_from_json(&legacy).unwrap();
         assert!(rt.server_updates_per_shard.is_empty());
+        // Pre-churn v2 entries have no churn counters; their true value
+        // is 0 (nothing could be dropped before the subsystem existed),
+        // so the lenient default replays them without a re-run...
+        let legacy = run_to_json(&rec)
+            .pretty()
+            .replace("\"clients_dropped\"", "\"legacy_cd\"")
+            .replace("\"partial_failures\"", "\"legacy_pf\"");
+        let rt = run_from_json(&legacy).unwrap();
+        assert_eq!(rt.clients_dropped, 0);
+        assert_eq!(rt.partial_failures, 0);
+        assert_eq!(rt.stragglers_dropped, 5, "present counters still parse");
+        // ...while a present-yet-malformed counter is an error.
+        let broken = run_to_json(&rec)
+            .pretty()
+            .replace("\"clients_dropped\": 7", "\"clients_dropped\": \"many\"");
+        assert!(run_from_json(&broken).is_err(), "malformed counter must reject");
     }
 
     #[test]
@@ -1462,6 +1541,10 @@ mod tests {
             server_updates_per_shard: Vec::new(),
             shard_label_divergence: 0.0,
             clients_activated: 0,
+            clients_dropped: 0,
+            clients_replaced: 0,
+            partial_failures: 0,
+            stragglers_dropped: 0,
         };
         let t = curve_table("fig", &[&rec]);
         assert!(t.contains("42.0%"));
@@ -1542,6 +1625,10 @@ mod tests {
             server_updates_per_shard: Vec::new(),
             shard_label_divergence: 0.125,
             clients_activated: 4,
+            clients_dropped: 0,
+            clients_replaced: 0,
+            partial_failures: 0,
+            stragglers_dropped: 0,
         };
         let good = run_to_json(&rec).pretty();
         assert!(run_from_json(&good).is_ok());

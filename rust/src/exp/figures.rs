@@ -10,6 +10,7 @@ use crate::coordinator::config::{ArrivalOrder, Parallelism, ShardMapKind};
 use crate::coordinator::methods::Method;
 use crate::metrics::recorder::RunRecord;
 use crate::sched::SchedPolicy;
+use crate::sim::churn::ChurnConfig;
 use crate::util::csvio::Csv;
 
 use super::common::{
@@ -36,6 +37,7 @@ pub(crate) fn base_spec(dataset: &str, aux: &str, w: Workload) -> RunSpec {
         server_shards: 1,
         sched: SchedPolicy::WorkStealing,
         shard_map: ShardMapKind::Contiguous,
+        churn: ChurnConfig::default(),
     }
 }
 
@@ -382,6 +384,28 @@ pub fn fig_h(harness: &mut Harness, scale: Scale) -> Result<String, String> {
 /// `tests/sweep_resume.rs`).
 pub fn fig_b(harness: &mut Harness, scale: Scale) -> Result<String, String> {
     sweep_figure(harness, "b", scale)
+}
+
+/// Repo figure (no paper counterpart): **accuracy vs churn severity** —
+/// the resilience story of the method family. Each method arm (CSE_FSL
+/// h=2, FSL_OC, and the sage estimator rule) runs once at full
+/// availability and once per churn point of increasing severity (IID
+/// dropout at p ∈ {0.9, 0.7, 0.5}), so the table isolates what an
+/// unreliable fleet costs each client-update rule: the aux-local rules
+/// keep training locally through dropped rounds (only uploads thin
+/// out), while the server-grad rule loses the whole round for every
+/// dropped client. The `dropped` column counts the cohort the
+/// availability model removed (`RunRecord::clients_dropped`); accuracy
+/// shows what that does to convergence at a fixed round horizon. Workloads are pinned to the `ci` preset even
+/// at `--scale paper` (like `figure k`; EXPERIMENTS.md documents the
+/// protocol).
+///
+/// Like every post-PR-8 repo figure this is a declarative sweep
+/// ([`sweep::builtin`]`("r", ..)`): the churn grid is one `Knob::Churn`
+/// axis over the method arms, execution goes through the crash-durable
+/// trial journal, and the report derives from journal entries.
+pub fn fig_churn(harness: &mut Harness, scale: Scale) -> Result<String, String> {
+    sweep_figure(harness, "r", scale)
 }
 
 /// Run a figure's built-in sweeps ([`sweep::builtin`]) back to back on

@@ -74,6 +74,12 @@ pub enum Knob {
     Participation,
     /// Initial learning rate.
     Lr,
+    /// Availability model of the churn subsystem, in the `--churn` CLI
+    /// spelling (`none` | `iid:<p>` | `diurnal:..` | `markov:..` |
+    /// `correlated:..`, [`ChurnModel::parse`]).
+    ///
+    /// [`ChurnModel::parse`]: crate::sim::churn::ChurnModel::parse
+    Churn,
     /// Experiment seed (appended automatically by the expansion).
     Seed,
 }
@@ -148,6 +154,9 @@ impl Knob {
             Knob::Lr => {
                 spec.lr0 = value.parse().map_err(|_| format!("bad learning rate {value:?}"))?;
             }
+            Knob::Churn => {
+                spec.churn.model = crate::sim::churn::ChurnModel::parse(value)?;
+            }
             Knob::Seed => {
                 spec.seed = value.parse().map_err(|_| format!("bad seed {value:?}"))?;
             }
@@ -180,6 +189,7 @@ impl Knob {
             Knob::Clients => spec.n_clients.to_string(),
             Knob::Participation => spec.participation.to_string(),
             Knob::Lr => spec.lr0.to_string(),
+            Knob::Churn => spec.churn.model.to_string(),
             Knob::Seed => spec.seed.to_string(),
         }
     }
@@ -450,6 +460,16 @@ pub enum Metric {
     ShardDivergence,
     /// Server storage in parameters (integer).
     StorageParams,
+    /// Distinct clients materialized (`RunRecord::clients_activated`).
+    ClientsActivated,
+    /// Participants removed by the availability model (integer).
+    ClientsDropped,
+    /// Replacements admitted by quorum re-sampling (integer).
+    ClientsReplaced,
+    /// Mid-round deaths after a partial upload (integer).
+    PartialFailures,
+    /// Uploads dropped past the straggler window (integer).
+    StragglersDropped,
 }
 
 impl Metric {
@@ -461,6 +481,11 @@ impl Metric {
             Metric::SchedEfficiency => format!("{:.4}", rec.sched_efficiency()),
             Metric::ShardDivergence => format!("{:.4}", rec.shard_label_divergence),
             Metric::StorageParams => rec.server_storage_params.to_string(),
+            Metric::ClientsActivated => rec.clients_activated.to_string(),
+            Metric::ClientsDropped => rec.clients_dropped.to_string(),
+            Metric::ClientsReplaced => rec.clients_replaced.to_string(),
+            Metric::PartialFailures => rec.partial_failures.to_string(),
+            Metric::StragglersDropped => rec.stragglers_dropped.to_string(),
         }
     }
 }
@@ -469,8 +494,11 @@ impl Metric {
 
 /// Journal line-format version; [`TrialEntry::parse`] rejects records
 /// from any other version (they fall into the invalid suffix and the
-/// trials re-run from the results cache).
-pub const JOURNAL_VERSION: u32 = 1;
+/// trials re-run from the results cache). v2 added the cohort-health
+/// counters (`clients_activated` / `clients_dropped` / `clients_replaced`
+/// / `partial_failures`); v1 lines lack them and re-run — cheaply, since
+/// the results cache still holds their records.
+pub const JOURNAL_VERSION: u32 = 2;
 
 /// Outcome recorded for one trial.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -513,6 +541,17 @@ pub struct TrialEntry {
     pub digest: u64,
     /// Record path relative to the harness `out_dir` (empty for failures).
     pub record: String,
+    /// Cohort health of the journaled run (all 0 for failures):
+    /// distinct clients materialized (`RunRecord::clients_activated`) …
+    pub clients_activated: u64,
+    /// … participants removed by the availability model …
+    pub clients_dropped: u64,
+    /// … replacements admitted by quorum re-sampling …
+    pub clients_replaced: u64,
+    /// … and mid-round deaths after a partial upload. Journaled so
+    /// sweep forensics (and `derive_table` columns) can report fleet
+    /// health without re-reading every cached record.
+    pub partial_failures: u64,
 }
 
 impl TrialEntry {
@@ -521,9 +560,13 @@ impl TrialEntry {
     pub fn to_line(&self) -> String {
         Json::obj(vec![
             ("cache_version", Json::num(self.cache_version as f64)),
+            ("clients_activated", Json::num(self.clients_activated as f64)),
+            ("clients_dropped", Json::num(self.clients_dropped as f64)),
+            ("clients_replaced", Json::num(self.clients_replaced as f64)),
             ("digest", Json::str(format!("{:016x}", self.digest))),
             ("journal_version", Json::num(JOURNAL_VERSION as f64)),
             ("key", Json::str(self.key.clone())),
+            ("partial_failures", Json::num(self.partial_failures as f64)),
             ("record", Json::str(self.record.clone())),
             ("status", Json::str(self.status.tag())),
         ])
@@ -543,6 +586,9 @@ impl TrialEntry {
         let digest_hex = j.get("digest").map_err(err)?.as_str().map_err(err)?;
         let digest = u64::from_str_radix(digest_hex, 16)
             .map_err(|_| format!("bad digest {digest_hex:?}"))?;
+        let count = |k: &str| -> Result<u64, String> {
+            j.get(k).map_err(err)?.as_f64().map_err(err).map(|f| f as u64)
+        };
         Ok(TrialEntry {
             key: j.get("key").map_err(err)?.as_str().map_err(err)?.to_string(),
             cache_version: j.get("cache_version").map_err(err)?.as_usize().map_err(err)?
@@ -550,6 +596,13 @@ impl TrialEntry {
             status: TrialStatus::parse(j.get("status").map_err(err)?.as_str().map_err(err)?)?,
             digest,
             record: j.get("record").map_err(err)?.as_str().map_err(err)?.to_string(),
+            // v2 fields — strict, not lenient: the version gate above
+            // already rejected every pre-v2 line, so a v2 line missing
+            // a counter is malformed, not old.
+            clients_activated: count("clients_activated")?,
+            clients_dropped: count("clients_dropped")?,
+            clients_replaced: count("clients_replaced")?,
+            partial_failures: count("partial_failures")?,
         })
     }
 }
@@ -768,6 +821,10 @@ pub fn run_sweep(
                     status: TrialStatus::Ok,
                     digest: fnv64(&text),
                     record,
+                    clients_activated: rec.clients_activated as u64,
+                    clients_dropped: rec.clients_dropped,
+                    clients_replaced: rec.clients_replaced,
+                    partial_failures: rec.partial_failures,
                 })?;
                 executed += 1;
             }
@@ -778,6 +835,10 @@ pub fn run_sweep(
                     status: TrialStatus::Failed,
                     digest: 0,
                     record: String::new(),
+                    clients_activated: 0,
+                    clients_dropped: 0,
+                    clients_replaced: 0,
+                    partial_failures: 0,
                 });
                 return Err(format!("sweep {}: trial {key} failed: {e}", sweep.name));
             }
@@ -902,20 +963,24 @@ fn eff(scale: Scale) -> Scale {
 /// Resolve a figure id to its built-in sweep list: `k`/`staleness` (two
 /// sweeps: IID shard axis + non-IID placement arms), `h`/`period` (two
 /// sweeps: the aux-local period grid + the sage alignment-period arm),
-/// `b`/`bits`, or `all`.
+/// `b`/`bits`, `r`/`churn`, or `all`.
 pub fn builtin(id: &str, scale: Scale) -> Result<Vec<SweepSpec>, String> {
     match id {
         "k" | "staleness" => Ok(vec![staleness_sweep(scale), staleness_noniid_sweep(scale)]),
         "h" | "period" => Ok(vec![h_sweep(scale), h_sage_sweep(scale)]),
         "b" | "bits" => Ok(vec![b_sweep(scale)]),
+        "r" | "churn" => Ok(vec![churn_sweep(scale)]),
         "all" => Ok(vec![
             staleness_sweep(scale),
             staleness_noniid_sweep(scale),
             h_sweep(scale),
             h_sage_sweep(scale),
             b_sweep(scale),
+            churn_sweep(scale),
         ]),
-        other => Err(format!("no sweep {other:?} (have k|staleness, h|period, b|bits, all)")),
+        other => Err(format!(
+            "no sweep {other:?} (have k|staleness, h|period, b|bits, r|churn, all)"
+        )),
     }
 }
 
@@ -1147,6 +1212,59 @@ fn b_sweep(scale: Scale) -> SweepSpec {
     }
 }
 
+/// `figure r`: accuracy vs churn severity across the method family —
+/// CSE_FSL h=2, FSL_OC, and the sage estimator arm, each at full
+/// availability and at IID dropout p ∈ {0.9, 0.7, 0.5}. The aux-local
+/// rules keep training locally when a round drops them (only uploads
+/// thin out), the server-grad rule loses every dropped client's round
+/// entirely; the `dropped` column quantifies the cohort each point
+/// lost, `final_accuracy` what it cost.
+fn churn_sweep(scale: Scale) -> SweepSpec {
+    let churn_vals: &[&str] =
+        if scale == Scale::Quick { &["none", "iid:0.7"] } else { &["none", "iid:0.9", "iid:0.7", "iid:0.5"] };
+    SweepSpec {
+        name: "churn".to_string(),
+        title: "Accuracy vs churn severity (IID dropout, method family)".to_string(),
+        base: base_spec("cifar", "cnn27", cifar_workload(eff(scale))),
+        scale: eff(scale),
+        axes: vec![
+            Axis::joint(
+                "arm",
+                vec![
+                    vec![
+                        Setting::new(Knob::Preset, "cse"),
+                        Setting::new(Knob::H, "2"),
+                    ],
+                    vec![Setting::new(Knob::Preset, "oc")],
+                    vec![Setting::new(Knob::Update, "sage")],
+                ],
+            ),
+            Axis::single("churn", Knob::Churn, churn_vals),
+        ],
+        seeds: Vec::new(),
+        repeats: 1,
+        skip: Vec::new(),
+        table: TableSpec {
+            file: "fig_r".to_string(),
+            columns: vec![
+                Column::series(),
+                Column::knob("churn", Knob::Churn),
+                Column::metric("final_accuracy", Metric::FinalAccuracy),
+                Column::metric("clients_dropped", Metric::ClientsDropped),
+                Column::metric("load_gb", Metric::LoadGb),
+                Column::metric("sim_time", Metric::SimTime),
+            ],
+        },
+        notes: "(churn=none rows are the presets under their historical cache keys; iid:p\n \
+                drops each sampled client with probability 1-p per round via the same\n \
+                split-stream draw the legacy availability knob used, so results are\n \
+                bit-deterministic across parallelism and dealing policy. Aux-local rules\n \
+                degrade gracefully — dropped clients still train locally — while the\n \
+                server-grad rule forfeits dropped rounds outright.)\n"
+            .to_string(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1160,6 +1278,10 @@ mod tests {
             status: TrialStatus::Ok,
             digest: 0xDEAD_BEEF_0123_4567,
             record: "cache/mock/k.json".to_string(),
+            clients_activated: 8,
+            clients_dropped: 3,
+            clients_replaced: 1,
+            partial_failures: 2,
         };
         let line = e.to_line();
         assert!(!line.contains('\n'), "one entry = one line");
@@ -1174,10 +1296,26 @@ mod tests {
         assert_eq!(TrialEntry::parse(&f.to_line()).unwrap(), f);
         // Unknown journal versions are the invalid suffix, not data.
         // (`dump()` is compact: no space after the colon.)
-        let future = line.replace("\"journal_version\":1", "\"journal_version\":99");
+        let future = line.replace(
+            &format!("\"journal_version\":{JOURNAL_VERSION}"),
+            "\"journal_version\":99",
+        );
         assert_ne!(future, line, "replacement must hit");
         let err = TrialEntry::parse(&future).unwrap_err();
         assert!(err.contains("journal_version 99"), "{err}");
+        // Pre-v2 lines (no cohort counters) fall behind the version
+        // gate — the version check fires before any field parse.
+        let v1 = line.replace(
+            &format!("\"journal_version\":{JOURNAL_VERSION}"),
+            "\"journal_version\":1",
+        );
+        let err = TrialEntry::parse(&v1).unwrap_err();
+        assert!(err.contains("journal_version 1"), "{err}");
+        // A current-version line missing a counter is malformed (the
+        // counters are strict within v2).
+        let gone = line.replace("\"clients_dropped\"", "\"legacy\"");
+        assert_ne!(gone, line, "replacement must hit");
+        assert!(TrialEntry::parse(&gone).is_err());
         // Malformed fields are errors, never defaults.
         assert!(TrialEntry::parse("{}").is_err());
         assert!(TrialEntry::parse("not json").is_err());
@@ -1194,6 +1332,10 @@ mod tests {
             status: TrialStatus::Ok,
             digest: 1,
             record: "cache/mock/k1.json".to_string(),
+            clients_activated: 0,
+            clients_dropped: 0,
+            clients_replaced: 0,
+            partial_failures: 0,
         };
         let e2 = TrialEntry { key: "k2".to_string(), digest: 2, ..e1.clone() };
         let l1 = e1.to_line();
@@ -1225,6 +1367,10 @@ mod tests {
             status: TrialStatus::Ok,
             digest,
             record: format!("cache/mock/{key}.json"),
+            clients_activated: 0,
+            clients_dropped: 0,
+            clients_replaced: 0,
+            partial_failures: 0,
         };
         let entries = vec![
             ok("a", 1),
@@ -1325,11 +1471,39 @@ mod tests {
 
     #[test]
     fn builtin_ids_resolve() {
-        for id in ["k", "staleness", "h", "period", "b", "bits", "all"] {
+        for id in ["k", "staleness", "h", "period", "b", "bits", "r", "churn", "all"] {
             assert!(builtin(id, Scale::Quick).is_ok(), "{id}");
         }
-        assert_eq!(builtin("all", Scale::Quick).unwrap().len(), 5);
+        assert_eq!(builtin("all", Scale::Quick).unwrap().len(), 6);
         assert!(builtin("z", Scale::Quick).is_err());
+    }
+
+    #[test]
+    fn churn_sweep_expands_method_arms_times_severity() {
+        use crate::sim::churn::ChurnModel;
+        let trials = churn_sweep(Scale::Quick).trials().unwrap();
+        // 3 method arms × 2 quick churn points, churn axis fastest.
+        assert_eq!(trials.len(), 6);
+        assert_eq!(trials[0].spec.method, Method::CseFsl.spec().with_period(2));
+        assert_eq!(trials[0].spec.churn.model, ChurnModel::Iid { p: 1.0 });
+        assert_eq!(trials[1].spec.churn.model, ChurnModel::Iid { p: 0.7 });
+        assert_eq!(trials[2].spec.method, Method::FslOc.spec());
+        assert!(matches!(
+            trials[4].spec.method.update,
+            ClientUpdate::SageEstimate { .. }
+        ));
+        // The churn=none points ARE the presets under their historical
+        // cache keys (no churn suffix); severity points fork the key.
+        assert!(trials[2].spec.key().ends_with("-s1"), "{}", trials[2].spec.key());
+        assert!(trials[3].spec.key().ends_with("-ciid0.7"), "{}", trials[3].spec.key());
+        // The churn knob reads back for the table column in the CLI
+        // spelling (canonical "none" at full availability).
+        assert_eq!(Knob::Churn.get(&trials[0].spec), "none");
+        assert_eq!(Knob::Churn.get(&trials[1].spec), "iid:0.7");
+        // Bad axis values fail at lowering, like every other knob.
+        let mut bad = churn_sweep(Scale::Quick);
+        bad.axes = vec![Axis::single("churn", Knob::Churn, &["weibull:1:2"])];
+        assert!(bad.trials().is_err());
     }
 
     #[test]

@@ -4,12 +4,13 @@
 //!   run      one training run (any method-spec point: preset --method,
 //!            or composed --update/--upload-every/--clip/--topology),
 //!            prints the round table and summary
-//!   figure   regenerate a figure (3|4|5|6|7|8|9|k|h|b|all; `k` is the
+//!   figure   regenerate a figure (3|4|5|6|7|8|9|k|h|b|r|all; `k` is the
 //!            repo's accuracy-vs-shards staleness figure, `h` the
 //!            upload-period x topology figure, `b` the accuracy-vs-bits
-//!            compression figure)
+//!            compression figure, `r` the accuracy-vs-churn-severity
+//!            reliability figure)
 //!   table    regenerate a paper table (2|3|4|5|all)
-//!   sweep    run a declarative sweep (k|h|b|all) with a crash-durable
+//!   sweep    run a declarative sweep (k|h|b|r|all) with a crash-durable
 //!            trial journal; `--resume` skips journaled-complete trials
 //!            and `--fail-after N` injects a mid-sweep abort (CI/tests)
 //!   inspect  show the AOT artifact manifest
@@ -18,6 +19,7 @@
 
 use cse_fsl::coordinator::config::{ArrivalOrder, Parallelism};
 use cse_fsl::coordinator::methods::{Compression, MethodSpec};
+use cse_fsl::sim::churn::{ChurnConfig, ChurnModel, ResiliencePolicy};
 use cse_fsl::exp::common::{
     cifar_workload, femnist_workload, Dist, EngineChoice, Harness, RunSpec, Scale,
     STREAM_THRESHOLD,
@@ -173,6 +175,33 @@ fn cmd_run(argv: &[String]) -> i32 {
             "compute backend: auto | pjrt | mock (mock = deterministic \
              linear-dynamics engine, no AOT artifacts needed; cached under cache/mock/)",
         )
+        .opt(
+            "churn",
+            "none",
+            "availability model: none | iid:<p> | diurnal:<amp>:<period>[:<phase>] | \
+             markov:<p_up>:<p_down> | correlated:<clusters>:<p_outage> \
+             (per-(round,client) split-stream draws; bit-deterministic)",
+        )
+        .opt(
+            "fail-rate",
+            "0",
+            "mid-round failure probability per sampled participant in [0, 1): a \
+             failed client uploads a prefix of its h batches (half wire cost, no \
+             labels) and contributes nothing to this round's updates",
+        )
+        .opt_nodefault(
+            "cutoff",
+            "straggler window in simulated seconds: drop smashed uploads arriving \
+             more than this long after the round's first arrival (>= 0; mutually \
+             exclusive with --quorum)",
+        )
+        .opt_nodefault(
+            "quorum",
+            "minimum surviving cohort fraction in (0, 1]: below it the round \
+             proceeds partially, or re-samples replacements with --resample \
+             (mutually exclusive with --cutoff)",
+        )
+        .flag("resample", "re-sample deterministic replacements below --quorum")
         .flag("shuffled-arrivals", "randomize server consumption order (Fig. 6)");
     let args = match cmd.parse(argv) {
         Ok(a) => a,
@@ -212,6 +241,30 @@ fn cmd_run(argv: &[String]) -> i32 {
             args.get("bits"),
             args.get("topk"),
         )?;
+        let policy = match (args.get("cutoff"), args.get("quorum")) {
+            (Some(_), Some(_)) => {
+                return Err("--cutoff and --quorum are mutually exclusive".into());
+            }
+            (Some(_), None) => ResiliencePolicy::Cutoff {
+                secs: args.parse_as("cutoff").map_err(|e| e.to_string())?,
+            },
+            (None, Some(_)) => ResiliencePolicy::Quorum {
+                min_frac: args.parse_as("quorum").map_err(|e| e.to_string())?,
+                resample: args.flag("resample"),
+            },
+            (None, None) => {
+                if args.flag("resample") {
+                    return Err("--resample needs --quorum".into());
+                }
+                ResiliencePolicy::WaitAll
+            }
+        };
+        let churn = ChurnConfig {
+            model: ChurnModel::parse(args.get("churn").unwrap())?,
+            fail_rate: args.parse_as("fail-rate").map_err(|e| e.to_string())?,
+            policy,
+        };
+        churn.validate()?;
         let spec = RunSpec {
             dataset,
             aux,
@@ -233,6 +286,7 @@ fn cmd_run(argv: &[String]) -> i32 {
             server_shards: args.parse_as("server-shards").map_err(|e| e.to_string())?,
             sched: args.parse_as("sched").map_err(|e| e.to_string())?,
             shard_map: args.parse_as("shard-map").map_err(|e| e.to_string())?,
+            churn,
         };
         let engine =
             EngineChoice::parse(args.get("engine").unwrap()).ok_or("bad --engine")?;
@@ -266,6 +320,19 @@ fn cmd_run(argv: &[String]) -> i32 {
             rec.sim_time,
             rec.sched_efficiency() * 100.0,
         );
+        if !spec.churn.is_default() {
+            println!(
+                "churn [{} fail-rate {} policy {}]: {} dropped, {} replaced, \
+                 {} partial failures, {} stragglers cut",
+                spec.churn.model,
+                spec.churn.fail_rate,
+                spec.churn.policy,
+                rec.clients_dropped,
+                rec.clients_replaced,
+                rec.partial_failures,
+                rec.stragglers_dropped,
+            );
+        }
         if spec.n_clients >= STREAM_THRESHOLD {
             println!(
                 "fleet: {} clients, {} ever materialized (streaming population engine)",
@@ -318,7 +385,7 @@ fn cmd_figure(argv: &[String]) -> i32 {
         let mut harness = Harness::with_engine(&out, engine)?;
         println!("(engine backend: {})", harness.backend());
         let ids: Vec<&str> = if id == "all" {
-            vec!["3", "4", "5", "6", "7", "8", "9", "k", "h", "b"]
+            vec!["3", "4", "5", "6", "7", "8", "9", "k", "h", "b", "r"]
         } else {
             vec![id.as_str()]
         };
@@ -334,7 +401,8 @@ fn cmd_figure(argv: &[String]) -> i32 {
                 "k" | "staleness" => figures::fig_staleness(&mut harness, scale)?,
                 "h" | "period" => figures::fig_h(&mut harness, scale)?,
                 "b" | "bits" => figures::fig_b(&mut harness, scale)?,
-                other => return Err(format!("no figure {other} (have 3-9, k, h, b)")),
+                "r" | "churn" => figures::fig_churn(&mut harness, scale)?,
+                other => return Err(format!("no figure {other} (have 3-9, k, h, b, r)")),
             };
             println!("{report}");
         }
@@ -369,7 +437,7 @@ fn cmd_sweep(argv: &[String]) -> i32 {
         "cse-fsl sweep",
         "run a declarative sweep with a crash-durable trial journal",
     )
-    .positional("spec", "which sweep: k|staleness, h|period, b|bits, all")
+    .positional("spec", "which sweep: k|staleness, h|period, b|bits, r|churn, all")
     .opt("scale", "ci", "quick (alias smoke) | ci | paper")
     .opt("out", "results", "output directory")
     .opt("engine", "auto", "compute backend: auto | pjrt | mock")

@@ -84,6 +84,20 @@ pub struct RunRecord {
     /// ever builds the sampled cohorts, so at fleet scale this is the
     /// (much smaller) working-set size that bounds peak memory.
     pub clients_activated: usize,
+    /// Sampled participants removed by the availability model
+    /// (`sim::churn::ChurnModel`), summed over rounds. 0 for every run
+    /// at the default full-availability model.
+    pub clients_dropped: u64,
+    /// Replacement participants admitted by quorum re-sampling
+    /// (`ResiliencePolicy::Quorum { resample: true }`), summed over
+    /// rounds.
+    pub clients_replaced: u64,
+    /// Participants that died mid-round after a partial smashed upload
+    /// (`ChurnConfig::fail_rate`), summed over rounds.
+    pub partial_failures: u64,
+    /// Smashed uploads dropped past the straggler window
+    /// (`ResiliencePolicy::Cutoff`), summed over rounds.
+    pub stragglers_dropped: u64,
 }
 
 impl RunRecord {
@@ -190,6 +204,10 @@ impl RunRecord {
             ),
             ("shard_label_divergence", Json::num(self.shard_label_divergence)),
             ("clients_activated", Json::num(self.clients_activated as f64)),
+            ("clients_dropped", Json::num(self.clients_dropped as f64)),
+            ("clients_replaced", Json::num(self.clients_replaced as f64)),
+            ("partial_failures", Json::num(self.partial_failures as f64)),
+            ("stragglers_dropped", Json::num(self.stragglers_dropped as f64)),
         ])
     }
 }
@@ -238,6 +256,10 @@ mod tests {
             server_updates_per_shard: vec![3, 5],
             shard_label_divergence: 0.25,
             clients_activated: 4,
+            clients_dropped: 2,
+            clients_replaced: 1,
+            partial_failures: 1,
+            stragglers_dropped: 3,
         }
     }
 
@@ -272,6 +294,10 @@ mod tests {
         assert_eq!(j.get("lane_busy").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.get("shard_label_divergence").unwrap().as_f64().unwrap(), 0.25);
         assert_eq!(j.get("clients_activated").unwrap().as_f64().unwrap(), 4.0);
+        assert_eq!(j.get("clients_dropped").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("clients_replaced").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("partial_failures").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("stragglers_dropped").unwrap().as_f64().unwrap(), 3.0);
     }
 
     #[test]

@@ -1,0 +1,704 @@
+//! Client churn & reliability models: generative availability processes,
+//! mid-round failure rates, and server-side resilience policies.
+//!
+//! The population engine (PR 6) opened two flat knobs — a per-round
+//! i.i.d. availability Bernoulli and a straggler cutoff. This module
+//! generalizes both into a composable subsystem threaded through BOTH
+//! client engines (resident + streaming population):
+//!
+//! * [`ChurnModel`] — *who shows up*: a generative availability process
+//!   evaluated per (round, client). [`ChurnModel::Iid`] replays the
+//!   legacy `availability` draw sequence bit-identically (pinned by
+//!   `tests/churn_properties.rs`); [`ChurnModel::Diurnal`],
+//!   [`ChurnModel::MarkovOnOff`], and [`ChurnModel::Correlated`] add
+//!   time-of-day waves, sticky per-client sessions, and cluster-wide
+//!   blackout rounds — the failure mode i.i.d. models cannot express.
+//! * `ChurnConfig::fail_rate` — *who dies mid-round*: a sampled client
+//!   can crash after computing a prefix of its h batches, leaving a
+//!   partial smashed upload on the wire (half the wire bytes ledgered,
+//!   no message delivered — see `coordinator::round::run_local_client`).
+//! * [`ResiliencePolicy`] — *what the server does about it*: wait for
+//!   everyone, cut stragglers past a window, or guard a minimum quorum
+//!   with deterministic replacement re-sampling.
+//!
+//! # Determinism
+//!
+//! Every draw derives from non-mutating `(round, id)` splits of a root
+//! stream ([`ChurnState::new`]; the root is `run_root.split_str(
+//! "availability")`, the legacy population stream, so `Iid{p}` replays
+//! the pre-churn path draw-for-draw). No draw advances any other
+//! stream, so the bit-determinism contract — parallel == sequential,
+//! any sched, resident ≡ population — survives every model: the only
+//! thing churn can change is *which* clients participate. The Markov
+//! model's per-client session state is memoized in [`ChurnState`] but
+//! remains a pure function of `(id, round)`: state is always advanced
+//! from round 0 through consecutive transition draws, so query order
+//! (and engine choice) cannot change it.
+
+use std::collections::BTreeMap;
+
+use crate::util::prng::Rng;
+
+/// A generative per-round client availability process.
+///
+/// Evaluated by [`ChurnState::is_available`] per `(round, id)`; the
+/// default ([`ChurnModel::Iid`] at `p = 1.0`) draws nothing and admits
+/// everyone — the contract-covered full-participation behavior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnModel {
+    /// Independent per-(round, client) Bernoulli: each sampled
+    /// participant sits the round out with probability `1 - p`.
+    /// Bit-identical to the pre-churn `availability` knob of the
+    /// population engine (same root stream, same split structure, and
+    /// `p = 1.0` performs no draws at all).
+    Iid {
+        /// Per-round availability in (0, 1].
+        p: f64,
+    },
+    /// A diurnal wave: availability at round `t` is
+    /// `1 - amplitude * 0.5 * (1 + sin(2π (t / period_rounds + phase)))`
+    /// — full participation at the trough of the sine, `1 - amplitude`
+    /// at its peak — with the same independent per-(round, id) draw
+    /// structure as [`ChurnModel::Iid`].
+    Diurnal {
+        /// Peak participation drop in [0, 1] (0 = always full).
+        amplitude: f64,
+        /// Rounds per day (>= 1).
+        period_rounds: usize,
+        /// Phase offset in cycles (0.25 = start at the availability
+        /// minimum's quarter-wave).
+        phase: f64,
+    },
+    /// Sticky per-client on/off sessions: a two-state Markov chain per
+    /// client, initialized at its stationary distribution
+    /// `π_up = p_up / (p_up + p_down)` and advanced one transition per
+    /// round. Over long horizons the realized occupancy converges to
+    /// `π_up` (pinned by `tests/churn_properties.rs`).
+    MarkovOnOff {
+        /// Down → up transition probability per round, in (0, 1].
+        p_up: f64,
+        /// Up → down transition probability per round, in [0, 1].
+        p_down: f64,
+    },
+    /// Cluster-wide blackout rounds: client `id` belongs to cluster
+    /// `id % clusters`, and each (round, cluster) pair independently
+    /// blacks out with probability `p_outage` — every client of a
+    /// blacked-out cluster misses the round together, the correlated
+    /// failure mode no i.i.d. process can express.
+    Correlated {
+        /// Number of failure-correlated client clusters (>= 1).
+        clusters: usize,
+        /// Per-round whole-cluster outage probability in [0, 1).
+        p_outage: f64,
+    },
+}
+
+impl Default for ChurnModel {
+    fn default() -> Self {
+        ChurnModel::Iid { p: 1.0 }
+    }
+}
+
+impl ChurnModel {
+    /// Whether this model admits every client every round without
+    /// drawing (the contract default: `Iid` at `p = 1.0`).
+    pub fn is_full(&self) -> bool {
+        matches!(self, ChurnModel::Iid { p } if *p == 1.0)
+    }
+
+    /// Short cache-key tag (the `-c` segment of `RunSpec::key`; only
+    /// non-default models are keyed).
+    pub fn tag(&self) -> String {
+        match self {
+            ChurnModel::Iid { p } => format!("iid{p}"),
+            ChurnModel::Diurnal { amplitude, period_rounds, phase } => {
+                if *phase == 0.0 {
+                    format!("diur{amplitude}x{period_rounds}")
+                } else {
+                    format!("diur{amplitude}x{period_rounds}p{phase}")
+                }
+            }
+            ChurnModel::MarkovOnOff { p_up, p_down } => format!("mk{p_up}-{p_down}"),
+            ChurnModel::Correlated { clusters, p_outage } => {
+                format!("corr{clusters}x{p_outage}")
+            }
+        }
+    }
+
+    /// Parse the CLI spelling: `none` | `iid:<p>` |
+    /// `diurnal:<amplitude>:<period>[:<phase>]` | `markov:<p_up>:<p_down>`
+    /// | `correlated:<clusters>:<p_outage>`.
+    pub fn parse(s: &str) -> Result<ChurnModel, String> {
+        let low = s.to_ascii_lowercase();
+        if low == "none" || low == "full" {
+            return Ok(ChurnModel::Iid { p: 1.0 });
+        }
+        let parts: Vec<&str> = low.split(':').collect();
+        let bad = || {
+            format!(
+                "bad churn model {s:?} (expected none | iid:<p> | \
+                 diurnal:<amplitude>:<period>[:<phase>] | markov:<p_up>:<p_down> | \
+                 correlated:<clusters>:<p_outage>)"
+            )
+        };
+        let f = |v: &str| v.parse::<f64>().map_err(|_| bad());
+        let model = match (parts[0], parts.len()) {
+            ("iid", 2) => ChurnModel::Iid { p: f(parts[1])? },
+            ("diurnal", 3) => ChurnModel::Diurnal {
+                amplitude: f(parts[1])?,
+                period_rounds: parts[2].parse().map_err(|_| bad())?,
+                phase: 0.0,
+            },
+            ("diurnal", 4) => ChurnModel::Diurnal {
+                amplitude: f(parts[1])?,
+                period_rounds: parts[2].parse().map_err(|_| bad())?,
+                phase: f(parts[3])?,
+            },
+            ("markov", 3) => {
+                ChurnModel::MarkovOnOff { p_up: f(parts[1])?, p_down: f(parts[2])? }
+            }
+            ("correlated", 3) => ChurnModel::Correlated {
+                clusters: parts[1].parse().map_err(|_| bad())?,
+                p_outage: f(parts[2])?,
+            },
+            _ => return Err(bad()),
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Check the model parameters; returns a human-readable reason when
+    /// they cannot run (NaN and out-of-range values are rejected here,
+    /// at config build time, instead of flowing into the engines).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ChurnModel::Iid { p } => {
+                if !(p > 0.0 && p <= 1.0) {
+                    return Err(format!("churn iid: availability {p} outside (0, 1]"));
+                }
+            }
+            ChurnModel::Diurnal { amplitude, period_rounds, phase } => {
+                if !(amplitude >= 0.0 && amplitude <= 1.0) {
+                    return Err(format!("churn diurnal: amplitude {amplitude} outside [0, 1]"));
+                }
+                if period_rounds == 0 {
+                    return Err("churn diurnal: period must be >= 1 round".into());
+                }
+                if !phase.is_finite() {
+                    return Err(format!("churn diurnal: non-finite phase {phase}"));
+                }
+            }
+            ChurnModel::MarkovOnOff { p_up, p_down } => {
+                if !(p_up > 0.0 && p_up <= 1.0) {
+                    return Err(format!("churn markov: p_up {p_up} outside (0, 1]"));
+                }
+                if !(p_down >= 0.0 && p_down <= 1.0) {
+                    return Err(format!("churn markov: p_down {p_down} outside [0, 1]"));
+                }
+            }
+            ChurnModel::Correlated { clusters, p_outage } => {
+                if clusters == 0 {
+                    return Err("churn correlated: clusters must be >= 1".into());
+                }
+                if !(p_outage >= 0.0 && p_outage < 1.0) {
+                    return Err(format!(
+                        "churn correlated: p_outage {p_outage} outside [0, 1)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ChurnModel {
+    /// The canonical CLI spelling ([`ChurnModel::parse`] round-trips it).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChurnModel::Iid { p } if *p == 1.0 => write!(f, "none"),
+            ChurnModel::Iid { p } => write!(f, "iid:{p}"),
+            ChurnModel::Diurnal { amplitude, period_rounds, phase } => {
+                if *phase == 0.0 {
+                    write!(f, "diurnal:{amplitude}:{period_rounds}")
+                } else {
+                    write!(f, "diurnal:{amplitude}:{period_rounds}:{phase}")
+                }
+            }
+            ChurnModel::MarkovOnOff { p_up, p_down } => write!(f, "markov:{p_up}:{p_down}"),
+            ChurnModel::Correlated { clusters, p_outage } => {
+                write!(f, "correlated:{clusters}:{p_outage}")
+            }
+        }
+    }
+}
+
+/// What the server does about missing / late cohort members.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ResiliencePolicy {
+    /// Process every arrival, however late (the contract default, and
+    /// the pre-churn behavior without a straggler cutoff).
+    WaitAll,
+    /// Drop any smashed upload arriving more than `secs` simulated
+    /// seconds after the round's first arrival (the pre-churn
+    /// `straggler_cutoff` knob, now on both engines).
+    Cutoff {
+        /// Dropout window past the round's first arrival (>= 0).
+        secs: f64,
+    },
+    /// Partial aggregation with a minimum-cohort guard: after the churn
+    /// filter, if fewer than `ceil(min_frac * planned)` participants
+    /// survive and `resample` is set, replacements are re-sampled
+    /// deterministically from the still-available population (bounded
+    /// rejection sampling off a per-round stream); a still-short round
+    /// proceeds with whoever is left. `Quorum { min_frac: 1.0,
+    /// resample: false }` is byte-identical to [`ResiliencePolicy::
+    /// WaitAll`] (no draws are ever taken when the quorum is met).
+    Quorum {
+        /// Minimum surviving fraction of the planned cohort, in (0, 1].
+        min_frac: f64,
+        /// Re-sample deterministic replacements when below quorum.
+        resample: bool,
+    },
+}
+
+impl Default for ResiliencePolicy {
+    fn default() -> Self {
+        ResiliencePolicy::WaitAll
+    }
+}
+
+impl ResiliencePolicy {
+    /// Check the policy parameters (NaN / negative windows rejected at
+    /// config build time).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ResiliencePolicy::WaitAll => {}
+            ResiliencePolicy::Cutoff { secs } => {
+                if !(secs.is_finite() && secs >= 0.0) {
+                    return Err(format!("straggler cutoff {secs} must be finite and >= 0"));
+                }
+            }
+            ResiliencePolicy::Quorum { min_frac, .. } => {
+                if !(min_frac > 0.0 && min_frac <= 1.0) {
+                    return Err(format!("quorum fraction {min_frac} outside (0, 1]"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The straggler window when this policy cuts stragglers.
+    pub fn cutoff(&self) -> Option<f64> {
+        match *self {
+            ResiliencePolicy::Cutoff { secs } => Some(secs),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ResiliencePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResiliencePolicy::WaitAll => write!(f, "wait-all"),
+            ResiliencePolicy::Cutoff { secs } => write!(f, "cutoff:{secs}"),
+            ResiliencePolicy::Quorum { min_frac, resample } => {
+                write!(f, "quorum:{min_frac}{}", if *resample { ":resample" } else { "" })
+            }
+        }
+    }
+}
+
+/// The full churn & reliability configuration of a run: availability
+/// model × mid-round failure rate × server resilience policy. The
+/// default is the contract point — full availability, no failures,
+/// wait for everyone — under which no churn draw ever happens and
+/// every golden record is byte-unchanged.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChurnConfig {
+    /// Who shows up each round.
+    pub model: ChurnModel,
+    /// Probability (per sampled participant per round) of dying
+    /// mid-round after computing a prefix of its batches, in [0, 1).
+    pub fail_rate: f64,
+    /// What the server does about missing / late members.
+    pub policy: ResiliencePolicy,
+}
+
+impl ChurnConfig {
+    /// Whether this is the contract default (no draws anywhere).
+    pub fn is_default(&self) -> bool {
+        self.model.is_full()
+            && self.fail_rate == 0.0
+            && self.policy == ResiliencePolicy::WaitAll
+    }
+
+    /// Check every knob; rejections name the offending parameter.
+    pub fn validate(&self) -> Result<(), String> {
+        self.model.validate()?;
+        if !(self.fail_rate >= 0.0 && self.fail_rate < 1.0) {
+            return Err(format!("fail-rate {} outside [0, 1)", self.fail_rate));
+        }
+        self.policy.validate()
+    }
+
+    /// The cache-key suffix: empty at the default (preset key strings
+    /// are pinned literally), one segment per non-default knob.
+    pub fn key_suffix(&self) -> String {
+        let mut s = String::new();
+        if !self.model.is_full() {
+            s.push_str(&format!("-c{}", self.model.tag()));
+        }
+        if self.fail_rate > 0.0 {
+            s.push_str(&format!("-f{}", self.fail_rate));
+        }
+        match self.policy {
+            ResiliencePolicy::WaitAll => {}
+            ResiliencePolicy::Cutoff { secs } => s.push_str(&format!("-cut{secs}")),
+            ResiliencePolicy::Quorum { min_frac, resample } => {
+                s.push_str(&format!("-q{min_frac}{}", if resample { "r" } else { "" }));
+            }
+        }
+        s
+    }
+
+    /// The run-label suffix: empty at the default, human-readable tags
+    /// otherwise (rides into `RunRecord::label` and series CSVs).
+    pub fn label_suffix(&self) -> String {
+        let mut s = String::new();
+        if !self.model.is_full() {
+            s.push_str(&format!(" {}", self.model.tag()));
+        }
+        if self.fail_rate > 0.0 {
+            s.push_str(&format!(" fail{}", self.fail_rate));
+        }
+        match self.policy {
+            ResiliencePolicy::WaitAll => {}
+            ResiliencePolicy::Cutoff { secs } => s.push_str(&format!(" cut{secs}")),
+            ResiliencePolicy::Quorum { min_frac, resample } => {
+                s.push_str(&format!(" q{min_frac}{}", if resample { "r" } else { "" }));
+            }
+        }
+        s
+    }
+}
+
+/// Per-run reliability counters, accumulated by the trainer and
+/// surfaced through `RunRecord` / summary JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChurnStats {
+    /// Sampled participants removed by the availability model.
+    pub clients_dropped: u64,
+    /// Replacement participants admitted by quorum re-sampling.
+    pub clients_replaced: u64,
+    /// Participants that died mid-round after a partial upload.
+    pub partial_failures: u64,
+    /// Smashed uploads dropped by the straggler cutoff.
+    pub stragglers_dropped: u64,
+}
+
+/// The trainer-side churn evaluator: the root draw stream plus the
+/// Markov models' memoized per-client session state (carried across
+/// rounds alongside the population engine's retire/carry machinery —
+/// like a client's private RNG stream, it survives retirement).
+pub struct ChurnState {
+    /// Root stream: `run_root.split_str("availability")` — the legacy
+    /// population availability stream, never advanced.
+    root: Rng,
+    /// Per-client Markov session state: id → (round advanced to, up?).
+    /// Memoization only — the state at any round is a pure function of
+    /// `(id, round)` because chains always advance from round 0 through
+    /// consecutive per-round transition draws.
+    markov: BTreeMap<usize, (usize, bool)>,
+}
+
+impl ChurnState {
+    /// Build the evaluator from the run's root stream (the constructor
+    /// derives the `"availability"` child — callers pass the same root
+    /// the trainer was seeded from, so `Iid{p}` replays the legacy
+    /// population draw sequence bit-identically).
+    pub fn new(run_root: &Rng) -> ChurnState {
+        ChurnState { root: run_root.split_str("availability"), markov: BTreeMap::new() }
+    }
+
+    /// Whether client `id` is available in round `t` under `model`.
+    /// Every draw comes from a non-mutating `(t, id)`-derived split, so
+    /// calls never perturb any other stream; `&mut self` is only the
+    /// Markov memoization.
+    pub fn is_available(&mut self, model: &ChurnModel, t: usize, id: usize) -> bool {
+        match *model {
+            ChurnModel::Iid { p } => {
+                // Exactly the legacy population path: no draw at full
+                // availability, else `avail_root.split(t).split(id)`.
+                if p == 1.0 {
+                    return true;
+                }
+                self.root.split(t as u64).split(id as u64).uniform() < p
+            }
+            ChurnModel::Diurnal { amplitude, period_rounds, phase } => {
+                let cycle = t as f64 / period_rounds as f64 + phase;
+                let p = 1.0
+                    - amplitude
+                        * 0.5
+                        * (1.0 + (2.0 * std::f64::consts::PI * cycle).sin());
+                self.root.split(t as u64).split(id as u64).uniform() < p
+            }
+            ChurnModel::MarkovOnOff { p_up, p_down } => self.markov_up(t, id, p_up, p_down),
+            ChurnModel::Correlated { clusters, p_outage } => {
+                let cluster = (id % clusters) as u64;
+                let mut r = self.root.split(t as u64).split(0xC0AA ^ cluster);
+                r.uniform() >= p_outage
+            }
+        }
+    }
+
+    /// Advance client `id`'s Markov chain to round `t` and report its
+    /// state. Initialization draws the stationary occupancy at round 0;
+    /// each subsequent round takes exactly one transition draw from
+    /// `root.split(round).split(id)`. Every draw is a non-mutating
+    /// split, so the state at round `t` is a pure function of
+    /// `(id, t)`: a query behind the memoized frontier recomputes the
+    /// same chain from round 0 and leaves the memo untouched.
+    fn markov_up(&mut self, t: usize, id: usize, p_up: f64, p_down: f64) -> bool {
+        let (mut round, mut up) = match self.markov.get(&id) {
+            Some(&(r, u)) if r <= t => (r, u),
+            _ => {
+                let pi_up = p_up / (p_up + p_down);
+                let mut r = self.root.split(0x4D41_524B ^ id as u64);
+                (0, r.uniform() < pi_up)
+            }
+        };
+        while round < t {
+            round += 1;
+            let u = self.root.split(round as u64).split(id as u64).uniform();
+            up = if up { u >= p_down } else { u < p_up };
+        }
+        let entry = self.markov.entry(id).or_insert((round, up));
+        if entry.0 <= round {
+            *entry = (round, up);
+        }
+        up
+    }
+
+    /// The per-round replacement re-sampling stream of the quorum
+    /// policy (independent of every availability draw; taken only when
+    /// a round is below quorum, so `Quorum{1.0}` never draws).
+    pub fn resample_stream(&self, t: usize) -> Rng {
+        self.root.split(t as u64 ^ 0x7E5A_11CE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_full_participation_and_draws_nothing() {
+        let cfg = ChurnConfig::default();
+        assert!(cfg.is_default());
+        assert!(cfg.model.is_full());
+        assert_eq!(cfg.key_suffix(), "");
+        assert_eq!(cfg.label_suffix(), "");
+        assert!(cfg.validate().is_ok());
+        let mut st = ChurnState::new(&Rng::new(1));
+        for t in 0..8 {
+            for id in 0..8 {
+                assert!(st.is_available(&ChurnModel::default(), t, id));
+            }
+        }
+    }
+
+    #[test]
+    fn iid_replays_the_legacy_availability_draw() {
+        // The legacy population filter was, verbatim:
+        //   let round_avail = avail_root.split(t);
+        //   retain(|&i| round_avail.split(i).uniform() < avail)
+        // with avail_root = root.split_str("availability").
+        let root = Rng::new(42);
+        let mut st = ChurnState::new(&root);
+        let legacy_root = root.split_str("availability");
+        let model = ChurnModel::Iid { p: 0.6 };
+        for t in 0..16usize {
+            let round_avail = legacy_root.split(t as u64);
+            for id in 0..32usize {
+                let mut r = round_avail.split(id as u64);
+                let legacy = r.uniform() < 0.6;
+                assert_eq!(st.is_available(&model, t, id), legacy, "t={t} id={id}");
+            }
+        }
+    }
+
+    #[test]
+    fn markov_is_query_order_independent() {
+        let model = ChurnModel::MarkovOnOff { p_up: 0.3, p_down: 0.2 };
+        // Forward, per-round queries...
+        let mut a = ChurnState::new(&Rng::new(7));
+        let dense: Vec<Vec<bool>> =
+            (0..20).map(|t| (0..10).map(|id| a.is_available(&model, t, id)).collect()).collect();
+        // ...must agree with sparse, out-of-order queries.
+        let mut b = ChurnState::new(&Rng::new(7));
+        for &(t, id) in &[(19usize, 3usize), (5, 3), (0, 9), (12, 0), (19, 0), (7, 7)] {
+            assert_eq!(b.is_available(&model, t, id), dense[t][id], "t={t} id={id}");
+        }
+        // Note (t=5, id=3) after (t=19, id=3): memoized state is ahead
+        // of the query — recompute from scratch must agree too.
+        let mut c = ChurnState::new(&Rng::new(7));
+        assert_eq!(c.is_available(&model, 5, 3), dense[5][3]);
+    }
+
+    #[test]
+    fn markov_occupancy_approaches_stationary() {
+        let (p_up, p_down) = (0.3, 0.1);
+        let model = ChurnModel::MarkovOnOff { p_up, p_down };
+        let mut st = ChurnState::new(&Rng::new(11));
+        let (mut up, mut total) = (0u64, 0u64);
+        for t in 0..400usize {
+            for id in 0..50usize {
+                total += 1;
+                if st.is_available(&model, t, id) {
+                    up += 1;
+                }
+            }
+        }
+        let occupancy = up as f64 / total as f64;
+        let pi = p_up / (p_up + p_down);
+        assert!((occupancy - pi).abs() < 0.03, "occupancy {occupancy} vs π_up {pi}");
+    }
+
+    #[test]
+    fn correlated_blacks_out_whole_clusters() {
+        let model = ChurnModel::Correlated { clusters: 4, p_outage: 0.5 };
+        let mut st = ChurnState::new(&Rng::new(3));
+        let mut saw_outage = false;
+        for t in 0..64usize {
+            for cluster in 0..4usize {
+                // Every member of a cluster shares the round's fate.
+                let members: Vec<bool> = (0..5)
+                    .map(|k| st.is_available(&model, t, cluster + 4 * k))
+                    .collect();
+                assert!(
+                    members.iter().all(|&m| m == members[0]),
+                    "t={t} cluster={cluster}: split cluster fate {members:?}"
+                );
+                saw_outage |= !members[0];
+            }
+        }
+        assert!(saw_outage, "p_outage 0.5 over 64 rounds must black something out");
+    }
+
+    #[test]
+    fn diurnal_wave_moves_availability() {
+        let model = ChurnModel::Diurnal { amplitude: 1.0, period_rounds: 4, phase: 0.25 };
+        let mut st = ChurnState::new(&Rng::new(5));
+        // phase 0.25 puts round 0 at the sine peak: availability 0.
+        let admitted = (0..200).filter(|&id| st.is_available(&model, 0, id)).count();
+        assert_eq!(admitted, 0, "amplitude 1 at the peak admits nobody");
+        // Half a period later the wave is at its trough: availability 1.
+        let admitted = (0..200).filter(|&id| st.is_available(&model, 2, id)).count();
+        assert_eq!(admitted, 200, "trough admits everyone");
+    }
+
+    #[test]
+    fn model_parse_display_roundtrip_and_rejections() {
+        for s in
+            ["none", "iid:0.7", "diurnal:0.5:24", "diurnal:0.5:24:0.25", "markov:0.9:0.1", "correlated:8:0.3"]
+        {
+            let m = ChurnModel::parse(s).unwrap();
+            assert_eq!(ChurnModel::parse(&m.to_string()).unwrap(), m, "{s}");
+        }
+        assert_eq!(ChurnModel::parse("none").unwrap(), ChurnModel::Iid { p: 1.0 });
+        assert_eq!(ChurnModel::parse("iid:1").unwrap().to_string(), "none");
+        // Each rejection path, by parameter.
+        assert!(ChurnModel::parse("iid:0").is_err(), "p = 0");
+        assert!(ChurnModel::parse("iid:1.5").is_err(), "p > 1");
+        assert!(ChurnModel::parse("iid:NaN").is_err(), "NaN availability");
+        assert!(ChurnModel::parse("diurnal:1.5:24").is_err(), "amplitude > 1");
+        assert!(ChurnModel::parse("diurnal:0.5:0").is_err(), "period 0");
+        assert!(ChurnModel::parse("markov:0:0.5").is_err(), "p_up = 0");
+        assert!(ChurnModel::parse("markov:0.5:1.5").is_err(), "p_down > 1");
+        assert!(ChurnModel::parse("correlated:0:0.3").is_err(), "0 clusters");
+        assert!(ChurnModel::parse("correlated:4:1").is_err(), "certain outage");
+        assert!(ChurnModel::parse("weibull:1:2").is_err(), "unknown model");
+        assert!(ChurnModel::parse("iid").is_err(), "missing parameter");
+    }
+
+    #[test]
+    fn policy_and_config_validation_paths() {
+        assert!(ResiliencePolicy::WaitAll.validate().is_ok());
+        assert!(ResiliencePolicy::Cutoff { secs: 0.0 }.validate().is_ok());
+        assert!(ResiliencePolicy::Cutoff { secs: -1.0 }.validate().is_err(), "negative cutoff");
+        assert!(
+            ResiliencePolicy::Cutoff { secs: f64::NAN }.validate().is_err(),
+            "NaN cutoff"
+        );
+        assert!(
+            ResiliencePolicy::Quorum { min_frac: 0.5, resample: true }.validate().is_ok()
+        );
+        assert!(
+            ResiliencePolicy::Quorum { min_frac: 0.0, resample: false }.validate().is_err(),
+            "zero quorum"
+        );
+        assert!(
+            ResiliencePolicy::Quorum { min_frac: f64::NAN, resample: false }
+                .validate()
+                .is_err(),
+            "NaN quorum"
+        );
+        let bad_rate = ChurnConfig { fail_rate: 1.0, ..ChurnConfig::default() };
+        assert!(bad_rate.validate().is_err(), "fail_rate 1 would kill every round");
+        let bad_rate = ChurnConfig { fail_rate: f64::NAN, ..ChurnConfig::default() };
+        assert!(bad_rate.validate().is_err(), "NaN fail_rate");
+        let bad_model =
+            ChurnConfig { model: ChurnModel::Iid { p: f64::NAN }, ..ChurnConfig::default() };
+        assert!(bad_model.validate().is_err(), "NaN availability through the config");
+        assert_eq!(ResiliencePolicy::Cutoff { secs: 2.5 }.cutoff(), Some(2.5));
+        assert_eq!(ResiliencePolicy::WaitAll.cutoff(), None);
+    }
+
+    #[test]
+    fn key_and_label_suffixes_name_every_non_default_knob() {
+        let cfg = ChurnConfig {
+            model: ChurnModel::Correlated { clusters: 8, p_outage: 0.3 },
+            fail_rate: 0.1,
+            policy: ResiliencePolicy::Quorum { min_frac: 0.5, resample: true },
+        };
+        assert_eq!(cfg.key_suffix(), "-ccorr8x0.3-f0.1-q0.5r");
+        assert_eq!(cfg.label_suffix(), " corr8x0.3 fail0.1 q0.5r");
+        let cut = ChurnConfig {
+            model: ChurnModel::Iid { p: 0.7 },
+            policy: ResiliencePolicy::Cutoff { secs: 1.5 },
+            ..ChurnConfig::default()
+        };
+        assert_eq!(cut.key_suffix(), "-ciid0.7-cut1.5");
+        // Distinct configs never alias a key segment.
+        let quorum_no_resample = ChurnConfig {
+            policy: ResiliencePolicy::Quorum { min_frac: 0.5, resample: false },
+            ..ChurnConfig::default()
+        };
+        let quorum_resample = ChurnConfig {
+            policy: ResiliencePolicy::Quorum { min_frac: 0.5, resample: true },
+            ..ChurnConfig::default()
+        };
+        assert_ne!(quorum_no_resample.key_suffix(), quorum_resample.key_suffix());
+    }
+
+    #[test]
+    fn draws_never_mutate_the_root_stream() {
+        // Two evaluators fed different query patterns produce identical
+        // answers for the same (model, t, id) — the root never advances.
+        let model = ChurnModel::Iid { p: 0.4 };
+        let mut a = ChurnState::new(&Rng::new(9));
+        let mut b = ChurnState::new(&Rng::new(9));
+        for id in 0..64usize {
+            let _ = a.is_available(&model, 0, id);
+        }
+        for t in 0..8usize {
+            for id in (0..64usize).rev() {
+                assert_eq!(
+                    a.is_available(&model, t, id),
+                    b.is_available(&model, t, id),
+                    "t={t} id={id}"
+                );
+            }
+        }
+    }
+}

@@ -1,7 +1,9 @@
 //! Event-driven simulation substrate: deterministic clock ([`event`]),
-//! client heterogeneity / network delay models ([`netmodel`]), and
-//! Fig.-3-style timeline recording ([`timeline`]).
+//! client heterogeneity / network delay models ([`netmodel`]), client
+//! churn & reliability models ([`churn`]), and Fig.-3-style timeline
+//! recording ([`timeline`]).
 
+pub mod churn;
 pub mod event;
 pub mod netmodel;
 pub mod timeline;

@@ -8,8 +8,10 @@
 //! no client state outlives its activation window. And the population
 //! engine inherits the repo's older golden contract: thread counts and
 //! dealing policies never change results. The non-contract knobs
-//! (availability < 1, straggler dropout) must visibly change results —
-//! that is what they are for — while still completing cleanly.
+//! (a churn model below full availability, a straggler cutoff) must
+//! visibly change results — that is what they are for — while still
+//! completing cleanly, and churned runs keep both the engine
+//! equivalence and the golden contract.
 
 use cse_fsl::coordinator::config::{Parallelism, TrainConfig};
 use cse_fsl::coordinator::methods::{ClientUpdate, Compression, Method, MethodSpec};
@@ -21,6 +23,7 @@ use cse_fsl::data::Dataset;
 use cse_fsl::exp::common::run_to_json;
 use cse_fsl::runtime::mock::MockEngine;
 use cse_fsl::sched::SchedPolicy;
+use cse_fsl::sim::churn::{ChurnConfig, ChurnModel, ResiliencePolicy};
 use cse_fsl::sim::netmodel::NetModel;
 use cse_fsl::util::prng::Rng;
 
@@ -279,25 +282,80 @@ fn availability_and_straggler_dropout_change_results_but_complete() {
     let test = dataset(24, 8);
     let contract = run_population(&train, &test, config(1, 0, 12));
     // Straggler cutoff 0: in every round only the earliest arrival (and
-    // exact ties) enters the dataQueue; everything else is dropped.
+    // exact ties) survives apply_cutoff; everything else is dropped.
+    // Iid{0.6} thins every round's cohort on top of that.
     let e = MockEngine::small(42);
     let source = ClientSource::Partition(iid(&train, 5, &mut Rng::new(7)));
-    let mut setup =
+    let setup =
         PopulationSetup::new(&train, &test, source, NetModel::edge_default(), "golden");
-    setup.straggler_cutoff = Some(0.0);
-    setup.availability = 0.6;
-    let mut tr = Trainer::new_population(&e, config(1, 0, 12), setup).unwrap();
+    let cfg = config(1, 0, 12).with_churn(ChurnConfig {
+        model: ChurnModel::Iid { p: 0.6 },
+        policy: ResiliencePolicy::Cutoff { secs: 0.0 },
+        ..ChurnConfig::default()
+    });
+    let mut tr = Trainer::new_population(&e, cfg, setup).unwrap();
     let rec = tr.run().unwrap();
     assert_eq!(rec.rounds.len(), 12);
     let pop = tr.population.as_ref().unwrap();
     assert!(pop.arrivals > 0, "no arrivals processed");
     assert!(
-        pop.stragglers_dropped > 0,
+        tr.churn_stats.stragglers_dropped > 0,
         "cutoff 0 with distinct delays must drop stragglers"
     );
+    assert!(
+        tr.churn_stats.clients_dropped > 0,
+        "Iid{{0.6}} over 12 rounds must drop someone"
+    );
+    assert_eq!(rec.stragglers_dropped, tr.churn_stats.stragglers_dropped);
+    assert_eq!(rec.clients_dropped, tr.churn_stats.clients_dropped);
     assert_ne!(
         contract,
         run_to_json(&rec).pretty(),
         "dropout knobs must visibly change results"
     );
+}
+
+#[test]
+fn churned_population_bit_identical_to_resident_and_across_threads() {
+    // The churn filter runs before the cohort is handed to the fan-out,
+    // off non-mutating (round, id) splits of the shared root — so a
+    // correlated-outage run with mid-round failures and quorum
+    // re-sampling keeps both the engine equivalence and the golden
+    // contract (any thread count, any dealing policy).
+    let train = dataset(120, 1);
+    let test = dataset(24, 2);
+    let churned = |cfg: TrainConfig| {
+        cfg.with_churn(ChurnConfig {
+            model: ChurnModel::Correlated { clusters: 2, p_outage: 0.3 },
+            fail_rate: 0.2,
+            policy: ResiliencePolicy::Quorum { min_frac: 0.8, resample: true },
+        })
+    };
+    let resident = run_resident(&train, &test, churned(config(1, 3, 12)));
+    let streamed = run_population(&train, &test, churned(config(1, 3, 12)));
+    assert_eq!(
+        resident.as_bytes(),
+        streamed.as_bytes(),
+        "churned population RunRecord diverged from resident"
+    );
+    assert_ne!(
+        streamed,
+        run_population(&train, &test, config(1, 3, 12)),
+        "churn must change results"
+    );
+    for sched in SchedPolicy::ALL {
+        for threads in [1usize, 4] {
+            let cfg = TrainConfig {
+                parallelism: Parallelism::Threads(threads),
+                sched,
+                ..churned(config(1, 3, 12))
+            };
+            let par = run_population(&train, &test, cfg);
+            assert_eq!(
+                streamed.as_bytes(),
+                par.as_bytes(),
+                "churn sched={sched} threads={threads}: RunRecord diverged"
+            );
+        }
+    }
 }
